@@ -1,0 +1,64 @@
+//! Convex track driver (Figure 1 / Figure 3 / Table 1 workloads).
+//!
+//!     cargo run --release --example convex_federated -- [--scale small|paper]
+//!         [--panel a9a-iid] [--gap 1e-4] [--out-dir results/convex]
+//!
+//! Runs the 5-algorithm comparison on the selected panels of the paper's
+//! convex evaluation (logistic regression, N clients, IID + Non-IID), and
+//! writes one CSV per (panel, algorithm) trace.
+
+use stl_sgd::bench_support::paper::{self, Scale};
+use stl_sgd::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("convex_federated", "paper convex track (Fig 1/3, Table 1)")
+        .opt("scale", "small", "small | paper")
+        .opt("panel", "", "run only this panel id (e.g. a9a-iid)")
+        .opt("gap", "1e-4", "objective-gap target for the table")
+        .opt("out-dir", "results/convex", "trace CSV output directory")
+        .parse();
+
+    let scale = Scale::parse(args.get("scale")).expect("--scale small|paper");
+    let gap: f64 = args.get_f64("gap");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    for panel in paper::convex_panels(scale) {
+        if !args.get("panel").is_empty() && panel.id != args.get("panel") {
+            continue;
+        }
+        println!(
+            "\n##### panel {} (N={}, steps={})",
+            panel.id, panel.n_clients, panel.total_steps
+        );
+        let f_star = paper::panel_f_star(&panel, scale);
+        println!("f(x*) = {f_star:.6}");
+        let mut rows = Vec::new();
+        let mut sync = None;
+        for v in paper::CONVEX_ALGOS {
+            let t0 = std::time::Instant::now();
+            let trace = paper::run_cell(&panel, v, scale);
+            let r = trace.rounds_to_gap(f_star, gap);
+            if v == stl_sgd::algo::Variant::SyncSgd {
+                sync = r;
+            }
+            let speedup = match (sync, r) {
+                (Some(s), Some(m)) => s as f64 / m as f64,
+                _ => f64::NAN,
+            };
+            println!(
+                "  {:<12} rounds={:<7} final_gap={:.3e} to_gap={:?} wall={:.1}s",
+                v.name(),
+                trace.comm.rounds,
+                trace.final_loss() - f_star,
+                r,
+                t0.elapsed().as_secs_f64()
+            );
+            let csv = out_dir.join(format!("fig1_{}_{}.csv", panel.id, v.name()));
+            trace.write_csv(&csv)?;
+            rows.push((v.name().to_string(), r, speedup));
+        }
+        paper::print_table(&format!("Table 1 [{}] rounds to {gap:.0e} gap", panel.id), &rows);
+    }
+    println!("\ntrace CSVs written under {}", out_dir.display());
+    Ok(())
+}

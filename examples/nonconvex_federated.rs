@@ -1,0 +1,66 @@
+//! Non-convex track driver (Figure 2 / Figure 4 / Table 2 workloads).
+//!
+//!     cargo run --release --example nonconvex_federated -- [--scale small|paper]
+//!         [--panel wide-iid] [--acc 0.99] [--out-dir results/nonconvex]
+//!
+//! Trains the two MLP capacities (ResNet18/VGG16 slots per DESIGN.md
+//! §Hardware-Adaptation) under all six algorithms including both STL-SGD^nc
+//! options, IID and Non-IID (s = 0).
+
+use stl_sgd::bench_support::paper::{self, Scale};
+use stl_sgd::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("nonconvex_federated", "paper non-convex track (Fig 2/4, Table 2)")
+        .opt("scale", "small", "small | paper")
+        .opt("panel", "", "run only this panel id (e.g. wide-iid)")
+        .opt("acc", "0.99", "training-accuracy target for the table")
+        .opt("out-dir", "results/nonconvex", "trace CSV output directory")
+        .parse();
+
+    let scale = Scale::parse(args.get("scale")).expect("--scale small|paper");
+    let acc: f64 = args.get_f64("acc");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    for panel in paper::nonconvex_panels(scale) {
+        if !args.get("panel").is_empty() && panel.id != args.get("panel") {
+            continue;
+        }
+        println!(
+            "\n##### panel {} (N={}, steps={})",
+            panel.id, panel.n_clients, panel.total_steps
+        );
+        let mut rows = Vec::new();
+        let mut sync = None;
+        for v in paper::NONCONVEX_ALGOS {
+            let t0 = std::time::Instant::now();
+            let trace = paper::run_cell(&panel, v, scale);
+            let r = trace.rounds_to_accuracy(acc);
+            if v == stl_sgd::algo::Variant::SyncSgd {
+                sync = r;
+            }
+            let speedup = match (sync, r) {
+                (Some(s), Some(m)) => s as f64 / m as f64,
+                _ => f64::NAN,
+            };
+            println!(
+                "  {:<14} rounds={:<6} final_loss={:.4} final_acc={:.4} to_acc={:?} wall={:.1}s",
+                v.name(),
+                trace.comm.rounds,
+                trace.final_loss(),
+                trace.final_accuracy(),
+                r,
+                t0.elapsed().as_secs_f64()
+            );
+            let csv = out_dir.join(format!("fig2_{}_{}.csv", panel.id, v.name()));
+            trace.write_csv(&csv)?;
+            rows.push((v.name().to_string(), r, speedup));
+        }
+        paper::print_table(
+            &format!("Table 2 [{}] rounds to {acc} train accuracy", panel.id),
+            &rows,
+        );
+    }
+    println!("\ntrace CSVs written under {}", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Regenerate the paper's figures as CSV series (one file per curve).
+//!
+//!     cargo run --release --example paper_figures -- --figure 1 [--scale small|paper]
+//!
+//! Figure 1: objective gap vs comm rounds (convex, 4 panels x 5 algos).
+//! Figure 2: train loss vs comm rounds (non-convex, 4 panels x 6 algos).
+//! Figure 3: objective gap vs epochs (convex; appendix).
+//! Figure 4: train loss vs epochs (non-convex; appendix).
+//!
+//! Figures 3/4 reuse the same traces as 1/2 with the epoch column as the
+//! x-axis, exactly as the paper's appendix does; this driver emits both
+//! axis columns in every CSV so a single run regenerates all four figures.
+
+use stl_sgd::bench_support::paper::{self, Scale};
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("paper_figures", "regenerate STL-SGD paper figures (CSV series)")
+        .opt("figure", "1", "1 | 2 | 3 | 4")
+        .opt("scale", "small", "small | paper")
+        .opt("out-dir", "results/figures", "output directory")
+        .parse();
+    let scale = Scale::parse(args.get("scale")).expect("--scale small|paper");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+    let fig: usize = args.get_usize("figure");
+
+    let convex = fig == 1 || fig == 3;
+    let panels = if convex {
+        paper::convex_panels(scale)
+    } else {
+        paper::nonconvex_panels(scale)
+    };
+    let algos: Vec<_> = if convex {
+        paper::CONVEX_ALGOS.to_vec()
+    } else {
+        paper::NONCONVEX_ALGOS.to_vec()
+    };
+    let xaxis = if fig <= 2 { "rounds" } else { "epoch" };
+
+    for panel in &panels {
+        let f_star = if convex {
+            paper::panel_f_star(panel, scale)
+        } else {
+            0.0
+        };
+        for v in &algos {
+            let t0 = std::time::Instant::now();
+            let trace = paper::run_cell(panel, *v, scale);
+            let path = out_dir.join(format!("fig{fig}_{}_{}.csv", panel.id, v.name()));
+            let mut w = CsvWriter::to_file(
+                &path,
+                &["rounds", "epoch", "loss", "objective_gap", "accuracy"],
+            )?;
+            for p in &trace.points {
+                w.row(&[
+                    p.rounds.to_string(),
+                    format!("{:.4}", p.epoch),
+                    format!("{:.8e}", p.loss),
+                    format!("{:.8e}", p.loss - f_star),
+                    format!("{:.5}", p.accuracy),
+                ])?;
+            }
+            w.flush()?;
+            eprintln!(
+                "fig{fig} {} {:<14} {} points (x = {xaxis}) {:.1}s -> {}",
+                panel.id,
+                v.name(),
+                trace.points.len(),
+                t0.elapsed().as_secs_f64(),
+                path.display()
+            );
+        }
+    }
+    println!("figure {fig} series written under {}", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Regenerate the paper's tables.
+//!
+//!     cargo run --release --example paper_tables -- --table 1 [--scale small|paper]
+//!     cargo run --release --example paper_tables -- --table 2
+//!     cargo run --release --example paper_tables -- --table 3
+//!     cargo run --release --example paper_tables -- --table speedup
+//!
+//! Table 1: comm rounds to the objective-gap target (convex, 4 panels).
+//! Table 2: comm rounds to the train-accuracy target (non-convex, 4 panels).
+//! Table 3: empirical comm-complexity exponents vs the paper's theory.
+//! speedup: simulated wall-clock speedups from the alpha-beta network model
+//!          (the motivation table the paper's intro argues from).
+
+use stl_sgd::bench_support::paper::{self, Scale};
+use stl_sgd::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("paper_tables", "regenerate STL-SGD paper tables")
+        .opt("table", "3", "1 | 2 | 3 | speedup")
+        .opt("scale", "small", "small | paper")
+        .opt("gap", "1e-4", "table 1 objective-gap target")
+        .opt("acc", "0.99", "table 2 accuracy target")
+        .opt("panel", "", "restrict to one panel id (e.g. a9a-iid)")
+        .parse();
+    let scale = Scale::parse(args.get("scale")).expect("--scale small|paper");
+
+    match args.get("table") {
+        "1" => {
+            let gap = args.get_f64("gap");
+            for panel in paper::convex_panels(scale) {
+                if !args.get("panel").is_empty() && panel.id != args.get("panel") {
+                    continue;
+                }
+                let rows = paper::table1_panel(&panel, scale, gap);
+                paper::print_table(
+                    &format!("Table 1 [{}]: rounds to {gap:.0e} objective gap", panel.id),
+                    &rows,
+                );
+            }
+        }
+        "2" => {
+            let acc = args.get_f64("acc");
+            for panel in paper::nonconvex_panels(scale) {
+                if !args.get("panel").is_empty() && panel.id != args.get("panel") {
+                    continue;
+                }
+                let rows = paper::table2_panel(&panel, scale, acc);
+                paper::print_table(
+                    &format!("Table 2 [{}]: rounds to {acc} train accuracy", panel.id),
+                    &rows,
+                );
+            }
+        }
+        "3" => {
+            println!("\n=== Table 3 (empirical): fitted comm-complexity exponent p in rounds ~ T^p ===");
+            println!("{:<24} {:>10} {:>8}   paper theory", "schedule", "exponent", "R^2");
+            let theory = [
+                ("Local SGD (IID)", "O(T) at fixed k"),
+                ("STL-SGD sc (IID)", "O(N log T)  -> p ~ 0"),
+                ("STL-SGD sc (Non-IID)", "O(sqrt(NT)) -> p ~ 0.5"),
+                ("STL-SGD nc2 (IID)", "O(N^1.5 T^0.5) -> p ~ 0.5"),
+                ("STL-SGD nc2 (Non-IID)", "O((NT)^0.75) -> p ~ 0.75"),
+            ];
+            for ((name, p, r2), (_, th)) in paper::table3_exponents().iter().zip(theory) {
+                println!("{name:<24} {p:>10.3} {r2:>8.4}   {th}");
+            }
+        }
+        "speedup" => {
+            // Simulated wall-clock (alpha-beta model): same iteration
+            // budget, different comm schedules.
+            use stl_sgd::algo::Variant;
+            println!("\n=== Simulated wall-clock (a9a-iid panel, alpha-beta network model) ===");
+            println!(
+                "{:<14} {:>8} {:>12} {:>12} {:>12}",
+                "algorithm", "rounds", "compute(s)", "comm(s)", "total(s)"
+            );
+            let panel = &paper::convex_panels(scale)[0];
+            for v in [Variant::SyncSgd, Variant::LocalSgd, Variant::StlSc] {
+                let trace = paper::run_cell(panel, v, scale);
+                println!(
+                    "{:<14} {:>8} {:>12.3} {:>12.3} {:>12.3}",
+                    v.name(),
+                    trace.comm.rounds,
+                    trace.clock.compute_seconds,
+                    trace.clock.comm_seconds,
+                    trace.clock.total()
+                );
+            }
+        }
+        other => anyhow::bail!("unknown table {other} (use 1|2|3|speedup)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: STL-SGD vs Local SGD on a small federated logistic
+//! regression, in under a minute on a laptop.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Shows the paper's core claim end to end: with the stagewise schedule,
+//! the same objective gap is reached with far fewer communication rounds.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads::{compute_f_star, run_experiment};
+use stl_sgd::config::{ExperimentConfig, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let base = ExperimentConfig {
+        workload: Workload::LogregTest,
+        iid: true,
+        n_clients: 4,
+        total_steps: 6000,
+        seed: 11,
+        eval_every_rounds: 1,
+        engine: "native".into(),
+        ..Default::default()
+    };
+
+    let f_star = compute_f_star(base.workload, base.seed, 500);
+    println!("f(x*) = {f_star:.6}\n");
+    println!(
+        "{:<12} {:>8} {:>14} {:>18}",
+        "algorithm", "rounds", "final gap", "rounds to 2e-3 gap"
+    );
+
+    for variant in [Variant::SyncSgd, Variant::LocalSgd, Variant::StlSc] {
+        let mut cfg = base.clone();
+        cfg.algo = AlgoSpec {
+            variant,
+            eta1: 0.5,
+            alpha: 1e-3,
+            k1: 8.0,
+            t1: 200,
+            batch: 8,
+            iid: true,
+            ..Default::default()
+        };
+        let trace = run_experiment(&cfg)?;
+        println!(
+            "{:<12} {:>8} {:>14.3e} {:>18}",
+            variant.name(),
+            trace.comm.rounds,
+            trace.final_loss() - f_star,
+            trace
+                .rounds_to_gap(f_star, 2e-3)
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+
+    println!("\nSTL-SGD^sc reaches the same gap with the fewest communication rounds —");
+    println!("the stagewise schedule (eta/2, T*2, k*2) trades local steps for rounds.");
+    Ok(())
+}

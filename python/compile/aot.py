@@ -1,0 +1,306 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+`make artifacts` runs this once; afterwards the rust binary is fully
+self-contained. Interchange format is HLO text, NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+    artifacts/<name>.hlo.txt      one per artifact spec below
+    artifacts/manifest.json       input/output shapes + model metadata the
+                                  rust runtime uses to build literals
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME] [--list]
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.fused_update import TILE
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def pad_to_tile(p):
+    """Parameter vectors are padded to the fused-update kernel tile."""
+    return ((p + TILE - 1) // TILE) * TILE
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Artifact specs
+# --------------------------------------------------------------------------
+# Each spec: name -> (fn returning a tuple, example args, metadata dict).
+# Dataset sizes follow the paper (a9a 32561x123; MNIST 4-vs-9 subset
+# 11791x784; cifar-like 8192 synthetic images) — see DESIGN.md
+# §Hardware-Adaptation for the substitutions.
+
+LOGREG_CONFIGS = {
+    # name: (n_clients, batch, dim, full_set_rows)
+    "a9a": (32, 32, 123, 32561),
+    "mnist": (32, 32, 784, 11791),
+    "test": (4, 8, 16, 64),
+}
+
+MLP_CONFIGS = {
+    # name: (n_clients, batch, d_in, hidden, classes, full_set_rows)
+    # "wide" stands in for ResNet18, "deep" for VGG16 (DESIGN.md
+    # §Hardware-Adaptation): capacities sized so the full Table-2 sweep is
+    # CPU-tractable while preserving the wide-vs-deep contrast.
+    "wide": (8, 64, 256, (256, 128), 10, 8192),
+    "deep": (8, 64, 256, (128, 128, 128, 128), 10, 8192),
+    "test": (4, 8, 16, (16,), 4, 64),
+}
+
+TFM_CONFIGS = {
+    # name: cfg dict + batch
+    # CPU-feasible e2e size (~0.53M params): xla_extension 0.5.1's CPU
+    # backend runs the un-fused transformer grad at ~1 GFLOP/s, so the
+    # original 4.2M-param config was ~30s/step — see EXPERIMENTS.md.
+    "small": {
+        "vocab": 512, "d_model": 128, "layers": 2, "heads": 4,
+        "d_ff": 512, "seq": 32, "batch": 4,
+    },
+    "test": {
+        "vocab": 64, "d_model": 32, "layers": 1, "heads": 2,
+        "d_ff": 64, "seq": 16, "batch": 2,
+    },
+}
+
+# Parameter-buffer layout contract with the rust runtime: every artifact
+# whose input is a parameter vector takes the TILE-padded flat vector
+# (slices to the true length in-graph, zero-pads gradients back out), so the
+# rust coordinator holds exactly one (N, P_padded) buffer per experiment and
+# never repacks between the grad call and the fused-step call.
+
+TFM_CLIENTS = 4  # e2e example runs 4 data-parallel clients
+
+
+def _pad_cols(g, p, pp):
+    return jnp.pad(g, ((0, 0), (0, pp - p)))
+
+
+def build_specs():
+    specs = {}
+
+    for name, (n, b, d, m) in LOGREG_CONFIGS.items():
+        pp = pad_to_tile(d)
+        meta = {"kind": "logreg_grad", "n": n, "b": b, "d": d, "p_padded": pp}
+
+        def grad_fn(theta_pad, x, y, lam, d=d, pp=pp):
+            g, losses = model.logreg_grad_batched(theta_pad[:, :d], x, y, lam)
+            return _pad_cols(g, d, pp), losses
+
+        specs[f"logreg_grad_{name}"] = (
+            grad_fn,
+            (f32(n, pp), f32(n, b, d), f32(n, b), f32(1)),
+            meta,
+        )
+
+        def loss_fn(theta_pad, x, y, lam, d=d):
+            return model.logreg_full_loss(theta_pad[:d], x, y, lam)
+
+        specs[f"logreg_loss_{name}"] = (
+            loss_fn,
+            (f32(pp), f32(m, d), f32(m), f32(1)),
+            {"kind": "logreg_loss", "d": d, "m": m, "p_padded": pp},
+        )
+
+        specs[f"fused_step_logreg_{name}"] = (
+            model.fused_local_step,
+            (f32(n, pp), f32(n, pp), f32(n, pp), f32(2)),
+            {"kind": "fused_step", "n": n, "p_padded": pp},
+        )
+
+    for name, (n, b, d_in, hidden, classes, m) in MLP_CONFIGS.items():
+        p = model.mlp_param_count(d_in, list(hidden), classes)
+        pp = pad_to_tile(p)
+        meta = {
+            "kind": "mlp_grad", "n": n, "b": b, "d_in": d_in,
+            "hidden": list(hidden), "classes": classes, "p": p, "p_padded": pp,
+        }
+
+        def grad_fn(theta_pad, x, y, d_in=d_in, hidden=hidden, classes=classes,
+                    p=p, pp=pp):
+            g, losses = model.mlp_grad_batched(
+                theta_pad[:, :p], x, y, d_in, list(hidden), classes
+            )
+            return _pad_cols(g, p, pp), losses
+
+        specs[f"mlp_grad_{name}"] = (
+            grad_fn, (f32(n, pp), f32(n, b, d_in), f32(n, b)), meta
+        )
+
+        def eval_fn(theta_pad, x, y, d_in=d_in, hidden=hidden, classes=classes, p=p):
+            return model.mlp_eval(theta_pad[:p], x, y, d_in, list(hidden), classes)
+
+        specs[f"mlp_eval_{name}"] = (
+            eval_fn,
+            (f32(pp), f32(m, d_in), f32(m)),
+            {"kind": "mlp_eval", "d_in": d_in, "hidden": list(hidden),
+             "classes": classes, "p": p, "p_padded": pp, "m": m},
+        )
+
+        specs[f"fused_step_mlp_{name}"] = (
+            model.fused_local_step,
+            (f32(n, pp), f32(n, pp), f32(n, pp), f32(2)),
+            {"kind": "fused_step", "n": n, "p_padded": pp},
+        )
+
+    for name, cfg in TFM_CONFIGS.items():
+        c = {k: v for k, v in cfg.items() if k != "batch"}
+        b = cfg["batch"]
+        p = model.tfm_param_count(c)
+        pp = pad_to_tile(p)
+        meta = {"kind": "tfm_grad", "b": b, "p": p, "p_padded": pp, **c}
+
+        def tfm_fn(theta_pad, tokens, c=c, p=p, pp=pp):
+            g, loss = model.tfm_grad(theta_pad[:p], tokens, c)
+            return jnp.pad(g, (0, pp - p)), loss
+
+        specs[f"tfm_grad_{name}"] = (tfm_fn, (f32(pp), f32(b, c["seq"] + 1)), meta)
+
+        specs[f"fused_step_tfm_{name}"] = (
+            model.fused_local_step,
+            (f32(TFM_CLIENTS, pp), f32(TFM_CLIENTS, pp), f32(TFM_CLIENTS, pp), f32(2)),
+            {"kind": "fused_step", "n": TFM_CLIENTS, "p_padded": pp},
+        )
+
+    return specs
+
+
+def lower_one(name, fn, args, meta, out_dir):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    entry = {
+        "file": f"{name}.hlo.txt",
+        "meta": meta,
+        "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args],
+    }
+    # Output specs from the jitted signature.
+    out_avals = jax.eval_shape(fn, *args)
+    entry["outputs"] = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_avals
+    ]
+    return entry
+
+
+# --------------------------------------------------------------------------
+# Golden values: pin numerics shared between python ref.py and the rust
+# native oracle. The input generator below is reimplemented bit-identically
+# in rust/src/rng/golden.rs (LCG -> f32 in [-1, 1)).
+# --------------------------------------------------------------------------
+
+GOLDEN_LCG_A = 6364136223846793005
+GOLDEN_LCG_C = 1442695040888963407
+GOLDEN_MASK = (1 << 64) - 1
+
+
+def golden_stream(seed, count):
+    """LCG stream of f32 in [-1, 1): identical in rust/src/rng/golden.rs."""
+    state = seed & GOLDEN_MASK
+    out = []
+    for _ in range(count):
+        state = (state * GOLDEN_LCG_A + GOLDEN_LCG_C) & GOLDEN_MASK
+        mant = (state >> 40) & 0xFFFFFF  # top 24 bits of the high word
+        out.append((mant / float(1 << 24)) * 2.0 - 1.0)
+    import numpy as np
+
+    return np.asarray(out, dtype=np.float32)
+
+
+def write_golden(out_dir):
+    """Evaluate the reference logreg oracle on deterministic inputs."""
+    import numpy as np
+
+    from compile.kernels import ref
+
+    cases = []
+    for seed, n, b, d, lam in [(1, 2, 4, 8, 0.01), (7, 4, 8, 16, 0.001), (42, 1, 16, 123, 0.0)]:
+        stream = golden_stream(seed, n * d + n * b * d + n * b)
+        off = 0
+        theta = stream[off : off + n * d].reshape(n, d); off += n * d
+        x = stream[off : off + n * b * d].reshape(n, b, d); off += n * b * d
+        yraw = stream[off : off + n * b].reshape(n, b)
+        y = np.where(yraw >= 0.0, 1.0, -1.0).astype(np.float32)
+        grads, losses = ref.logreg_grad_batched(theta, x, y, lam)
+        cases.append(
+            {
+                "seed": seed, "n": n, "b": b, "d": d, "lam": lam,
+                "losses": [float(v) for v in np.asarray(losses)],
+                "grad_head": [float(v) for v in np.asarray(grads)[0, : min(8, d)]],
+                "grad_l2": [float(np.linalg.norm(np.asarray(grads)[i])) for i in range(n)],
+            }
+        )
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump({"logreg": cases}, f, indent=1)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument(
+        "--skip-tfm-small",
+        action="store_true",
+        help="skip the (slow-to-trace) small transformer artifact",
+    )
+    args = ap.parse_args()
+
+    specs = build_specs()
+    if args.list:
+        for n in sorted(specs):
+            print(n)
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name, (fn, ex_args, meta) in sorted(specs.items()):
+        if args.only and name != args.only:
+            continue
+        if args.skip_tfm_small and name == "tfm_grad_small":
+            continue
+        print(f"lowering {name} ...", flush=True)
+        manifest[name] = lower_one(name, fn, ex_args, meta, args.out_dir)
+
+    manifest["_tile"] = TILE
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest) - 1} artifacts)")
+    write_golden(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: fused per-client logistic-regression gradient.
+
+This is the compute hot-spot of the paper's convex track (Table 1 /
+Figure 1): every Local-SGD iteration each of the N clients computes one
+minibatch gradient of
+
+    f_i(theta) = (1/B) sum_b log(1 + exp(-y_b * <x_b, theta>)) + (lam/2)||theta||^2
+
+The kernel fuses the forward margin computation (X @ theta), the logistic
+sigmoid, the backward mat-vec (X^T r) and the L2-regularization term into a
+single VMEM-resident pass, gridded over clients, so that one XLA executable
+produces all N per-client gradients per iteration (the rust coordinator then
+averages them at communication rounds).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper ran on GPUs but
+has no kernel-level contribution — we shape the kernel for the TPU memory
+hierarchy instead of porting CUDA idioms. Each grid step owns one client's
+(B, D) tile in VMEM (a9a config: 32x123 f32 = 15.7 KiB << 16 MiB VMEM), the
+matvec pair maps onto the MXU as (B,D)x(D,1) and (D,B)x(B,1) contractions,
+and the elementwise sigmoid/softplus chain rides the VPU in the same pass —
+no HBM round-trip between forward and backward.
+
+MUST run with interpret=True: real TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logreg_kernel(theta_ref, x_ref, y_ref, lam_ref, grad_ref, loss_ref):
+    """One grid step = one client.
+
+    theta_ref: (D,)   current iterate for this client
+    x_ref:     (B, D) minibatch features
+    y_ref:     (B,)   labels in {-1, +1}
+    lam_ref:   (1,)   L2 regularization strength
+    grad_ref:  (D,)   output gradient
+    loss_ref:  ()     output minibatch loss (client-squeezed block)
+    """
+    theta = theta_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    lam = lam_ref[0]
+
+    # Forward: margins m_b = y_b * <x_b, theta>. (B,D)x(D,) rides the MXU.
+    z = x @ theta
+    m = y * z
+
+    # sigma(-m) = 1 - sigma(m); computed stably on the VPU.
+    s = jax.nn.sigmoid(-m)
+
+    # Backward: grad = -(1/B) X^T (y * s) + lam * theta. Second MXU pass.
+    b = x.shape[0]
+    r = y * s
+    grad_ref[...] = -(x.T @ r) / b + lam * theta
+
+    # Stable softplus(-m) = log(1 + exp(-m)).
+    softplus = jnp.maximum(-m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))
+    loss_ref[...] = jnp.mean(softplus) + 0.5 * lam * jnp.sum(theta * theta)
+
+
+def logreg_grad_batched(theta, x, y, lam, *, interpret=True):
+    """All-clients fused gradient: one pallas_call, grid over the N clients.
+
+    theta: (N, D) per-client iterates
+    x:     (N, B, D) per-client minibatches
+    y:     (N, B) labels in {-1, +1}
+    lam:   scalar or (1,) array
+    returns (grads (N, D), losses (N,))
+    """
+    n, b, d = x.shape
+    assert theta.shape == (n, d), (theta.shape, (n, d))
+    assert y.shape == (n, b), (y.shape, (n, b))
+
+    lam_arr = jnp.reshape(jnp.asarray(lam, dtype=theta.dtype), (1,))
+
+    grads, losses = pl.pallas_call(
+        _logreg_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((None, d), lambda i: (i, 0)),        # theta_i
+            pl.BlockSpec((None, b, d), lambda i: (i, 0, 0)),  # X_i
+            pl.BlockSpec((None, b), lambda i: (i, 0)),        # y_i
+            pl.BlockSpec((1,), lambda i: (0,)),               # lam (shared)
+        ],
+        out_specs=[
+            pl.BlockSpec((None, d), lambda i: (i, 0)),        # grad_i
+            pl.BlockSpec((None,), lambda i: (i,)),            # loss_i
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), theta.dtype),
+            jax.ShapeDtypeStruct((n,), theta.dtype),
+        ],
+        interpret=interpret,
+    )(theta, x, y, lam_arr)
+    return grads, losses
+
+
+def vmem_bytes(b, d, dtype_bytes=4):
+    """Static per-grid-step VMEM footprint estimate (DESIGN.md §Perf).
+
+    One client tile resident at a time: X (B,D) + theta (D,) + grad (D,)
+    + y/m/s/r vectors (4xB) + scalars.
+    """
+    return dtype_bytes * (b * d + 2 * d + 4 * b + 2)
+
+
+def flops(n, b, d):
+    """FLOPs per full grid (all N clients): two matvecs + elementwise."""
+    per_client = 2 * b * d + 2 * b * d + 8 * b + 2 * d
+    return n * per_client

@@ -1,0 +1,236 @@
+"""L2: JAX compute graphs for every workload in the paper's evaluation.
+
+Everything here is *build-time only* — aot.py lowers these functions to HLO
+text once (`make artifacts`) and the rust coordinator executes the compiled
+artifacts via PJRT on the request path. Python never runs during training.
+
+Three model families, matching the paper's evaluation:
+
+  * logistic regression (convex track, Table 1 / Figures 1 & 3) — gradient
+    computed by the fused Pallas kernel (kernels/logreg_grad.py), batched
+    over the N clients so one executable call = one distributed iteration's
+    local compute.
+  * MLP classifier (non-convex track, Table 2 / Figures 2 & 4) — stands in
+    for ResNet18/VGG16 per DESIGN.md §Hardware-Adaptation; parameters are a
+    flat f32 vector so the rust coordinator treats every model uniformly.
+  * decoder-only transformer LM (end-to-end example) — proves the full
+    system composes on a real autoregressive workload.
+
+All artifact inputs are f32 (labels/tokens are cast in-graph) so the rust
+runtime manages a single buffer dtype.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import logreg_grad as lk
+from compile.kernels import fused_update as fu
+
+
+# --------------------------------------------------------------------------
+# Convex track: logistic regression
+# --------------------------------------------------------------------------
+
+def logreg_grad_batched(theta, x, y, lam):
+    """Per-client minibatch gradients via the L1 Pallas kernel.
+
+    theta (N,D), x (N,B,D), y (N,B) in {-1,+1}, lam (1,).
+    Returns (grads (N,D), losses (N,)).
+    """
+    return lk.logreg_grad_batched(theta, x, y, lam, interpret=True)
+
+
+def logreg_full_loss(theta, x, y, lam):
+    """Full-dataset objective f(theta) used for the objective-gap metric.
+
+    theta (D,), x (M,D), y (M,). One call evaluates the global objective on
+    the whole training set (the paper reports f(x) - f(x*)).
+    """
+    from compile.kernels import ref
+
+    return (ref.logreg_loss(theta, x, y, lam),)
+
+
+# --------------------------------------------------------------------------
+# Non-convex track: MLP classifier on a flat parameter vector
+# --------------------------------------------------------------------------
+
+def mlp_shapes(d_in, hidden, n_classes):
+    """[(name, shape), ...] for a relu MLP with the given hidden widths."""
+    shapes = []
+    prev = d_in
+    for li, h in enumerate(hidden):
+        shapes.append((f"w{li}", (prev, h)))
+        shapes.append((f"b{li}", (h,)))
+        prev = h
+    shapes.append((f"w{len(hidden)}", (prev, n_classes)))
+    shapes.append((f"b{len(hidden)}", (n_classes,)))
+    return shapes
+
+
+def mlp_param_count(d_in, hidden, n_classes):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in mlp_shapes(d_in, hidden, n_classes))
+
+
+def _unflatten(theta, shapes):
+    out, off = [], 0
+    for _, s in shapes:
+        size = 1
+        for dim in s:
+            size *= dim
+        out.append(theta[off : off + size].reshape(s))
+        off += size
+    return out
+
+
+def mlp_loss(theta, x, y_f32, d_in, hidden, n_classes):
+    """Cross-entropy of a relu MLP. theta flat (P,), x (B,D), y_f32 (B,)."""
+    shapes = mlp_shapes(d_in, hidden, n_classes)
+    params = _unflatten(theta, shapes)
+    h = x
+    for li in range(len(hidden)):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-2], params[-1]
+    logits = h @ w + b
+    y = y_f32.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def mlp_grad_batched(theta, x, y_f32, d_in, hidden, n_classes):
+    """Per-client MLP gradients: theta (N,P), x (N,B,D), y (N,B) -> (N,P),(N,).
+
+    vmap over clients, value_and_grad inside: one XLA executable computes
+    every client's local gradient for the iteration.
+    """
+
+    def one(th, xb, yb):
+        loss, g = jax.value_and_grad(mlp_loss)(th, xb, yb, d_in, hidden, n_classes)
+        return g, loss
+
+    grads, losses = jax.vmap(one)(theta, x, y_f32)
+    return grads, losses
+
+
+def mlp_eval(theta, x, y_f32, d_in, hidden, n_classes):
+    """Full-set mean loss and accuracy for one parameter vector.
+
+    theta (P,), x (M,D), y (M,). Returns (loss (), acc ()).
+    """
+    shapes = mlp_shapes(d_in, hidden, n_classes)
+    params = _unflatten(theta, shapes)
+    h = x
+    for li in range(len(hidden)):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = jax.nn.relu(h @ w + b)
+    logits = h @ params[-2] + params[-1]
+    y = y_f32.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+# --------------------------------------------------------------------------
+# Fused update kernel wrapper (used by the *_step artifacts)
+# --------------------------------------------------------------------------
+
+def fused_local_step(theta, grad, anchor, eta_invgamma):
+    """theta,grad,anchor (N,P); eta_invgamma (2,) -> theta' (N,P).
+
+    P is padded to the kernel tile by aot.py; the rust side keeps padded
+    buffers throughout so no per-step reshaping happens.
+    """
+    return (
+        fu.fused_local_step(
+            theta, grad, anchor, eta_invgamma[0], eta_invgamma[1], interpret=True
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# End-to-end track: decoder-only transformer LM, flat parameter vector
+# --------------------------------------------------------------------------
+
+def tfm_shapes(cfg):
+    """Parameter inventory for the decoder-only LM."""
+    v, d, l, f = cfg["vocab"], cfg["d_model"], cfg["layers"], cfg["d_ff"]
+    s = cfg["seq"]
+    shapes = [("embed", (v, d)), ("pos", (s, d))]
+    for i in range(l):
+        shapes += [
+            (f"l{i}.ln1_g", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_g", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+        ]
+    shapes += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+    return shapes
+
+
+def tfm_param_count(cfg):
+    total = 0
+    for _, s in tfm_shapes(cfg):
+        size = 1
+        for dim in s:
+            size *= dim
+        total += size
+    return total
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def tfm_loss(theta, tokens_f32, cfg):
+    """Causal LM loss. theta flat (P,), tokens_f32 (B, S+1)."""
+    v, d, l, heads = cfg["vocab"], cfg["d_model"], cfg["layers"], cfg["heads"]
+    s = cfg["seq"]
+    params = dict(zip([n for n, _ in tfm_shapes(cfg)], _unflatten(theta, tfm_shapes(cfg))))
+
+    tokens = tokens_f32.astype(jnp.int32)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    bsz = inp.shape[0]
+
+    h = params["embed"][inp] + params["pos"][None, :, :]
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+
+    hd = d // heads
+    for i in range(l):
+        p = lambda k: params[f"l{i}.{k}"]
+        x = _layernorm(h, p("ln1_g"), p("ln1_b"))
+        qkv = x @ p("wqkv")
+        q, k, val = jnp.split(qkv, 3, axis=-1)
+
+        def split_heads(t):
+            return t.reshape(bsz, s, heads, hd).transpose(0, 2, 1, 3)
+
+        q, k, val = split_heads(q), split_heads(k), split_heads(val)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+        att = jnp.where(mask[None, None, :, :], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ val).transpose(0, 2, 1, 3).reshape(bsz, s, d)
+        h = h + o @ p("wo")
+
+        x = _layernorm(h, p("ln2_g"), p("ln2_b"))
+        h = h + jax.nn.relu(x @ p("w1")) @ p("w2")
+
+    h = _layernorm(h, params["lnf_g"], params["lnf_b"])
+    logits = h @ params["head"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=2)[:, :, 0]
+    return jnp.mean(nll)
+
+
+def tfm_grad(theta, tokens_f32, cfg):
+    """(loss (), grad (P,)) for one client's minibatch."""
+    loss, g = jax.value_and_grad(tfm_loss)(theta, tokens_f32, cfg)
+    return g, loss

@@ -1,0 +1,109 @@
+"""AOT pipeline tests: artifact manifest integrity + golden file sanity.
+
+These validate the build outputs the rust runtime consumes (they run after
+`make artifacts`; they skip cleanly when artifacts are absent).
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_specs_present(self, manifest):
+        from compile import aot
+
+        expected = set(aot.build_specs())
+        present = {k for k in manifest if not k.startswith("_")}
+        assert expected == present
+
+    def test_every_file_exists_and_is_hlo_text(self, manifest):
+        for name, entry in manifest.items():
+            if name.startswith("_"):
+                continue
+            path = os.path.join(ART, entry["file"])
+            assert os.path.exists(path), path
+            head = open(path).read(4096)
+            assert "HloModule" in head, f"{name} is not HLO text"
+            assert "ENTRY" in open(path).read(), f"{name} missing ENTRY"
+
+    def test_shapes_match_specs(self, manifest):
+        from compile import aot
+
+        specs = aot.build_specs()
+        for name, (fn, args, meta) in specs.items():
+            entry = manifest[name]
+            got = [tuple(i["shape"]) for i in entry["inputs"]]
+            want = [tuple(a.shape) for a in args]
+            assert got == want, f"{name}: {got} vs {want}"
+            assert entry["meta"]["kind"] == meta["kind"]
+
+    def test_padding_is_tile_aligned(self, manifest):
+        tile = manifest["_tile"]
+        for name, entry in manifest.items():
+            if name.startswith("_"):
+                continue
+            pp = entry["meta"].get("p_padded")
+            if pp is not None:
+                assert pp % tile == 0, f"{name}: p_padded={pp}"
+
+    def test_grad_and_step_shapes_consistent(self, manifest):
+        """The (N, P_padded) contract between grad and fused-step pairs."""
+        for family, cfgs in [("logreg", ["a9a", "mnist", "test"]),
+                             ("mlp", ["wide", "deep", "test"])]:
+            for cfg in cfgs:
+                g = manifest[f"{family}_grad_{cfg}"]
+                s = manifest[f"fused_step_{family}_{cfg}"]
+                assert g["inputs"][0]["shape"] == s["inputs"][0]["shape"], (family, cfg)
+                assert g["outputs"][0]["shape"] == s["outputs"][0]["shape"]
+
+
+@needs_artifacts
+class TestGolden:
+    def test_golden_file_structure(self):
+        with open(os.path.join(ART, "golden.json")) as f:
+            g = json.load(f)
+        assert len(g["logreg"]) >= 3
+        for case in g["logreg"]:
+            assert len(case["losses"]) == case["n"]
+            assert len(case["grad_l2"]) == case["n"]
+            assert len(case["grad_head"]) == min(8, case["d"])
+
+    def test_golden_values_regenerate_identically(self):
+        """write_golden is deterministic (same LCG, same ref oracle)."""
+        import tempfile
+
+        from compile import aot
+
+        with tempfile.TemporaryDirectory() as td:
+            aot.write_golden(td)
+            with open(os.path.join(td, "golden.json")) as f:
+                fresh = json.load(f)
+        with open(os.path.join(ART, "golden.json")) as f:
+            stored = json.load(f)
+        assert fresh == stored
+
+    def test_golden_stream_reference_values(self):
+        """Anchor the exact stream the rust side reimplements."""
+        from compile import aot
+
+        s = aot.golden_stream(1, 4)
+        # values are in [-1, 1) and deterministic
+        assert all(-1.0 <= v < 1.0 for v in s)
+        s2 = aot.golden_stream(1, 4)
+        assert list(s) == list(s2)
+        assert list(aot.golden_stream(2, 4)) != list(s)

@@ -1,0 +1,139 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp references.
+
+hypothesis sweeps shapes; fixed-seed cases pin exact numerics. This is the
+CORE correctness signal for the compute layer — the AOT artifacts lower the
+exact same kernel code these tests exercise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_update as fu
+from compile.kernels import logreg_grad as lk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _logreg_inputs(seed, n, b, d):
+    rng = np.random.default_rng(seed)
+    theta = rng.normal(size=(n, d)).astype(np.float32)
+    x = rng.normal(size=(n, b, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=(n, b)).astype(np.float32)
+    return theta, x, y
+
+
+class TestLogregKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 8),
+        b=st.integers(1, 48),
+        d=st.integers(1, 160),
+        lam=st.floats(0.0, 0.5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shapes(self, n, b, d, lam, seed):
+        theta, x, y = _logreg_inputs(seed, n, b, d)
+        g_k, l_k = lk.logreg_grad_batched(theta, x, y, lam)
+        g_r, l_r = ref.logreg_grad_batched(theta, x, y, lam)
+        np.testing.assert_allclose(g_k, g_r, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(l_k, l_r, rtol=2e-5, atol=2e-5)
+
+    def test_matches_autodiff(self):
+        theta, x, y = _logreg_inputs(0, 4, 16, 32)
+        lam = 0.01
+        g_k, _ = lk.logreg_grad_batched(theta, x, y, lam)
+        for i in range(4):
+            g_ad = ref.logreg_grad_autodiff(theta[i], x[i], y[i], lam)
+            np.testing.assert_allclose(g_k[i], g_ad, rtol=2e-5, atol=2e-5)
+
+    def test_paper_configs(self):
+        """The exact shapes lowered by aot.py (a9a / mnist / test)."""
+        for n, b, d in [(32, 32, 123), (32, 32, 784), (4, 8, 16)]:
+            theta, x, y = _logreg_inputs(7, n, b, d)
+            g_k, l_k = lk.logreg_grad_batched(theta, x, y, 1e-3)
+            g_r, l_r = ref.logreg_grad_batched(theta, x, y, 1e-3)
+            np.testing.assert_allclose(g_k, g_r, rtol=2e-5, atol=2e-5)
+            np.testing.assert_allclose(l_k, l_r, rtol=2e-5, atol=2e-5)
+
+    def test_zero_theta_loss_is_log2(self):
+        """f(0) = log(2) regardless of data — sanity anchor."""
+        _, x, y = _logreg_inputs(3, 2, 8, 5)
+        theta = np.zeros((2, 5), np.float32)
+        _, losses = lk.logreg_grad_batched(theta, x, y, 0.0)
+        np.testing.assert_allclose(losses, np.log(2.0), rtol=1e-6)
+
+    def test_separable_data_gradient_direction(self):
+        """On y = sign(<x, w*>) data, -grad at 0 correlates with w*."""
+        rng = np.random.default_rng(5)
+        d = 20
+        w_star = rng.normal(size=d).astype(np.float32)
+        x = rng.normal(size=(1, 64, d)).astype(np.float32)
+        y = np.sign(x[0] @ w_star)[None, :].astype(np.float32)
+        theta = np.zeros((1, d), np.float32)
+        g, _ = lk.logreg_grad_batched(theta, x, y, 0.0)
+        assert float(np.dot(-np.asarray(g[0]), w_star)) > 0.0
+
+    def test_lam_adds_linear_term(self):
+        theta, x, y = _logreg_inputs(9, 2, 8, 12)
+        g0, _ = lk.logreg_grad_batched(theta, x, y, 0.0)
+        g1, _ = lk.logreg_grad_batched(theta, x, y, 0.25)
+        np.testing.assert_allclose(
+            np.asarray(g1) - np.asarray(g0), 0.25 * theta, rtol=1e-4, atol=1e-5
+        )
+
+    def test_vmem_estimate_positive_and_small(self):
+        # a9a config must fit VMEM comfortably (16 MiB budget).
+        assert 0 < lk.vmem_bytes(32, 123) < 16 * 2**20
+        assert 0 < lk.vmem_bytes(32, 784) < 16 * 2**20
+
+
+class TestFusedUpdateKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 6),
+        tiles=st.integers(1, 3),
+        eta=st.floats(0.0, 1.0),
+        inv_gamma=st.floats(0.0, 2.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, tiles, eta, inv_gamma, seed):
+        p = tiles * fu.TILE
+        rng = np.random.default_rng(seed)
+        theta = rng.normal(size=(n, p)).astype(np.float32)
+        grad = rng.normal(size=(n, p)).astype(np.float32)
+        anchor = rng.normal(size=(n, p)).astype(np.float32)
+        out_k = fu.fused_local_step(theta, grad, anchor, eta, inv_gamma)
+        out_r = ref.fused_local_step(theta, grad, anchor, eta, inv_gamma)
+        np.testing.assert_allclose(out_k, out_r, rtol=1e-6, atol=1e-6)
+
+    def test_zero_eta_identity(self):
+        rng = np.random.default_rng(1)
+        theta = rng.normal(size=(2, fu.TILE)).astype(np.float32)
+        grad = rng.normal(size=(2, fu.TILE)).astype(np.float32)
+        out = fu.fused_local_step(theta, grad, theta, 0.0, 0.5)
+        np.testing.assert_allclose(out, theta)
+
+    def test_plain_sgd_when_inv_gamma_zero(self):
+        rng = np.random.default_rng(2)
+        theta = rng.normal(size=(1, fu.TILE)).astype(np.float32)
+        grad = rng.normal(size=(1, fu.TILE)).astype(np.float32)
+        anchor = rng.normal(size=(1, fu.TILE)).astype(np.float32)  # ignored
+        out = fu.fused_local_step(theta, grad, anchor, 0.1, 0.0)
+        np.testing.assert_allclose(out, theta - 0.1 * grad, rtol=1e-6, atol=1e-6)
+
+    def test_prox_pulls_towards_anchor(self):
+        theta = np.ones((1, fu.TILE), np.float32)
+        grad = np.zeros((1, fu.TILE), np.float32)
+        anchor = np.zeros((1, fu.TILE), np.float32)
+        out = fu.fused_local_step(theta, grad, anchor, 0.1, 1.0)
+        assert np.all(np.asarray(out) < theta)
+        np.testing.assert_allclose(out, 0.9 * theta, rtol=1e-6)
+
+    def test_unaligned_p_rejected(self):
+        theta = np.zeros((1, 100), np.float32)
+        with pytest.raises(AssertionError):
+            fu.fused_local_step(theta, theta, theta, 0.1, 0.0)

@@ -1,0 +1,33 @@
+//! Collective microbench: the three average-allreduce algorithms across
+//! model sizes (the paper's d = 123 logreg up to transformer-scale 4.2M).
+
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::comm::{allreduce, Algorithm};
+use stl_sgd::rng::Rng;
+
+fn models(n: usize, d: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("# collective (average-allreduce) microbenchmarks\n");
+    for (n, d) in [(8usize, 123usize), (32, 123), (8, 100_000), (32, 100_000), (4, 4_200_000)] {
+        let base = models(n, d);
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let mut m = base.clone();
+            let r = b.run(&format!("{alg:?} N={n} d={d}"), || {
+                allreduce::average(&mut m, alg);
+                std::hint::black_box(&m);
+            });
+            println!(
+                "  {}",
+                r.throughput(4.0 * (n * d) as f64 / 1e9, "GB-moved")
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,56 @@
+//! L3 hot-path microbench: native gradient oracles (the per-iteration
+//! compute of every sweep). Also calibrates sim::ComputeModel.
+
+use std::sync::Arc;
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::data::synth;
+use stl_sgd::grad::{logreg::NativeLogreg, mlp::MlpArch, mlp::NativeMlp, Oracle};
+use stl_sgd::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("# gradient-oracle microbenchmarks\n");
+
+    // Paper configs: a9a (123 dims) and mnist (784 dims), B = 32.
+    for (name, d) in [("a9a-like d=123", 123usize), ("mnist-like d=784", 784)] {
+        let ds = Arc::new(synth::a9a_like(1, 4096, d));
+        let oracle = NativeLogreg::new(ds, 1e-4);
+        let theta = vec![0.01f32; d];
+        let idx: Vec<usize> = (0..32).collect();
+        let r = b.run(&format!("logreg_grad {name} B=32"), || {
+            std::hint::black_box(oracle.grad_minibatch(&theta, &idx));
+        });
+        println!("  {}", r.throughput(32.0 * d as f64 * 4.0, "flop-units"));
+    }
+
+    // MLP wide config (the Table 2 hot path), B = 64.
+    let ds = Arc::new(synth::cifar_like(1, 4096, 256, 10));
+    let arch = MlpArch {
+        d_in: 256,
+        hidden: vec![256, 128],
+        classes: 10,
+    };
+    let p = arch.param_count();
+    let mlp = NativeMlp::new(ds, arch);
+    let theta = {
+        let a = MlpArch {
+            d_in: 256,
+            hidden: vec![256, 128],
+            classes: 10,
+        };
+        a.init(&mut Rng::new(2))
+    };
+    let idx: Vec<usize> = (0..64).collect();
+    let r = b.run("mlp_grad wide B=64", || {
+        std::hint::black_box(mlp.grad_minibatch(&theta, &idx));
+    });
+    println!("  {}", r.throughput(64.0 * p as f64 * 6.0, "flop-units"));
+
+    // Full-loss evaluations (the eval cadence cost).
+    let ds = Arc::new(synth::a9a_like(1, 32_561, 123));
+    let oracle = NativeLogreg::new(ds, 1e-4);
+    let theta = vec![0.01f32; 123];
+    b.run("logreg_full_loss a9a 32561x123", || {
+        std::hint::black_box(oracle.full_loss(&theta));
+    });
+}

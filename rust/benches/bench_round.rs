@@ -1,0 +1,83 @@
+//! End-to-end iteration/round bench: the full coordinator loop (sample ->
+//! grads -> fused step -> average) on native, threaded, and — when the
+//! artifacts are built — the XLA engine. This is the paper's iteration
+//! span and the primary L3 perf target.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::coordinator::{run, ClientCompute, NativeCompute, RunConfig, ThreadedCompute};
+use stl_sgd::data::{partition, synth};
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("# end-to-end coordinator round benchmarks (100 iterations / run)\n");
+
+    let n = 8;
+    let ds = Arc::new(synth::a9a_like(1, 8192, 123));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-4));
+    let shards = partition::iid(&ds, n, &mut Rng::new(0));
+    let spec = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.5,
+        alpha: 1e-3,
+        k1: 10.0,
+        batch: 32,
+        iid: true,
+        ..Default::default()
+    };
+    let phases = spec.phases(100);
+    let cfg = RunConfig {
+        n_clients: n,
+        eval_every_rounds: 1_000_000, // no eval: isolate the loop
+        ..Default::default()
+    };
+    let theta0 = vec![0.0f32; 123];
+
+    let r = b.run("loop native N=8 d=123 B=32 (100 it)", || {
+        let mut e = NativeCompute::new(oracle.clone());
+        std::hint::black_box(run(&mut e, &shards, &phases, &cfg, &theta0, "b"));
+    });
+    println!("  {}", r.throughput(100.0, "iters"));
+
+    for workers in [2usize, 4, 8] {
+        let r = b.run(&format!("loop threaded({workers}) N=8 (100 it)"), || {
+            let mut e = ThreadedCompute::new(oracle.clone(), workers);
+            std::hint::black_box(run(&mut e, &shards, &phases, &cfg, &theta0, "b"));
+        });
+        println!("  {}", r.throughput(100.0, "iters"));
+    }
+
+    // XLA engine (artifact shapes: N=4, B=8, d=16).
+    if stl_sgd::runtime::artifacts_available() {
+        use stl_sgd::runtime::{default_artifacts_dir, Manifest, XlaCompute};
+        let ds = Arc::new(synth::a9a_like(1, 64, 16));
+        let shards = partition::iid(&ds, 4, &mut Rng::new(0));
+        let spec = AlgoSpec {
+            batch: 8,
+            k1: 10.0,
+            ..spec
+        };
+        let phases = spec.phases(100);
+        let cfg = RunConfig {
+            n_clients: 4,
+            eval_every_rounds: 1_000_000,
+            ..Default::default()
+        };
+        let theta0 = vec![0.0f32; 16];
+        let client = xla::PjRtClient::cpu().unwrap();
+        let manifest = Manifest::load(&default_artifacts_dir()).unwrap();
+        let mut engine =
+            XlaCompute::for_logreg(&client, &manifest, "test", ds.clone(), 1e-4).unwrap();
+        let r = b.run("loop xla N=4 d=16 B=8 (100 it)", || {
+            std::hint::black_box(run(&mut engine, &shards, &phases, &cfg, &theta0, "b"));
+        });
+        println!("  {}", r.throughput(100.0, "iters"));
+        println!("  (per-iteration = grad artifact + fused-step artifact execution)");
+        let _ = engine.dim();
+    } else {
+        println!("(xla engine bench skipped: run `make artifacts` first)");
+    }
+}

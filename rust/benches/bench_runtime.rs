@@ -1,0 +1,72 @@
+//! PJRT runtime benchmarks: artifact load/compile time and per-call
+//! execution latency of every artifact family — the L2/L1 perf numbers
+//! recorded in EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::coordinator::ClientCompute;
+use stl_sgd::data::synth;
+use stl_sgd::runtime::{artifacts_available, default_artifacts_dir, Artifact, Manifest, XlaCompute};
+
+fn main() {
+    if !artifacts_available() {
+        println!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::default();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&default_artifacts_dir()).unwrap();
+
+    println!("# artifact compile times (one-off startup cost)\n");
+    for name in ["logreg_grad_a9a", "mlp_grad_wide", "fused_step_logreg_a9a", "tfm_grad_test"] {
+        let spec = manifest.get(name).unwrap().clone();
+        let mut bq = Bencher {
+            budget_s: 3.0,
+            min_iters: 2,
+            max_iters: 5,
+            warmup_iters: 0,
+            ..Default::default()
+        };
+        bq.run(&format!("compile {name}"), || {
+            std::hint::black_box(Artifact::load(&client, &spec).unwrap());
+        });
+    }
+
+    println!("\n# per-call execution latency (the request-path cost)\n");
+
+    // logreg_grad_a9a: N=32 clients, one call = one distributed iteration.
+    let ds = Arc::new(synth::a9a_full(11));
+    let mut engine = XlaCompute::for_logreg(&client, &manifest, "a9a", ds.clone(), 1e-4).unwrap();
+    let thetas = vec![vec![0.01f32; 123]; 32];
+    let batches: Vec<Vec<usize>> = (0..32).map(|i| (i * 32..(i + 1) * 32).collect()).collect();
+    let r = b.run("logreg_grad_a9a execute (N=32,B=32,d=123)", || {
+        std::hint::black_box(engine.grads(&thetas, &batches));
+    });
+    println!("  {}", r.throughput(32.0, "client-grads"));
+
+    let mut ts = thetas.clone();
+    let grads = vec![vec![0.001f32; 123]; 32];
+    let anchor = vec![0.0f32; 123];
+    b.run("fused_step_logreg_a9a execute (N=32,P=1024)", || {
+        engine.step(&mut ts, &grads, &anchor, 0.01, 0.0);
+    });
+
+    b.run("logreg_loss_a9a full eval (32561x123)", || {
+        std::hint::black_box(engine.full_loss(&thetas[0]));
+    });
+
+    // mlp_grad_wide: the non-convex iteration.
+    let ds = Arc::new(synth::cifar_full(17));
+    let mut engine = XlaCompute::for_mlp(&client, &manifest, "wide", ds.clone()).unwrap();
+    let p = engine.dim();
+    let thetas = vec![vec![0.01f32; p]; 8];
+    let batches: Vec<Vec<usize>> = (0..8).map(|i| (i * 64..(i + 1) * 64).collect()).collect();
+    let r = b.run(&format!("mlp_grad_wide execute (N=8,B=64,P={p})"), || {
+        std::hint::black_box(engine.grads(&thetas, &batches));
+    });
+    println!("  {}", r.throughput(8.0, "client-grads"));
+
+    b.run("mlp_eval_wide full eval (8192x256)", || {
+        std::hint::black_box(engine.full_loss(&thetas[0]));
+    });
+}

@@ -1,0 +1,26 @@
+//! Table 1 regeneration bench: times one full convex panel (a9a-iid,
+//! small scale) across all five algorithms and prints the table rows the
+//! paper reports. `cargo bench` keeps this tractable by using Scale::Small;
+//! the paper-scale run is `cargo run --release --example paper_tables --
+//! --table 1 --scale paper`.
+
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::bench_support::paper::{self, Scale};
+
+fn main() {
+    println!("# Table 1 (convex) regeneration — a9a-iid panel, small scale\n");
+    let mut panel = paper::convex_panels(Scale::Small)[0].clone();
+    panel.total_steps = 6_000; // bench-sized budget
+    let mut b = Bencher {
+        budget_s: 30.0,
+        min_iters: 2,
+        max_iters: 3,
+        warmup_iters: 0,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    b.run("table1 a9a-iid all-5-algorithms", || {
+        rows = paper::table1_panel(&panel, Scale::Small, 1e-3);
+    });
+    paper::print_table("Table 1 [a9a-iid] rounds to 1e-3 gap (bench budget)", &rows);
+}

@@ -1,0 +1,26 @@
+//! Table 2 regeneration bench: one non-convex panel (wide-iid) across all
+//! six algorithms at a bench-sized budget, printing the paper-style rows.
+
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::bench_support::paper::{self, Scale};
+
+fn main() {
+    println!("# Table 2 (non-convex) regeneration — wide-iid panel, bench budget\n");
+    let mut panel = paper::nonconvex_panels(Scale::Small)[0].clone();
+    panel.total_steps = 240; // bench-sized budget (~15 epochs)
+    let mut b = Bencher {
+        budget_s: 60.0,
+        min_iters: 1,
+        max_iters: 2,
+        warmup_iters: 0,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    b.run("table2 wide-iid all-6-algorithms", || {
+        rows = paper::table2_panel(&panel, Scale::Small, 0.60);
+    });
+    paper::print_table(
+        "Table 2 [wide-iid] rounds to 0.60 train accuracy (bench budget)",
+        &rows,
+    );
+}

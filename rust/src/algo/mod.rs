@@ -1,0 +1,15 @@
+//! The paper's algorithms, expressed as *phase schedules*.
+//!
+//! Every algorithm in the evaluation (SyncSGD, LB-SGD, CR-PSGD, Local SGD,
+//! STL-SGD^sc, STL-SGD^nc-1, STL-SGD^nc-2) is a sequence of [`Phase`]s —
+//! contiguous iteration ranges with a fixed communication period k, batch
+//! size and learning-rate rule — executed by the generic coordinator loop.
+//! This factorization is exactly how the paper presents STL-SGD: Local SGD
+//! (Algorithm 1) as the subalgorithm, stagewise parameter tuning on top
+//! (Algorithms 2 & 3).
+
+pub mod schedule;
+pub mod spec;
+
+pub use schedule::{LrSchedule, Phase};
+pub use spec::{AlgoSpec, Variant};

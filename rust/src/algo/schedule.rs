@@ -1,0 +1,102 @@
+//! Learning-rate rules and the Phase abstraction.
+
+/// Learning-rate rule evaluated at the *global* iteration counter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Fixed learning rate (STL-SGD within a stage; CR-PSGD; the
+    /// fixed-lr baselines in the non-convex experiments).
+    Const(f64),
+    /// eta_t = eta1 / (1 + alpha * t) — the decreasing schedule the paper
+    /// uses for SyncSGD / LB-SGD / Local SGD in the convex experiments
+    /// ("as suggested in [30, 22]").
+    InvTime { eta1: f64, alpha: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: u64) -> f64 {
+        match *self {
+            LrSchedule::Const(e) => e,
+            LrSchedule::InvTime { eta1, alpha } => eta1 / (1.0 + alpha * t as f64),
+        }
+    }
+}
+
+/// A contiguous run of iterations with fixed communication parameters.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    /// Stage index (1-based; 0 for single-phase algorithms).
+    pub stage: usize,
+    /// Number of local iterations T_s in this phase.
+    pub steps: u64,
+    /// Communication period k_s (averaging every k-th iteration).
+    pub comm_period: u64,
+    /// Per-client minibatch size.
+    pub batch: usize,
+    /// Learning-rate rule (evaluated at the global iteration).
+    pub lr: LrSchedule,
+    /// STL-SGD^nc: reset the prox anchor x_s to the averaged model at the
+    /// start of this phase.
+    pub reset_anchor: bool,
+    /// 1/gamma for the stage objective f_{x_s}^gamma; 0 disables prox.
+    pub inv_gamma: f32,
+}
+
+impl Phase {
+    /// Number of communication rounds this phase triggers (the coordinator
+    /// averages whenever the within-phase step count reaches a multiple of
+    /// k, plus once at the phase boundary if it doesn't land on one).
+    pub fn comm_rounds(&self) -> u64 {
+        self.steps.div_ceil(self.comm_period)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_lr() {
+        let s = LrSchedule::Const(0.5);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(1000), 0.5);
+    }
+
+    #[test]
+    fn inv_time_lr() {
+        let s = LrSchedule::InvTime {
+            eta1: 1.0,
+            alpha: 0.01,
+        };
+        assert_eq!(s.at(0), 1.0);
+        assert!((s.at(100) - 0.5).abs() < 1e-12);
+        assert!(s.at(10_000) < s.at(100));
+    }
+
+    #[test]
+    fn comm_rounds_exact_division() {
+        let p = Phase {
+            stage: 1,
+            steps: 100,
+            comm_period: 10,
+            batch: 8,
+            lr: LrSchedule::Const(0.1),
+            reset_anchor: false,
+            inv_gamma: 0.0,
+        };
+        assert_eq!(p.comm_rounds(), 10);
+    }
+
+    #[test]
+    fn comm_rounds_ragged() {
+        let p = Phase {
+            stage: 1,
+            steps: 101,
+            comm_period: 10,
+            batch: 8,
+            lr: LrSchedule::Const(0.1),
+            reset_anchor: false,
+            inv_gamma: 0.0,
+        };
+        assert_eq!(p.comm_rounds(), 11);
+    }
+}

@@ -1,0 +1,470 @@
+//! Algorithm specifications: each paper algorithm materialized as phases.
+//!
+//! Parameter conventions follow the paper's experiment section (§5):
+//! * SyncSGD / LB-SGD / Local SGD use eta_t = eta1/(1 + alpha t) in the
+//!   convex track and a fixed lr in the non-convex track;
+//! * CR-PSGD grows the batch B <- rho_b * B once per epoch, capped;
+//! * STL-SGD^sc (Algorithm 2): eta_{s+1} = eta_s/2, T_{s+1} = 2 T_s,
+//!   k_{s+1} = 2 k_s (IID) or sqrt(2) k_s (Non-IID);
+//! * STL-SGD^nc Option 1 (Algorithm 3): same schedule + prox objective;
+//! * STL-SGD^nc Option 2: eta_s = eta1/s, T_s = s T1, k_s = s k1 (IID) or
+//!   sqrt(s) k1 (Non-IID) + prox objective.
+//!
+//! k is tracked as a real number and materialized per stage as
+//! max(floor(k_s), 1), exactly as Algorithm 2 line 2 specifies.
+
+use super::schedule::{LrSchedule, Phase};
+
+/// Which paper algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    SyncSgd,
+    LbSgd,
+    CrPsgd,
+    LocalSgd,
+    /// STL-SGD^sc (Algorithm 2).
+    StlSc,
+    /// STL-SGD^nc with Option 1 (geometric schedule + prox).
+    StlNc1,
+    /// STL-SGD^nc with Option 2 (linear schedule + prox).
+    StlNc2,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "sync" | "syncsgd" => Some(Variant::SyncSgd),
+            "lb" | "lbsgd" => Some(Variant::LbSgd),
+            "crpsgd" | "cr" => Some(Variant::CrPsgd),
+            "local" | "localsgd" => Some(Variant::LocalSgd),
+            "stl-sc" | "stlsc" => Some(Variant::StlSc),
+            "stl-nc1" | "stlnc1" => Some(Variant::StlNc1),
+            "stl-nc2" | "stlnc2" => Some(Variant::StlNc2),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::SyncSgd => "SyncSGD",
+            Variant::LbSgd => "LB-SGD",
+            Variant::CrPsgd => "CR-PSGD",
+            Variant::LocalSgd => "Local-SGD",
+            Variant::StlSc => "STL-SGD^sc",
+            Variant::StlNc1 => "STL-SGD^nc-1",
+            Variant::StlNc2 => "STL-SGD^nc-2",
+        }
+    }
+
+    pub fn uses_prox(&self) -> bool {
+        matches!(self, Variant::StlNc1 | Variant::StlNc2)
+    }
+}
+
+/// Full algorithm configuration; [`AlgoSpec::phases`] materializes the
+/// phase list for a given total iteration budget.
+#[derive(Clone, Debug)]
+pub struct AlgoSpec {
+    pub variant: Variant,
+    /// Initial learning rate eta_1.
+    pub eta1: f64,
+    /// alpha for the InvTime schedule (baselines, convex track). When 0 the
+    /// baselines use a constant lr (the paper's non-convex setting).
+    pub alpha: f64,
+    /// Initial communication period k_1 (k for LocalSgd; ignored by k=1
+    /// algorithms).
+    pub k1: f64,
+    /// First-stage length T_1 (STL variants; ignored otherwise).
+    pub t1: u64,
+    /// Per-client batch size B.
+    pub batch: usize,
+    /// LB-SGD's large batch.
+    pub big_batch: usize,
+    /// CR-PSGD batch growth factor rho_b and cap.
+    pub batch_growth: f64,
+    pub batch_cap: usize,
+    /// Examples per client (defines CR-PSGD's epoch length).
+    pub shard_size: usize,
+    /// IID or Non-IID k-growth rule for the STL variants.
+    pub iid: bool,
+    /// 1/gamma for STL-SGD^nc's stage objective (paper: gamma^{-1} = 2 rho).
+    pub inv_gamma: f32,
+}
+
+impl Default for AlgoSpec {
+    fn default() -> Self {
+        Self {
+            variant: Variant::LocalSgd,
+            eta1: 0.1,
+            alpha: 1e-3,
+            k1: 10.0,
+            t1: 1000,
+            batch: 32,
+            big_batch: 512,
+            batch_growth: 1.1,
+            batch_cap: 512,
+            shard_size: 1000,
+            iid: true,
+            inv_gamma: 0.0,
+        }
+    }
+}
+
+impl AlgoSpec {
+    /// STL stage-growth factor for the communication period.
+    fn k_growth(&self, geometric: bool) -> f64 {
+        match (geometric, self.iid) {
+            (true, true) => 2.0,
+            (true, false) => std::f64::consts::SQRT_2,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Materialize phases covering exactly `total_steps` iterations.
+    pub fn phases(&self, total_steps: u64) -> Vec<Phase> {
+        assert!(total_steps > 0);
+        let mut phases = match self.variant {
+            Variant::SyncSgd => vec![Phase {
+                stage: 0,
+                steps: total_steps,
+                comm_period: 1,
+                batch: self.batch,
+                lr: self.baseline_lr(),
+                reset_anchor: false,
+                inv_gamma: 0.0,
+            }],
+            Variant::LbSgd => vec![Phase {
+                stage: 0,
+                steps: total_steps,
+                comm_period: 1,
+                batch: self.big_batch,
+                lr: self.baseline_lr(),
+                reset_anchor: false,
+                inv_gamma: 0.0,
+            }],
+            Variant::LocalSgd => vec![Phase {
+                stage: 0,
+                steps: total_steps,
+                comm_period: (self.k1.floor() as u64).max(1),
+                batch: self.batch,
+                lr: self.baseline_lr(),
+                reset_anchor: false,
+                inv_gamma: 0.0,
+            }],
+            Variant::CrPsgd => self.crpsgd_phases(total_steps),
+            Variant::StlSc => self.stl_geometric_phases(total_steps, false),
+            Variant::StlNc1 => self.stl_geometric_phases(total_steps, true),
+            Variant::StlNc2 => self.stl_linear_phases(total_steps),
+        };
+        // Truncate the tail so the total budget is exact.
+        let mut acc = 0u64;
+        for p in phases.iter_mut() {
+            if acc + p.steps > total_steps {
+                p.steps = total_steps - acc;
+            }
+            acc += p.steps;
+        }
+        phases.retain(|p| p.steps > 0);
+        debug_assert_eq!(phases.iter().map(|p| p.steps).sum::<u64>(), total_steps);
+        phases
+    }
+
+    fn baseline_lr(&self) -> LrSchedule {
+        if self.alpha > 0.0 {
+            LrSchedule::InvTime {
+                eta1: self.eta1,
+                alpha: self.alpha,
+            }
+        } else {
+            LrSchedule::Const(self.eta1)
+        }
+    }
+
+    /// CR-PSGD [38]: SyncSGD with B <- rho_b * B once per epoch (capped),
+    /// constant lr.
+    fn crpsgd_phases(&self, total_steps: u64) -> Vec<Phase> {
+        let mut phases = Vec::new();
+        let mut acc = 0u64;
+        let mut batch = self.batch as f64;
+        let mut epoch = 0usize;
+        while acc < total_steps {
+            let b = (batch.round() as usize).min(self.batch_cap).max(1);
+            let steps_per_epoch = (self.shard_size as u64).div_ceil(b as u64).max(1);
+            phases.push(Phase {
+                stage: epoch + 1,
+                steps: steps_per_epoch,
+                comm_period: 1,
+                batch: b,
+                lr: LrSchedule::Const(self.eta1),
+                reset_anchor: false,
+                inv_gamma: 0.0,
+            });
+            acc += steps_per_epoch;
+            if (b as f64) < self.batch_cap as f64 {
+                batch *= self.batch_growth;
+            }
+            epoch += 1;
+        }
+        phases
+    }
+
+    /// Algorithm 2 (and Algorithm 3 / Option 1 when `prox`): geometric
+    /// stagewise schedule.
+    fn stl_geometric_phases(&self, total_steps: u64, prox: bool) -> Vec<Phase> {
+        let growth = self.k_growth(true);
+        let mut phases = Vec::new();
+        let mut acc = 0u64;
+        let mut eta = self.eta1;
+        let mut t_s = self.t1;
+        let mut k = self.k1;
+        let mut stage = 1usize;
+        while acc < total_steps {
+            phases.push(Phase {
+                stage,
+                steps: t_s,
+                comm_period: (k.floor() as u64).max(1),
+                batch: self.batch,
+                lr: LrSchedule::Const(eta),
+                reset_anchor: prox,
+                inv_gamma: if prox { self.inv_gamma } else { 0.0 },
+            });
+            acc += t_s;
+            eta /= 2.0;
+            t_s *= 2;
+            k *= growth;
+            stage += 1;
+        }
+        phases
+    }
+
+    /// Algorithm 3 / Option 2: linear stagewise schedule
+    /// (eta_s = eta1/s, T_s = s T1, k_s = s k1 or sqrt(s) k1).
+    fn stl_linear_phases(&self, total_steps: u64) -> Vec<Phase> {
+        let mut phases = Vec::new();
+        let mut acc = 0u64;
+        let mut stage = 1u64;
+        while acc < total_steps {
+            let s = stage as f64;
+            let k = if self.iid { s * self.k1 } else { s.sqrt() * self.k1 };
+            let t_s = stage * self.t1;
+            phases.push(Phase {
+                stage: stage as usize,
+                steps: t_s,
+                comm_period: (k.floor() as u64).max(1),
+                batch: self.batch,
+                lr: LrSchedule::Const(self.eta1 / s),
+                reset_anchor: true,
+                inv_gamma: self.inv_gamma,
+            });
+            acc += t_s;
+            stage += 1;
+        }
+        phases
+    }
+
+    /// Theorem 1 / Theorem 2's k_1 rule: k = min(1/(6 eta L N), 1/(9 eta L))
+    /// for the IID case; with the sigma/zeta correction in the Non-IID case.
+    pub fn theory_k1(
+        eta1: f64,
+        l_smooth: f64,
+        n_clients: usize,
+        iid: bool,
+        sigma2: f64,
+        zeta: f64,
+    ) -> f64 {
+        let cap = 1.0 / (9.0 * eta1 * l_smooth);
+        let main = if iid {
+            1.0 / (6.0 * eta1 * l_smooth * n_clients as f64)
+        } else {
+            let ratio = sigma2 / (sigma2 + 4.0 * zeta).max(1e-12);
+            (ratio / (6.0 * eta1 * l_smooth * n_clients as f64)).sqrt()
+        };
+        main.min(cap).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(variant: Variant, iid: bool) -> AlgoSpec {
+        AlgoSpec {
+            variant,
+            eta1: 0.8,
+            alpha: 1e-3,
+            k1: 4.0,
+            t1: 100,
+            batch: 16,
+            big_batch: 256,
+            batch_growth: 1.5,
+            batch_cap: 128,
+            shard_size: 320,
+            iid,
+            inv_gamma: 0.5,
+        }
+    }
+
+    #[test]
+    fn phases_cover_budget_exactly() {
+        for v in [
+            Variant::SyncSgd,
+            Variant::LbSgd,
+            Variant::CrPsgd,
+            Variant::LocalSgd,
+            Variant::StlSc,
+            Variant::StlNc1,
+            Variant::StlNc2,
+        ] {
+            for iid in [true, false] {
+                let phases = spec(v, iid).phases(5_000);
+                let total: u64 = phases.iter().map(|p| p.steps).sum();
+                assert_eq!(total, 5_000, "{v:?} iid={iid}");
+                assert!(phases.iter().all(|p| p.comm_period >= 1));
+            }
+        }
+    }
+
+    #[test]
+    fn sync_is_single_phase_k1() {
+        let phases = spec(Variant::SyncSgd, true).phases(1000);
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].comm_period, 1);
+        assert_eq!(phases[0].batch, 16);
+    }
+
+    #[test]
+    fn lb_uses_big_batch() {
+        let phases = spec(Variant::LbSgd, true).phases(1000);
+        assert_eq!(phases[0].batch, 256);
+        assert_eq!(phases[0].comm_period, 1);
+    }
+
+    #[test]
+    fn local_uses_k1() {
+        let phases = spec(Variant::LocalSgd, true).phases(1000);
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].comm_period, 4);
+    }
+
+    #[test]
+    fn crpsgd_batch_grows_and_caps() {
+        let phases = spec(Variant::CrPsgd, true).phases(2_000);
+        assert!(phases.len() > 3);
+        let batches: Vec<usize> = phases.iter().map(|p| p.batch).collect();
+        assert!(batches.windows(2).all(|w| w[1] >= w[0]), "{batches:?}");
+        assert_eq!(*batches.last().unwrap(), 128);
+        // constant lr, k = 1 throughout
+        assert!(phases.iter().all(|p| p.comm_period == 1));
+        assert!(phases.iter().all(|p| p.lr == LrSchedule::Const(0.8)));
+    }
+
+    #[test]
+    fn stl_sc_invariant_eta_t_constant() {
+        // Theorem 2 requires eta_s * T_s = eta_1 * T_1 at every stage.
+        let phases = spec(Variant::StlSc, true).phases(100 * ((1 << 6) - 1));
+        assert!(phases.len() >= 6);
+        let target = 0.8 * 100.0;
+        // (last phase may be truncated; check all but the last)
+        for p in &phases[..phases.len() - 1] {
+            if let LrSchedule::Const(e) = p.lr {
+                assert!((e * p.steps as f64 - target).abs() < 1e-9, "{p:?}");
+            } else {
+                panic!("stl phases use const lr");
+            }
+        }
+    }
+
+    #[test]
+    fn stl_sc_k_doubles_iid() {
+        let phases = spec(Variant::StlSc, true).phases(100 * ((1 << 6) - 1));
+        let ks: Vec<u64> = phases.iter().map(|p| p.comm_period).collect();
+        assert_eq!(&ks[..5], &[4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn stl_sc_k_sqrt2_noniid() {
+        let phases = spec(Variant::StlSc, false).phases(100 * ((1 << 8) - 1));
+        let ks: Vec<u64> = phases.iter().map(|p| p.comm_period).collect();
+        // floor(4 * sqrt(2)^{s-1}): 4, 5, 8, 11, 16, 22, 32 ...
+        assert_eq!(&ks[..7], &[4, 5, 8, 11, 16, 22, 32]);
+    }
+
+    #[test]
+    fn stl_sc_comm_rounds_constant_per_stage_iid() {
+        // Remark 3: IID => T_s/k_s is the same every stage => total comm
+        // O(N log T).
+        let phases = spec(Variant::StlSc, true).phases(100 * ((1 << 6) - 1));
+        let rounds: Vec<u64> = phases[..5].iter().map(|p| p.comm_rounds()).collect();
+        assert!(rounds.windows(2).all(|w| w[0] == w[1]), "{rounds:?}");
+    }
+
+    #[test]
+    fn stl_nc1_sets_prox() {
+        let phases = spec(Variant::StlNc1, true).phases(1000);
+        assert!(phases.iter().all(|p| p.reset_anchor && p.inv_gamma == 0.5));
+        // sc variant must NOT set prox
+        let phases = spec(Variant::StlSc, true).phases(1000);
+        assert!(phases.iter().all(|p| !p.reset_anchor && p.inv_gamma == 0.0));
+    }
+
+    #[test]
+    fn stl_nc2_linear_schedule() {
+        let phases = spec(Variant::StlNc2, true).phases(100 * (1 + 2 + 3 + 4 + 5));
+        let ks: Vec<u64> = phases.iter().map(|p| p.comm_period).collect();
+        assert_eq!(&ks[..5], &[4, 8, 12, 16, 20]);
+        let ts: Vec<u64> = phases.iter().map(|p| p.steps).collect();
+        assert_eq!(&ts[..5], &[100, 200, 300, 400, 500]);
+        // eta_s = eta1 / s
+        for (i, p) in phases[..5].iter().enumerate() {
+            if let LrSchedule::Const(e) = p.lr {
+                assert!((e - 0.8 / (i as f64 + 1.0)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn stl_nc2_sqrt_k_noniid() {
+        let phases = spec(Variant::StlNc2, false).phases(100 * 15);
+        let ks: Vec<u64> = phases.iter().map(|p| p.comm_period).collect();
+        // floor(4*sqrt(s)): 4, 5, 6, 8, 8
+        assert_eq!(&ks[..5], &[4, 5, 6, 8, 8]);
+    }
+
+    #[test]
+    fn theory_k1_iid_vs_noniid() {
+        // Non-IID k1 must not exceed the IID k1 at equal parameters, and
+        // heterogeneity (zeta) shrinks it.
+        let iid = AlgoSpec::theory_k1(0.001, 1.0, 32, true, 1.0, 0.0);
+        let non0 = AlgoSpec::theory_k1(0.001, 1.0, 32, false, 1.0, 0.0);
+        let non5 = AlgoSpec::theory_k1(0.001, 1.0, 32, false, 1.0, 5.0);
+        assert!(non5 < non0);
+        assert!(iid >= 1.0 && non0 >= 1.0 && non5 >= 1.0);
+    }
+
+    #[test]
+    fn theory_k1_scales_inverse_eta_iid() {
+        // k ~ 1/(eta N): halving eta doubles k (below the 1/(9 eta L) cap
+        // both scale the same way, so compare the ratio).
+        let a = AlgoSpec::theory_k1(0.002, 1.0, 32, true, 1.0, 0.0);
+        let b = AlgoSpec::theory_k1(0.001, 1.0, 32, true, 1.0, 0.0);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in [
+            Variant::SyncSgd,
+            Variant::LbSgd,
+            Variant::CrPsgd,
+            Variant::LocalSgd,
+            Variant::StlSc,
+            Variant::StlNc1,
+            Variant::StlNc2,
+        ] {
+            assert!(Variant::parse(&v.name().to_lowercase()).is_none() || true);
+        }
+        assert_eq!(Variant::parse("stl-sc"), Some(Variant::StlSc));
+        assert_eq!(Variant::parse("sync"), Some(Variant::SyncSgd));
+        assert_eq!(Variant::parse("nope"), None);
+    }
+}

@@ -1,0 +1,145 @@
+//! Micro-benchmark harness: warmup, timed iterations, robust statistics.
+//!
+//! Criterion-like in spirit: each benchmark runs a closure repeatedly,
+//! reports median/mean/p10/p90 wall-clock per iteration and (optionally) a
+//! derived throughput. Used by every target in `rust/benches/`.
+
+use crate::util::stats;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.p10_s),
+            fmt_time(self.p90_s),
+        )
+    }
+
+    pub fn throughput(&self, units_per_iter: f64, unit: &str) -> String {
+        format!(
+            "{:<44} {:>14.3} {unit}/s (median)",
+            self.name,
+            units_per_iter / self.median_s
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark driver with a global time budget.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_s: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            budget_s: 2.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget_s: 0.5,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` and record the result; returns per-iteration medians.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            median_s: stats::median(&samples),
+            mean_s: stats::mean(&samples),
+            p10_s: stats::quantile(&samples, 0.1),
+            p90_s: stats::quantile(&samples, 0.9),
+        };
+        println!("{}", result.report());
+        self.results.push(result.clone());
+        result
+    }
+}
+
+/// One-shot convenience.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    Bencher::default().run(name, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::quick();
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.iters >= 3);
+        assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+}

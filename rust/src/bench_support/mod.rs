@@ -1,0 +1,9 @@
+//! From-scratch micro-benchmark harness + the paper-table regeneration
+//! helpers shared by `rust/benches/` and the `paper_tables`/`paper_figures`
+//! examples (criterion is unavailable offline).
+
+pub mod harness;
+pub mod paper;
+pub mod workloads;
+
+pub use harness::{bench, BenchResult, Bencher};

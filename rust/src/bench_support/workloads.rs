@@ -1,0 +1,381 @@
+//! Shared experiment harness: workload construction, engines, paper-default
+//! hyperparameters, f* computation, and the one-call `run_experiment` used
+//! by the examples, the benches and the integration tests.
+
+use crate::algo::{AlgoSpec, Variant};
+use crate::config::{ExperimentConfig, Workload};
+use crate::coordinator::{self, ClientCompute, NativeCompute, RunConfig, ThreadedCompute, Trace};
+use crate::data::{partition, synth, Dataset, Shard};
+use crate::grad::{logreg::NativeLogreg, mlp::MlpArch, mlp::NativeMlp, Oracle};
+use crate::rng::Rng;
+use std::sync::Arc;
+
+/// Everything needed to run a workload.
+pub struct WorkloadSetup {
+    pub dataset: Arc<Dataset>,
+    /// Native oracle (None for the transformer, which is XLA-only).
+    pub oracle: Option<Arc<dyn Oracle>>,
+    pub arch: Option<MlpArch>,
+    pub lam: f32,
+    pub theta0: Vec<f32>,
+}
+
+/// MLP capacities for the two non-convex slots (must match aot.py).
+pub fn mlp_arch(workload: Workload) -> MlpArch {
+    match workload {
+        Workload::MlpWide => MlpArch {
+            d_in: 256,
+            hidden: vec![256, 128],
+            classes: 10,
+        },
+        Workload::MlpDeep => MlpArch {
+            d_in: 256,
+            hidden: vec![128, 128, 128, 128],
+            classes: 10,
+        },
+        Workload::MlpTest => MlpArch {
+            d_in: 16,
+            hidden: vec![16],
+            classes: 4,
+        },
+        _ => panic!("not an mlp workload"),
+    }
+}
+
+/// Dataset + oracle + initial point for a workload. Deterministic in seed.
+pub fn build(workload: Workload, seed: u64) -> WorkloadSetup {
+    match workload {
+        Workload::LogregA9a | Workload::LogregMnist | Workload::LogregTest => {
+            let dataset = Arc::new(match workload {
+                Workload::LogregA9a => synth::a9a_full(seed),
+                Workload::LogregMnist => synth::mnist_full(seed),
+                _ => synth::a9a_like(seed, 64, 16),
+            });
+            let lam = 1.0 / dataset.len() as f32; // paper: lambda = 1/n
+            let oracle = Arc::new(NativeLogreg::new(dataset.clone(), lam));
+            let theta0 = vec![0.0f32; dataset.dim()];
+            WorkloadSetup {
+                dataset,
+                oracle: Some(oracle),
+                arch: None,
+                lam,
+                theta0,
+            }
+        }
+        Workload::MlpWide | Workload::MlpDeep | Workload::MlpTest => {
+            let dataset = Arc::new(match workload {
+                Workload::MlpTest => synth::cifar_like(seed, 64, 16, 4),
+                _ => synth::cifar_full(seed),
+            });
+            let arch = mlp_arch(workload);
+            let oracle = Arc::new(NativeMlp::new(dataset.clone(), arch.clone()));
+            let theta0 = arch.init(&mut Rng::new(seed ^ 0x1217));
+            WorkloadSetup {
+                dataset,
+                oracle: Some(oracle),
+                arch: Some(arch),
+                lam: 0.0,
+                theta0,
+            }
+        }
+        Workload::TfmSmall | Workload::TfmTest => {
+            let (vocab, seq, rows) = if workload == Workload::TfmSmall {
+                (512usize, 32usize, 1024usize)
+            } else {
+                (64, 16, 64)
+            };
+            let corpus = synth::token_corpus(seed, rows, seq + 1, vocab);
+            let rows_f: Vec<Vec<f32>> = corpus
+                .iter()
+                .map(|s| s.iter().map(|&t| t as f32).collect())
+                .collect();
+            let dataset = Arc::new(Dataset {
+                x: crate::linalg::Matrix::from_rows(&rows_f),
+                y: vec![0.0; rows],
+                classes: vocab,
+                name: "token-corpus".into(),
+            });
+            WorkloadSetup {
+                dataset,
+                oracle: None,
+                arch: None,
+                lam: 0.0,
+                theta0: Vec::new(), // sized by the XLA engine's manifest
+            }
+        }
+    }
+}
+
+/// Transformer init: small-normal flat vector of the artifact's true dim.
+pub fn tfm_theta0(p: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x7F);
+    (0..p).map(|_| rng.normal_f32() * 0.02).collect()
+}
+
+/// Partition per the experiment config (paper protocol).
+pub fn make_shards(cfg: &ExperimentConfig, dataset: &Dataset) -> Vec<Shard> {
+    let mut rng = Rng::new(cfg.seed ^ 0x9A87);
+    if cfg.iid {
+        partition::iid(dataset, cfg.n_clients, &mut rng)
+    } else {
+        partition::noniid(dataset, cfg.n_clients, cfg.s_percent, &mut rng)
+    }
+}
+
+/// Build the configured engine ("native" | "threaded" | "xla").
+pub fn make_engine(
+    cfg: &ExperimentConfig,
+    setup: &WorkloadSetup,
+) -> anyhow::Result<Box<dyn ClientCompute>> {
+    match cfg.engine.as_str() {
+        "native" => Ok(Box::new(NativeCompute::new(
+            setup
+                .oracle
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("{:?} has no native oracle", cfg.workload))?,
+        ))),
+        "threaded" => {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(cfg.n_clients);
+            Ok(Box::new(ThreadedCompute::new(
+                setup
+                    .oracle
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("{:?} has no native oracle", cfg.workload))?,
+                workers,
+            )))
+        }
+        "xla" => {
+            use crate::runtime::{default_artifacts_dir, Manifest, XlaCompute};
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+            let manifest = Manifest::load(&default_artifacts_dir())?;
+            let ac = cfg.workload.artifact_config();
+            let engine = match cfg.workload {
+                Workload::LogregA9a | Workload::LogregMnist | Workload::LogregTest => {
+                    XlaCompute::for_logreg(&client, &manifest, ac, setup.dataset.clone(), setup.lam)?
+                }
+                Workload::MlpWide | Workload::MlpDeep | Workload::MlpTest => {
+                    XlaCompute::for_mlp(&client, &manifest, ac, setup.dataset.clone())?
+                }
+                Workload::TfmSmall | Workload::TfmTest => XlaCompute::for_tfm(
+                    &client,
+                    &manifest,
+                    ac,
+                    setup.dataset.clone(),
+                    cfg.n_clients,
+                    8, // eval on 2 fixed batches: eval cost ~ 2 grad calls
+                )?,
+            };
+            Ok(Box::new(engine))
+        }
+        other => anyhow::bail!("unknown engine {other}"),
+    }
+}
+
+/// Run one experiment end to end.
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<Trace> {
+    run_experiment_with_stop(cfg, None)
+}
+
+pub fn run_experiment_with_stop(
+    cfg: &ExperimentConfig,
+    stop: Option<coordinator::StopRule>,
+) -> anyhow::Result<Trace> {
+    let setup = build(cfg.workload, cfg.seed);
+    let shards = make_shards(cfg, &setup.dataset);
+    let mut engine = make_engine(cfg, &setup)?;
+    let theta0 = if setup.theta0.is_empty() {
+        tfm_theta0(engine.dim(), cfg.seed)
+    } else {
+        setup.theta0.clone()
+    };
+    let mut spec = cfg.algo.clone();
+    spec.iid = cfg.iid;
+    spec.shard_size = shards[0].len();
+    let phases = spec.phases(cfg.total_steps);
+    let run_cfg = RunConfig {
+        n_clients: cfg.n_clients,
+        collective: cfg.collective,
+        eval_every_rounds: cfg.eval_every_rounds,
+        stop,
+        seed: cfg.seed,
+        eval_accuracy: !cfg.workload.is_convex() || true,
+        ..Default::default()
+    };
+    Ok(coordinator::run(
+        engine.as_mut(),
+        &shards,
+        &phases,
+        &run_cfg,
+        &theta0,
+        spec.variant.name(),
+    ))
+}
+
+/// Minimizer value f(x*) for a convex workload via full-batch GD with
+/// halving on non-descent. Cached in artifacts/fstar_<name>_<seed>.json.
+pub fn compute_f_star(workload: Workload, seed: u64, iters: usize) -> f64 {
+    let cache = crate::runtime::default_artifacts_dir()
+        .join(format!("fstar_{}_{}.json", workload.name(), seed));
+    if let Ok(j) = crate::util::json::Json::parse_file(&cache) {
+        if let Some(v) = j.get("f_star").and_then(|v| v.as_f64()) {
+            if j.get("iters").and_then(|v| v.as_usize()) == Some(iters) {
+                return v;
+            }
+        }
+    }
+    let setup = build(workload, seed);
+    let oracle = setup.oracle.expect("convex workload");
+    let all: Vec<usize> = (0..setup.dataset.len()).collect();
+    let mut theta = setup.theta0.clone();
+    let mut eta = 4.0f32;
+    let mut best = oracle.full_loss(&theta);
+    for _ in 0..iters {
+        let (g, _) = oracle.grad_minibatch(&theta, &all);
+        let mut cand = theta.clone();
+        crate::linalg::axpy(-eta, &g, &mut cand);
+        let l = oracle.full_loss(&cand);
+        if l <= best {
+            theta = cand;
+            best = l;
+        } else {
+            eta *= 0.5;
+            if eta < 1e-6 {
+                break;
+            }
+        }
+    }
+    let j = crate::util::json::Json::obj(vec![
+        ("f_star", crate::util::json::Json::num(best)),
+        ("iters", crate::util::json::Json::num(iters as f64)),
+    ]);
+    let _ = std::fs::create_dir_all(cache.parent().unwrap());
+    let _ = std::fs::write(&cache, j.to_string());
+    best
+}
+
+/// Paper-default hyperparameters per (workload, algorithm, partition) —
+/// the "tuned" values used by the table/figure regenerators. Calibrated on
+/// the synthetic stand-ins (EXPERIMENTS.md documents the calibration).
+pub fn paper_defaults(workload: Workload, variant: Variant, iid: bool) -> AlgoSpec {
+    let convex = workload.is_convex();
+    let mut spec = AlgoSpec {
+        variant,
+        iid,
+        ..Default::default()
+    };
+    if convex {
+        // N = 32 clients, lambda = 1/n. eta1 tuned in {N, N/10, N/100}.
+        spec.batch = 32;
+        spec.eta1 = 3.2; // N/10
+        spec.alpha = 1e-3;
+        spec.k1 = if iid { 64.0 } else { 16.0 };
+        spec.t1 = 2000;
+        spec.big_batch = if iid { 512 } else { 160 };
+        spec.batch_growth = 1.01;
+        spec.batch_cap = 512;
+        match variant {
+            Variant::StlSc => {
+                // eta_1 T_1 = 6/mu with mu ~ lambda; practical calibration
+                // keeps eta1 T1 large but finite.
+                spec.eta1 = 3.2;
+                spec.t1 = 2000;
+                spec.k1 = if iid { 16.0 } else { 8.0 };
+            }
+            Variant::CrPsgd => {
+                spec.eta1 = 0.32;
+                spec.alpha = 0.0;
+            }
+            Variant::SyncSgd | Variant::LbSgd | Variant::LocalSgd => {}
+            _ => {}
+        }
+    } else {
+        // N = 8 clients, B = 64, fixed lr tuned in {N/10, N/100, N/1000}.
+        spec.batch = 64;
+        spec.eta1 = 0.08; // N/100
+        spec.alpha = 0.0; // fixed lr per the paper's non-convex protocol
+        spec.k1 = if iid { 10.0 } else { 5.0 };
+        spec.t1 = 320; // ~20 epochs of 16 iters
+        spec.big_batch = 320;
+        spec.batch_growth = 1.2;
+        spec.batch_cap = 512;
+        spec.inv_gamma = 0.01; // gamma = 100
+        match variant {
+            Variant::StlNc1 | Variant::StlNc2 => {}
+            Variant::CrPsgd => {
+                spec.eta1 = 0.08;
+            }
+            _ => {}
+        }
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_logreg_test() {
+        let s = build(Workload::LogregTest, 1);
+        assert_eq!(s.theta0.len(), 16);
+        assert!(s.oracle.is_some());
+        assert!(s.lam > 0.0);
+    }
+
+    #[test]
+    fn build_mlp_test() {
+        let s = build(Workload::MlpTest, 1);
+        let arch = s.arch.unwrap();
+        assert_eq!(arch.param_count(), s.theta0.len());
+        assert_eq!(s.oracle.unwrap().dim(), arch.param_count());
+    }
+
+    #[test]
+    fn build_tfm_test_dataset_rows() {
+        let s = build(Workload::TfmTest, 1);
+        assert_eq!(s.dataset.dim(), 17); // seq 16 + 1
+        assert!(s.oracle.is_none());
+    }
+
+    #[test]
+    fn deterministic_builds() {
+        let a = build(Workload::MlpTest, 9);
+        let b = build(Workload::MlpTest, 9);
+        assert_eq!(a.theta0, b.theta0);
+        assert_eq!(a.dataset.x.data, b.dataset.x.data);
+    }
+
+    #[test]
+    fn run_experiment_native_smoke() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.engine = "native".into();
+        cfg.total_steps = 60;
+        cfg.algo.eta1 = 0.5;
+        cfg.algo.k1 = 5.0;
+        cfg.algo.batch = 8;
+        cfg.algo.variant = Variant::LocalSgd;
+        let trace = run_experiment(&cfg).unwrap();
+        assert_eq!(trace.total_iters, 60);
+        assert!(trace.final_loss().is_finite());
+    }
+
+    #[test]
+    fn f_star_below_initial_loss_and_cached() {
+        let f1 = compute_f_star(Workload::LogregTest, 1, 200);
+        assert!(f1 < std::f64::consts::LN_2);
+        let f2 = compute_f_star(Workload::LogregTest, 1, 200); // cache hit
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn paper_defaults_shapes() {
+        let s = paper_defaults(Workload::LogregA9a, Variant::StlSc, true);
+        assert!(s.iid && s.k1 > 1.0 && s.eta1 > 0.0);
+        let s = paper_defaults(Workload::MlpWide, Variant::StlNc2, false);
+        assert!(!s.iid && s.alpha == 0.0 && s.inv_gamma > 0.0);
+    }
+}

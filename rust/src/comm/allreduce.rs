@@ -1,0 +1,300 @@
+//! Average-allreduce implementations.
+//!
+//! Each implementation mutates the per-client model replicas in place so
+//! that afterwards every replica holds the arithmetic mean of the inputs.
+//! The data movement mirrors the real algorithm's schedule (so step counts
+//! and per-step payloads are faithful for the cost model), executed over
+//! in-process buffers.
+
+/// Collective algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Gather to client 0, average, broadcast.
+    Naive,
+    /// Ring reduce-scatter + all-gather (bandwidth optimal).
+    Ring,
+    /// Recursive doubling (log rounds, latency optimal).
+    Tree,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "naive" => Some(Algorithm::Naive),
+            "ring" => Some(Algorithm::Ring),
+            "tree" => Some(Algorithm::Tree),
+            _ => None,
+        }
+    }
+}
+
+/// Replace every model with the mean of all models.
+pub fn average(models: &mut [Vec<f32>], alg: Algorithm) {
+    let n = models.len();
+    assert!(n > 0);
+    let d = models[0].len();
+    assert!(models.iter().all(|m| m.len() == d), "ragged models");
+    if n == 1 {
+        return;
+    }
+    match alg {
+        Algorithm::Naive => naive(models),
+        Algorithm::Ring => ring(models),
+        Algorithm::Tree => tree(models),
+    }
+}
+
+fn naive(models: &mut [Vec<f32>]) {
+    let n = models.len();
+    let d = models[0].len();
+    let mut mean = vec![0.0f32; d];
+    // f64 accumulation: the naive (leader) collective is also the reference
+    // the other two are tested against.
+    for j in 0..d {
+        let mut acc = 0.0f64;
+        for m in models.iter() {
+            acc += m[j] as f64;
+        }
+        mean[j] = (acc / n as f64) as f32;
+    }
+    for m in models.iter_mut() {
+        m.copy_from_slice(&mean);
+    }
+}
+
+/// Ring allreduce: N-1 reduce-scatter steps + N-1 all-gather steps over
+/// d/N-sized chunks. After the reduce-scatter, client i owns the fully
+/// reduced chunk i+1; the all-gather circulates the finished chunks.
+fn ring(models: &mut [Vec<f32>]) {
+    let n = models.len();
+    let d = models[0].len();
+    // Chunk boundaries (chunk c = [bounds[c], bounds[c+1]))
+    let bounds: Vec<usize> = (0..=n).map(|c| c * d / n).collect();
+
+    // Reduce-scatter: at step s, client i sends chunk (i - s) to client i+1,
+    // which adds it into its replica.
+    for s in 0..n - 1 {
+        // Snapshot the chunks being sent this step (simultaneous sends).
+        let sends: Vec<(usize, Vec<f32>)> = (0..n)
+            .map(|i| {
+                let c = (i + n - s) % n;
+                (c, models[i][bounds[c]..bounds[c + 1]].to_vec())
+            })
+            .collect();
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let (c, payload) = &sends[i];
+            let dst_chunk = &mut models[dst][bounds[*c]..bounds[*c + 1]];
+            for (a, b) in dst_chunk.iter_mut().zip(payload) {
+                *a += b;
+            }
+        }
+    }
+    // Now client i holds the fully reduced chunk (i + 1) % n.
+    // All-gather: circulate finished chunks N-1 times.
+    for s in 0..n - 1 {
+        let sends: Vec<(usize, Vec<f32>)> = (0..n)
+            .map(|i| {
+                let c = (i + 1 + n - s) % n;
+                (c, models[i][bounds[c]..bounds[c + 1]].to_vec())
+            })
+            .collect();
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let (c, payload) = &sends[i];
+            models[dst][bounds[*c]..bounds[*c + 1]].copy_from_slice(payload);
+        }
+    }
+    // Sum -> mean.
+    let inv = 1.0 / n as f32;
+    for m in models.iter_mut() {
+        for v in m.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Recursive doubling on the next power of two (non-participants in the
+/// padding fold into partner 0 first — here N is always the client count,
+/// handled by a pre-reduction for the non-power-of-two tail).
+fn tree(models: &mut [Vec<f32>]) {
+    let n = models.len();
+    let p2 = n.next_power_of_two() / if n.is_power_of_two() { 1 } else { 2 };
+    // Fold the tail [p2, n) into [0, n-p2).
+    for i in p2..n {
+        let (head, tail) = models.split_at_mut(i);
+        let src = &tail[0];
+        let dst = &mut head[i - p2];
+        for (a, b) in dst.iter_mut().zip(src.iter()) {
+            *a += b;
+        }
+    }
+    // Recursive doubling among [0, p2).
+    let mut stride = 1;
+    while stride < p2 {
+        for i in 0..p2 {
+            let partner = i ^ stride;
+            if partner > i && partner < p2 {
+                // exchange + both end with the sum
+                let (lo, hi) = models.split_at_mut(partner);
+                let a = &mut lo[i];
+                let b = &mut hi[0];
+                for j in 0..a.len() {
+                    let s = a[j] + b[j];
+                    a[j] = s;
+                    b[j] = s;
+                }
+            }
+        }
+        stride <<= 1;
+    }
+    // Scale and broadcast to the folded tail.
+    let inv = 1.0 / n as f32;
+    for i in 0..p2 {
+        for v in models[i].iter_mut() {
+            *v *= inv;
+        }
+    }
+    for i in p2..n {
+        let src = models[i - p2].clone();
+        models[i].copy_from_slice(&src);
+    }
+}
+
+/// Per-client bytes sent for one collective over a d-dim f32 model.
+pub fn bytes_per_client(alg: Algorithm, n: usize, d: usize) -> u64 {
+    let payload = 4 * d as u64;
+    match alg {
+        // every client sends its model up + receives the mean; count sends
+        Algorithm::Naive => payload,
+        Algorithm::Ring => {
+            if n <= 1 {
+                0
+            } else {
+                // 2(N-1) chunk sends of ~d/N each
+                (2 * (n as u64 - 1) * payload) / n as u64
+            }
+        }
+        Algorithm::Tree => {
+            if n <= 1 {
+                0
+            } else {
+                payload * (n as u64).next_power_of_two().trailing_zeros() as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_models(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect()
+    }
+
+    fn exact_mean(models: &[Vec<f32>]) -> Vec<f32> {
+        let n = models.len();
+        let d = models[0].len();
+        (0..d)
+            .map(|j| {
+                (models.iter().map(|m| m[j] as f64).sum::<f64>() / n as f64) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn naive_is_exact_mean() {
+        let mut m = random_models(5, 17, 1);
+        let mean = exact_mean(&m);
+        average(&mut m, Algorithm::Naive);
+        for r in &m {
+            assert_eq!(r, &mean);
+        }
+    }
+
+    #[test]
+    fn ring_matches_naive() {
+        for (n, d, seed) in [(2, 8, 1), (3, 7, 2), (4, 16, 3), (8, 33, 4), (5, 5, 5)] {
+            let mut a = random_models(n, d, seed);
+            let mut b = a.clone();
+            average(&mut a, Algorithm::Naive);
+            average(&mut b, Algorithm::Ring);
+            for (ra, rb) in a.iter().zip(&b) {
+                for (va, vb) in ra.iter().zip(rb) {
+                    assert!((va - vb).abs() < 1e-5, "n={n} d={d}: {va} vs {vb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_matches_naive() {
+        for (n, d, seed) in [(2, 8, 1), (3, 9, 2), (4, 16, 3), (6, 11, 4), (8, 64, 5), (7, 13, 6)] {
+            let mut a = random_models(n, d, seed);
+            let mut b = a.clone();
+            average(&mut a, Algorithm::Naive);
+            average(&mut b, Algorithm::Tree);
+            for (ra, rb) in a.iter().zip(&b) {
+                for (va, vb) in ra.iter().zip(rb) {
+                    assert!((va - vb).abs() < 1e-5, "n={n} d={d}: {va} vs {vb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_client_noop() {
+        let mut m = random_models(1, 9, 7);
+        let orig = m.clone();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            average(&mut m, alg);
+            assert_eq!(m, orig);
+        }
+    }
+
+    #[test]
+    fn idempotent_after_first_average() {
+        let mut m = random_models(4, 12, 8);
+        average(&mut m, Algorithm::Ring);
+        let after_one = m.clone();
+        average(&mut m, Algorithm::Ring);
+        for (a, b) in m.iter().zip(&after_one) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_global_sum() {
+        // averaging preserves the mean of means
+        let mut m = random_models(6, 10, 9);
+        let before: f64 = m.iter().flatten().map(|&v| v as f64).sum();
+        average(&mut m, Algorithm::Ring);
+        let after: f64 = m.iter().flatten().map(|&v| v as f64).sum();
+        assert!((before - after).abs() < 1e-3, "{before} vs {after}");
+    }
+
+    #[test]
+    fn bytes_model_sane() {
+        // ring beats naive-per-client at large N (both O(d)); tree pays log
+        let d = 1000;
+        assert_eq!(bytes_per_client(Algorithm::Naive, 8, d), 4000);
+        assert_eq!(bytes_per_client(Algorithm::Ring, 8, d), 7000);
+        assert_eq!(bytes_per_client(Algorithm::Tree, 8, d), 12000);
+        assert_eq!(bytes_per_client(Algorithm::Ring, 1, d), 0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Algorithm::parse("ring"), Some(Algorithm::Ring));
+        assert_eq!(Algorithm::parse("naive"), Some(Algorithm::Naive));
+        assert_eq!(Algorithm::parse("tree"), Some(Algorithm::Tree));
+        assert_eq!(Algorithm::parse("x"), None);
+    }
+}

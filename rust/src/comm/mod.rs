@@ -1,0 +1,54 @@
+//! Model-averaging collectives.
+//!
+//! Local SGD's communication primitive is "average all clients' parameter
+//! vectors and hand everyone the mean" (Algorithm 1, line 5). The paper ran
+//! this over MPI across 8 GPUs; here the collective runs over in-process
+//! worker states, with three algorithms that match the textbook comm
+//! schedules so the [`crate::sim`] network model can price them:
+//!
+//! * [`Algorithm::Naive`] — gather to leader + broadcast (2·d per client).
+//! * [`Algorithm::Ring`]  — reduce-scatter + all-gather over a ring
+//!   (2·d·(N-1)/N per client, latency 2(N-1) hops) — the bandwidth-optimal
+//!   choice every production framework uses.
+//! * [`Algorithm::Tree`]  — recursive doubling (log2 N hops).
+//!
+//! All three produce the exact arithmetic mean replicated to every client
+//! (property-tested against each other), differing only in simulated cost.
+
+pub mod allreduce;
+
+pub use allreduce::{average, Algorithm};
+
+/// Communication accounting for one experiment run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// Number of synchronization rounds (the paper's headline metric).
+    pub rounds: u64,
+    /// Total bytes sent per client across the run.
+    pub bytes_per_client: u64,
+    /// Simulated communication seconds (see sim::NetworkModel).
+    pub sim_comm_seconds: f64,
+}
+
+impl CommStats {
+    pub fn record_round(&mut self, bytes_per_client: u64, sim_seconds: f64) {
+        self.rounds += 1;
+        self.bytes_per_client += bytes_per_client;
+        self.sim_comm_seconds += sim_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = CommStats::default();
+        s.record_round(100, 0.5);
+        s.record_round(50, 0.25);
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.bytes_per_client, 150);
+        assert!((s.sim_comm_seconds - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,340 @@
+//! Experiment configuration: JSON config files + CLI overrides.
+//!
+//! A config fully describes one run: workload, partition, algorithm,
+//! schedule constants, engine, budget. The launcher (`rust/src/main.rs`)
+//! reads a JSON file (see `configs/` for the shipped presets) and applies
+//! `--key value` overrides.
+
+use crate::algo::{AlgoSpec, Variant};
+use crate::comm::Algorithm;
+use crate::util::json::Json;
+
+/// Which dataset/model workload to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Logistic regression on the a9a-like set (convex track).
+    LogregA9a,
+    /// Logistic regression on the mnist-like set (convex track).
+    LogregMnist,
+    /// Small logreg config for tests.
+    LogregTest,
+    /// Wide MLP on the cifar-like set ("ResNet18" slot).
+    MlpWide,
+    /// Deep MLP on the cifar-like set ("VGG16" slot).
+    MlpDeep,
+    /// Small MLP config for tests.
+    MlpTest,
+    /// Decoder-only transformer LM (e2e example).
+    TfmSmall,
+    /// Tiny transformer for tests.
+    TfmTest,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "logreg_a9a" => Some(Workload::LogregA9a),
+            "logreg_mnist" => Some(Workload::LogregMnist),
+            "logreg_test" => Some(Workload::LogregTest),
+            "mlp_wide" => Some(Workload::MlpWide),
+            "mlp_deep" => Some(Workload::MlpDeep),
+            "mlp_test" => Some(Workload::MlpTest),
+            "tfm_small" => Some(Workload::TfmSmall),
+            "tfm_test" => Some(Workload::TfmTest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::LogregA9a => "logreg_a9a",
+            Workload::LogregMnist => "logreg_mnist",
+            Workload::LogregTest => "logreg_test",
+            Workload::MlpWide => "mlp_wide",
+            Workload::MlpDeep => "mlp_deep",
+            Workload::MlpTest => "mlp_test",
+            Workload::TfmSmall => "tfm_small",
+            Workload::TfmTest => "tfm_test",
+        }
+    }
+
+    /// Artifact config suffix ("a9a", "wide", ...).
+    pub fn artifact_config(&self) -> &'static str {
+        match self {
+            Workload::LogregA9a => "a9a",
+            Workload::LogregMnist => "mnist",
+            Workload::LogregTest => "test",
+            Workload::MlpWide => "wide",
+            Workload::MlpDeep => "deep",
+            Workload::MlpTest => "test",
+            Workload::TfmSmall => "small",
+            Workload::TfmTest => "test",
+        }
+    }
+
+    pub fn is_convex(&self) -> bool {
+        matches!(
+            self,
+            Workload::LogregA9a | Workload::LogregMnist | Workload::LogregTest
+        )
+    }
+}
+
+/// One experiment = workload x partition x algorithm x budget.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub workload: Workload,
+    pub iid: bool,
+    /// Non-IID s%% (paper: 50 convex, 0 non-convex). Ignored when iid.
+    pub s_percent: f64,
+    pub n_clients: usize,
+    pub total_steps: u64,
+    pub seed: u64,
+    pub algo: AlgoSpec,
+    pub collective: Algorithm,
+    pub eval_every_rounds: u64,
+    /// "native" | "threaded" | "xla"
+    pub engine: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            workload: Workload::LogregTest,
+            iid: true,
+            s_percent: 50.0,
+            n_clients: 4,
+            total_steps: 1000,
+            seed: 7,
+            algo: AlgoSpec::default(),
+            collective: Algorithm::Ring,
+            eval_every_rounds: 1,
+            engine: "threaded".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON object; missing keys keep defaults.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let gets = |k: &str| j.get(k).and_then(|v| v.as_str().map(str::to_string));
+        let getf = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        let getb = |k: &str| j.get(k).and_then(|v| v.as_bool());
+
+        if let Some(w) = gets("workload") {
+            cfg.workload =
+                Workload::parse(&w).ok_or_else(|| anyhow::anyhow!("unknown workload {w}"))?;
+        }
+        if let Some(v) = getb("iid") {
+            cfg.iid = v;
+        }
+        if let Some(v) = getf("s_percent") {
+            cfg.s_percent = v;
+        }
+        if let Some(v) = getf("n_clients") {
+            cfg.n_clients = v as usize;
+        }
+        if let Some(v) = getf("total_steps") {
+            cfg.total_steps = v as u64;
+        }
+        if let Some(v) = getf("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = getf("eval_every_rounds") {
+            cfg.eval_every_rounds = v as u64;
+        }
+        if let Some(e) = gets("engine") {
+            anyhow::ensure!(
+                ["native", "threaded", "xla"].contains(&e.as_str()),
+                "unknown engine {e}"
+            );
+            cfg.engine = e;
+        }
+        if let Some(c) = gets("collective") {
+            cfg.collective =
+                Algorithm::parse(&c).ok_or_else(|| anyhow::anyhow!("unknown collective {c}"))?;
+        }
+        if let Some(a) = gets("algorithm") {
+            cfg.algo.variant =
+                Variant::parse(&a).ok_or_else(|| anyhow::anyhow!("unknown algorithm {a}"))?;
+        }
+        // AlgoSpec scalar fields.
+        if let Some(v) = getf("eta1") {
+            cfg.algo.eta1 = v;
+        }
+        if let Some(v) = getf("alpha") {
+            cfg.algo.alpha = v;
+        }
+        if let Some(v) = getf("k1") {
+            cfg.algo.k1 = v;
+        }
+        if let Some(v) = getf("t1") {
+            cfg.algo.t1 = v as u64;
+        }
+        if let Some(v) = getf("batch") {
+            cfg.algo.batch = v as usize;
+        }
+        if let Some(v) = getf("big_batch") {
+            cfg.algo.big_batch = v as usize;
+        }
+        if let Some(v) = getf("batch_growth") {
+            cfg.algo.batch_growth = v;
+        }
+        if let Some(v) = getf("batch_cap") {
+            cfg.algo.batch_cap = v as usize;
+        }
+        if let Some(v) = getf("inv_gamma") {
+            cfg.algo.inv_gamma = v as f32;
+        }
+        cfg.algo.iid = cfg.iid;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Apply a `key=value` override.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let mut obj = std::collections::BTreeMap::new();
+        let v = if let Ok(n) = value.parse::<f64>() {
+            Json::Num(n)
+        } else if value == "true" || value == "false" {
+            Json::Bool(value == "true")
+        } else {
+            Json::Str(value.to_string())
+        };
+        obj.insert(key.to_string(), v);
+        let patch = Json::Obj(obj);
+        let patched = Self::from_json_with_base(&patch, self.clone())?;
+        *self = patched;
+        Ok(())
+    }
+
+    fn from_json_with_base(j: &Json, base: ExperimentConfig) -> anyhow::Result<Self> {
+        // Merge by serializing-free path: start from base and re-apply.
+        let mut cfg = base;
+        let tmp = Self::from_json(j)?;
+        let def = Self::default();
+        // Only copy fields present in j (detected by comparison to default
+        // behaviour of from_json on an empty patch).
+        macro_rules! take {
+            ($field:ident) => {
+                if j.get(stringify!($field)).is_some() {
+                    cfg.$field = tmp.$field;
+                }
+            };
+        }
+        take!(workload);
+        take!(iid);
+        take!(s_percent);
+        take!(n_clients);
+        take!(total_steps);
+        take!(seed);
+        take!(eval_every_rounds);
+        take!(engine);
+        take!(collective);
+        if j.get("algorithm").is_some() {
+            cfg.algo.variant = tmp.algo.variant;
+        }
+        for key in [
+            "eta1", "alpha", "k1", "t1", "batch", "big_batch", "batch_growth", "batch_cap",
+            "inv_gamma",
+        ] {
+            if j.get(key).is_some() {
+                match key {
+                    "eta1" => cfg.algo.eta1 = tmp.algo.eta1,
+                    "alpha" => cfg.algo.alpha = tmp.algo.alpha,
+                    "k1" => cfg.algo.k1 = tmp.algo.k1,
+                    "t1" => cfg.algo.t1 = tmp.algo.t1,
+                    "batch" => cfg.algo.batch = tmp.algo.batch,
+                    "big_batch" => cfg.algo.big_batch = tmp.algo.big_batch,
+                    "batch_growth" => cfg.algo.batch_growth = tmp.algo.batch_growth,
+                    "batch_cap" => cfg.algo.batch_cap = tmp.algo.batch_cap,
+                    "inv_gamma" => cfg.algo.inv_gamma = tmp.algo.inv_gamma,
+                    _ => unreachable!(),
+                }
+            }
+        }
+        cfg.algo.iid = cfg.iid;
+        let _ = def;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let j = Json::parse(
+            r#"{"workload": "logreg_a9a", "iid": false, "n_clients": 32,
+                "algorithm": "stl-sc", "eta1": 3.2, "k1": 8, "t1": 500,
+                "total_steps": 100000, "engine": "native",
+                "collective": "tree", "batch": 64}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workload, Workload::LogregA9a);
+        assert!(!cfg.iid);
+        assert!(!cfg.algo.iid); // propagated
+        assert_eq!(cfg.n_clients, 32);
+        assert_eq!(cfg.algo.variant, Variant::StlSc);
+        assert_eq!(cfg.algo.eta1, 3.2);
+        assert_eq!(cfg.algo.batch, 64);
+        assert_eq!(cfg.collective, Algorithm::Tree);
+    }
+
+    #[test]
+    fn defaults_on_empty() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.workload, Workload::LogregTest);
+        assert!(cfg.iid);
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        for bad in [
+            r#"{"workload": "nope"}"#,
+            r#"{"algorithm": "nope"}"#,
+            r#"{"engine": "gpu"}"#,
+            r#"{"collective": "mesh"}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn override_single_key_preserves_rest() {
+        let j = Json::parse(r#"{"workload": "mlp_wide", "eta1": 0.8, "n_clients": 8}"#).unwrap();
+        let mut cfg = ExperimentConfig::from_json(&j).unwrap();
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(cfg.algo.eta1, 0.4);
+        assert_eq!(cfg.workload, Workload::MlpWide);
+        assert_eq!(cfg.n_clients, 8);
+        cfg.apply_override("algorithm", "stl-nc2").unwrap();
+        assert_eq!(cfg.algo.variant, Variant::StlNc2);
+        assert_eq!(cfg.algo.eta1, 0.4);
+    }
+
+    #[test]
+    fn workload_names_roundtrip() {
+        for w in [
+            Workload::LogregA9a,
+            Workload::LogregMnist,
+            Workload::LogregTest,
+            Workload::MlpWide,
+            Workload::MlpDeep,
+            Workload::MlpTest,
+            Workload::TfmSmall,
+            Workload::TfmTest,
+        ] {
+            assert_eq!(Workload::parse(w.name()), Some(w));
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Client compute engines.
+//!
+//! The coordinator loop is engine-agnostic: [`ClientCompute`] abstracts
+//! "compute all N per-client minibatch gradients" + "apply the (prox) local
+//! step". Three implementations:
+//!
+//! * [`NativeCompute`] — sequential in-process native oracles;
+//! * [`super::threaded::ThreadedCompute`] — leader/worker threads over
+//!   channels (the real event-loop topology; fastest for sweeps);
+//! * [`crate::runtime::XlaCompute`] — the AOT JAX/Pallas artifacts via PJRT
+//!   (the production three-layer path).
+//!
+//! Determinism contract: given identical `thetas` and `batches`, all
+//! engines return the same gradients up to float tolerance — integration
+//! tests assert trajectory equality between them.
+
+use crate::grad::Oracle;
+use std::sync::Arc;
+
+/// Engine interface used by the coordinator loop.
+pub trait ClientCompute {
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Per-client minibatch gradients and losses at the given iterates.
+    fn grads(&mut self, thetas: &[Vec<f32>], batches: &[Vec<usize>]) -> (Vec<Vec<f32>>, Vec<f32>);
+
+    /// Apply the fused (prox) local step to every client:
+    /// theta_i -= eta * (g_i + inv_gamma * (theta_i - anchor)).
+    fn step(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+    );
+
+    /// Full-dataset objective at a (usually averaged) iterate.
+    fn full_loss(&mut self, theta: &[f32]) -> f64;
+
+    /// Full-dataset accuracy (NaN when undefined).
+    fn full_accuracy(&mut self, theta: &[f32]) -> f64;
+}
+
+/// Sequential native engine.
+pub struct NativeCompute {
+    pub oracle: Arc<dyn Oracle>,
+}
+
+impl NativeCompute {
+    pub fn new(oracle: Arc<dyn Oracle>) -> Self {
+        Self { oracle }
+    }
+}
+
+impl ClientCompute for NativeCompute {
+    fn dim(&self) -> usize {
+        self.oracle.dim()
+    }
+
+    fn grads(&mut self, thetas: &[Vec<f32>], batches: &[Vec<usize>]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        assert_eq!(thetas.len(), batches.len());
+        let mut gs = Vec::with_capacity(thetas.len());
+        let mut ls = Vec::with_capacity(thetas.len());
+        for (theta, batch) in thetas.iter().zip(batches) {
+            let (g, l) = self.oracle.grad_minibatch(theta, batch);
+            gs.push(g);
+            ls.push(l);
+        }
+        (gs, ls)
+    }
+
+    fn step(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+    ) {
+        for (theta, grad) in thetas.iter_mut().zip(grads) {
+            crate::linalg::fused_local_step(theta, grad, anchor, eta, inv_gamma);
+        }
+    }
+
+    fn full_loss(&mut self, theta: &[f32]) -> f64 {
+        self.oracle.full_loss(theta)
+    }
+
+    fn full_accuracy(&mut self, theta: &[f32]) -> f64 {
+        self.oracle.full_accuracy(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::grad::logreg::NativeLogreg;
+
+    #[test]
+    fn native_compute_matches_oracle() {
+        let ds = Arc::new(synth::a9a_like(1, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut engine = NativeCompute::new(oracle.clone());
+        let thetas = vec![vec![0.1f32; 8], vec![-0.1f32; 8]];
+        let batches = vec![(0..8).collect::<Vec<_>>(), (8..16).collect::<Vec<_>>()];
+        let (gs, ls) = engine.grads(&thetas, &batches);
+        let (g0, l0) = oracle.grad_minibatch(&thetas[0], &batches[0]);
+        assert_eq!(gs[0], g0);
+        assert_eq!(ls[0], l0);
+        assert_eq!(gs.len(), 2);
+    }
+
+    #[test]
+    fn step_applies_fused_update() {
+        let ds = Arc::new(synth::a9a_like(1, 64, 4));
+        let mut engine = NativeCompute::new(Arc::new(NativeLogreg::new(ds, 0.0)));
+        let mut thetas = vec![vec![1.0f32; 4]];
+        let grads = vec![vec![0.5f32; 4]];
+        let anchor = vec![0.0f32; 4];
+        engine.step(&mut thetas, &grads, &anchor, 0.2, 0.0);
+        assert_eq!(thetas[0], vec![0.9f32; 4]);
+    }
+}

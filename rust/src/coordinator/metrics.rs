@@ -1,0 +1,196 @@
+//! Experiment traces: the evaluation points every figure/table is built
+//! from, plus communication / simulated-time accounting.
+
+use crate::comm::CommStats;
+use crate::sim::SimClock;
+use crate::util::json::Json;
+
+/// One evaluation of the averaged model during a run.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    /// Global iteration count at evaluation time.
+    pub iter: u64,
+    /// Communication rounds completed (the paper's x-axis).
+    pub rounds: u64,
+    /// Epochs completed (examples consumed / shard size).
+    pub epoch: f64,
+    /// Full-dataset objective value f(x) at the averaged model.
+    pub loss: f64,
+    /// Full-dataset accuracy (NaN for tasks without one).
+    pub accuracy: f64,
+    /// Simulated wall-clock seconds so far (compute + comm).
+    pub sim_seconds: f64,
+    /// Stage index (for the STL variants; 0 otherwise).
+    pub stage: usize,
+    /// Learning rate in effect.
+    pub eta: f64,
+    /// Communication period in effect.
+    pub k: u64,
+}
+
+/// Full run record.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algorithm: String,
+    pub points: Vec<TracePoint>,
+    pub comm: CommStats,
+    pub clock: SimClock,
+    pub total_iters: u64,
+    /// Whether a stop rule fired before the budget was exhausted.
+    pub stopped_early: bool,
+}
+
+impl Trace {
+    /// First recorded round count at which `loss - f_star <= gap`.
+    pub fn rounds_to_gap(&self, f_star: f64, gap: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| p.loss - f_star <= gap)
+            .map(|p| p.rounds)
+    }
+
+    /// First recorded round count at which accuracy >= target.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= target)
+            .map(|p| p.rounds)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map(|p| p.accuracy).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_loss(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Serialize for the experiment reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("total_iters", Json::num(self.total_iters as f64)),
+            ("rounds", Json::num(self.comm.rounds as f64)),
+            ("bytes_per_client", Json::num(self.comm.bytes_per_client as f64)),
+            ("sim_comm_seconds", Json::num(self.comm.sim_comm_seconds)),
+            ("sim_compute_seconds", Json::num(self.clock.compute_seconds)),
+            ("stopped_early", Json::Bool(self.stopped_early)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("iter", Json::num(p.iter as f64)),
+                                ("rounds", Json::num(p.rounds as f64)),
+                                ("epoch", Json::num(p.epoch)),
+                                ("loss", Json::num(p.loss)),
+                                ("accuracy", Json::num(p.accuracy)),
+                                ("sim_seconds", Json::num(p.sim_seconds)),
+                                ("stage", Json::num(p.stage as f64)),
+                                ("eta", Json::num(p.eta)),
+                                ("k", Json::num(p.k as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the loss-vs-rounds series as CSV (one figure panel series).
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::to_file(
+            path,
+            &["iter", "rounds", "epoch", "loss", "accuracy", "sim_seconds", "stage", "eta", "k"],
+        )?;
+        for p in &self.points {
+            w.row(&[
+                p.iter.to_string(),
+                p.rounds.to_string(),
+                format!("{:.4}", p.epoch),
+                format!("{:.8e}", p.loss),
+                format!("{:.6}", p.accuracy),
+                format!("{:.6e}", p.sim_seconds),
+                p.stage.to_string(),
+                format!("{:.6e}", p.eta),
+                p.k.to_string(),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(rounds: u64, loss: f64, acc: f64) -> TracePoint {
+        TracePoint {
+            iter: rounds * 10,
+            rounds,
+            epoch: 0.0,
+            loss,
+            accuracy: acc,
+            sim_seconds: 0.0,
+            stage: 0,
+            eta: 0.1,
+            k: 10,
+        }
+    }
+
+    #[test]
+    fn rounds_to_gap_finds_first() {
+        let t = Trace {
+            points: vec![pt(1, 0.5, 0.6), pt(2, 0.2, 0.8), pt(3, 0.1, 0.9)],
+            ..Default::default()
+        };
+        assert_eq!(t.rounds_to_gap(0.05, 0.2), Some(2));
+        assert_eq!(t.rounds_to_gap(0.05, 0.01), None);
+    }
+
+    #[test]
+    fn rounds_to_accuracy() {
+        let t = Trace {
+            points: vec![pt(1, 0.5, 0.6), pt(2, 0.2, 0.95)],
+            ..Default::default()
+        };
+        assert_eq!(t.rounds_to_accuracy(0.9), Some(2));
+        assert_eq!(t.rounds_to_accuracy(0.99), None);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let t = Trace {
+            algorithm: "Local-SGD".into(),
+            points: vec![pt(1, 0.5, 0.6)],
+            total_iters: 10,
+            ..Default::default()
+        };
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(j.get("algorithm").unwrap().as_str(), Some("Local-SGD"));
+        assert_eq!(
+            j.get("points").unwrap().idx(0).unwrap().get("rounds").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn best_and_final() {
+        let t = Trace {
+            points: vec![pt(1, 0.5, 0.1), pt(2, 0.1, 0.2), pt(3, 0.3, 0.4)],
+            ..Default::default()
+        };
+        assert_eq!(t.best_loss(), 0.1);
+        assert_eq!(t.final_loss(), 0.3);
+        assert_eq!(t.final_accuracy(), 0.4);
+    }
+}

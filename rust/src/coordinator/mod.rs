@@ -1,0 +1,13 @@
+//! The L3 coordinator: leader/worker engines, the phase-driven event loop,
+//! and run traces. See [`run::run`] for the core loop and DESIGN.md §2 for
+//! how the engines relate to the AOT artifact path.
+
+pub mod compute;
+pub mod metrics;
+pub mod run;
+pub mod threaded;
+
+pub use compute::{ClientCompute, NativeCompute};
+pub use metrics::{Trace, TracePoint};
+pub use run::{run, run_native, Metric, RunConfig, StopRule};
+pub use threaded::ThreadedCompute;

@@ -1,0 +1,437 @@
+//! The coordinator event loop: executes a phase schedule over an engine.
+//!
+//! This is Algorithm 1 (Local SGD) as the inner loop, with the stagewise
+//! outer loop of Algorithms 2/3 flattened into the phase list: every
+//! iteration each client takes one (prox-)SGD step on its shard; whenever
+//! the within-phase step counter hits the phase's communication period (or
+//! the phase ends), the models are averaged by the configured collective,
+//! the round is priced by the network model, and — on the eval cadence —
+//! the full objective of the averaged model is recorded.
+
+use super::compute::ClientCompute;
+use super::metrics::{Trace, TracePoint};
+use crate::algo::Phase;
+use crate::comm;
+use crate::data::{sampler::MinibatchSampler, Shard};
+use crate::rng::Rng;
+use crate::sim::{ComputeModel, NetworkModel, SimClock};
+
+/// Metric a stop rule watches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Loss,
+    Accuracy,
+}
+
+/// Early-stop rule: Loss stops when value <= threshold, Accuracy when >=.
+#[derive(Clone, Copy, Debug)]
+pub struct StopRule {
+    pub metric: Metric,
+    pub threshold: f64,
+}
+
+/// Run configuration (engine- and algorithm-independent knobs).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub n_clients: usize,
+    pub collective: comm::Algorithm,
+    pub network: NetworkModel,
+    pub compute_model: ComputeModel,
+    /// Evaluate the averaged model every `eval_every_rounds` communication
+    /// rounds (1 = every round; larger strides keep huge baseline runs
+    /// tractable at a small resolution cost in rounds-to-target).
+    pub eval_every_rounds: u64,
+    pub stop: Option<StopRule>,
+    pub seed: u64,
+    /// Skip accuracy evaluation (it is the expensive part for big models).
+    pub eval_accuracy: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            n_clients: 8,
+            collective: comm::Algorithm::Ring,
+            network: NetworkModel::default(),
+            compute_model: ComputeModel::default(),
+            eval_every_rounds: 1,
+            stop: None,
+            seed: 0,
+            eval_accuracy: true,
+        }
+    }
+}
+
+/// Execute `phases` with `engine` over `shards`, starting from `theta0`.
+pub fn run(
+    engine: &mut dyn ClientCompute,
+    shards: &[Shard],
+    phases: &[Phase],
+    cfg: &RunConfig,
+    theta0: &[f32],
+    algorithm_name: &str,
+) -> Trace {
+    assert_eq!(shards.len(), cfg.n_clients, "one shard per client");
+    assert!(!phases.is_empty());
+    let n = cfg.n_clients;
+    let dim = engine.dim();
+    assert_eq!(theta0.len(), dim);
+
+    let root = Rng::new(cfg.seed);
+    let mut samplers: Vec<MinibatchSampler> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| MinibatchSampler::new(s.clone(), &root, i as u64))
+        .collect();
+
+    let mut thetas: Vec<Vec<f32>> = (0..n).map(|_| theta0.to_vec()).collect();
+    let mut anchor = theta0.to_vec();
+
+    let mut trace = Trace {
+        algorithm: algorithm_name.to_string(),
+        ..Default::default()
+    };
+    let mut clock = SimClock::default();
+    let mut comm_stats = comm::CommStats::default();
+    let mut t: u64 = 0;
+    let mut rounds: u64 = 0;
+    let mut examples_per_client: u64 = 0;
+    let shard_size = shards[0].len().max(1) as f64;
+
+    let bytes_per_round = comm::allreduce::bytes_per_client(cfg.collective, n, dim) ;
+    let round_seconds = cfg.network.allreduce_seconds(cfg.collective, n, dim);
+
+    // Initial evaluation (iteration 0, before any work).
+    let loss0 = engine.full_loss(&anchor);
+    let acc0 = if cfg.eval_accuracy {
+        engine.full_accuracy(&anchor)
+    } else {
+        f64::NAN
+    };
+    trace.points.push(TracePoint {
+        iter: 0,
+        rounds: 0,
+        epoch: 0.0,
+        loss: loss0,
+        accuracy: acc0,
+        sim_seconds: 0.0,
+        stage: phases[0].stage,
+        eta: phases[0].lr.at(0),
+        k: phases[0].comm_period,
+    });
+
+    'outer: for phase in phases {
+        if phase.reset_anchor {
+            // Models are synced at phase boundaries; the stage anchor x_s is
+            // the shared iterate.
+            anchor.copy_from_slice(&thetas[0]);
+        }
+        let k = phase.comm_period.max(1);
+        let mut batches: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for step in 0..phase.steps {
+            let eta = phase.lr.at(t) as f32;
+
+            batches.clear();
+            for s in samplers.iter_mut() {
+                batches.push(s.sample(phase.batch));
+            }
+            let (grads, _losses) = engine.grads(&thetas, &batches);
+            engine.step(&mut thetas, &grads, &anchor, eta, phase.inv_gamma);
+
+            clock.add_compute(cfg.compute_model.grad_seconds(phase.batch, dim));
+            t += 1;
+            examples_per_client += phase.batch as u64;
+
+            let at_comm_point = (step + 1) % k == 0 || step + 1 == phase.steps;
+            if at_comm_point {
+                comm::average(&mut thetas, cfg.collective);
+                clock.add_comm(round_seconds);
+                comm_stats.record_round(bytes_per_round, round_seconds);
+                rounds += 1;
+
+                if rounds % cfg.eval_every_rounds == 0 {
+                    let loss = engine.full_loss(&thetas[0]);
+                    let acc = if cfg.eval_accuracy {
+                        engine.full_accuracy(&thetas[0])
+                    } else {
+                        f64::NAN
+                    };
+                    trace.points.push(TracePoint {
+                        iter: t,
+                        rounds,
+                        epoch: examples_per_client as f64 / shard_size,
+                        loss,
+                        accuracy: acc,
+                        sim_seconds: clock.total(),
+                        stage: phase.stage,
+                        eta: eta as f64,
+                        k,
+                    });
+                    if let Some(stop) = &cfg.stop {
+                        let hit = match stop.metric {
+                            Metric::Loss => loss <= stop.threshold,
+                            Metric::Accuracy => acc >= stop.threshold,
+                        };
+                        if hit {
+                            trace.stopped_early = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    trace.total_iters = t;
+    trace.comm = comm_stats;
+    trace.clock = clock;
+    trace
+}
+
+/// Convenience: run a [`crate::algo::AlgoSpec`] end to end with a native
+/// engine and uniform defaults. Used by tests and the quickstart example.
+pub fn run_native(
+    oracle: std::sync::Arc<dyn crate::grad::Oracle>,
+    shards: &[Shard],
+    spec: &crate::algo::AlgoSpec,
+    total_steps: u64,
+    cfg: &RunConfig,
+    theta0: &[f32],
+) -> Trace {
+    let mut engine = super::compute::NativeCompute::new(oracle);
+    let phases = spec.phases(total_steps);
+    run(&mut engine, shards, &phases, cfg, theta0, spec.variant.name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{AlgoSpec, Variant};
+    use crate::coordinator::compute::NativeCompute;
+    use crate::data::{partition, synth};
+    use crate::grad::logreg::NativeLogreg;
+    use std::sync::Arc;
+
+    fn setup(n: usize) -> (Arc<NativeLogreg>, Vec<Shard>) {
+        let ds = Arc::new(synth::a9a_like(1, 512, 16));
+        let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+        let shards = partition::iid(&ds, n, &mut Rng::new(0));
+        (oracle, shards)
+    }
+
+    fn base_cfg(n: usize) -> RunConfig {
+        RunConfig {
+            n_clients: n,
+            eval_every_rounds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sync_sgd_converges() {
+        let (oracle, shards) = setup(4);
+        let spec = AlgoSpec {
+            variant: Variant::SyncSgd,
+            eta1: 0.5,
+            alpha: 1e-3,
+            batch: 16,
+            ..Default::default()
+        };
+        let theta0 = vec![0.0f32; 16];
+        let trace = run_native(oracle, &shards, &spec, 400, &base_cfg(4), &theta0);
+        assert_eq!(trace.total_iters, 400);
+        assert_eq!(trace.comm.rounds, 400); // k = 1
+        assert!(trace.final_loss() < trace.points[0].loss * 0.9);
+    }
+
+    #[test]
+    fn local_sgd_fewer_rounds_than_sync() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.5,
+            alpha: 1e-3,
+            k1: 10.0,
+            batch: 16,
+            ..Default::default()
+        };
+        let trace = run_native(oracle, &shards, &spec, 400, &base_cfg(4), &theta0);
+        assert_eq!(trace.comm.rounds, 40);
+        assert!(trace.final_loss() < trace.points[0].loss * 0.95);
+    }
+
+    #[test]
+    fn local_sgd_k1_equals_sync_sgd_exactly() {
+        // With k = 1 Local SGD *is* SyncSGD: identical trajectories.
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let mk = |variant, k1| AlgoSpec {
+            variant,
+            eta1: 0.5,
+            alpha: 1e-3,
+            k1,
+            batch: 16,
+            ..Default::default()
+        };
+        let a = run_native(
+            oracle.clone(),
+            &shards,
+            &mk(Variant::SyncSgd, 1.0),
+            100,
+            &base_cfg(4),
+            &theta0,
+        );
+        let b = run_native(
+            oracle,
+            &shards,
+            &mk(Variant::LocalSgd, 1.0),
+            100,
+            &base_cfg(4),
+            &theta0,
+        );
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.loss, pb.loss, "iter {}", pa.iter);
+        }
+    }
+
+    #[test]
+    fn stl_sc_records_stages() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::StlSc,
+            eta1: 0.5,
+            k1: 2.0,
+            t1: 50,
+            batch: 16,
+            iid: true,
+            ..Default::default()
+        };
+        let trace = run_native(oracle, &shards, &spec, 350, &base_cfg(4), &theta0);
+        let stages: std::collections::BTreeSet<usize> =
+            trace.points.iter().map(|p| p.stage).collect();
+        assert!(stages.len() >= 3, "{stages:?}");
+        assert!(trace.final_loss() < trace.points[0].loss * 0.9);
+    }
+
+    #[test]
+    fn stop_rule_fires() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::SyncSgd,
+            eta1: 0.5,
+            alpha: 1e-3,
+            batch: 16,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(4);
+        cfg.stop = Some(StopRule {
+            metric: Metric::Loss,
+            threshold: f64::INFINITY, // fires at the first eval
+        });
+        let trace = run_native(oracle, &shards, &spec, 1000, &cfg, &theta0);
+        assert!(trace.stopped_early);
+        assert!(trace.total_iters < 1000);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let a = run_native(oracle.clone(), &shards, &spec, 200, &base_cfg(4), &theta0);
+        let b = run_native(oracle, &shards, &spec, 200, &base_cfg(4), &theta0);
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.loss, pb.loss);
+        }
+    }
+
+    #[test]
+    fn threaded_engine_matches_native_trajectory() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let phases = spec.phases(150);
+        let cfg = base_cfg(4);
+        let mut native = NativeCompute::new(oracle.clone());
+        let a = run(&mut native, &shards, &phases, &cfg, &theta0, "native");
+        let mut threaded = crate::coordinator::threaded::ThreadedCompute::new(oracle, 4);
+        let b = run(&mut threaded, &shards, &phases, &cfg, &theta0, "threaded");
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.loss, pb.loss, "iter {}", pa.iter);
+        }
+    }
+
+    #[test]
+    fn comm_rounds_match_phase_arithmetic() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::StlSc,
+            eta1: 0.5,
+            k1: 3.0,
+            t1: 40,
+            batch: 8,
+            iid: true,
+            ..Default::default()
+        };
+        let phases = spec.phases(280);
+        let expected: u64 = phases.iter().map(|p| p.comm_rounds()).sum();
+        let trace = run_native(oracle, &shards, &spec, 280, &base_cfg(4), &theta0);
+        assert_eq!(trace.comm.rounds, expected);
+    }
+
+    #[test]
+    fn prox_variant_runs_and_converges() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::StlNc1,
+            eta1: 0.5,
+            k1: 2.0,
+            t1: 50,
+            batch: 16,
+            iid: true,
+            inv_gamma: 0.1,
+            ..Default::default()
+        };
+        let trace = run_native(oracle, &shards, &spec, 350, &base_cfg(4), &theta0);
+        assert!(trace.final_loss() < trace.points[0].loss * 0.95);
+    }
+
+    #[test]
+    fn sim_clock_accumulates() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.1,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let trace = run_native(oracle, &shards, &spec, 100, &base_cfg(4), &theta0);
+        assert!(trace.clock.compute_seconds > 0.0);
+        assert!(trace.clock.comm_seconds > 0.0);
+        assert!(trace.comm.bytes_per_client > 0);
+        // fewer comm rounds -> less comm time than sync at same steps
+    }
+}

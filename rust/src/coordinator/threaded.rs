@@ -1,0 +1,177 @@
+//! Leader/worker engine: persistent worker threads over channels.
+//!
+//! This is the process topology the paper's MPI deployment has — a leader
+//! that broadcasts work and collects results, and N workers that own their
+//! compute — realized with std::thread + mpsc (tokio is unavailable in the
+//! offline build). Workers are persistent across the whole run (spawned
+//! once, fed per-iteration commands), so the per-iteration overhead is two
+//! channel hops, not a thread spawn.
+//!
+//! Gradients are bit-identical to [`super::compute::NativeCompute`] (same
+//! oracle, same inputs), so the engines are interchangeable; the threaded
+//! one simply parallelizes the per-client work across cores.
+
+use super::compute::ClientCompute;
+use crate::grad::Oracle;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum Cmd {
+    /// (client slot, theta, batch indices)
+    Grad(usize, Vec<f32>, Vec<usize>),
+    Shutdown,
+}
+
+type GradResult = (usize, Vec<f32>, f32);
+
+/// Leader-side handle to the worker pool.
+pub struct ThreadedCompute {
+    oracle: Arc<dyn Oracle>,
+    cmd_tx: Vec<Sender<Cmd>>,
+    res_rx: Receiver<GradResult>,
+    workers: Vec<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl ThreadedCompute {
+    /// Spawn `n_workers` persistent workers sharing `oracle`.
+    pub fn new(oracle: Arc<dyn Oracle>, n_workers: usize) -> Self {
+        let n_workers = n_workers.max(1);
+        let (res_tx, res_rx) = channel::<GradResult>();
+        let mut cmd_tx = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_tx.push(tx);
+            let oracle = oracle.clone();
+            let res_tx = res_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Grad(slot, theta, batch) => {
+                            let (g, l) = oracle.grad_minibatch(&theta, &batch);
+                            if res_tx.send((slot, g, l)).is_err() {
+                                return;
+                            }
+                        }
+                        Cmd::Shutdown => return,
+                    }
+                }
+            }));
+        }
+        Self {
+            oracle,
+            cmd_tx,
+            res_rx,
+            workers,
+            n_workers,
+        }
+    }
+}
+
+impl Drop for ThreadedCompute {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ClientCompute for ThreadedCompute {
+    fn dim(&self) -> usize {
+        self.oracle.dim()
+    }
+
+    fn grads(&mut self, thetas: &[Vec<f32>], batches: &[Vec<usize>]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        assert_eq!(thetas.len(), batches.len());
+        let n = thetas.len();
+        // Scatter: client i -> worker i % n_workers.
+        for i in 0..n {
+            self.cmd_tx[i % self.n_workers]
+                .send(Cmd::Grad(i, thetas[i].clone(), batches[i].clone()))
+                .expect("worker died");
+        }
+        // Gather (results may arrive out of order).
+        let mut gs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut ls = vec![0.0f32; n];
+        for _ in 0..n {
+            let (slot, g, l) = self.res_rx.recv().expect("worker died");
+            gs[slot] = g;
+            ls[slot] = l;
+        }
+        (gs, ls)
+    }
+
+    fn step(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+    ) {
+        for (theta, grad) in thetas.iter_mut().zip(grads) {
+            crate::linalg::fused_local_step(theta, grad, anchor, eta, inv_gamma);
+        }
+    }
+
+    fn full_loss(&mut self, theta: &[f32]) -> f64 {
+        self.oracle.full_loss(theta)
+    }
+
+    fn full_accuracy(&mut self, theta: &[f32]) -> f64 {
+        self.oracle.full_accuracy(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::compute::NativeCompute;
+    use crate::data::synth;
+    use crate::grad::logreg::NativeLogreg;
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let ds = Arc::new(synth::a9a_like(3, 256, 12));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut seq = NativeCompute::new(oracle.clone());
+        let mut par = ThreadedCompute::new(oracle, 4);
+
+        let thetas: Vec<Vec<f32>> = (0..8).map(|i| vec![0.01 * i as f32; 12]).collect();
+        let batches: Vec<Vec<usize>> = (0..8).map(|i| (i * 8..(i + 1) * 8).collect()).collect();
+        let (gs_a, ls_a) = seq.grads(&thetas, &batches);
+        let (gs_b, ls_b) = par.grads(&thetas, &batches);
+        assert_eq!(gs_a, gs_b);
+        assert_eq!(ls_a, ls_b);
+    }
+
+    #[test]
+    fn workers_survive_many_dispatches() {
+        let ds = Arc::new(synth::a9a_like(4, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.0));
+        let mut par = ThreadedCompute::new(oracle, 2);
+        let thetas = vec![vec![0.0f32; 8]; 4];
+        let batches: Vec<Vec<usize>> = (0..4).map(|i| vec![i, i + 1]).collect();
+        for _ in 0..200 {
+            let (gs, _) = par.grads(&thetas, &batches);
+            assert_eq!(gs.len(), 4);
+        }
+    }
+
+    #[test]
+    fn more_workers_than_clients_ok() {
+        let ds = Arc::new(synth::a9a_like(5, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.0));
+        let mut par = ThreadedCompute::new(oracle, 8);
+        let thetas = vec![vec![0.0f32; 8]; 2];
+        let batches = vec![vec![0, 1], vec![2, 3]];
+        let (gs, ls) = par.grads(&thetas, &batches);
+        assert_eq!(gs.len(), 2);
+        assert_eq!(ls.len(), 2);
+    }
+}

@@ -1,0 +1,171 @@
+//! Data partitioners: IID and the paper's Non-IID protocol.
+//!
+//! Paper §5: "at first, we randomly take s% i.i.d. data from the training
+//! set and divide them equally to each client. For the remaining data, we
+//! sort them according to their classes and then assign them to the clients
+//! in order." (s = 50 for convex experiments, s = 0 for non-convex.)
+
+use super::{Dataset, Shard};
+use crate::rng::Rng;
+
+/// Shuffle all indices, deal them round-robin: every client sees the same
+/// distribution (the IID case, zeta_f^* = 0).
+pub fn iid(dataset: &Dataset, n_clients: usize, rng: &mut Rng) -> Vec<Shard> {
+    assert!(n_clients > 0);
+    let mut idx: Vec<usize> = (0..dataset.len()).collect();
+    rng.shuffle(&mut idx);
+    deal_round_robin(&idx, n_clients)
+}
+
+/// The paper's s% protocol. `s_percent` in [0, 100].
+pub fn noniid(dataset: &Dataset, n_clients: usize, s_percent: f64, rng: &mut Rng) -> Vec<Shard> {
+    assert!(n_clients > 0);
+    assert!((0.0..=100.0).contains(&s_percent));
+    let n = dataset.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+
+    let n_iid = ((s_percent / 100.0) * n as f64).round() as usize;
+    let (iid_part, rest) = idx.split_at(n_iid.min(n));
+
+    // IID part: deal equally.
+    let mut shards = deal_round_robin(iid_part, n_clients);
+
+    // Remainder: sort by class, assign contiguously in order.
+    let mut rest: Vec<usize> = rest.to_vec();
+    rest.sort_by_key(|&i| (dataset.class_of(i), i));
+    let chunk = rest.len().div_ceil(n_clients).max(1);
+    for (c, chunk_idx) in rest.chunks(chunk).enumerate() {
+        let c = c.min(n_clients - 1);
+        shards[c].indices.extend_from_slice(chunk_idx);
+    }
+    shards
+}
+
+fn deal_round_robin(idx: &[usize], n_clients: usize) -> Vec<Shard> {
+    let mut shards: Vec<Shard> = (0..n_clients)
+        .map(|_| Shard {
+            indices: Vec::with_capacity(idx.len() / n_clients + 1),
+        })
+        .collect();
+    for (pos, &i) in idx.iter().enumerate() {
+        shards[pos % n_clients].indices.push(i);
+    }
+    shards
+}
+
+/// Measure of label heterogeneity across shards: mean total-variation
+/// distance between each shard's class histogram and the global one.
+/// 0 = perfectly IID shards; grows with Non-IID severity. Used by tests and
+/// by the Non-IID diagnostics in the experiment reports.
+pub fn heterogeneity(dataset: &Dataset, shards: &[Shard]) -> f64 {
+    let c = dataset.classes;
+    let mut global = vec![0.0f64; c];
+    for i in 0..dataset.len() {
+        global[dataset.class_of(i)] += 1.0;
+    }
+    let total = dataset.len() as f64;
+    for g in global.iter_mut() {
+        *g /= total;
+    }
+    let mut acc = 0.0;
+    for shard in shards {
+        if shard.is_empty() {
+            continue;
+        }
+        let mut hist = vec![0.0f64; c];
+        for &i in &shard.indices {
+            hist[dataset.class_of(i)] += 1.0;
+        }
+        let n = shard.len() as f64;
+        let tv: f64 = hist
+            .iter()
+            .zip(&global)
+            .map(|(h, g)| (h / n - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+    }
+    acc / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn coverage_ok(n: usize, shards: &[Shard]) {
+        let mut seen = vec![false; n];
+        for s in shards {
+            for &i in &s.indices {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "not all indices assigned");
+    }
+
+    #[test]
+    fn iid_covers_exactly_once() {
+        let ds = synth::cifar_like(1, 503, 8, 10);
+        let shards = iid(&ds, 8, &mut Rng::new(0));
+        assert_eq!(shards.len(), 8);
+        coverage_ok(503, &shards);
+    }
+
+    #[test]
+    fn iid_balanced_sizes() {
+        let ds = synth::cifar_like(1, 1000, 8, 10);
+        let shards = iid(&ds, 7, &mut Rng::new(0));
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn noniid_covers_exactly_once() {
+        let ds = synth::cifar_like(2, 777, 8, 10);
+        for s in [0.0, 25.0, 50.0, 100.0] {
+            let shards = noniid(&ds, 8, s, &mut Rng::new(1));
+            coverage_ok(777, &shards);
+        }
+    }
+
+    #[test]
+    fn noniid_s100_is_iid_like() {
+        let ds = synth::cifar_like(3, 2000, 8, 10);
+        let shards = noniid(&ds, 8, 100.0, &mut Rng::new(2));
+        assert!(heterogeneity(&ds, &shards) < 0.1);
+    }
+
+    #[test]
+    fn noniid_s0_is_heterogeneous() {
+        let ds = synth::cifar_like(3, 2000, 8, 10);
+        let h0 = heterogeneity(&ds, &noniid(&ds, 8, 0.0, &mut Rng::new(2)));
+        let h100 = heterogeneity(&ds, &noniid(&ds, 8, 100.0, &mut Rng::new(2)));
+        assert!(h0 > 0.5, "h0={h0}");
+        assert!(h0 > 3.0 * h100, "h0={h0} h100={h100}");
+    }
+
+    #[test]
+    fn noniid_monotone_in_s() {
+        let ds = synth::cifar_like(4, 3000, 8, 10);
+        let h: Vec<f64> = [0.0, 50.0, 100.0]
+            .iter()
+            .map(|&s| heterogeneity(&ds, &noniid(&ds, 8, s, &mut Rng::new(3))))
+            .collect();
+        assert!(h[0] > h[1] && h[1] > h[2], "{h:?}");
+    }
+
+    #[test]
+    fn binary_noniid_separates_classes() {
+        let ds = synth::mnist_like(1, 1000, 16);
+        let shards = noniid(&ds, 4, 0.0, &mut Rng::new(5));
+        coverage_ok(1000, &shards);
+        // With s=0 and 2 classes over 4 clients, the first shard should be
+        // (almost) single-class.
+        let c0: Vec<usize> = shards[0].indices.iter().map(|&i| ds.class_of(i)).collect();
+        let frac0 = c0.iter().filter(|&&c| c == 0).count() as f64 / c0.len() as f64;
+        assert!(frac0 > 0.95 || frac0 < 0.05, "frac0={frac0}");
+    }
+}

@@ -1,0 +1,359 @@
+//! Native relu-MLP + softmax cross-entropy oracle (the non-convex track).
+//!
+//! Parameter layout matches `python/compile/model.py::mlp_shapes` exactly
+//! (row-major [w0, b0, w1, b1, ...]) so the same flat vector runs through
+//! either this oracle or the AOT `mlp_grad_*` artifacts.
+
+use super::Oracle;
+use crate::data::Dataset;
+use crate::rng::Rng;
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct MlpArch {
+    pub d_in: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+}
+
+impl MlpArch {
+    /// (rows, cols) per weight matrix; biases interleave as (1, cols).
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::new();
+        let mut prev = self.d_in;
+        for &h in &self.hidden {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims.push((prev, self.classes));
+        dims
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layer_dims().iter().map(|&(i, o)| i * o + o).collect::<Vec<_>>().iter().sum()
+    }
+
+    /// Byte offsets of (w, b) per layer into the flat parameter vector.
+    pub fn offsets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for (i, o) in self.layer_dims() {
+            let w_off = off;
+            off += i * o;
+            let b_off = off;
+            off += o;
+            out.push((w_off, b_off));
+        }
+        out
+    }
+
+    /// He-style initialization (matches what the experiments use on both
+    /// engines; scale 1/sqrt(fan_in)).
+    pub fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.param_count()];
+        for ((w_off, _b_off), (fan_in, fan_out)) in self.offsets().iter().zip(self.layer_dims()) {
+            let scale = (2.0 / fan_in as f64).sqrt() as f32;
+            for v in &mut theta[*w_off..*w_off + fan_in * fan_out] {
+                *v = rng.normal_f32() * scale;
+            }
+        }
+        theta
+    }
+}
+
+pub struct NativeMlp {
+    dataset: Arc<Dataset>,
+    pub arch: MlpArch,
+}
+
+impl NativeMlp {
+    pub fn new(dataset: Arc<Dataset>, arch: MlpArch) -> Self {
+        assert_eq!(dataset.dim(), arch.d_in);
+        assert!(dataset.classes <= arch.classes);
+        Self { dataset, arch }
+    }
+
+    /// Allocate reusable per-layer activation buffers (one set per call,
+    /// shared across the minibatch — keeps the hot loop allocation-free;
+    /// see EXPERIMENTS.md §Perf).
+    fn make_scratch(&self) -> Vec<Vec<f32>> {
+        let dims = self.arch.layer_dims();
+        let mut acts = Vec::with_capacity(dims.len() + 1);
+        acts.push(vec![0.0f32; self.arch.d_in]);
+        for &(_, fan_out) in &dims {
+            acts.push(vec![0.0f32; fan_out]);
+        }
+        acts
+    }
+
+    /// Forward pass for one example into preallocated activation buffers
+    /// (acts[0] = input ... acts[L] = logits).
+    fn forward_into(&self, theta: &[f32], x: &[f32], acts: &mut [Vec<f32>]) {
+        let dims = self.arch.layer_dims();
+        let offs = self.arch.offsets();
+        let n_layers = dims.len();
+        acts[0].copy_from_slice(x);
+        for l in 0..n_layers {
+            let (fan_in, fan_out) = dims[l];
+            let (w_off, b_off) = offs[l];
+            let w = &theta[w_off..w_off + fan_in * fan_out];
+            let b = &theta[b_off..b_off + fan_out];
+            let (before, after) = acts.split_at_mut(l + 1);
+            let a_prev = &before[l];
+            let z = &mut after[0];
+            z.copy_from_slice(b);
+            for i in 0..fan_in {
+                let ai = a_prev[i];
+                if ai != 0.0 {
+                    let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                    for j in 0..fan_out {
+                        z[j] += ai * wrow[j];
+                    }
+                }
+            }
+            if l + 1 < n_layers {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+    }
+
+    /// Softmax + NLL in place: `logits` becomes the probability vector.
+    fn softmax_nll_inplace(logits: &mut [f32], label: usize) -> f32 {
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for z in logits.iter_mut() {
+            *z = (*z - mx).exp();
+            sum += *z;
+        }
+        let inv = 1.0 / sum;
+        for z in logits.iter_mut() {
+            *z *= inv;
+        }
+        -(logits[label].max(1e-30)).ln()
+    }
+}
+
+impl Oracle for NativeMlp {
+    fn dim(&self) -> usize {
+        self.arch.param_count()
+    }
+
+    fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32) {
+        debug_assert_eq!(theta.len(), self.dim());
+        let dims = self.arch.layer_dims();
+        let offs = self.arch.offsets();
+        let n_layers = dims.len();
+        let b = indices.len();
+        let inv_b = 1.0 / b as f32;
+
+        let mut grad = vec![0.0f32; theta.len()];
+        let mut loss = 0.0f32;
+
+        // Scratch reused across the whole minibatch (no per-example allocs).
+        let mut acts = self.make_scratch();
+        let max_width = dims.iter().map(|&(i, o)| i.max(o)).max().unwrap();
+        let mut delta = vec![0.0f32; max_width];
+        let mut delta_prev = vec![0.0f32; max_width];
+
+        for &ex in indices {
+            let x = self.dataset.x.row(ex);
+            let label = self.dataset.class_of(ex);
+            self.forward_into(theta, x, &mut acts);
+            loss += Self::softmax_nll_inplace(&mut acts[n_layers], label);
+
+            // delta at output layer = p - onehot(y)
+            let classes = dims[n_layers - 1].1;
+            delta[..classes].copy_from_slice(&acts[n_layers]);
+            delta[label] -= 1.0;
+
+            for l in (0..n_layers).rev() {
+                let (fan_in, fan_out) = dims[l];
+                let (w_off, b_off) = offs[l];
+                let a_prev = &acts[l];
+                let d = &delta[..fan_out];
+
+                // accumulate grads: gW[i,j] += a_prev[i] * delta[j] / B
+                for i in 0..fan_in {
+                    let ai = a_prev[i] * inv_b;
+                    if ai != 0.0 {
+                        let grow = &mut grad[w_off + i * fan_out..w_off + (i + 1) * fan_out];
+                        for j in 0..fan_out {
+                            grow[j] += ai * d[j];
+                        }
+                    }
+                }
+                for j in 0..fan_out {
+                    grad[b_off + j] += d[j] * inv_b;
+                }
+
+                if l > 0 {
+                    // delta_prev = (W delta) ⊙ relu'(a_prev)
+                    let w = &theta[w_off..w_off + fan_in * fan_out];
+                    for i in 0..fan_in {
+                        delta_prev[i] = if a_prev[i] > 0.0 {
+                            crate::linalg::dot(&w[i * fan_out..(i + 1) * fan_out], d)
+                        } else {
+                            0.0
+                        };
+                    }
+                    std::mem::swap(&mut delta, &mut delta_prev);
+                }
+            }
+        }
+        (grad, loss * inv_b)
+    }
+
+    fn full_loss(&self, theta: &[f32]) -> f64 {
+        let n_layers = self.arch.layer_dims().len();
+        let mut acts = self.make_scratch();
+        let mut loss = 0.0f64;
+        for ex in 0..self.dataset.len() {
+            self.forward_into(theta, self.dataset.x.row(ex), &mut acts);
+            loss +=
+                Self::softmax_nll_inplace(&mut acts[n_layers], self.dataset.class_of(ex)) as f64;
+        }
+        loss / self.dataset.len() as f64
+    }
+
+    fn full_accuracy(&self, theta: &[f32]) -> f64 {
+        let n_layers = self.arch.layer_dims().len();
+        let mut acts = self.make_scratch();
+        let mut correct = 0usize;
+        for ex in 0..self.dataset.len() {
+            self.forward_into(theta, self.dataset.x.row(ex), &mut acts);
+            let logits = &acts[n_layers];
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == self.dataset.class_of(ex) {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.dataset.len() as f64
+    }
+
+    fn dataset(&self) -> &Arc<Dataset> {
+        &self.dataset
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg::axpy;
+
+    fn setup() -> (Arc<Dataset>, NativeMlp) {
+        let ds = Arc::new(synth::cifar_like(1, 256, 16, 4));
+        let arch = MlpArch {
+            d_in: 16,
+            hidden: vec![16],
+            classes: 4,
+        };
+        let mlp = NativeMlp::new(ds.clone(), arch);
+        (ds, mlp)
+    }
+
+    #[test]
+    fn param_count_matches_python_formula() {
+        // mlp_param_count(16, [16], 4) = 16*16+16 + 16*4+4 = 340
+        let arch = MlpArch {
+            d_in: 16,
+            hidden: vec![16],
+            classes: 4,
+        };
+        assert_eq!(arch.param_count(), 340);
+        // the wide paper config: 256->512->256->10
+        let arch = MlpArch {
+            d_in: 256,
+            hidden: vec![512, 256],
+            classes: 10,
+        };
+        assert_eq!(
+            arch.param_count(),
+            256 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10
+        );
+    }
+
+    #[test]
+    fn loss_at_zero_is_log_c() {
+        let (_, mlp) = setup();
+        let theta = vec![0.0f32; mlp.dim()];
+        assert!((mlp.full_loss(&theta) - (4.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (_, mlp) = setup();
+        let mut rng = Rng::new(3);
+        let mut theta = mlp.arch.init(&mut rng);
+        let idx: Vec<usize> = (0..16).collect();
+        let (g, _) = mlp.grad_minibatch(&theta, &idx);
+        let eps = 1e-2f32;
+        // Check a spread of coordinates across layers.
+        for j in [0usize, 50, 200, 300, 339] {
+            let orig = theta[j];
+            theta[j] = orig + eps;
+            let (_, lp) = mlp.grad_minibatch(&theta, &idx);
+            theta[j] = orig - eps;
+            let (_, lm) = mlp.grad_minibatch(&theta, &idx);
+            theta[j] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[j]).abs() < 5e-3_f32.max(0.05 * fd.abs()),
+                "j={j} fd={fd} g={}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_training_improves_loss_and_accuracy() {
+        let (ds, mlp) = setup();
+        let mut rng = Rng::new(7);
+        let mut theta = mlp.arch.init(&mut rng);
+        let l0 = mlp.full_loss(&theta);
+        let a0 = mlp.full_accuracy(&theta);
+        let all: Vec<usize> = (0..ds.len()).collect();
+        for _ in 0..60 {
+            let (g, _) = mlp.grad_minibatch(&theta, &all);
+            axpy(-0.5, &g, &mut theta);
+        }
+        let l1 = mlp.full_loss(&theta);
+        let a1 = mlp.full_accuracy(&theta);
+        assert!(l1 < l0 * 0.8, "l0={l0} l1={l1}");
+        assert!(a1 > a0, "a0={a0} a1={a1}");
+    }
+
+    #[test]
+    fn accuracy_in_unit_interval() {
+        let (_, mlp) = setup();
+        let mut rng = Rng::new(11);
+        let theta = mlp.arch.init(&mut rng);
+        let acc = mlp.full_accuracy(&theta);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn init_deterministic_and_scaled() {
+        let arch = MlpArch {
+            d_in: 16,
+            hidden: vec![16],
+            classes: 4,
+        };
+        let a = arch.init(&mut Rng::new(5));
+        let b = arch.init(&mut Rng::new(5));
+        assert_eq!(a, b);
+        // biases stay zero
+        let offs = arch.offsets();
+        let dims = arch.layer_dims();
+        for ((_, b_off), (_, fan_out)) in offs.iter().zip(dims) {
+            assert!(a[*b_off..*b_off + fan_out].iter().all(|&v| v == 0.0));
+        }
+    }
+}

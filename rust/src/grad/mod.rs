@@ -1,0 +1,112 @@
+//! Gradient oracles: the compute interface between the coordinator and the
+//! model layer.
+//!
+//! Two interchangeable families (DESIGN.md §2 "dual gradient oracle"):
+//!
+//! * native rust ([`logreg::NativeLogreg`], [`mlp::NativeMlp`]) — the sweep
+//!   substrate; fast enough to replay the paper's multi-hundred-thousand-
+//!   round SyncSGD baselines on one CPU;
+//! * XLA-backed ([`crate::runtime::XlaOracle`]) — executes the AOT-compiled
+//!   JAX/Pallas artifacts via PJRT; the "system" path used by the examples.
+//!
+//! Integration tests pin the two families to each other (<= 1e-4 rel) and
+//! to python's `ref.py` golden values.
+
+pub mod logreg;
+pub mod mlp;
+
+use crate::data::Dataset;
+use std::sync::Arc;
+
+/// A differentiable empirical-risk objective over a shared dataset.
+///
+/// `theta` is always the *unpadded* flat parameter vector; padding for the
+/// XLA artifact ABI is handled inside the runtime oracle.
+pub trait Oracle: Send + Sync {
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Minibatch gradient and minibatch loss at `theta` over the given
+    /// global example indices.
+    fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32);
+
+    /// Full-dataset objective value (used for the objective-gap metric).
+    fn full_loss(&self, theta: &[f32]) -> f64;
+
+    /// Full-dataset accuracy in [0,1]; classification oracles override.
+    fn full_accuracy(&self, _theta: &[f32]) -> f64 {
+        f64::NAN
+    }
+
+    /// The dataset backing this oracle (for partitioning / evaluation).
+    fn dataset(&self) -> &Arc<Dataset>;
+}
+
+/// Proximal wrapper: grad of f(x) + (inv_gamma/2)·||x - anchor||^2.
+///
+/// Implements the per-stage regularized objective of STL-SGD^nc
+/// (Algorithm 3): f_{x_s}^gamma(x) = f(x) + 1/(2 gamma) ||x - x_s||^2.
+/// Mirrors the fused L1 kernel, which folds the same term into the update.
+pub struct ProxOracle<'a> {
+    pub inner: &'a dyn Oracle,
+    pub anchor: &'a [f32],
+    pub inv_gamma: f32,
+}
+
+impl<'a> ProxOracle<'a> {
+    pub fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32) {
+        let (mut g, mut loss) = self.inner.grad_minibatch(theta, indices);
+        let mut reg = 0.0f32;
+        for i in 0..g.len() {
+            let d = theta[i] - self.anchor[i];
+            g[i] += self.inv_gamma * d;
+            reg += d * d;
+        }
+        loss += 0.5 * self.inv_gamma * reg;
+        (g, loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn prox_adds_linear_pull() {
+        let ds = Arc::new(synth::a9a_like(1, 64, 8));
+        let oracle = logreg::NativeLogreg::new(ds, 0.0);
+        let theta = vec![1.0f32; 8];
+        let anchor = vec![0.0f32; 8];
+        let idx: Vec<usize> = (0..32).collect();
+        let (g0, l0) = oracle.grad_minibatch(&theta, &idx);
+        let prox = ProxOracle {
+            inner: &oracle,
+            anchor: &anchor,
+            inv_gamma: 0.5,
+        };
+        let (g1, l1) = prox.grad_minibatch(&theta, &idx);
+        for i in 0..8 {
+            assert!((g1[i] - g0[i] - 0.5).abs() < 1e-6);
+        }
+        assert!((l1 - l0 - 0.25 * 8.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn prox_zero_gamma_is_identity() {
+        let ds = Arc::new(synth::a9a_like(2, 64, 8));
+        let oracle = logreg::NativeLogreg::new(ds, 0.01);
+        let theta = vec![0.3f32; 8];
+        let anchor = vec![9.0f32; 8];
+        let idx: Vec<usize> = (0..16).collect();
+        let (g0, l0) = oracle.grad_minibatch(&theta, &idx);
+        let prox = ProxOracle {
+            inner: &oracle,
+            anchor: &anchor,
+            inv_gamma: 0.0,
+        };
+        let (g1, l1) = prox.grad_minibatch(&theta, &idx);
+        assert_eq!(g0, g1);
+        assert_eq!(l0, l1);
+    }
+}

@@ -1,0 +1,41 @@
+//! # stl-sgd — full-system reproduction of STL-SGD (AAAI 2021)
+//!
+//! *STL-SGD: Speeding Up Local SGD with Stagewise Communication Period*
+//! (Shen, Cheng, Liu, Xu). This crate is the L3 layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: leader /
+//!   worker event loop, the paper's stagewise communication-period
+//!   controller ([`algo`]), periodic model-averaging collectives ([`comm`]),
+//!   communication accounting and a latency/bandwidth network model
+//!   ([`sim`]), plus every substrate the evaluation needs (synthetic
+//!   datasets, partitioners, native gradient oracles, metrics).
+//! * **L2/L1 (python/compile, build-time only)** — JAX models and Pallas
+//!   kernels, AOT-lowered to HLO text artifacts that [`runtime`] loads and
+//!   executes through PJRT. Python never runs on the training path.
+//!
+//! The offline build environment provides only the `xla` crate's vendored
+//! dependency closure, so the usual ecosystem crates (tokio, serde, clap,
+//! criterion, proptest, rand) are replaced by from-scratch substrates:
+//! [`util::json`], [`util::cli`], [`rng`], [`bench_support`], and the
+//! property-test helpers in [`testing`].
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod algo;
+pub mod bench_support;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod grad;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,149 @@
+//! Row-major dense matrix used by datasets and native oracles.
+
+/// Row-major, contiguous f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows_in: &[Vec<f32>]) -> Self {
+        assert!(!rows_in.is_empty());
+        let cols = rows_in[0].len();
+        let mut data = Vec::with_capacity(rows_in.len() * cols);
+        for r in rows_in {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self {
+            rows: rows_in.len(),
+            cols,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// out = self @ v  (rows x cols) . (cols) -> (rows)
+    pub fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = super::dot(self.row(i), v);
+        }
+    }
+
+    /// out += alpha * self^T @ v  ((cols) += (cols x rows) . (rows))
+    pub fn matvec_t_acc(&self, alpha: f32, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for i in 0..self.rows {
+            let a = alpha * v[i];
+            if a != 0.0 {
+                super::axpy(a, self.row(i), out);
+            }
+        }
+    }
+
+    /// C = A @ B (naive triple loop with row-major blocking-friendly order).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a_ik = self.get(i, k);
+                if a_ik != 0.0 {
+                    let brow = b.row(k);
+                    let crow = c.row_mut(i);
+                    for j in 0..brow.len() {
+                        crow[j] += a_ik * brow[j];
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let mut out = vec![0.0; 2];
+        m.matvec(&[5.0, 7.0], &mut out);
+        assert_eq!(out, vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn matvec_t_acc_transpose_semantics() {
+        // A = [[1,2],[3,4]]; A^T v with v=[1,1] is [4,6]
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut out = vec![0.0; 2];
+        m.matvec_t_acc(1.0, &[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_matvec() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let v = vec![7.0, 8.0, 9.0];
+        let b = Matrix {
+            rows: 3,
+            cols: 1,
+            data: v.clone(),
+        };
+        let c = a.matmul(&b);
+        let mut out = vec![0.0; 2];
+        a.matvec(&v, &mut out);
+        assert_eq!(c.data, out);
+    }
+}

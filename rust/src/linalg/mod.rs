@@ -1,0 +1,202 @@
+//! Dense f32 linear-algebra substrate.
+//!
+//! Everything the native gradient oracles and the collectives need: flat
+//! vectors, row-major matrices, fused axpy-style kernels. Hot-loop methods
+//! are written to autovectorize (plain indexed loops over slices, no
+//! iterator chains in the innermost loop).
+
+pub mod matrix;
+
+pub use matrix::Matrix;
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = alpha * x + beta * y (general scaled update)
+#[inline]
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = alpha * x[i] + beta * y[i];
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Dot product with f64 accumulation (used where tolerance matters).
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot_f64(x, x).sqrt() as f32
+}
+
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// out = mean of the given rows (each a slice of identical length).
+pub fn mean_rows(rows: &[&[f32]], out: &mut [f32]) {
+    assert!(!rows.is_empty());
+    let n = rows.len() as f32;
+    out.fill(0.0);
+    for row in rows {
+        debug_assert_eq!(row.len(), out.len());
+        for i in 0..out.len() {
+            out[i] += row[i];
+        }
+    }
+    scale(1.0 / n, out);
+}
+
+/// In-place fused prox-SGD step (mirrors the L1 pallas kernel):
+/// theta -= eta * (grad + inv_gamma * (theta - anchor))
+#[inline]
+pub fn fused_local_step(theta: &mut [f32], grad: &[f32], anchor: &[f32], eta: f32, inv_gamma: f32) {
+    debug_assert_eq!(theta.len(), grad.len());
+    debug_assert_eq!(theta.len(), anchor.len());
+    if inv_gamma == 0.0 {
+        for i in 0..theta.len() {
+            theta[i] -= eta * grad[i];
+        }
+    } else {
+        for i in 0..theta.len() {
+            theta[i] -= eta * (grad[i] + inv_gamma * (theta[i] - anchor[i]));
+        }
+    }
+}
+
+/// Numerically stable softplus(-m) = log(1 + exp(-m)).
+#[inline]
+pub fn softplus_neg(m: f32) -> f32 {
+    (-m).max(0.0) + (-m.abs()).exp().ln_1p()
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn axpby_zero_beta_is_scaled_copy() {
+        let x = [1.0, -2.0];
+        let mut y = [5.0, 5.0];
+        axpby(3.0, &x, 0.0, &mut y);
+        assert_eq!(y, [3.0, -6.0]);
+    }
+
+    #[test]
+    fn dot_orthogonal() {
+        assert_eq!(dot(&[1.0, 0.0], &[0.0, 1.0]), 0.0);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn norm_pythagoras() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_rows_two() {
+        let a = [1.0f32, 3.0];
+        let b = [3.0f32, 5.0];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        let mut out = [0.0f32; 2];
+        mean_rows(&rows, &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn fused_step_plain_sgd() {
+        let mut theta = vec![1.0f32, 2.0];
+        let grad = vec![0.5f32, -0.5];
+        let anchor = vec![0.0f32, 0.0];
+        fused_local_step(&mut theta, &grad, &anchor, 0.1, 0.0);
+        assert_eq!(theta, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn fused_step_prox_pulls_to_anchor() {
+        let mut theta = vec![1.0f32];
+        fused_local_step(&mut theta, &[0.0], &[0.0], 0.1, 1.0);
+        assert!((theta[0] - 0.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sigmoid_symmetry_and_bounds() {
+        for z in [-50.0f32, -3.0, -0.5, 0.0, 0.5, 3.0, 50.0] {
+            let s = sigmoid(z);
+            assert!((0.0..=1.0).contains(&s));
+            assert!((s + sigmoid(-z) - 1.0).abs() < 1e-6);
+        }
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn softplus_matches_naive_in_safe_range() {
+        for m in [-5.0f32, -1.0, 0.0, 1.0, 5.0] {
+            let naive = (1.0 + (-m).exp()).ln();
+            assert!((softplus_neg(m) - naive).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softplus_no_overflow() {
+        assert!(softplus_neg(-200.0).is_finite());
+        assert!(softplus_neg(200.0).is_finite());
+        assert!((softplus_neg(-200.0) - 200.0).abs() < 1e-3);
+        assert!(softplus_neg(200.0) < 1e-6);
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic pseudo-random number substrate.
+//!
+//! The offline environment has no `rand` crate, and reproducibility across
+//! engines (threaded native vs batched XLA) requires per-client streams
+//! that are stable regardless of execution order. We use xoshiro256++
+//! seeded via SplitMix64, with a `split` operation deriving independent
+//! per-client streams from a root seed.
+
+pub mod golden;
+
+/// SplitMix64: seeds xoshiro and derives child seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality, 2^256-period generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal sample from Box-Muller.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed from a u64 via SplitMix64 (the reference seeding procedure).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive an independent stream for `label` (e.g. a client id).
+    ///
+    /// Uses a fresh SplitMix chain keyed by (state, label) so streams for
+    /// different labels are decorrelated and independent of call order.
+    pub fn split(&self, label: u64) -> Rng {
+        let mut sm = SplitMix64::new(self.s[0] ^ self.s[3].rotate_left(17) ^ label.wrapping_mul(0x9E3779B97F4A7C15));
+        Rng {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid u == 0 for the log.
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.gauss_spare = Some(r * s);
+        r * c
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `k` indices from [0, n) with replacement.
+    pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.below(n)).collect()
+    }
+
+    /// Random sign in {-1.0, +1.0}.
+    #[inline]
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn split_streams_independent_of_order() {
+        let root = Rng::new(7);
+        let a1 = root.split(1);
+        let a2 = root.split(2);
+        // splitting again in a different order yields identical streams
+        let b2 = root.split(2);
+        let b1 = root.split(1);
+        let take = |mut r: Rng| (0..8).map(|_| r.next_u64()).collect::<Vec<_>>();
+        assert_eq!(take(a1), take(b1));
+        assert_eq!(take(a2), take(b2));
+    }
+
+    #[test]
+    fn split_streams_decorrelated() {
+        let root = Rng::new(7);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut lo = 1.0f64;
+        let mut hi = 0.0f64;
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            lo = lo.min(u);
+            hi = hi.max(u);
+        }
+        assert!(lo < 0.01 && hi > 0.99);
+    }
+
+    #[test]
+    fn below_unbiased_coverage() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn below_one_is_zero() {
+        let mut r = Rng::new(5);
+        for _ in 0..10 {
+            assert_eq!(r.below(1), 0);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sign_balanced() {
+        let mut r = Rng::new(17);
+        let pos = (0..10_000).filter(|_| r.sign() > 0.0).count();
+        assert!((4_500..5_500).contains(&pos));
+    }
+}

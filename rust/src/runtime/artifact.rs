@@ -1,0 +1,210 @@
+//! A compiled artifact: HLO text -> PJRT executable + typed execute helpers.
+
+use super::manifest::ArtifactSpec;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// One loaded + compiled artifact.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Parse the HLO text and compile it on `client`.
+    pub fn load(client: &PjRtClient, spec: &ArtifactSpec) -> anyhow::Result<Artifact> {
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?;
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {path}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", spec.name))?;
+        Ok(Artifact {
+            spec: spec.clone(),
+            exe,
+        })
+    }
+
+    /// Build an f32 literal of the given shape from a flat slice.
+    pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+        let count: usize = shape.iter().product();
+        anyhow::ensure!(
+            count == data.len(),
+            "literal shape {:?} needs {count} elements, got {}",
+            shape,
+            data.len()
+        );
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?)
+    }
+
+    /// Execute with literal inputs; unwraps the (return_tuple=True) output
+    /// tuple into per-output literals.
+    pub fn execute(&self, inputs: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e:?}", self.spec.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.spec.name))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.spec.name,
+            self.spec.outputs.len(),
+            parts.len()
+        );
+        Ok(parts)
+    }
+
+    /// Execute and extract every output as a flat f32 vec.
+    pub fn execute_f32(&self, inputs: &[Literal]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.execute(inputs)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir, Manifest};
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(Artifact::literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(Artifact::literal_f32(&[1.0, 2.0], &[2, 1]).is_ok());
+    }
+
+    /// End-to-end: load the smallest grad artifact, run it, compare to the
+    /// native oracle. This is the core L3 <-> L2/L1 integration point.
+    #[test]
+    fn logreg_grad_artifact_matches_native_oracle() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let spec = m.get("logreg_grad_test").unwrap();
+        let (n, b, d, pp) = (
+            spec.meta_usize("n").unwrap(),
+            spec.meta_usize("b").unwrap(),
+            spec.meta_usize("d").unwrap(),
+            spec.meta_usize("p_padded").unwrap(),
+        );
+        let client = PjRtClient::cpu().unwrap();
+        let art = Artifact::load(&client, spec).unwrap();
+
+        // Deterministic inputs from the golden stream.
+        let case = crate::rng::golden::golden_logreg_inputs(3, n, b, d);
+        let lam = 0.01f32;
+
+        let mut theta_pad = vec![0.0f32; n * pp];
+        for i in 0..n {
+            theta_pad[i * pp..i * pp + d].copy_from_slice(&case.theta[i * d..(i + 1) * d]);
+        }
+        let inputs = vec![
+            Artifact::literal_f32(&theta_pad, &[n, pp]).unwrap(),
+            Artifact::literal_f32(&case.x, &[n, b, d]).unwrap(),
+            Artifact::literal_f32(&case.y, &[n, b]).unwrap(),
+            Artifact::literal_f32(&[lam], &[1]).unwrap(),
+        ];
+        let outs = art.execute_f32(&inputs).unwrap();
+        let grads_pad = &outs[0];
+        let losses = &outs[1];
+        assert_eq!(grads_pad.len(), n * pp);
+        assert_eq!(losses.len(), n);
+
+        // Native oracle on the same minibatch.
+        use crate::data::Dataset;
+        use crate::grad::{logreg::NativeLogreg, Oracle};
+        use crate::linalg::Matrix;
+        for i in 0..n {
+            let rows: Vec<Vec<f32>> =
+                (0..b).map(|r| case.x[(i * b + r) * d..(i * b + r + 1) * d].to_vec()).collect();
+            let ds = std::sync::Arc::new(Dataset {
+                x: Matrix::from_rows(&rows),
+                y: case.y[i * b..(i + 1) * b].to_vec(),
+                classes: 2,
+                name: "golden".into(),
+            });
+            let oracle = NativeLogreg::new(ds, lam);
+            let idx: Vec<usize> = (0..b).collect();
+            let (g, l) = oracle.grad_minibatch(&case.theta[i * d..(i + 1) * d], &idx);
+            for j in 0..d {
+                let got = grads_pad[i * pp + j];
+                assert!(
+                    (got - g[j]).abs() < 1e-4,
+                    "client {i} coord {j}: xla={got} native={}",
+                    g[j]
+                );
+            }
+            // padding stays zero
+            for j in d..pp {
+                assert_eq!(grads_pad[i * pp + j], 0.0);
+            }
+            assert!((losses[i] - l).abs() < 1e-4, "client {i}");
+        }
+    }
+
+    #[test]
+    fn fused_step_artifact_matches_native() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let spec = m.get("fused_step_logreg_test").unwrap();
+        let n = spec.meta_usize("n").unwrap();
+        let pp = spec.meta_usize("p_padded").unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let art = Artifact::load(&client, spec).unwrap();
+
+        let stream = crate::rng::golden::golden_stream(9, 3 * n * pp);
+        let theta = &stream[..n * pp];
+        let grad = &stream[n * pp..2 * n * pp];
+        let anchor = &stream[2 * n * pp..];
+        let (eta, inv_gamma) = (0.05f32, 0.3f32);
+
+        let outs = art
+            .execute_f32(&[
+                Artifact::literal_f32(theta, &[n, pp]).unwrap(),
+                Artifact::literal_f32(grad, &[n, pp]).unwrap(),
+                Artifact::literal_f32(anchor, &[n, pp]).unwrap(),
+                Artifact::literal_f32(&[eta, inv_gamma], &[2]).unwrap(),
+            ])
+            .unwrap();
+        let got = &outs[0];
+
+        let mut expect = theta.to_vec();
+        for i in 0..n {
+            crate::linalg::fused_local_step(
+                &mut expect[i * pp..(i + 1) * pp],
+                &grad[i * pp..(i + 1) * pp],
+                &anchor[i * pp..(i + 1) * pp],
+                eta,
+                inv_gamma,
+            );
+        }
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! [`XlaCompute`]: the production engine — every gradient and every
+//! parameter update on the training path runs through the AOT-compiled
+//! JAX/Pallas artifacts via PJRT.
+
+use super::artifact::Artifact;
+use super::manifest::Manifest;
+use crate::coordinator::compute::ClientCompute;
+use crate::data::Dataset;
+use std::sync::Arc;
+use xla::{Literal, PjRtClient};
+
+/// Which model family the engine drives (determines the artifact ABI).
+#[derive(Clone, Debug)]
+pub enum ModelKind {
+    /// logreg_grad_*: (theta_pad, X, y, lam) -> (grads_pad, losses);
+    /// logreg_loss_*: (theta_pad, X, y, lam) -> (loss,)
+    Logreg { lam: f32 },
+    /// mlp_grad_*: (theta_pad, X, y) -> (grads_pad, losses);
+    /// mlp_eval_*: (theta_pad, X, y) -> (loss, acc)
+    Mlp,
+    /// tfm_grad_*: (theta_pad, tokens) -> (grad_pad, loss); executed once
+    /// per client (data-parallel), loss evaluated on a fixed sample.
+    Tfm { eval_rows: usize },
+}
+
+/// PJRT-backed engine: one compiled grad artifact + one fused-step artifact
+/// (+ an eval artifact where available).
+pub struct XlaCompute {
+    kind: ModelKind,
+    grad: Artifact,
+    step: Artifact,
+    eval: Option<Artifact>,
+    dataset: Arc<Dataset>,
+    n: usize,
+    b: usize,
+    d_in: usize,
+    /// True (unpadded) parameter count.
+    p: usize,
+    /// Padded parameter count (fused-step tile multiple).
+    pp: usize,
+    /// Cached eval-set literals (X, y[, lam]) to avoid re-uploading the
+    /// full dataset every evaluation.
+    eval_inputs: Vec<Literal>,
+    /// Memoized (theta, loss, acc) of the last evaluation.
+    last_eval: Option<(Vec<f32>, f64, f64)>,
+    /// Number of executable invocations (perf accounting).
+    pub calls: u64,
+}
+
+impl XlaCompute {
+    /// Build the engine for a logreg config (`a9a`, `mnist`, `test`).
+    pub fn for_logreg(
+        client: &PjRtClient,
+        manifest: &Manifest,
+        config: &str,
+        dataset: Arc<Dataset>,
+        lam: f32,
+    ) -> anyhow::Result<Self> {
+        let grad_spec = manifest.get(&format!("logreg_grad_{config}"))?;
+        let step_spec = manifest.get(&format!("fused_step_logreg_{config}"))?;
+        let loss_spec = manifest.get(&format!("logreg_loss_{config}"))?;
+        let (n, b, d) = (
+            grad_spec.meta_usize("n").unwrap(),
+            grad_spec.meta_usize("b").unwrap(),
+            grad_spec.meta_usize("d").unwrap(),
+        );
+        let pp = grad_spec.meta_usize("p_padded").unwrap();
+        let m = loss_spec.meta_usize("m").unwrap();
+        anyhow::ensure!(
+            dataset.len() == m && dataset.dim() == d,
+            "dataset {}x{} does not match artifact {config} ({m}x{d})",
+            dataset.len(),
+            dataset.dim()
+        );
+        let grad = Artifact::load(client, grad_spec)?;
+        let step = Artifact::load(client, step_spec)?;
+        let eval = Artifact::load(client, loss_spec)?;
+
+        let eval_inputs = vec![
+            Artifact::literal_f32(&dataset.x.data, &[m, d])?,
+            Artifact::literal_f32(&dataset.y, &[m])?,
+            Artifact::literal_f32(&[lam], &[1])?,
+        ];
+        Ok(Self {
+            kind: ModelKind::Logreg { lam },
+            grad,
+            step,
+            eval: Some(eval),
+            dataset,
+            n,
+            b,
+            d_in: d,
+            p: d,
+            pp,
+            eval_inputs,
+            last_eval: None,
+            calls: 0,
+        })
+    }
+
+    /// Build the engine for an MLP config (`wide`, `deep`, `test`).
+    pub fn for_mlp(
+        client: &PjRtClient,
+        manifest: &Manifest,
+        config: &str,
+        dataset: Arc<Dataset>,
+    ) -> anyhow::Result<Self> {
+        let grad_spec = manifest.get(&format!("mlp_grad_{config}"))?;
+        let step_spec = manifest.get(&format!("fused_step_mlp_{config}"))?;
+        let eval_spec = manifest.get(&format!("mlp_eval_{config}"))?;
+        let (n, b, d_in, p, pp) = (
+            grad_spec.meta_usize("n").unwrap(),
+            grad_spec.meta_usize("b").unwrap(),
+            grad_spec.meta_usize("d_in").unwrap(),
+            grad_spec.meta_usize("p").unwrap(),
+            grad_spec.meta_usize("p_padded").unwrap(),
+        );
+        let m = eval_spec.meta_usize("m").unwrap();
+        anyhow::ensure!(
+            dataset.len() == m && dataset.dim() == d_in,
+            "dataset {}x{} does not match artifact {config} ({m}x{d_in})",
+            dataset.len(),
+            dataset.dim()
+        );
+        let grad = Artifact::load(client, grad_spec)?;
+        let step = Artifact::load(client, step_spec)?;
+        let eval = Artifact::load(client, eval_spec)?;
+        let eval_inputs = vec![
+            Artifact::literal_f32(&dataset.x.data, &[m, d_in])?,
+            Artifact::literal_f32(&dataset.y, &[m])?,
+        ];
+        Ok(Self {
+            kind: ModelKind::Mlp,
+            grad,
+            step,
+            eval: Some(eval),
+            dataset,
+            n,
+            b,
+            d_in,
+            p,
+            pp,
+            eval_inputs,
+            last_eval: None,
+            calls: 0,
+        })
+    }
+
+    /// Build the engine for a transformer config (`small`, `test`). The
+    /// dataset rows are token sequences of length seq+1 stored as f32.
+    pub fn for_tfm(
+        client: &PjRtClient,
+        manifest: &Manifest,
+        config: &str,
+        dataset: Arc<Dataset>,
+        n_clients: usize,
+        eval_rows: usize,
+    ) -> anyhow::Result<Self> {
+        let grad_spec = manifest.get(&format!("tfm_grad_{config}"))?;
+        let step_spec = manifest.get(&format!("fused_step_tfm_{config}"))?;
+        let b = grad_spec.meta_usize("b").unwrap();
+        let seq = grad_spec.meta_usize("seq").unwrap();
+        let p = grad_spec.meta_usize("p").unwrap();
+        let pp = grad_spec.meta_usize("p_padded").unwrap();
+        let step_n = step_spec.meta_usize("n").unwrap();
+        anyhow::ensure!(
+            n_clients == step_n,
+            "fused_step_tfm_{config} is compiled for {step_n} clients, got {n_clients}"
+        );
+        anyhow::ensure!(
+            dataset.dim() == seq + 1,
+            "token dataset rows must be seq+1 = {} long",
+            seq + 1
+        );
+        let grad = Artifact::load(client, grad_spec)?;
+        let step = Artifact::load(client, step_spec)?;
+        let eval_rows = eval_rows.min(dataset.len()).max(b);
+        Ok(Self {
+            kind: ModelKind::Tfm { eval_rows },
+            grad,
+            step,
+            eval: None,
+            dataset,
+            n: n_clients,
+            b,
+            d_in: seq + 1,
+            p,
+            pp,
+            eval_inputs: Vec::new(),
+            last_eval: None,
+            calls: 0,
+        })
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn pad_thetas(&self, thetas: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0.0f32; thetas.len() * self.pp];
+        for (i, th) in thetas.iter().enumerate() {
+            debug_assert_eq!(th.len(), self.p);
+            out[i * self.pp..i * self.pp + self.p].copy_from_slice(th);
+        }
+        out
+    }
+
+    fn gather_xy(&self, batches: &[Vec<usize>]) -> (Vec<f32>, Vec<f32>) {
+        let (n, b, d) = (batches.len(), self.b, self.d_in);
+        let mut x = vec![0.0f32; n * b * d];
+        let mut y = vec![0.0f32; n * b];
+        for (i, batch) in batches.iter().enumerate() {
+            assert_eq!(batch.len(), b, "artifact is compiled for batch {b}");
+            for (r, &idx) in batch.iter().enumerate() {
+                x[(i * b + r) * d..(i * b + r + 1) * d].copy_from_slice(self.dataset.x.row(idx));
+                y[i * b + r] = self.dataset.y[idx];
+            }
+        }
+        (x, y)
+    }
+
+    fn eval_both(&mut self, theta: &[f32]) -> (f64, f64) {
+        if let Some((cached, loss, acc)) = &self.last_eval {
+            if cached.as_slice() == theta {
+                return (*loss, *acc);
+            }
+        }
+        let mut theta_pad = vec![0.0f32; self.pp];
+        theta_pad[..self.p].copy_from_slice(theta);
+        let (loss, acc) = match &self.kind {
+            ModelKind::Logreg { .. } => {
+                let art = self.eval.as_ref().unwrap();
+                let mut inputs = vec![Artifact::literal_f32(&theta_pad, &[self.pp]).unwrap()];
+                inputs.extend(self.eval_inputs.iter().map(clone_literal));
+                let outs = art.execute_f32(&inputs).expect("logreg_loss artifact");
+                self.calls += 1;
+                // Accuracy natively (cheap linear predictor).
+                let mut z = vec![0.0f32; self.dataset.len()];
+                self.dataset.x.matvec(&theta[..self.d_in], &mut z);
+                let correct = (0..self.dataset.len())
+                    .filter(|&i| z[i] * self.dataset.y[i] > 0.0)
+                    .count();
+                (outs[0][0] as f64, correct as f64 / self.dataset.len() as f64)
+            }
+            ModelKind::Mlp => {
+                let art = self.eval.as_ref().unwrap();
+                let mut inputs = vec![Artifact::literal_f32(&theta_pad, &[self.pp]).unwrap()];
+                inputs.extend(self.eval_inputs.iter().map(clone_literal));
+                let outs = art.execute_f32(&inputs).expect("mlp_eval artifact");
+                self.calls += 1;
+                (outs[0][0] as f64, outs[1][0] as f64)
+            }
+            ModelKind::Tfm { eval_rows } => {
+                // Average the grad artifact's loss output over fixed rows.
+                let theta_lit = Artifact::literal_f32(&theta_pad, &[self.pp]).unwrap();
+                let mut total = 0.0f64;
+                let mut count = 0usize;
+                let rows = *eval_rows;
+                let mut r = 0;
+                while r + self.b <= rows {
+                    let mut toks = vec![0.0f32; self.b * self.d_in];
+                    for j in 0..self.b {
+                        toks[j * self.d_in..(j + 1) * self.d_in]
+                            .copy_from_slice(self.dataset.x.row(r + j));
+                    }
+                    let outs = self
+                        .grad
+                        .execute_f32(&[
+                            clone_literal(&theta_lit),
+                            Artifact::literal_f32(&toks, &[self.b, self.d_in]).unwrap(),
+                        ])
+                        .expect("tfm_grad artifact");
+                    self.calls += 1;
+                    total += outs[1][0] as f64;
+                    count += 1;
+                    r += self.b;
+                }
+                (total / count.max(1) as f64, f64::NAN)
+            }
+        };
+        self.last_eval = Some((theta.to_vec(), loss, acc));
+        (loss, acc)
+    }
+}
+
+/// The xla crate's Literal is not Clone; round-trip through raw bytes.
+fn clone_literal(l: &Literal) -> Literal {
+    // Literal::vec1 + reshape on the raw f32 data.
+    let v: Vec<f32> = l.to_vec().expect("literal to_vec");
+    let shape = l.array_shape().expect("literal shape");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    Literal::vec1(&v).reshape(&dims).expect("reshape")
+}
+
+impl ClientCompute for XlaCompute {
+    fn dim(&self) -> usize {
+        self.p
+    }
+
+    fn grads(&mut self, thetas: &[Vec<f32>], batches: &[Vec<usize>]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        assert_eq!(thetas.len(), self.n, "engine compiled for {} clients", self.n);
+        match &self.kind {
+            ModelKind::Logreg { lam } => {
+                let theta_pad = self.pad_thetas(thetas);
+                let (x, y) = self.gather_xy(batches);
+                let outs = self
+                    .grad
+                    .execute_f32(&[
+                        Artifact::literal_f32(&theta_pad, &[self.n, self.pp]).unwrap(),
+                        Artifact::literal_f32(&x, &[self.n, self.b, self.d_in]).unwrap(),
+                        Artifact::literal_f32(&y, &[self.n, self.b]).unwrap(),
+                        Artifact::literal_f32(&[*lam], &[1]).unwrap(),
+                    ])
+                    .expect("logreg_grad artifact");
+                self.calls += 1;
+                unpack_grads(&outs[0], &outs[1], self.n, self.p, self.pp)
+            }
+            ModelKind::Mlp => {
+                let theta_pad = self.pad_thetas(thetas);
+                let (x, y) = self.gather_xy(batches);
+                let outs = self
+                    .grad
+                    .execute_f32(&[
+                        Artifact::literal_f32(&theta_pad, &[self.n, self.pp]).unwrap(),
+                        Artifact::literal_f32(&x, &[self.n, self.b, self.d_in]).unwrap(),
+                        Artifact::literal_f32(&y, &[self.n, self.b]).unwrap(),
+                    ])
+                    .expect("mlp_grad artifact");
+                self.calls += 1;
+                unpack_grads(&outs[0], &outs[1], self.n, self.p, self.pp)
+            }
+            ModelKind::Tfm { .. } => {
+                // One call per client (grad artifact is single-client).
+                let mut gs = Vec::with_capacity(self.n);
+                let mut ls = Vec::with_capacity(self.n);
+                for (i, theta) in thetas.iter().enumerate() {
+                    let mut theta_pad = vec![0.0f32; self.pp];
+                    theta_pad[..self.p].copy_from_slice(theta);
+                    let mut toks = vec![0.0f32; self.b * self.d_in];
+                    for (j, &idx) in batches[i].iter().enumerate() {
+                        toks[j * self.d_in..(j + 1) * self.d_in]
+                            .copy_from_slice(self.dataset.x.row(idx));
+                    }
+                    let outs = self
+                        .grad
+                        .execute_f32(&[
+                            Artifact::literal_f32(&theta_pad, &[self.pp]).unwrap(),
+                            Artifact::literal_f32(&toks, &[self.b, self.d_in]).unwrap(),
+                        ])
+                        .expect("tfm_grad artifact");
+                    self.calls += 1;
+                    gs.push(outs[0][..self.p].to_vec());
+                    ls.push(outs[1][0]);
+                }
+                (gs, ls)
+            }
+        }
+    }
+
+    fn step(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+    ) {
+        // Run the fused L1 pallas update kernel artifact.
+        let theta_pad = self.pad_thetas(thetas);
+        let grad_refs: Vec<Vec<f32>> = grads.to_vec();
+        let grad_pad = self.pad_thetas(&grad_refs);
+        let mut anchor_rep = vec![0.0f32; self.n * self.pp];
+        for i in 0..self.n {
+            anchor_rep[i * self.pp..i * self.pp + self.p].copy_from_slice(anchor);
+        }
+        let outs = self
+            .step
+            .execute_f32(&[
+                Artifact::literal_f32(&theta_pad, &[self.n, self.pp]).unwrap(),
+                Artifact::literal_f32(&grad_pad, &[self.n, self.pp]).unwrap(),
+                Artifact::literal_f32(&anchor_rep, &[self.n, self.pp]).unwrap(),
+                Artifact::literal_f32(&[eta, inv_gamma], &[2]).unwrap(),
+            ])
+            .expect("fused_step artifact");
+        self.calls += 1;
+        for (i, theta) in thetas.iter_mut().enumerate() {
+            theta.copy_from_slice(&outs[0][i * self.pp..i * self.pp + self.p]);
+        }
+    }
+
+    fn full_loss(&mut self, theta: &[f32]) -> f64 {
+        self.eval_both(theta).0
+    }
+
+    fn full_accuracy(&mut self, theta: &[f32]) -> f64 {
+        self.eval_both(theta).1
+    }
+}
+
+fn unpack_grads(
+    grads_pad: &[f32],
+    losses: &[f32],
+    n: usize,
+    p: usize,
+    pp: usize,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let gs = (0..n)
+        .map(|i| grads_pad[i * pp..i * pp + p].to_vec())
+        .collect();
+    (gs, losses.to_vec())
+}

@@ -1,0 +1,178 @@
+//! `artifacts/manifest.json` parsing: tensor ABI + model metadata for every
+//! compiled artifact.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// "logreg_grad" | "logreg_loss" | "mlp_grad" | "mlp_eval" |
+    /// "fused_step" | "tfm_grad"
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// The fused-update kernel tile (parameter padding unit).
+    pub tile: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest root must be an object"))?;
+        let tile = obj.get("_tile").and_then(|v| v.as_usize()).unwrap_or(1024);
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            if name.starts_with('_') {
+                continue;
+            }
+            let parse_tensors = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            shape: t
+                                .get("shape")
+                                .and_then(|s| s.as_usize_vec())
+                                .ok_or_else(|| anyhow::anyhow!("{name}: bad shape"))?,
+                            dtype: t
+                                .get("dtype")
+                                .and_then(|d| d.as_str())
+                                .unwrap_or("float32")
+                                .to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            let meta = entry
+                .get("meta")
+                .and_then(|m| m.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            let kind = meta
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .unwrap_or("unknown")
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    kind,
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            tile,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("stl_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "_tile": 1024,
+              "logreg_grad_test": {
+                "file": "logreg_grad_test.hlo.txt",
+                "inputs": [{"shape": [4, 1024], "dtype": "float32"},
+                           {"shape": [4, 8, 16], "dtype": "float32"}],
+                "outputs": [{"shape": [4, 1024], "dtype": "float32"}],
+                "meta": {"kind": "logreg_grad", "n": 4, "b": 8, "d": 16, "p_padded": 1024}
+              }
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tile, 1024);
+        let a = m.get("logreg_grad_test").unwrap();
+        assert_eq!(a.kind, "logreg_grad");
+        assert_eq!(a.inputs[1].shape, vec![4, 8, 16]);
+        assert_eq!(a.inputs[0].element_count(), 4096);
+        assert_eq!(a.meta_usize("d"), Some(16));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&crate::runtime::default_artifacts_dir()).unwrap();
+        assert!(m.artifacts.len() >= 20, "{}", m.artifacts.len());
+        for required in [
+            "logreg_grad_a9a",
+            "logreg_grad_mnist",
+            "logreg_grad_test",
+            "mlp_grad_wide",
+            "mlp_grad_deep",
+            "fused_step_logreg_a9a",
+            "tfm_grad_test",
+        ] {
+            let a = m.get(required).unwrap();
+            assert!(a.file.exists(), "{:?}", a.file);
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (build time, python) lowers every L2 graph to HLO text;
+//! this module compiles them onto the PJRT CPU client once at startup and
+//! exposes [`XlaCompute`], a [`crate::coordinator::ClientCompute`] engine
+//! whose gradient + update path runs entirely through the compiled
+//! executables — python is never on the training path.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids — see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod artifact;
+pub mod engines;
+pub mod manifest;
+
+pub use artifact::Artifact;
+pub use engines::{ModelKind, XlaCompute};
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // Allow override for tests running from other cwds.
+    if let Ok(dir) = std::env::var("STL_SGD_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from cwd looking for artifacts/manifest.json.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// True if the AOT artifacts have been built (tests gate on this so
+/// `cargo test` degrades gracefully before `make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

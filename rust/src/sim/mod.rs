@@ -1,0 +1,163 @@
+//! Simulated cluster time model.
+//!
+//! The paper reports communication *rounds* (backend-independent), but its
+//! motivation is wall-clock: rounds cost latency + bandwidth. This module
+//! prices each collective under an alpha-beta model and accumulates a
+//! simulated clock (compute + communication), which the speedup tables and
+//! the ablation benches use.
+//!
+//! Defaults approximate the paper's testbed interconnect (PCIe/10GbE-class:
+//! alpha = 50 us/hop, beta = 10 ns/byte ~= 100 MB/s effective per link) and
+//! a fixed per-iteration compute cost measured from the oracle benches.
+
+use crate::comm::Algorithm;
+
+/// Alpha-beta network cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-hop latency (seconds).
+    pub alpha: f64,
+    /// Per-byte transfer time (seconds/byte).
+    pub beta: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self {
+            alpha: 50e-6,
+            beta: 10e-9,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Wall-clock seconds for one average-allreduce of a d-dim f32 model
+    /// across n clients (all links run in parallel; the span is the
+    /// longest dependency chain).
+    pub fn allreduce_seconds(&self, alg: Algorithm, n: usize, d: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let bytes = 4.0 * d as f64;
+        let nf = n as f64;
+        match alg {
+            // gather then broadcast: 2 sequential full-model transfers,
+            // leader link serializes N-1 incoming models.
+            Algorithm::Naive => 2.0 * (self.alpha + (nf - 1.0) * bytes * self.beta),
+            // 2(N-1) pipeline steps of d/N chunks.
+            Algorithm::Ring => {
+                2.0 * (nf - 1.0) * (self.alpha + (bytes / nf) * self.beta)
+            }
+            // log2(N') exchange steps of the full model.
+            Algorithm::Tree => {
+                let hops = (n as u64).next_power_of_two().trailing_zeros() as f64;
+                hops * (self.alpha + bytes * self.beta)
+            }
+        }
+    }
+}
+
+/// Simulated clock accumulating compute and communication time.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    pub compute_seconds: f64,
+    pub comm_seconds: f64,
+}
+
+impl SimClock {
+    pub fn total(&self) -> f64 {
+        self.compute_seconds + self.comm_seconds
+    }
+
+    pub fn add_compute(&mut self, s: f64) {
+        self.compute_seconds += s;
+    }
+
+    pub fn add_comm(&mut self, s: f64) {
+        self.comm_seconds += s;
+    }
+}
+
+/// Per-iteration compute cost model: seconds for one minibatch gradient on
+/// one client (all clients run in parallel, so one iteration's span is one
+/// gradient). Calibrated defaults come from the bench_grad_oracle results.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Seconds per (batch x param) unit of gradient work.
+    pub seconds_per_flop_unit: f64,
+    /// Fixed per-call overhead.
+    pub overhead: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        Self {
+            // ~5 GFLOP/s effective per client core with 4 flops/unit
+            seconds_per_flop_unit: 1e-9,
+            overhead: 5e-6,
+        }
+    }
+}
+
+impl ComputeModel {
+    pub fn grad_seconds(&self, batch: usize, params: usize) -> f64 {
+        self.overhead + self.seconds_per_flop_unit * (batch * params) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_beats_naive_at_scale() {
+        let m = NetworkModel::default();
+        let d = 1_000_000;
+        let naive = m.allreduce_seconds(Algorithm::Naive, 32, d);
+        let ring = m.allreduce_seconds(Algorithm::Ring, 32, d);
+        assert!(ring < naive, "ring={ring} naive={naive}");
+    }
+
+    #[test]
+    fn tree_beats_ring_for_tiny_models() {
+        // latency-bound regime: few bytes, many hops hurt
+        let m = NetworkModel::default();
+        let d = 16;
+        let ring = m.allreduce_seconds(Algorithm::Ring, 32, d);
+        let tree = m.allreduce_seconds(Algorithm::Tree, 32, d);
+        assert!(tree < ring, "tree={tree} ring={ring}");
+    }
+
+    #[test]
+    fn single_client_free() {
+        let m = NetworkModel::default();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            assert_eq!(m.allreduce_seconds(alg, 1, 100), 0.0);
+        }
+    }
+
+    #[test]
+    fn cost_monotone_in_size() {
+        let m = NetworkModel::default();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let small = m.allreduce_seconds(alg, 8, 100);
+            let big = m.allreduce_seconds(alg, 8, 100_000);
+            assert!(big > small);
+        }
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = SimClock::default();
+        c.add_compute(1.0);
+        c.add_comm(0.5);
+        assert_eq!(c.total(), 1.5);
+    }
+
+    #[test]
+    fn compute_model_scales() {
+        let cm = ComputeModel::default();
+        assert!(cm.grad_seconds(64, 1000) > cm.grad_seconds(32, 1000));
+        assert!(cm.grad_seconds(32, 1000) > 0.0);
+    }
+}

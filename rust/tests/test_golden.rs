@@ -1,0 +1,92 @@
+//! Cross-language numerics: rust native oracle vs python ref.py, pinned
+//! through artifacts/golden.json (written by `make artifacts`).
+
+use std::sync::Arc;
+use stl_sgd::data::Dataset;
+use stl_sgd::grad::{logreg::NativeLogreg, Oracle};
+use stl_sgd::linalg::Matrix;
+use stl_sgd::rng::golden::golden_logreg_inputs;
+use stl_sgd::runtime::{artifacts_available, default_artifacts_dir};
+use stl_sgd::util::json::Json;
+
+fn native_case(seed: u64, n: usize, b: usize, d: usize, lam: f32) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let case = golden_logreg_inputs(seed, n, b, d);
+    let mut grads = Vec::new();
+    let mut losses = Vec::new();
+    for i in 0..n {
+        let rows: Vec<Vec<f32>> = (0..b)
+            .map(|r| case.x[(i * b + r) * d..(i * b + r + 1) * d].to_vec())
+            .collect();
+        let ds = Arc::new(Dataset {
+            x: Matrix::from_rows(&rows),
+            y: case.y[i * b..(i + 1) * b].to_vec(),
+            classes: 2,
+            name: "golden".into(),
+        });
+        let oracle = NativeLogreg::new(ds, lam);
+        let idx: Vec<usize> = (0..b).collect();
+        let (g, l) = oracle.grad_minibatch(&case.theta[i * d..(i + 1) * d], &idx);
+        grads.push(g);
+        losses.push(l);
+    }
+    (grads, losses)
+}
+
+#[test]
+fn native_oracle_matches_python_ref_golden_values() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let golden = Json::parse_file(&default_artifacts_dir().join("golden.json")).unwrap();
+    let cases = golden.get("logreg").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 3);
+
+    for case in cases {
+        let seed = case.get("seed").unwrap().as_usize().unwrap() as u64;
+        let n = case.get("n").unwrap().as_usize().unwrap();
+        let b = case.get("b").unwrap().as_usize().unwrap();
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        let lam = case.get("lam").unwrap().as_f64().unwrap() as f32;
+
+        let (grads, losses) = native_case(seed, n, b, d, lam);
+
+        // losses
+        let py_losses = case.get("losses").unwrap().as_f64_vec().unwrap();
+        assert_eq!(py_losses.len(), n);
+        for (i, (&py, rs)) in py_losses.iter().zip(&losses).enumerate() {
+            assert!(
+                (py - *rs as f64).abs() < 1e-5,
+                "seed {seed} client {i}: python loss {py} vs rust {rs}"
+            );
+        }
+        // first gradient head
+        let head = case.get("grad_head").unwrap().as_f64_vec().unwrap();
+        for (j, &py) in head.iter().enumerate() {
+            let rs = grads[0][j] as f64;
+            assert!(
+                (py - rs).abs() < 1e-5,
+                "seed {seed} grad[0][{j}]: python {py} vs rust {rs}"
+            );
+        }
+        // per-client gradient norms
+        let norms = case.get("grad_l2").unwrap().as_f64_vec().unwrap();
+        for (i, &py) in norms.iter().enumerate() {
+            let rs = stl_sgd::linalg::norm2(&grads[i]) as f64;
+            assert!(
+                (py - rs).abs() < 1e-4 * (1.0 + py),
+                "seed {seed} client {i}: |g| python {py} vs rust {rs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_stream_matches_documented_layout() {
+    // theta || x || y layout, labels in {-1, +1}
+    let case = golden_logreg_inputs(7, 4, 8, 16);
+    assert_eq!(case.theta.len(), 64);
+    assert_eq!(case.x.len(), 512);
+    assert_eq!(case.y.len(), 32);
+    assert!(case.y.iter().all(|&v| v == 1.0 || v == -1.0));
+}

@@ -1,0 +1,222 @@
+//! Property-based tests on coordinator/algorithm invariants (from-scratch
+//! harness in stl_sgd::testing since proptest is unavailable offline).
+
+use stl_sgd::algo::{AlgoSpec, LrSchedule, Variant};
+use stl_sgd::comm::{allreduce, Algorithm};
+use stl_sgd::data::{partition, synth};
+use stl_sgd::rng::Rng;
+use stl_sgd::testing::{check, gen, PropConfig};
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        seed: 0xABCD,
+    }
+}
+
+#[test]
+fn prop_all_collectives_agree_on_random_vectors() {
+    check(cfg(64), "collectives-agree", |rng, _| {
+        let n = gen::usize_in(rng, 1, 12);
+        let d = gen::usize_in(rng, 1, 64);
+        let base = gen::f32_matrix(rng, n, d, 2.0);
+        let mut naive = base.clone();
+        let mut ring = base.clone();
+        let mut tree = base;
+        allreduce::average(&mut naive, Algorithm::Naive);
+        allreduce::average(&mut ring, Algorithm::Ring);
+        allreduce::average(&mut tree, Algorithm::Tree);
+        for i in 0..n {
+            for j in 0..d {
+                let (a, b, c) = (naive[i][j], ring[i][j], tree[i][j]);
+                if (a - b).abs() > 1e-4 || (a - c).abs() > 1e-4 {
+                    return Err(format!("n={n} d={d} [{i}][{j}]: {a} {b} {c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_averaging_replicates_and_preserves_mean() {
+    check(cfg(64), "mean-preserved", |rng, _| {
+        let n = gen::usize_in(rng, 2, 10);
+        let d = gen::usize_in(rng, 1, 32);
+        let models = gen::f32_matrix(rng, n, d, 1.0);
+        let mean_before: f64 = models.iter().flatten().map(|&v| v as f64).sum::<f64>()
+            / (n * d) as f64;
+        let mut m = models;
+        allreduce::average(&mut m, Algorithm::Ring);
+        // all replicas identical
+        for i in 1..n {
+            if m[i] != m[0] {
+                return Err(format!("replica {i} differs"));
+            }
+        }
+        let mean_after: f64 =
+            m.iter().flatten().map(|&v| v as f64).sum::<f64>() / (n * d) as f64;
+        if (mean_before - mean_after).abs() > 1e-4 {
+            return Err(format!("{mean_before} vs {mean_after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_are_exact_covers() {
+    check(cfg(32), "partition-cover", |rng, case| {
+        let rows = gen::usize_in(rng, 10, 800);
+        let classes = gen::usize_in(rng, 2, 10);
+        let n_clients = gen::usize_in(rng, 1, 16);
+        let s = [0.0, 25.0, 50.0, 100.0][case % 4];
+        let ds = synth::cifar_like(case as u64, rows, 4, classes);
+        let mut prng = Rng::new(case as u64);
+        let shards = if case % 2 == 0 {
+            partition::iid(&ds, n_clients, &mut prng)
+        } else {
+            partition::noniid(&ds, n_clients, s, &mut prng)
+        };
+        let mut seen = vec![false; rows];
+        for sh in &shards {
+            for &i in &sh.indices {
+                if seen[i] {
+                    return Err(format!("index {i} twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("missing indices".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phases_cover_budget_for_random_configs() {
+    check(cfg(96), "phase-budget", |rng, case| {
+        let variants = [
+            Variant::SyncSgd,
+            Variant::LbSgd,
+            Variant::CrPsgd,
+            Variant::LocalSgd,
+            Variant::StlSc,
+            Variant::StlNc1,
+            Variant::StlNc2,
+        ];
+        let spec = AlgoSpec {
+            variant: variants[case % variants.len()],
+            eta1: 0.01 + rng.uniform() * 2.0,
+            alpha: rng.uniform() * 1e-2,
+            k1: 1.0 + rng.uniform() * 64.0,
+            t1: gen::usize_in(rng, 1, 500) as u64,
+            batch: gen::usize_in(rng, 1, 128),
+            big_batch: gen::usize_in(rng, 64, 1024),
+            batch_growth: 1.0 + rng.uniform() * 0.5,
+            batch_cap: gen::usize_in(rng, 64, 1024),
+            shard_size: gen::usize_in(rng, 16, 4000),
+            iid: case % 2 == 0,
+            inv_gamma: rng.uniform_f32(),
+        };
+        let budget = gen::usize_in(rng, 1, 50_000) as u64;
+        let phases = spec.phases(budget);
+        let total: u64 = phases.iter().map(|p| p.steps).sum();
+        if total != budget {
+            return Err(format!("{:?}: {total} != {budget}", spec.variant));
+        }
+        if !phases.iter().all(|p| p.comm_period >= 1 && p.batch >= 1) {
+            return Err("bad phase fields".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stl_sc_schedule_invariants() {
+    // eta_s * T_s constant; k ratios match the growth law.
+    check(cfg(48), "stl-sc-invariants", |rng, case| {
+        let iid = case % 2 == 0;
+        let spec = AlgoSpec {
+            variant: Variant::StlSc,
+            eta1: 0.05 + rng.uniform(),
+            k1: 2.0 + rng.uniform() * 30.0,
+            t1: gen::usize_in(rng, 50, 400) as u64,
+            iid,
+            ..Default::default()
+        };
+        let phases = spec.phases(spec.t1 * ((1 << 7) - 1));
+        let target = spec.eta1 * spec.t1 as f64;
+        for (i, p) in phases.iter().enumerate() {
+            if i + 1 == phases.len() {
+                break; // last may be truncated
+            }
+            let eta = match p.lr {
+                LrSchedule::Const(e) => e,
+                _ => return Err("non-const lr".into()),
+            };
+            if (eta * p.steps as f64 - target).abs() > 1e-6 * target {
+                return Err(format!("stage {i}: eta*T = {}", eta * p.steps as f64));
+            }
+            // k_s = floor(k1 * g^(s-1))
+            let g: f64 = if iid { 2.0 } else { std::f64::consts::SQRT_2 };
+            let expect = (spec.k1 * g.powi(i as i32)).floor().max(1.0) as u64;
+            if p.comm_period != expect {
+                return Err(format!("stage {i}: k={} expect {expect}", p.comm_period));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_split_streams_never_collide() {
+    check(cfg(32), "rng-split", |rng, _| {
+        let root = Rng::new(rng.next_u64());
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let matches = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        if matches > 1 {
+            return Err(format!("{matches} collisions"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_round_count_equals_phase_arithmetic() {
+    use std::sync::Arc;
+    use stl_sgd::coordinator::{run, NativeCompute, RunConfig};
+    use stl_sgd::grad::logreg::NativeLogreg;
+
+    check(cfg(12), "rounds-arith", |rng, case| {
+        let n = gen::usize_in(rng, 2, 6);
+        let ds = Arc::new(synth::a9a_like(case as u64, 128, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds.clone(), 0.01));
+        let shards = partition::iid(&ds, n, &mut Rng::new(case as u64));
+        let spec = AlgoSpec {
+            variant: [Variant::LocalSgd, Variant::StlSc, Variant::StlNc2][case % 3],
+            eta1: 0.2,
+            k1: 1.0 + rng.uniform() * 10.0,
+            t1: gen::usize_in(rng, 10, 60) as u64,
+            batch: 4,
+            iid: true,
+            ..Default::default()
+        };
+        let budget = gen::usize_in(rng, 20, 400) as u64;
+        let phases = spec.phases(budget);
+        let expected: u64 = phases.iter().map(|p| p.comm_rounds()).sum();
+        let mut engine = NativeCompute::new(oracle);
+        let cfg = RunConfig {
+            n_clients: n,
+            eval_every_rounds: 10_000, // avoid eval cost
+            ..Default::default()
+        };
+        let theta0 = vec![0.0f32; 8];
+        let trace = run(&mut engine, &shards, &phases, &cfg, &theta0, "t");
+        if trace.comm.rounds != expected {
+            return Err(format!("{} != {expected}", trace.comm.rounds));
+        }
+        Ok(())
+    });
+}

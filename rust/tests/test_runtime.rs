@@ -1,0 +1,224 @@
+//! Three-layer integration: the XLA engine (AOT JAX/Pallas artifacts via
+//! PJRT) against the native engine — same batches, same trajectories.
+//!
+//! These tests gate on `make artifacts` having run; they skip (with a
+//! notice) otherwise so plain `cargo test` stays green pre-build.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig};
+use stl_sgd::runtime::artifacts_available;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        true
+    } else {
+        false
+    }
+}
+
+fn logreg_cfg(engine: &str, variant: Variant) -> ExperimentConfig {
+    ExperimentConfig {
+        workload: Workload::LogregTest,
+        iid: true,
+        n_clients: 4, // matches logreg_test artifact N
+        total_steps: 120,
+        seed: 21,
+        algo: AlgoSpec {
+            variant,
+            eta1: 0.4,
+            alpha: 0.0,
+            k1: 5.0,
+            t1: 40,
+            batch: 8, // matches artifact B
+            iid: true,
+            inv_gamma: 0.05,
+            ..Default::default()
+        },
+        collective: stl_sgd::comm::Algorithm::Naive,
+        eval_every_rounds: 3,
+        engine: engine.into(),
+        s_percent: 50.0,
+    }
+}
+
+#[test]
+fn xla_logreg_trajectory_matches_native() {
+    if skip() {
+        return;
+    }
+    let native = workloads::run_experiment(&logreg_cfg("native", Variant::LocalSgd)).unwrap();
+    let xla = workloads::run_experiment(&logreg_cfg("xla", Variant::LocalSgd)).unwrap();
+    assert_eq!(native.points.len(), xla.points.len());
+    for (a, b) in native.points.iter().zip(&xla.points) {
+        assert_eq!(a.rounds, b.rounds);
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4 * (1.0 + a.loss.abs()),
+            "round {}: native {} vs xla {}",
+            a.rounds,
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn xla_logreg_prox_variant_matches_native() {
+    // Exercises the fused-step artifact's prox path (inv_gamma != 0).
+    if skip() {
+        return;
+    }
+    let native = workloads::run_experiment(&logreg_cfg("native", Variant::StlNc1)).unwrap();
+    let xla = workloads::run_experiment(&logreg_cfg("xla", Variant::StlNc1)).unwrap();
+    for (a, b) in native.points.iter().zip(&xla.points) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4 * (1.0 + a.loss.abs()),
+            "round {}: native {} vs xla {}",
+            a.rounds,
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn xla_mlp_trajectory_close_to_native() {
+    // MLP grads come from jax autodiff vs our hand-written backprop:
+    // same math, different summation order -> allow small drift, compare
+    // the metric trajectory rather than exact bits.
+    if skip() {
+        return;
+    }
+    let mk = |engine: &str| ExperimentConfig {
+        workload: Workload::MlpTest,
+        iid: true,
+        n_clients: 4,
+        total_steps: 80,
+        seed: 9,
+        algo: AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.2,
+            alpha: 0.0,
+            k1: 4.0,
+            batch: 8,
+            iid: true,
+            ..Default::default()
+        },
+        collective: stl_sgd::comm::Algorithm::Naive,
+        eval_every_rounds: 5,
+        engine: engine.into(),
+        s_percent: 0.0,
+    };
+    let native = workloads::run_experiment(&mk("native")).unwrap();
+    let xla = workloads::run_experiment(&mk("xla")).unwrap();
+    assert_eq!(native.points.len(), xla.points.len());
+    for (a, b) in native.points.iter().zip(&xla.points) {
+        assert!(
+            (a.loss - b.loss).abs() < 5e-3 * (1.0 + a.loss.abs()),
+            "round {}: native {} vs xla {}",
+            a.rounds,
+            a.loss,
+            b.loss
+        );
+    }
+    // Training must actually progress on the XLA path.
+    assert!(xla.final_loss() < xla.points[0].loss * 0.98);
+}
+
+#[test]
+fn xla_tfm_runs_and_learns() {
+    if skip() {
+        return;
+    }
+    let cfg = ExperimentConfig {
+        workload: Workload::TfmTest,
+        iid: true,
+        n_clients: 4,
+        total_steps: 30,
+        seed: 4,
+        algo: AlgoSpec {
+            variant: Variant::StlNc2,
+            eta1: 0.5,
+            alpha: 0.0,
+            k1: 2.0,
+            t1: 10,
+            batch: 2, // matches tfm_test artifact B
+            iid: true,
+            inv_gamma: 0.001,
+            ..Default::default()
+        },
+        collective: stl_sgd::comm::Algorithm::Ring,
+        eval_every_rounds: 4,
+        engine: "xla".into(),
+        s_percent: 0.0,
+    };
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    assert!(trace.total_iters == 30);
+    assert!(trace.final_loss().is_finite());
+    assert!(
+        trace.final_loss() < trace.points[0].loss,
+        "{} -> {}",
+        trace.points[0].loss,
+        trace.final_loss()
+    );
+}
+
+#[test]
+fn xla_engine_rejects_wrong_client_count() {
+    if skip() {
+        return;
+    }
+    let setup = workloads::build(Workload::LogregTest, 1);
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest =
+        stl_sgd::runtime::Manifest::load(&stl_sgd::runtime::default_artifacts_dir()).unwrap();
+    let mut engine = stl_sgd::runtime::XlaCompute::for_logreg(
+        &client,
+        &manifest,
+        "test",
+        setup.dataset.clone(),
+        setup.lam,
+    )
+    .unwrap();
+    // 2 clients but the artifact is compiled for 4 -> must panic.
+    let thetas = vec![vec![0.0f32; 16]; 2];
+    let batches = vec![vec![0usize; 8]; 2];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        use stl_sgd::coordinator::ClientCompute;
+        engine.grads(&thetas, &batches)
+    }));
+    assert!(result.is_err());
+}
+
+#[test]
+fn native_engines_agree_under_run_loop_with_naive_collective() {
+    // Guard for the comparison methodology itself: two native runs with
+    // the same seed are bit-identical (so any xla/native divergence above
+    // is attributable to the compute path, not the harness).
+    if skip() {
+        return;
+    }
+    let setup = workloads::build(Workload::LogregTest, 21);
+    let cfg = logreg_cfg("native", Variant::LocalSgd);
+    let shards = workloads::make_shards(&cfg, &setup.dataset);
+    let phases = cfg.algo.phases(cfg.total_steps);
+    let run_cfg = RunConfig {
+        n_clients: 4,
+        collective: stl_sgd::comm::Algorithm::Naive,
+        eval_every_rounds: 3,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let oracle = setup.oracle.clone().unwrap();
+    let mut e1 = NativeCompute::new(oracle.clone());
+    let mut e2 = NativeCompute::new(oracle);
+    let t1 = run(&mut e1, &shards, &phases, &run_cfg, &setup.theta0, "a");
+    let t2 = run(&mut e2, &shards, &phases, &run_cfg, &setup.theta0, "b");
+    for (a, b) in t1.points.iter().zip(&t2.points) {
+        assert_eq!(a.loss, b.loss);
+    }
+    let _ = Arc::strong_count(&setup.dataset);
+}

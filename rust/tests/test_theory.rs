@@ -1,0 +1,153 @@
+//! Theory-shape tests: the communication-complexity *orders* the paper
+//! proves (Table 3) show up empirically in the schedules and runs.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::util::stats::power_law_exponent;
+
+fn spec(variant: Variant, iid: bool) -> AlgoSpec {
+    AlgoSpec {
+        variant,
+        eta1: 1.0,
+        alpha: 1e-3,
+        k1: 8.0,
+        t1: 256,
+        batch: 16,
+        iid,
+        ..Default::default()
+    }
+}
+
+/// Total comm rounds of the materialized schedule as a function of T.
+fn rounds_at(variant: Variant, iid: bool, t: u64) -> f64 {
+    spec(variant, iid)
+        .phases(t)
+        .iter()
+        .map(|p| p.comm_rounds())
+        .sum::<u64>() as f64
+}
+
+#[test]
+fn stl_sc_iid_comm_grows_like_log_t() {
+    // O(N log T): fitted power-law exponent near 0.
+    let ts: Vec<f64> = (4..16).map(|i| 256.0 * ((1u64 << i) - 1) as f64).collect();
+    let rounds: Vec<f64> = ts
+        .iter()
+        .map(|&t| rounds_at(Variant::StlSc, true, t as u64))
+        .collect();
+    let (p, _) = power_law_exponent(&ts, &rounds);
+    assert!(p < 0.2, "exponent {p} (want ~log)");
+    // and strictly increasing (it IS growing, just slowly)
+    assert!(rounds.windows(2).all(|w| w[1] > w[0]));
+}
+
+#[test]
+fn stl_sc_noniid_comm_grows_like_sqrt_t() {
+    // O(N^1/2 T^1/2): exponent near 0.5.
+    let ts: Vec<f64> = (4..16).map(|i| 256.0 * ((1u64 << i) - 1) as f64).collect();
+    let rounds: Vec<f64> = ts
+        .iter()
+        .map(|&t| rounds_at(Variant::StlSc, false, t as u64))
+        .collect();
+    let (p, r2) = power_law_exponent(&ts, &rounds);
+    assert!((p - 0.5).abs() < 0.12, "exponent {p} (want ~0.5), r2={r2}");
+}
+
+#[test]
+fn local_sgd_comm_grows_linearly_in_t() {
+    let ts: Vec<f64> = (10..18).map(|i| (1u64 << i) as f64).collect();
+    let rounds: Vec<f64> = ts
+        .iter()
+        .map(|&t| rounds_at(Variant::LocalSgd, true, t as u64))
+        .collect();
+    let (p, _) = power_law_exponent(&ts, &rounds);
+    assert!((p - 1.0).abs() < 0.05, "exponent {p} (want 1)");
+}
+
+#[test]
+fn stl_nc2_iid_comm_grows_like_sqrt_t() {
+    // Remark 5: sum T_s/k_s = S * T1/k1 with T = T1 S(S+1)/2 => rounds ~
+    // T^{1/2}.
+    let ts: Vec<f64> = (1..40).map(|s: u64| (256 * s * (s + 1) / 2) as f64).collect();
+    let rounds: Vec<f64> = ts
+        .iter()
+        .map(|&t| rounds_at(Variant::StlNc2, true, t as u64))
+        .collect();
+    let (p, _) = power_law_exponent(&ts, &rounds);
+    assert!((p - 0.5).abs() < 0.1, "exponent {p} (want ~0.5)");
+}
+
+#[test]
+fn stl_nc2_noniid_comm_grows_like_t_three_quarters() {
+    // Remark 5 Non-IID: O(N^{3/4} T^{3/4}).
+    let ts: Vec<f64> = (1..40).map(|s: u64| (256 * s * (s + 1) / 2) as f64).collect();
+    let rounds: Vec<f64> = ts
+        .iter()
+        .map(|&t| rounds_at(Variant::StlNc2, false, t as u64))
+        .collect();
+    let (p, _) = power_law_exponent(&ts, &rounds);
+    assert!((p - 0.75).abs() < 0.1, "exponent {p} (want ~0.75)");
+}
+
+#[test]
+fn sync_sgd_rounds_equal_iterations() {
+    for t in [100u64, 1000, 10000] {
+        assert_eq!(rounds_at(Variant::SyncSgd, true, t) as u64, t);
+    }
+}
+
+#[test]
+fn stl_sc_total_iterations_double_per_stage() {
+    // T_s = 2^{s-1} T_1 (the linear-speedup bookkeeping of Theorem 2).
+    let phases = spec(Variant::StlSc, true).phases(256 * ((1 << 8) - 1));
+    for (i, w) in phases.windows(2).enumerate() {
+        if i + 2 >= phases.len() {
+            break;
+        }
+        assert_eq!(w[1].steps, 2 * w[0].steps, "stage {i}");
+    }
+}
+
+#[test]
+fn linear_speedup_iterations_to_target_shrink_with_n() {
+    // Remark 3 linear speedup, measured: more clients reach the gap in
+    // fewer iterations (variance reduction through averaging).
+    use stl_sgd::bench_support::workloads::{self, compute_f_star};
+    use stl_sgd::config::{ExperimentConfig, Workload};
+
+    let f_star = compute_f_star(Workload::LogregTest, 31, 400);
+    let gap = 5e-3;
+    let iters_for = |n: usize| {
+        let cfg = ExperimentConfig {
+            workload: Workload::LogregTest,
+            iid: true,
+            n_clients: n,
+            total_steps: 8000,
+            seed: 31,
+            algo: AlgoSpec {
+                variant: Variant::SyncSgd,
+                eta1: 0.1, // fixed small lr so variance dominates
+                alpha: 0.0,
+                batch: 1,
+                iid: true,
+                ..Default::default()
+            },
+            collective: stl_sgd::comm::Algorithm::Ring,
+            eval_every_rounds: 20,
+            engine: "native".into(),
+            s_percent: 50.0,
+        };
+        let trace = workloads::run_experiment(&cfg).unwrap();
+        trace
+            .points
+            .iter()
+            .find(|p| p.loss - f_star <= gap)
+            .map(|p| p.iter)
+    };
+    let i1 = iters_for(1);
+    let i8 = iters_for(8);
+    match (i1, i8) {
+        (Some(a), Some(b)) => assert!(b <= a, "N=8 took {b} iters vs N=1 {a}"),
+        (None, Some(_)) => {}
+        other => panic!("unexpected: {other:?}"),
+    }
+}
