@@ -1,0 +1,167 @@
+//! Time-to-accuracy under heterogeneous clusters: STL-SGD vs Local SGD vs
+//! SyncSGD priced by the `simnet` discrete-event simulator.
+//!
+//!     cargo run --release --example straggler_study -- \
+//!         [--cluster heavy-tail-stragglers] [--steps 3000] [--clients 8] \
+//!         [--k1 16] [--gap 1e-3] [--out-dir results/straggler]
+//!
+//! The paper's round-count tables assume every round costs the same; this
+//! study prices each round as the max over straggling clients plus the
+//! collective, so the x-axis is simulated seconds. Because SyncSGD pays a
+//! barrier every iteration and fixed-period Local SGD every k1 iterations
+//! while STL-SGD's growing period amortizes barriers away, the straggler
+//! tax compounds exactly where communication is most frequent. Outputs:
+//! one trace CSV per algorithm (loss vs sim_seconds), one per-round
+//! timeline CSV with the barrier-wait breakdown, and a summary CSV with
+//! time-to-target-loss per algorithm.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::simnet::ClusterProfile;
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "straggler_study",
+        "STL-SGD vs Local SGD vs SyncSGD time-to-accuracy across cluster profiles",
+    )
+    .opt(
+        "cluster",
+        "heavy-tail-stragglers",
+        "cluster profile (homogeneous|mild-hetero|heavy-tail-stragglers|flaky-federated)",
+    )
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "16", "communication period (Local SGD fixed; STL-SGD initial)")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt("gap", "1e-3", "objective-gap target for time-to-accuracy")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/straggler", "output directory")
+    .parse();
+
+    let cluster = ClusterProfile::parse(args.get("cluster"))
+        .unwrap_or_else(|| panic!("unknown cluster profile {:?}", args.get("cluster")));
+    let workload = Workload::parse(args.get("workload")).expect("convex workload");
+    anyhow::ensure!(workload.is_convex(), "straggler_study needs a convex workload");
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let gap = args.get_f64("gap");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    let f_star = workloads::compute_f_star(workload, seed, 2000);
+    println!(
+        "cluster={} workload={} N={n} steps={steps} k1={k1} gap={gap:.0e} f*={f_star:.6}",
+        cluster.name,
+        workload.name()
+    );
+
+    let algos: [(Variant, f64, u64); 3] = [
+        (Variant::SyncSgd, 1.0, 0),
+        (Variant::LocalSgd, k1, 0),
+        (Variant::StlSc, k1, t1),
+    ];
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join(format!("summary_{}.csv", cluster.name)),
+        &[
+            "algorithm",
+            "rounds",
+            "sim_total_seconds",
+            "sim_compute_seconds",
+            "sim_comm_seconds",
+            "barrier_wait_avg_client_seconds",
+            "barrier_wait_straggler_span_seconds",
+            "dropped_client_rounds",
+            "seconds_to_gap",
+            "rounds_to_gap",
+        ],
+    )?;
+
+    let mut local_seconds = f64::NAN;
+    let mut stl_seconds = f64::NAN;
+    for (variant, k, t) in algos {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = workload;
+        cfg.n_clients = n;
+        cfg.total_steps = steps;
+        cfg.seed = seed;
+        cfg.cluster = cluster;
+        cfg.eval_every_rounds = if variant == Variant::SyncSgd { 5 } else { 1 };
+        cfg.algo = AlgoSpec {
+            variant,
+            eta1: 3.2,
+            alpha: 1e-3,
+            k1: k,
+            t1: if t > 0 { t } else { 1000 },
+            batch: 32,
+            iid: true,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let trace = workloads::run_experiment(&cfg)?;
+        let to_gap_s = trace.seconds_to_gap(f_star, gap);
+        let to_gap_r = trace.rounds_to_gap(f_star, gap);
+        if variant == Variant::LocalSgd {
+            local_seconds = to_gap_s.unwrap_or(f64::NAN);
+        }
+        if variant == Variant::StlSc {
+            stl_seconds = to_gap_s.unwrap_or(f64::NAN);
+        }
+        println!(
+            "  {:<12} rounds={:<6} sim_total={:>9.3}s barrier_idle(avg client)={:>8.3}s \
+             dropped={:<4} to_gap={:?}s wall={:.1}s",
+            trace.algorithm,
+            trace.comm.rounds,
+            trace.clock.total(),
+            trace.timeline.total_mean_barrier_wait(),
+            trace.timeline.total_dropped(),
+            to_gap_s.map(|s| (s * 1e3).round() / 1e3),
+            t0.elapsed().as_secs_f64(),
+        );
+        let tag = format!("{}_{}", cluster.name, trace.algorithm);
+        trace.write_csv(&out_dir.join(format!("trace_{tag}.csv")))?;
+        trace.write_timeline_csv(&out_dir.join(format!("timeline_{tag}.csv")))?;
+        summary.row(&[
+            trace.algorithm.clone(),
+            trace.comm.rounds.to_string(),
+            format!("{:.6e}", trace.clock.total()),
+            format!("{:.6e}", trace.clock.compute_seconds),
+            format!("{:.6e}", trace.clock.comm_seconds),
+            format!("{:.6e}", trace.timeline.total_mean_barrier_wait()),
+            format!("{:.6e}", trace.timeline.total_max_barrier_wait()),
+            trace.timeline.total_dropped().to_string(),
+            to_gap_s.map(|s| format!("{s:.6e}")).unwrap_or_default(),
+            to_gap_r.map(|r| r.to_string()).unwrap_or_default(),
+        ])?;
+    }
+    summary.flush()?;
+
+    if local_seconds.is_finite() && stl_seconds.is_finite() {
+        let speedup = local_seconds / stl_seconds;
+        if speedup >= 1.0 {
+            println!(
+                "\nSTL-SGD^sc reaches the {gap:.0e} gap {speedup:.2}x faster (simulated) \
+                 than fixed-period Local SGD under the {} profile",
+                cluster.name
+            );
+        } else {
+            println!(
+                "\nSTL-SGD^sc reaches the {gap:.0e} gap {:.2}x SLOWER (simulated) than \
+                 fixed-period Local SGD under the {} profile — try a longer --steps \
+                 budget or a smaller --t1",
+                1.0 / speedup,
+                cluster.name
+            );
+        }
+    } else {
+        println!("\n(budget too small for the {gap:.0e} gap — raise --steps or --gap)");
+    }
+    println!("CSVs written under {}", out_dir.display());
+    Ok(())
+}

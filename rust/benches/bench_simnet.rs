@@ -1,0 +1,74 @@
+//! simnet microbench: discrete-event engine throughput (events/sec) and
+//! the per-round overhead of timeline recording.
+//!
+//! Each priced round processes ~N*k heap events (one per client per local
+//! step) plus the round bookkeeping, so the events/sec figure tracks how
+//! much simulated-cluster fidelity costs the experiment loop.
+
+use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::comm::Algorithm;
+use stl_sgd::sim::{ComputeModel, NetworkModel};
+use stl_sgd::simnet::{ClusterProfile, Detail, SimNet};
+
+const ROUNDS: u64 = 100;
+
+fn price_rounds(profile: ClusterProfile, n: usize, k: u64, detail: Detail) -> f64 {
+    let mut sim = SimNet::new(
+        profile,
+        NetworkModel::default(),
+        ComputeModel::default(),
+        Algorithm::Ring,
+        n,
+        100_000,
+        7,
+        detail,
+    );
+    let mut total = 0.0;
+    for _ in 0..ROUNDS {
+        let rt = sim.price_round(k, 32);
+        total += rt.compute_span + rt.comm_seconds;
+    }
+    total
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("# simnet discrete-event engine microbenchmarks\n");
+
+    println!("## engine throughput ({ROUNDS} rounds/iter, detail=off)\n");
+    for (n, k) in [(8usize, 16u64), (32, 16), (32, 64), (128, 64)] {
+        for profile in [
+            ClusterProfile::homogeneous(),
+            ClusterProfile::heavy_tail_stragglers(),
+            ClusterProfile::flaky_federated(),
+        ] {
+            let r = b.run(&format!("{} N={n} k={k}", profile.name), || {
+                std::hint::black_box(price_rounds(profile, n, k, Detail::Off));
+            });
+            // ~one heap event per client-step, plus 3 bookkeeping events
+            // per round (crashed clients skip their steps; upper bound).
+            let events = ROUNDS as f64 * (n as f64 * k as f64 + 3.0);
+            println!("  {}", r.throughput(events, "events"));
+        }
+        println!();
+    }
+
+    println!("## timeline-recording overhead (N=32, k=16, heavy-tail)\n");
+    let profile = ClusterProfile::heavy_tail_stragglers();
+    let mut per_round = Vec::new();
+    for detail in [Detail::Off, Detail::Rounds, Detail::Steps] {
+        let r = b.run(&format!("detail={detail:?}"), || {
+            std::hint::black_box(price_rounds(profile, 32, 16, detail));
+        });
+        per_round.push((detail, r.median_s / ROUNDS as f64));
+    }
+    let base = per_round[0].1;
+    for (detail, s) in &per_round {
+        println!(
+            "  {:<16} {:>12.1} ns/round  (+{:.1}% vs off)",
+            format!("{detail:?}"),
+            s * 1e9,
+            (s / base - 1.0) * 100.0
+        );
+    }
+}

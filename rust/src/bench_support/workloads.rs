@@ -155,7 +155,13 @@ pub fn make_engine(
             let ac = cfg.workload.artifact_config();
             let engine = match cfg.workload {
                 Workload::LogregA9a | Workload::LogregMnist | Workload::LogregTest => {
-                    XlaCompute::for_logreg(&client, &manifest, ac, setup.dataset.clone(), setup.lam)?
+                    XlaCompute::for_logreg(
+                        &client,
+                        &manifest,
+                        ac,
+                        setup.dataset.clone(),
+                        setup.lam,
+                    )?
                 }
                 Workload::MlpWide | Workload::MlpDeep | Workload::MlpTest => {
                     XlaCompute::for_mlp(&client, &manifest, ac, setup.dataset.clone())?
@@ -199,6 +205,7 @@ pub fn run_experiment_with_stop(
     let run_cfg = RunConfig {
         n_clients: cfg.n_clients,
         collective: cfg.collective,
+        profile: cfg.cluster,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,
         seed: cfg.seed,
@@ -361,6 +368,24 @@ mod tests {
         let trace = run_experiment(&cfg).unwrap();
         assert_eq!(trace.total_iters, 60);
         assert!(trace.final_loss().is_finite());
+    }
+
+    #[test]
+    fn run_experiment_honours_cluster_profile() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.engine = "native".into();
+        cfg.total_steps = 60;
+        cfg.algo.eta1 = 0.5;
+        cfg.algo.k1 = 5.0;
+        cfg.algo.batch = 8;
+        cfg.algo.variant = Variant::LocalSgd;
+        let homo = run_experiment(&cfg).unwrap();
+        cfg.cluster = crate::simnet::ClusterProfile::flaky_federated();
+        let flaky = run_experiment(&cfg).unwrap();
+        // Same trajectory (timing-only faults), different simulated cost.
+        assert_eq!(homo.final_loss(), flaky.final_loss());
+        assert!(flaky.clock.total() > homo.clock.total());
+        assert_eq!(flaky.timeline.rounds.len() as u64, flaky.comm.rounds);
     }
 
     #[test]

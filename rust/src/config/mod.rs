@@ -7,6 +7,7 @@
 
 use crate::algo::{AlgoSpec, Variant};
 use crate::comm::Algorithm;
+use crate::simnet::ClusterProfile;
 use crate::util::json::Json;
 
 /// Which dataset/model workload to run.
@@ -92,6 +93,9 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub algo: AlgoSpec,
     pub collective: Algorithm,
+    /// Cluster profile for the simnet round pricer ("homogeneous" |
+    /// "mild-hetero" | "heavy-tail-stragglers" | "flaky-federated").
+    pub cluster: ClusterProfile,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -108,6 +112,7 @@ impl Default for ExperimentConfig {
             seed: 7,
             algo: AlgoSpec::default(),
             collective: Algorithm::Ring,
+            cluster: ClusterProfile::homogeneous(),
             eval_every_rounds: 1,
             engine: "threaded".into(),
         }
@@ -154,6 +159,10 @@ impl ExperimentConfig {
         if let Some(c) = gets("collective") {
             cfg.collective =
                 Algorithm::parse(&c).ok_or_else(|| anyhow::anyhow!("unknown collective {c}"))?;
+        }
+        if let Some(p) = gets("cluster") {
+            cfg.cluster = ClusterProfile::parse(&p)
+                .ok_or_else(|| anyhow::anyhow!("unknown cluster profile {p}"))?;
         }
         if let Some(a) = gets("algorithm") {
             cfg.algo.variant =
@@ -235,6 +244,7 @@ impl ExperimentConfig {
         take!(eval_every_rounds);
         take!(engine);
         take!(collective);
+        take!(cluster);
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
         }
@@ -273,7 +283,8 @@ mod tests {
             r#"{"workload": "logreg_a9a", "iid": false, "n_clients": 32,
                 "algorithm": "stl-sc", "eta1": 3.2, "k1": 8, "t1": 500,
                 "total_steps": 100000, "engine": "native",
-                "collective": "tree", "batch": 64}"#,
+                "collective": "tree", "batch": 64,
+                "cluster": "heavy-tail-stragglers"}"#,
         )
         .unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
@@ -285,6 +296,7 @@ mod tests {
         assert_eq!(cfg.algo.eta1, 3.2);
         assert_eq!(cfg.algo.batch, 64);
         assert_eq!(cfg.collective, Algorithm::Tree);
+        assert_eq!(cfg.cluster, ClusterProfile::heavy_tail_stragglers());
     }
 
     #[test]
@@ -292,6 +304,7 @@ mod tests {
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(cfg.workload, Workload::LogregTest);
         assert!(cfg.iid);
+        assert_eq!(cfg.cluster, ClusterProfile::homogeneous());
     }
 
     #[test]
@@ -301,6 +314,7 @@ mod tests {
             r#"{"algorithm": "nope"}"#,
             r#"{"engine": "gpu"}"#,
             r#"{"collective": "mesh"}"#,
+            r#"{"cluster": "perfectly-reliable"}"#,
         ] {
             assert!(
                 ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
@@ -320,6 +334,9 @@ mod tests {
         cfg.apply_override("algorithm", "stl-nc2").unwrap();
         assert_eq!(cfg.algo.variant, Variant::StlNc2);
         assert_eq!(cfg.algo.eta1, 0.4);
+        cfg.apply_override("cluster", "flaky-federated").unwrap();
+        assert_eq!(cfg.cluster, ClusterProfile::flaky_federated());
+        assert_eq!(cfg.algo.eta1, 0.4); // untouched by the cluster override
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::comm::CommStats;
 use crate::sim::SimClock;
+use crate::simnet::Timeline;
 use crate::util::json::Json;
 
 /// One evaluation of the averaged model during a run.
@@ -35,6 +36,9 @@ pub struct Trace {
     pub points: Vec<TracePoint>,
     pub comm: CommStats,
     pub clock: SimClock,
+    /// Per-round event timeline from the [`crate::simnet`] pricing engine
+    /// (empty when the run used `simnet::Detail::Off`).
+    pub timeline: Timeline,
     pub total_iters: u64,
     /// Whether a stop rule fired before the budget was exhausted.
     pub stopped_early: bool,
@@ -55,6 +59,15 @@ impl Trace {
             .iter()
             .find(|p| p.accuracy >= target)
             .map(|p| p.rounds)
+    }
+
+    /// First recorded simulated time at which `loss - f_star <= gap` (the
+    /// time-to-accuracy metric the cluster-profile studies report).
+    pub fn seconds_to_gap(&self, f_star: f64, gap: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.loss - f_star <= gap)
+            .map(|p| p.sim_seconds)
     }
 
     pub fn final_loss(&self) -> f64 {
@@ -81,6 +94,18 @@ impl Trace {
             ("bytes_per_client", Json::num(self.comm.bytes_per_client as f64)),
             ("sim_comm_seconds", Json::num(self.comm.sim_comm_seconds)),
             ("sim_compute_seconds", Json::num(self.clock.compute_seconds)),
+            (
+                "barrier_wait_avg_client_seconds",
+                Json::num(self.timeline.total_mean_barrier_wait()),
+            ),
+            (
+                "barrier_wait_straggler_span_seconds",
+                Json::num(self.timeline.total_max_barrier_wait()),
+            ),
+            (
+                "dropped_client_rounds",
+                Json::num(self.timeline.total_dropped() as f64),
+            ),
             ("stopped_early", Json::Bool(self.stopped_early)),
             (
                 "points",
@@ -126,6 +151,12 @@ impl Trace {
             ])?;
         }
         w.flush()
+    }
+
+    /// Write the per-round timing breakdown (round start, compute span,
+    /// barrier waits, drops, collective span) as CSV.
+    pub fn write_timeline_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.timeline.write_csv(path)
     }
 }
 
@@ -181,6 +212,20 @@ mod tests {
             j.get("points").unwrap().idx(0).unwrap().get("rounds").unwrap().as_f64(),
             Some(1.0)
         );
+    }
+
+    #[test]
+    fn seconds_to_gap_uses_sim_time() {
+        let mut a = pt(1, 0.5, 0.6);
+        a.sim_seconds = 1.5;
+        let mut b = pt(2, 0.1, 0.9);
+        b.sim_seconds = 3.0;
+        let t = Trace {
+            points: vec![a, b],
+            ..Default::default()
+        };
+        assert_eq!(t.seconds_to_gap(0.0, 0.2), Some(3.0));
+        assert_eq!(t.seconds_to_gap(0.0, 0.01), None);
     }
 
     #[test]

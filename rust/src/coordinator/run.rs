@@ -5,8 +5,10 @@
 //! iteration each client takes one (prox-)SGD step on its shard; whenever
 //! the within-phase step counter hits the phase's communication period (or
 //! the phase ends), the models are averaged by the configured collective,
-//! the round is priced by the network model, and — on the eval cadence —
-//! the full objective of the averaged model is recorded.
+//! the round is priced by the [`crate::simnet`] discrete-event engine
+//! under the configured cluster profile (the `homogeneous` default
+//! reproduces the closed-form [`crate::sim`] model exactly), and — on the
+//! eval cadence — the full objective of the averaged model is recorded.
 
 use super::compute::ClientCompute;
 use super::metrics::{Trace, TracePoint};
@@ -15,6 +17,7 @@ use crate::comm;
 use crate::data::{sampler::MinibatchSampler, Shard};
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel, SimClock};
+use crate::simnet::{ClusterProfile, Detail, SimNet};
 
 /// Metric a stop rule watches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,6 +48,11 @@ pub struct RunConfig {
     pub seed: u64,
     /// Skip accuracy evaluation (it is the expensive part for big models).
     pub eval_accuracy: bool,
+    /// Cluster profile the round-pricing simulator draws from. The default
+    /// `homogeneous` profile reproduces the closed-form clock exactly.
+    pub profile: ClusterProfile,
+    /// Timeline granularity recorded into the trace.
+    pub timeline_detail: Detail,
 }
 
 impl Default for RunConfig {
@@ -58,6 +66,8 @@ impl Default for RunConfig {
             stop: None,
             seed: 0,
             eval_accuracy: true,
+            profile: ClusterProfile::homogeneous(),
+            timeline_detail: Detail::Rounds,
         }
     }
 }
@@ -98,8 +108,17 @@ pub fn run(
     let mut examples_per_client: u64 = 0;
     let shard_size = shards[0].len().max(1) as f64;
 
-    let bytes_per_round = comm::allreduce::bytes_per_client(cfg.collective, n, dim) ;
-    let round_seconds = cfg.network.allreduce_seconds(cfg.collective, n, dim);
+    let bytes_per_round = comm::allreduce::bytes_per_client(cfg.collective, n, dim);
+    let mut simnet = SimNet::new(
+        cfg.profile,
+        cfg.network,
+        cfg.compute_model,
+        cfg.collective,
+        n,
+        dim,
+        cfg.seed,
+        cfg.timeline_detail,
+    );
 
     // Initial evaluation (iteration 0, before any work).
     let loss0 = engine.full_loss(&anchor);
@@ -128,6 +147,7 @@ pub fn run(
         }
         let k = phase.comm_period.max(1);
         let mut batches: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut steps_in_round: u64 = 0;
         for step in 0..phase.steps {
             let eta = phase.lr.at(t) as f32;
 
@@ -138,15 +158,18 @@ pub fn run(
             let (grads, _losses) = engine.grads(&thetas, &batches);
             engine.step(&mut thetas, &grads, &anchor, eta, phase.inv_gamma);
 
-            clock.add_compute(cfg.compute_model.grad_seconds(phase.batch, dim));
             t += 1;
+            steps_in_round += 1;
             examples_per_client += phase.batch as u64;
 
             let at_comm_point = (step + 1) % k == 0 || step + 1 == phase.steps;
             if at_comm_point {
                 comm::average(&mut thetas, cfg.collective);
-                clock.add_comm(round_seconds);
-                comm_stats.record_round(bytes_per_round, round_seconds);
+                let rt = simnet.price_round(steps_in_round, phase.batch);
+                steps_in_round = 0;
+                clock.add_compute(rt.compute_span);
+                clock.add_comm(rt.comm_seconds);
+                comm_stats.record_round(bytes_per_round, rt.comm_seconds);
                 rounds += 1;
 
                 if rounds % cfg.eval_every_rounds == 0 {
@@ -185,6 +208,7 @@ pub fn run(
     trace.total_iters = t;
     trace.comm = comm_stats;
     trace.clock = clock;
+    trace.timeline = simnet.take_timeline();
     trace
 }
 
@@ -415,6 +439,52 @@ mod tests {
         };
         let trace = run_native(oracle, &shards, &spec, 350, &base_cfg(4), &theta0);
         assert!(trace.final_loss() < trace.points[0].loss * 0.95);
+    }
+
+    #[test]
+    fn timeline_has_one_stat_per_round() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.1,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(4);
+        cfg.profile = ClusterProfile::heavy_tail_stragglers();
+        let trace = run_native(oracle, &shards, &spec, 100, &cfg, &theta0);
+        assert_eq!(trace.timeline.rounds.len() as u64, trace.comm.rounds);
+        // Clock totals are the sum of the recorded round spans.
+        let compute: f64 = trace.timeline.rounds.iter().map(|r| r.compute_span).sum();
+        let comm: f64 = trace.timeline.rounds.iter().map(|r| r.comm_seconds).sum();
+        assert!((compute - trace.clock.compute_seconds).abs() < 1e-9 * compute.max(1.0));
+        assert!((comm - trace.clock.comm_seconds).abs() < 1e-9 * comm.max(1.0));
+    }
+
+    #[test]
+    fn hetero_profile_prices_same_trajectory_slower() {
+        // The cluster profile changes *timing only*: losses identical,
+        // simulated seconds strictly larger under stragglers.
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let homo = run_native(oracle.clone(), &shards, &spec, 200, &base_cfg(4), &theta0);
+        let mut cfg = base_cfg(4);
+        cfg.profile = ClusterProfile::heavy_tail_stragglers();
+        let tail = run_native(oracle, &shards, &spec, 200, &cfg, &theta0);
+        assert_eq!(homo.points.len(), tail.points.len());
+        for (a, b) in homo.points.iter().zip(&tail.points) {
+            assert_eq!(a.loss, b.loss, "iter {}", a.iter);
+        }
+        assert!(tail.clock.total() > homo.clock.total());
     }
 
     #[test]

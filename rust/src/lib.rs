@@ -8,8 +8,10 @@
 //!   worker event loop, the paper's stagewise communication-period
 //!   controller ([`algo`]), periodic model-averaging collectives ([`comm`]),
 //!   communication accounting and a latency/bandwidth network model
-//!   ([`sim`]), plus every substrate the evaluation needs (synthetic
-//!   datasets, partitioners, native gradient oracles, metrics).
+//!   ([`sim`]), a discrete-event heterogeneous-cluster simulator that
+//!   prices every round ([`simnet`]), plus every substrate the evaluation
+//!   needs (synthetic datasets, partitioners, native gradient oracles,
+//!   metrics).
 //! * **L2/L1 (python/compile, build-time only)** — JAX models and Pallas
 //!   kernels, AOT-lowered to HLO text artifacts that [`runtime`] loads and
 //!   executes through PJRT. Python never runs on the training path.
@@ -34,6 +36,7 @@ pub mod linalg;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod simnet;
 pub mod testing;
 pub mod util;
 

@@ -19,7 +19,11 @@ fn main() -> anyhow::Result<()> {
         "STL-SGD (AAAI 2021) distributed-training coordinator",
     )
     .opt("config", "", "JSON experiment config file (optional)")
-    .opt("workload", "", "workload override (logreg_a9a|logreg_mnist|mlp_wide|mlp_deep|tfm_small|*_test)")
+    .opt(
+        "workload",
+        "",
+        "workload override (logreg_a9a|logreg_mnist|mlp_wide|mlp_deep|tfm_small|*_test)",
+    )
     .opt("algorithm", "", "algorithm override (sync|lb|crpsgd|local|stl-sc|stl-nc1|stl-nc2)")
     .opt("engine", "", "engine override (native|threaded|xla)")
     .opt("steps", "", "total iteration budget override")
@@ -30,8 +34,14 @@ fn main() -> anyhow::Result<()> {
     .opt("batch", "", "per-client batch size override")
     .opt("seed", "", "rng seed override")
     .opt("eval-every", "", "evaluate every this many comm rounds")
+    .opt(
+        "cluster",
+        "",
+        "cluster profile (homogeneous|mild-hetero|heavy-tail-stragglers|flaky-federated)",
+    )
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
+    .opt("out-timeline", "", "write per-round timing breakdown CSV to this path")
     .flag("noniid", "use the paper's Non-IID partition")
     .flag("paper-defaults", "start from tuned paper hyperparameters for the workload+algorithm")
     .parse();
@@ -55,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         ("batch", "batch"),
         ("seed", "seed"),
         ("eval-every", "eval_every_rounds"),
+        ("cluster", "cluster"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
@@ -78,13 +89,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     eprintln!(
-        "workload={} algorithm={} engine={} clients={} steps={} partition={} seed={}",
+        "workload={} algorithm={} engine={} clients={} steps={} partition={} cluster={} seed={}",
         cfg.workload.name(),
         cfg.algo.variant.name(),
         cfg.engine,
         cfg.n_clients,
         cfg.total_steps,
         if cfg.iid { "IID".into() } else { format!("Non-IID(s={}%)", cfg.s_percent) },
+        cfg.cluster.name,
         cfg.seed,
     );
 
@@ -107,6 +119,14 @@ fn main() -> anyhow::Result<()> {
         trace.clock.comm_seconds,
         trace.clock.total()
     );
+    println!(
+        "cluster [{}]: barrier idle (run totals): avg_client={:.3}s straggler_span={:.3}s \
+         dropped_client_rounds={}",
+        cfg.cluster.name,
+        trace.timeline.total_mean_barrier_wait(),
+        trace.timeline.total_max_barrier_wait(),
+        trace.timeline.total_dropped(),
+    );
     if cfg.workload.is_convex() {
         let f_star = workloads::compute_f_star(cfg.workload, cfg.seed, 2000);
         println!(
@@ -123,6 +143,10 @@ fn main() -> anyhow::Result<()> {
     if !args.get("out-json").is_empty() {
         std::fs::write(args.get("out-json"), trace.to_json().to_string())?;
         eprintln!("wrote {}", args.get("out-json"));
+    }
+    if !args.get("out-timeline").is_empty() {
+        trace.write_timeline_csv(std::path::Path::new(args.get("out-timeline")))?;
+        eprintln!("wrote {}", args.get("out-timeline"));
     }
     let _ = Workload::LogregA9a; // keep import honest
     Ok(())

@@ -9,6 +9,11 @@
 //! Defaults approximate the paper's testbed interconnect (PCIe/10GbE-class:
 //! alpha = 50 us/hop, beta = 10 ns/byte ~= 100 MB/s effective per link) and
 //! a fixed per-iteration compute cost measured from the oracle benches.
+//!
+//! This module is the *calibration layer*: the discrete-event simulator in
+//! [`crate::simnet`] draws its absolute costs from these models and must
+//! reproduce them bit-for-bit under the zero-variance `homogeneous`
+//! cluster profile (tests/test_simnet.rs enforces the equivalence).
 
 use crate::comm::Algorithm;
 
@@ -48,9 +53,19 @@ impl NetworkModel {
             Algorithm::Ring => {
                 2.0 * (nf - 1.0) * (self.alpha + (bytes / nf) * self.beta)
             }
-            // log2(N') exchange steps of the full model.
+            // Recursive doubling: log2(N) full-model exchange steps at a
+            // power of two. A non-power-of-two N first folds the tail
+            // [2^floor(log2 N), N) into the core (one exchange) and
+            // broadcasts the result back out at the end (one more), so the
+            // dependency chain is floor(log2 N) + 2 hops — matching the
+            // schedule comm::allreduce::tree actually executes.
             Algorithm::Tree => {
-                let hops = (n as u64).next_power_of_two().trailing_zeros() as f64;
+                let hops = if n.is_power_of_two() {
+                    (n as u64).trailing_zeros() as f64
+                } else {
+                    let core = ((n as u64).next_power_of_two() >> 1).trailing_zeros() as f64;
+                    core + 2.0
+                };
                 hops * (self.alpha + bytes * self.beta)
             }
         }
@@ -102,6 +117,20 @@ impl Default for ComputeModel {
 impl ComputeModel {
     pub fn grad_seconds(&self, batch: usize, params: usize) -> f64 {
         self.overhead + self.seconds_per_flop_unit * (batch * params) as f64
+    }
+
+    /// Closed-form compute span of one communication round of `steps`
+    /// local iterations: the zero-variance reference [`crate::simnet`]
+    /// must reproduce bit-for-bit. Computed as the same per-step
+    /// repeated-addition fold the event engine performs, so the two sides
+    /// agree to the last bit rather than merely to rounding error.
+    pub fn round_compute_seconds(&self, batch: usize, params: usize, steps: u64) -> f64 {
+        let g = self.grad_seconds(batch, params);
+        let mut span = 0.0f64;
+        for _ in 0..steps {
+            span += g;
+        }
+        span
     }
 }
 
@@ -159,5 +188,53 @@ mod tests {
         let cm = ComputeModel::default();
         assert!(cm.grad_seconds(64, 1000) > cm.grad_seconds(32, 1000));
         assert!(cm.grad_seconds(32, 1000) > 0.0);
+    }
+
+    #[test]
+    fn tree_non_pow2_pays_fold_and_broadcast_hops() {
+        // Regression: non-power-of-two recursive doubling needs
+        // floor(log2 N) + 2 exchange steps (tail fold + doubling over the
+        // pow2 core + broadcast back), not ceil(log2 N).
+        let m = NetworkModel::default();
+        let d = 1000;
+        let per_hop = m.alpha + 4.0 * d as f64 * m.beta;
+        for (n, hops) in [(6usize, 4.0f64), (12, 5.0), (24, 6.0)] {
+            let got = m.allreduce_seconds(Algorithm::Tree, n, d);
+            assert!(
+                (got - hops * per_hop).abs() < 1e-15,
+                "N={n}: got {got}, want {} hops",
+                hops
+            );
+        }
+        // Powers of two are unchanged: exactly log2(N) hops.
+        for (n, hops) in [(8usize, 3.0f64), (16, 4.0), (32, 5.0)] {
+            let got = m.allreduce_seconds(Algorithm::Tree, n, d);
+            assert!((got - hops * per_hop).abs() < 1e-15, "N={n}");
+        }
+    }
+
+    #[test]
+    fn tree_non_pow2_costs_more_than_next_smaller_pow2() {
+        let m = NetworkModel::default();
+        for n in [6usize, 12, 24] {
+            let pow2_below = 1usize << (usize::BITS - 1 - n.leading_zeros());
+            assert!(
+                m.allreduce_seconds(Algorithm::Tree, n, 100)
+                    > m.allreduce_seconds(Algorithm::Tree, pow2_below, 100),
+                "N={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_compute_matches_per_step_fold() {
+        let cm = ComputeModel::default();
+        let g = cm.grad_seconds(16, 1000);
+        let mut fold = 0.0f64;
+        for _ in 0..13 {
+            fold += g;
+        }
+        assert_eq!(cm.round_compute_seconds(16, 1000, 13), fold);
+        assert_eq!(cm.round_compute_seconds(16, 1000, 0), 0.0);
     }
 }

@@ -1,0 +1,391 @@
+//! The discrete-event round-pricing engine.
+//!
+//! One [`SimNet`] prices every communication round of a run: each client
+//! draws per-step compute times from the [`ClusterProfile`] (permanent
+//! speed multiplier x per-step noise x heavy-tail straggler hits), step
+//! completions are processed through a deterministic time-ordered event
+//! heap, the barrier releases at the last arrival (or the timeout
+//! deadline, dropping late clients for the round), and the collective is
+//! priced by the closed-form [`NetworkModel`] plus link jitter.
+//!
+//! Timing is computed in *round-local* seconds (the heap starts each round
+//! at t = 0) so per-round spans are independent of how much simulated time
+//! has already elapsed; under the zero-variance `homogeneous` profile the
+//! compute span is the identical repeated-addition fold the closed-form
+//! model uses, which is what makes the calibration equivalence bit-exact
+//! (see `ComputeModel::round_compute_seconds` and tests/test_simnet.rs).
+
+use super::event::{EventHeap, EventKind};
+use super::profile::ClusterProfile;
+use super::timeline::{Detail, RoundStat, Timeline, TimelineEvent};
+use crate::comm::Algorithm;
+use crate::rng::Rng;
+use crate::sim::{ComputeModel, NetworkModel};
+
+struct Client {
+    rng: Rng,
+    /// Permanent speed multiplier (1.0 = nominal; larger = slower).
+    speed: f64,
+}
+
+/// Discrete-event simulator for one run's cluster.
+pub struct SimNet {
+    profile: ClusterProfile,
+    net: NetworkModel,
+    cm: ComputeModel,
+    alg: Algorithm,
+    dim: usize,
+    detail: Detail,
+    clients: Vec<Client>,
+    /// Stream for per-round link jitter (separate from client streams so
+    /// comm draws never perturb compute draws).
+    link_rng: Rng,
+    now: f64,
+    round: u64,
+    pub timeline: Timeline,
+    /// Heap events processed over the engine's lifetime (bench metric).
+    pub events_processed: u64,
+}
+
+impl SimNet {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        profile: ClusterProfile,
+        net: NetworkModel,
+        cm: ComputeModel,
+        alg: Algorithm,
+        n_clients: usize,
+        dim: usize,
+        seed: u64,
+        detail: Detail,
+    ) -> Self {
+        assert!(n_clients >= 1, "simnet needs at least one client");
+        let root = Rng::new(seed ^ 0x51D_CAFE);
+        let clients = (0..n_clients)
+            .map(|i| {
+                let mut rng = root.split(i as u64 + 1);
+                let speed = profile.draw_client_speed(&mut rng);
+                Client { rng, speed }
+            })
+            .collect();
+        Self {
+            profile,
+            net,
+            cm,
+            alg,
+            dim,
+            detail,
+            clients,
+            link_rng: root.split(0),
+            now: 0.0,
+            round: 0,
+            timeline: Timeline::default(),
+            events_processed: 0,
+        }
+    }
+
+    /// Simulated seconds elapsed across all rounds priced so far.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Rounds priced so far.
+    pub fn rounds_priced(&self) -> u64 {
+        self.round
+    }
+
+    /// Move the recorded timeline out (the engine keeps pricing normally).
+    pub fn take_timeline(&mut self) -> Timeline {
+        std::mem::take(&mut self.timeline)
+    }
+
+    /// Price one communication round of `steps` local iterations at
+    /// per-client batch size `batch`, advancing the simulated clock.
+    pub fn price_round(&mut self, steps: u64, batch: usize) -> RoundStat {
+        assert!(steps > 0, "a round prices at least one local step");
+        let n = self.clients.len();
+        let profile = self.profile;
+        let g = self.cm.grad_seconds(batch, self.dim);
+        let start = self.now;
+        let nominal_span = g * steps as f64;
+        let deadline = if profile.timeout_factor > 0.0 {
+            profile.timeout_factor * nominal_span
+        } else {
+            f64::INFINITY
+        };
+
+        if self.detail == Detail::Steps {
+            self.timeline.events.push(TimelineEvent {
+                t: start,
+                round: self.round,
+                kind: EventKind::RoundStart,
+            });
+        }
+
+        // Seed the heap: each live client's first step completion. Crashed
+        // clients never arrive (completion stays +inf) and the barrier
+        // timeout carries the round past them.
+        let mut heap = EventHeap::new();
+        let mut completion = vec![f64::INFINITY; n];
+        for i in 0..n {
+            if profile.draw_crash(&mut self.clients[i].rng) {
+                if self.detail == Detail::Steps {
+                    self.timeline.events.push(TimelineEvent {
+                        t: start,
+                        round: self.round,
+                        kind: EventKind::ClientDropped { client: i },
+                    });
+                }
+                continue;
+            }
+            let factor = profile.draw_step_factor(&mut self.clients[i].rng);
+            heap.push(
+                g * self.clients[i].speed * factor,
+                EventKind::GradDone { client: i, step: 0 },
+            );
+        }
+
+        // Drain events in time order: every pop either schedules the
+        // client's next step or parks it at the barrier.
+        let mut pops = 0u64;
+        while let Some(ev) = heap.pop() {
+            pops += 1;
+            let EventKind::GradDone { client, step } = ev.kind else {
+                unreachable!("only step completions are scheduled");
+            };
+            if self.detail == Detail::Steps {
+                self.timeline.events.push(TimelineEvent {
+                    t: start + ev.t,
+                    round: self.round,
+                    kind: ev.kind,
+                });
+            }
+            if step + 1 < steps {
+                let factor = profile.draw_step_factor(&mut self.clients[client].rng);
+                heap.push(
+                    ev.t + g * self.clients[client].speed * factor,
+                    EventKind::GradDone {
+                        client,
+                        step: step + 1,
+                    },
+                );
+            } else {
+                completion[client] = ev.t;
+                if self.detail == Detail::Steps {
+                    self.timeline.events.push(TimelineEvent {
+                        t: start + ev.t,
+                        round: self.round,
+                        kind: EventKind::BarrierEnter { client },
+                    });
+                }
+            }
+        }
+        self.events_processed += pops + 3; // + round start/barrier/allreduce
+
+        // Barrier release: last arrival, or the timeout deadline if anyone
+        // is still out (crashed, or straggling past it). If nothing bounds
+        // the wait (no timeout, all crashed) fall back to the last arrival
+        // that did happen.
+        let all_done = completion.iter().cloned().fold(0.0f64, f64::max);
+        let exit = if all_done <= deadline && all_done.is_finite() {
+            all_done
+        } else if deadline.is_finite() {
+            deadline
+        } else {
+            completion
+                .iter()
+                .cloned()
+                .filter(|c| c.is_finite())
+                .fold(0.0f64, f64::max)
+        };
+        let dropped = completion.iter().filter(|&&c| c > exit).count() as u32;
+        if self.detail == Detail::Steps {
+            for (i, &c) in completion.iter().enumerate() {
+                if c > exit && c.is_finite() {
+                    // straggled past the deadline (crashes were recorded
+                    // at round start)
+                    self.timeline.events.push(TimelineEvent {
+                        t: start + exit,
+                        round: self.round,
+                        kind: EventKind::ClientDropped { client: i },
+                    });
+                }
+            }
+            self.timeline.events.push(TimelineEvent {
+                t: start + exit,
+                round: self.round,
+                kind: EventKind::BarrierExit,
+            });
+        }
+
+        let mut max_wait = 0.0f64;
+        let mut wait_sum = 0.0f64;
+        for &c in &completion {
+            let wait = exit - c.min(exit);
+            max_wait = max_wait.max(wait);
+            wait_sum += wait;
+        }
+        let mean_wait = wait_sum / n as f64;
+
+        let base_comm = self.net.allreduce_seconds(self.alg, n, self.dim);
+        let comm = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+        if self.detail == Detail::Steps {
+            self.timeline.events.push(TimelineEvent {
+                t: start + exit + comm,
+                round: self.round,
+                kind: EventKind::AllreduceDone,
+            });
+        }
+
+        let stat = RoundStat {
+            round: self.round,
+            steps,
+            start,
+            compute_span: exit,
+            comm_seconds: comm,
+            max_barrier_wait: max_wait,
+            mean_barrier_wait: mean_wait,
+            dropped,
+        };
+        if self.detail != Detail::Off {
+            self.timeline.rounds.push(stat);
+        }
+        self.now = stat.end();
+        self.round += 1;
+        stat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(profile: ClusterProfile, n: usize, seed: u64, detail: Detail) -> SimNet {
+        SimNet::new(
+            profile,
+            NetworkModel::default(),
+            ComputeModel::default(),
+            Algorithm::Ring,
+            n,
+            1_000,
+            seed,
+            detail,
+        )
+    }
+
+    #[test]
+    fn homogeneous_round_is_exact_closed_form() {
+        let cm = ComputeModel::default();
+        let net = NetworkModel::default();
+        let (n, d, batch, k) = (8usize, 1_000usize, 32usize, 10u64);
+        let mut sim = engine(ClusterProfile::homogeneous(), n, 7, Detail::Rounds);
+        let rt = sim.price_round(k, batch);
+        // Same repeated-addition fold the closed-form reference uses.
+        let g = cm.grad_seconds(batch, d);
+        let mut expect = 0.0f64;
+        for _ in 0..k {
+            expect += g;
+        }
+        assert_eq!(rt.compute_span, expect);
+        assert_eq!(rt.comm_seconds, net.allreduce_seconds(Algorithm::Ring, n, d));
+        assert_eq!(rt.max_barrier_wait, 0.0);
+        assert_eq!(rt.mean_barrier_wait, 0.0);
+        assert_eq!(rt.dropped, 0);
+    }
+
+    #[test]
+    fn deterministic_across_engines() {
+        let mk = || engine(ClusterProfile::heavy_tail_stragglers(), 6, 21, Detail::Steps);
+        let (mut a, mut b) = (mk(), mk());
+        for r in 0..50 {
+            let (sa, sb) = (a.price_round(8, 16), b.price_round(8, 16));
+            assert_eq!(sa, sb, "round {r}");
+        }
+        assert_eq!(a.timeline, b.timeline);
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+    }
+
+    #[test]
+    fn heterogeneity_never_prices_below_nominal() {
+        let cm = ComputeModel::default();
+        let g = cm.grad_seconds(16, 1_000);
+        let mut nominal = 0.0f64;
+        for _ in 0..8u64 {
+            nominal += g;
+        }
+        let mut sim = engine(ClusterProfile::mild_hetero(), 8, 3, Detail::Off);
+        let mut some_wait = false;
+        for _ in 0..50 {
+            let rt = sim.price_round(8, 16);
+            assert!(rt.compute_span >= nominal);
+            assert!(rt.max_barrier_wait >= rt.mean_barrier_wait);
+            some_wait |= rt.max_barrier_wait > 0.0;
+        }
+        assert!(some_wait, "heterogeneous fleet never produced barrier waits");
+    }
+
+    #[test]
+    fn flaky_rounds_drop_clients_and_respect_timeout() {
+        let profile = ClusterProfile::flaky_federated();
+        let cm = ComputeModel::default();
+        let nominal = cm.grad_seconds(16, 1_000) * 8.0;
+        let mut sim = engine(profile, 8, 11, Detail::Rounds);
+        for _ in 0..200 {
+            let rt = sim.price_round(8, 16);
+            assert!(rt.compute_span <= profile.timeout_factor * nominal + 1e-12);
+        }
+        assert!(sim.timeline.total_dropped() > 0, "no drops in 200 flaky rounds");
+        // Drops are per-round: the fleet never shrinks permanently.
+        assert!(sim.timeline.rounds.iter().any(|r| r.dropped == 0));
+    }
+
+    #[test]
+    fn steps_detail_records_full_event_stream() {
+        let mut sim = engine(ClusterProfile::homogeneous(), 4, 1, Detail::Steps);
+        sim.price_round(5, 16);
+        let grad_done = sim
+            .timeline
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::GradDone { .. }))
+            .count();
+        assert_eq!(grad_done, 4 * 5);
+        let barriers = sim
+            .timeline
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::BarrierEnter { .. }))
+            .count();
+        assert_eq!(barriers, 4);
+        assert!(matches!(sim.timeline.events[0].kind, EventKind::RoundStart));
+        assert!(matches!(
+            sim.timeline.events.last().unwrap().kind,
+            EventKind::AllreduceDone
+        ));
+        assert_eq!(sim.timeline.rounds.len(), 1);
+    }
+
+    #[test]
+    fn off_detail_records_nothing_but_still_prices() {
+        let mut sim = engine(ClusterProfile::heavy_tail_stragglers(), 4, 1, Detail::Off);
+        let rt = sim.price_round(5, 16);
+        assert!(rt.compute_span > 0.0);
+        assert!(sim.timeline.rounds.is_empty());
+        assert!(sim.timeline.events.is_empty());
+        assert!(sim.events_processed >= 4 * 5);
+    }
+
+    #[test]
+    fn clock_and_round_counter_advance() {
+        let mut sim = engine(ClusterProfile::mild_hetero(), 3, 9, Detail::Rounds);
+        let mut prev_end = 0.0;
+        for r in 0..10u64 {
+            let rt = sim.price_round(4, 8);
+            assert_eq!(rt.round, r);
+            assert_eq!(rt.start, prev_end);
+            prev_end = rt.end();
+        }
+        assert_eq!(sim.rounds_priced(), 10);
+        assert_eq!(sim.now(), prev_end);
+    }
+}

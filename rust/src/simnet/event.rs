@@ -1,0 +1,140 @@
+//! Discrete events and the deterministic time-ordered heap.
+//!
+//! The heap is a min-heap keyed on `(time, seq)`: simulated time first,
+//! insertion order as the tie-break, so runs are bit-reproducible even when
+//! two clients finish a step at exactly the same instant (common under the
+//! zero-variance homogeneous profile, where every draw is identical).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happened at a point in simulated time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A communication round begins (all clients start local steps).
+    RoundStart,
+    /// Client finished local step `step` (0-based within the round).
+    GradDone { client: usize, step: u64 },
+    /// Client finished all its local steps and is waiting at the barrier.
+    BarrierEnter { client: usize },
+    /// Client crashed at round start, or straggled past the barrier
+    /// timeout; the round continues without it (it rejoins next round).
+    ClientDropped { client: usize },
+    /// The barrier released (last arrival, or the timeout deadline).
+    BarrierExit,
+    /// The collective finished; the round's span ends here.
+    AllreduceDone,
+}
+
+/// One scheduled occurrence.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Simulated time (round-local seconds).
+    pub t: f64,
+    /// Insertion sequence number (deterministic tie-break).
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    /// Reversed so `BinaryHeap` (a max-heap) pops the *earliest* event.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event queue.
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    /// Total events pushed over the heap's lifetime (throughput metric).
+    pub pushed: u64,
+}
+
+impl EventHeap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        self.heap.push(Event {
+            t,
+            seq: self.seq,
+            kind,
+        });
+        self.seq += 1;
+        self.pushed += 1;
+    }
+
+    /// Pop the earliest event (ties broken by insertion order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(3.0, EventKind::BarrierExit);
+        h.push(1.0, EventKind::RoundStart);
+        h.push(2.0, EventKind::AllreduceDone);
+        let times: Vec<f64> = std::iter::from_fn(|| h.pop()).map(|e| e.t).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut h = EventHeap::new();
+        for client in 0..5 {
+            h.push(1.0, EventKind::BarrierEnter { client });
+        }
+        let clients: Vec<usize> = std::iter::from_fn(|| h.pop())
+            .map(|e| match e.kind {
+                EventKind::BarrierEnter { client } => client,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(clients, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn counts_pushes() {
+        let mut h = EventHeap::new();
+        h.push(1.0, EventKind::RoundStart);
+        h.push(2.0, EventKind::BarrierExit);
+        h.pop();
+        assert_eq!(h.pushed, 2);
+        assert_eq!(h.len(), 1);
+        assert!(!h.is_empty());
+    }
+}

@@ -1,0 +1,41 @@
+//! `simnet` — discrete-event heterogeneous-cluster simulator.
+//!
+//! The closed-form [`crate::sim`] model prices a round as
+//! `k * grad_seconds + allreduce_seconds`: correct for a perfectly
+//! homogeneous fleet, but blind to exactly the effect that makes cutting
+//! communication rounds valuable — a synchronous round costs the *max*
+//! over straggling clients, so every barrier pays for the slowest machine.
+//! This subsystem replaces that closed form with a deterministic
+//! discrete-event engine:
+//!
+//! * [`SimNet`] (engine.rs) — per-client compute draws processed through a
+//!   time-ordered [`event::EventHeap`]; barrier with timeout-and-continue;
+//!   collectives priced by the calibrated [`crate::sim::NetworkModel`]
+//!   plus link jitter.
+//! * [`ClusterProfile`] (profile.rs) — four named presets
+//!   (`homogeneous`, `mild-hetero`, `heavy-tail-stragglers`,
+//!   `flaky-federated`) selectable via config key `cluster` / CLI
+//!   `--cluster`.
+//! * [`Timeline`] / [`RoundStat`] (timeline.rs) — per-round timing
+//!   breakdown (compute span, barrier waits, drops, collective span)
+//!   recorded into [`crate::coordinator::metrics::Trace`] and exportable
+//!   as CSV for the time-to-accuracy studies.
+//!
+//! Calibration contract: under the zero-variance `homogeneous` profile the
+//! engine reproduces the closed-form `SimClock` totals *bit-for-bit*
+//! (property-tested in tests/test_simnet.rs), so `sim/` remains the
+//! single source of truth for absolute costs and `simnet` only adds the
+//! distributional structure on top. Everything is seeded through
+//! [`crate::rng`]: the same experiment config run twice yields identical
+//! event timelines. See DESIGN.md for the architecture notes, including
+//! why faults are timing-level only.
+
+pub mod engine;
+pub mod event;
+pub mod profile;
+pub mod timeline;
+
+pub use engine::SimNet;
+pub use event::EventKind;
+pub use profile::ClusterProfile;
+pub use timeline::{Detail, RoundStat, Timeline, TimelineEvent};

@@ -1,0 +1,257 @@
+//! Named cluster profiles: the stochastic shape of a simulated fleet.
+//!
+//! A profile bundles every distributional knob the event engine draws
+//! from: permanent per-client speed spread, per-step compute noise, a
+//! heavy-tail straggler distribution (Pareto), per-round link jitter, and
+//! timing-level fault injection (crash probability + barrier timeout).
+//!
+//! Every knob defaults to zero; the `homogeneous` preset is the exact
+//! zero-variance configuration under which the engine reproduces the
+//! closed-form [`crate::sim`] model bit-for-bit (the draw helpers return
+//! the multiplicative/additive identities *without consuming RNG state*
+//! when their knob is zero, so no rounding or stream divergence creeps in).
+
+use crate::rng::Rng;
+
+/// Distributional description of a simulated cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterProfile {
+    pub name: &'static str,
+    /// Spread of permanent per-client speed multipliers: client i computes
+    /// at `1 + speed_spread * u_i` times the nominal step cost
+    /// (`u_i ~ U[0,1)`, drawn once at engine construction).
+    pub speed_spread: f64,
+    /// Per-step multiplicative compute noise: each gradient draw is scaled
+    /// by `1 + step_noise * u`.
+    pub step_noise: f64,
+    /// Probability that a step hits the heavy tail.
+    pub tail_prob: f64,
+    /// Pareto shape of the tail (smaller = heavier; must be > 1 for a
+    /// finite mean).
+    pub tail_alpha: f64,
+    /// Tail magnitude in multiples of the nominal step time.
+    pub tail_scale: f64,
+    /// Per-round multiplicative bandwidth jitter on the collective span:
+    /// `comm *= 1 + link_jitter * u`.
+    pub link_jitter: f64,
+    /// Per-round additive latency jitter on the collective (seconds).
+    pub latency_jitter_s: f64,
+    /// Per-client per-round crash probability. Crashes are *timing-level*:
+    /// the round times out and continues without the client, which rejoins
+    /// next round (see DESIGN.md for why the learning trajectory is kept
+    /// deterministic).
+    pub drop_prob: f64,
+    /// Barrier timeout, in multiples of the round's nominal compute span
+    /// (`steps * nominal grad seconds`). 0 disables the timeout (the
+    /// barrier waits for the slowest client). Must be > 0 whenever
+    /// `drop_prob > 0`, else a crashed client would stall the round
+    /// forever.
+    pub timeout_factor: f64,
+}
+
+impl Default for ClusterProfile {
+    fn default() -> Self {
+        Self::homogeneous()
+    }
+}
+
+impl ClusterProfile {
+    /// Zero-variance fleet: every client identical, network exact. The
+    /// calibration profile — prices rounds exactly like the closed-form
+    /// [`crate::sim`] model.
+    pub fn homogeneous() -> Self {
+        Self {
+            name: "homogeneous",
+            speed_spread: 0.0,
+            step_noise: 0.0,
+            tail_prob: 0.0,
+            tail_alpha: 2.0,
+            tail_scale: 0.0,
+            link_jitter: 0.0,
+            latency_jitter_s: 0.0,
+            drop_prob: 0.0,
+            timeout_factor: 0.0,
+        }
+    }
+
+    /// Datacenter-grade heterogeneity: modest permanent speed spread and
+    /// per-step noise, light link jitter, no faults.
+    pub fn mild_hetero() -> Self {
+        Self {
+            name: "mild-hetero",
+            speed_spread: 0.25,
+            step_noise: 0.10,
+            link_jitter: 0.10,
+            ..Self::homogeneous()
+        }
+    }
+
+    /// Occasional severe stragglers (GC pauses, co-tenant interference):
+    /// 2% of steps pay a Pareto-distributed penalty around 10x nominal.
+    pub fn heavy_tail_stragglers() -> Self {
+        Self {
+            name: "heavy-tail-stragglers",
+            speed_spread: 0.20,
+            step_noise: 0.05,
+            tail_prob: 0.02,
+            tail_alpha: 1.3,
+            tail_scale: 10.0,
+            link_jitter: 0.10,
+            ..Self::homogeneous()
+        }
+    }
+
+    /// Federated edge devices: wide speed spread, noisy WAN links, 5%
+    /// per-round crashes with a 3x-nominal barrier timeout.
+    pub fn flaky_federated() -> Self {
+        Self {
+            name: "flaky-federated",
+            speed_spread: 0.50,
+            step_noise: 0.20,
+            tail_prob: 0.01,
+            tail_alpha: 1.5,
+            tail_scale: 5.0,
+            link_jitter: 0.30,
+            latency_jitter_s: 20e-3,
+            drop_prob: 0.05,
+            timeout_factor: 3.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ClusterProfile> {
+        match s {
+            "homogeneous" => Some(Self::homogeneous()),
+            "mild-hetero" => Some(Self::mild_hetero()),
+            "heavy-tail-stragglers" => Some(Self::heavy_tail_stragglers()),
+            "flaky-federated" => Some(Self::flaky_federated()),
+            _ => None,
+        }
+    }
+
+    /// All shipped presets (CLI help, sweeps, tests).
+    pub fn presets() -> [ClusterProfile; 4] {
+        [
+            Self::homogeneous(),
+            Self::mild_hetero(),
+            Self::heavy_tail_stragglers(),
+            Self::flaky_federated(),
+        ]
+    }
+
+    /// True when every draw is the identity (the bit-exact calibration
+    /// regime).
+    pub fn is_zero_variance(&self) -> bool {
+        self.speed_spread == 0.0
+            && self.step_noise == 0.0
+            && self.tail_prob == 0.0
+            && self.link_jitter == 0.0
+            && self.latency_jitter_s == 0.0
+            && self.drop_prob == 0.0
+    }
+
+    /// Permanent speed multiplier for one client (>= 1.0).
+    pub fn draw_client_speed(&self, rng: &mut Rng) -> f64 {
+        if self.speed_spread == 0.0 {
+            return 1.0;
+        }
+        1.0 + self.speed_spread * rng.uniform()
+    }
+
+    /// Multiplicative factor on one step's nominal cost (>= 1.0): per-step
+    /// noise plus, with probability `tail_prob`, a Pareto straggler hit.
+    pub fn draw_step_factor(&self, rng: &mut Rng) -> f64 {
+        let mut factor = 1.0;
+        if self.step_noise > 0.0 {
+            factor += self.step_noise * rng.uniform();
+        }
+        if self.tail_prob > 0.0 && rng.uniform() < self.tail_prob {
+            // Pareto(alpha) >= 1 via inverse transform.
+            let u = rng.uniform();
+            let pareto = (1.0 - u).powf(-1.0 / self.tail_alpha);
+            factor += self.tail_scale * pareto;
+        }
+        factor
+    }
+
+    /// Jittered span of one collective given its closed-form base cost.
+    pub fn draw_comm_seconds(&self, base: f64, rng: &mut Rng) -> f64 {
+        let mut comm = base;
+        if self.link_jitter > 0.0 {
+            comm *= 1.0 + self.link_jitter * rng.uniform();
+        }
+        if self.latency_jitter_s > 0.0 {
+            comm += self.latency_jitter_s * rng.uniform();
+        }
+        comm
+    }
+
+    /// Whether one client crashes this round.
+    pub fn draw_crash(&self, rng: &mut Rng) -> bool {
+        self.drop_prob > 0.0 && rng.uniform() < self.drop_prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_presets() {
+        for p in ClusterProfile::presets() {
+            assert_eq!(ClusterProfile::parse(p.name), Some(p));
+        }
+        assert_eq!(ClusterProfile::parse("nope"), None);
+    }
+
+    #[test]
+    fn homogeneous_is_zero_variance_others_not() {
+        assert!(ClusterProfile::homogeneous().is_zero_variance());
+        assert!(!ClusterProfile::mild_hetero().is_zero_variance());
+        assert!(!ClusterProfile::heavy_tail_stragglers().is_zero_variance());
+        assert!(!ClusterProfile::flaky_federated().is_zero_variance());
+    }
+
+    #[test]
+    fn zero_variance_draws_are_identities_and_consume_no_rng() {
+        let p = ClusterProfile::homogeneous();
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(p.draw_client_speed(&mut rng), 1.0);
+        assert_eq!(p.draw_step_factor(&mut rng), 1.0);
+        assert_eq!(p.draw_comm_seconds(0.125, &mut rng), 0.125);
+        assert!(!p.draw_crash(&mut rng));
+        assert_eq!(rng.next_u64(), before, "rng state was consumed");
+    }
+
+    #[test]
+    fn step_factor_at_least_one_and_tail_fires() {
+        let p = ClusterProfile::heavy_tail_stragglers();
+        let mut rng = Rng::new(3);
+        let mut worst = 0.0f64;
+        for _ in 0..10_000 {
+            let f = p.draw_step_factor(&mut rng);
+            assert!(f >= 1.0);
+            worst = worst.max(f);
+        }
+        // ~200 expected tail hits of >= 10x; the worst must be far above
+        // the 1.05 noise ceiling.
+        assert!(worst > 5.0, "worst={worst}");
+    }
+
+    #[test]
+    fn crash_rate_near_drop_prob() {
+        let p = ClusterProfile::flaky_federated();
+        let mut rng = Rng::new(5);
+        let crashes = (0..20_000).filter(|_| p.draw_crash(&mut rng)).count();
+        assert!((700..1_300).contains(&crashes), "{crashes}");
+    }
+
+    #[test]
+    fn faulty_presets_have_timeouts() {
+        for p in ClusterProfile::presets() {
+            if p.drop_prob > 0.0 {
+                assert!(p.timeout_factor > 0.0, "{} can stall forever", p.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Round timelines: what the event engine records, and its CSV export.
+//!
+//! Two granularities, selected by [`Detail`]:
+//! * `Rounds` (the coordinator's default) keeps one [`RoundStat`] per
+//!   communication round — enough for time-to-accuracy plots and
+//!   barrier-wait breakdowns at negligible memory cost;
+//! * `Steps` additionally keeps the raw event stream (every grad
+//!   completion, barrier entry/exit, drop, allreduce done) for fine-grained
+//!   debugging and the engine microbench.
+
+use super::event::EventKind;
+
+/// How much the engine records while pricing rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Detail {
+    /// Record nothing (pure pricing; fastest).
+    Off,
+    /// One [`RoundStat`] per round.
+    Rounds,
+    /// [`RoundStat`]s plus the full event stream.
+    Steps,
+}
+
+/// One event with its absolute simulated timestamp.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimelineEvent {
+    /// Absolute simulated time (seconds since the run started).
+    pub t: f64,
+    /// Communication round the event belongs to (0-based).
+    pub round: u64,
+    pub kind: EventKind,
+}
+
+/// Per-round timing summary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundStat {
+    /// Communication round (0-based).
+    pub round: u64,
+    /// Local steps priced into this round.
+    pub steps: u64,
+    /// Absolute simulated time at round start.
+    pub start: f64,
+    /// Barrier exit minus round start: local compute plus straggler wait.
+    pub compute_span: f64,
+    /// Collective span (including link jitter).
+    pub comm_seconds: f64,
+    /// Longest time any client idled at the barrier.
+    pub max_barrier_wait: f64,
+    /// Mean barrier idle time across clients.
+    pub mean_barrier_wait: f64,
+    /// Clients that crashed or timed out this round.
+    pub dropped: u32,
+}
+
+impl RoundStat {
+    /// Absolute simulated time when the round's collective finished.
+    pub fn end(&self) -> f64 {
+        self.start + self.compute_span + self.comm_seconds
+    }
+}
+
+/// Everything a run's engine recorded.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Timeline {
+    pub rounds: Vec<RoundStat>,
+    /// Raw event stream ([`Detail::Steps`] only).
+    pub events: Vec<TimelineEvent>,
+}
+
+impl Timeline {
+    /// Run-total barrier idle of the *average* client: the sum over
+    /// rounds of the per-round mean wait (how long a typical client spent
+    /// parked at barriers across the whole run).
+    pub fn total_mean_barrier_wait(&self) -> f64 {
+        self.rounds.iter().map(|r| r.mean_barrier_wait).sum()
+    }
+
+    /// Run-total of each round's *longest* wait (first arrival to barrier
+    /// release, summed over rounds): the straggler-induced span overhead.
+    pub fn total_max_barrier_wait(&self) -> f64 {
+        self.rounds.iter().map(|r| r.max_barrier_wait).sum()
+    }
+
+    /// Total client-rounds dropped across the run.
+    pub fn total_dropped(&self) -> u64 {
+        self.rounds.iter().map(|r| r.dropped as u64).sum()
+    }
+
+    /// Write the per-round breakdown as CSV.
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::to_file(
+            path,
+            &[
+                "round",
+                "steps",
+                "start",
+                "compute_span",
+                "comm_seconds",
+                "barrier_wait_max",
+                "barrier_wait_mean",
+                "dropped",
+                "end",
+            ],
+        )?;
+        for r in &self.rounds {
+            w.row(&[
+                r.round.to_string(),
+                r.steps.to_string(),
+                format!("{:.6e}", r.start),
+                format!("{:.6e}", r.compute_span),
+                format!("{:.6e}", r.comm_seconds),
+                format!("{:.6e}", r.max_barrier_wait),
+                format!("{:.6e}", r.mean_barrier_wait),
+                r.dropped.to_string(),
+                format!("{:.6e}", r.end()),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(round: u64, wait: f64, dropped: u32) -> RoundStat {
+        RoundStat {
+            round,
+            steps: 10,
+            start: round as f64,
+            compute_span: 0.5,
+            comm_seconds: 0.25,
+            max_barrier_wait: wait,
+            mean_barrier_wait: wait / 2.0,
+            dropped,
+        }
+    }
+
+    #[test]
+    fn aggregates_sum_rounds() {
+        let t = Timeline {
+            rounds: vec![stat(0, 0.2, 1), stat(1, 0.4, 0)],
+            events: Vec::new(),
+        };
+        assert!((t.total_max_barrier_wait() - 0.6).abs() < 1e-12);
+        assert!((t.total_mean_barrier_wait() - 0.3).abs() < 1e-12);
+        assert_eq!(t.total_dropped(), 1);
+    }
+
+    #[test]
+    fn round_end_is_start_plus_spans() {
+        let r = stat(3, 0.1, 0);
+        assert!((r.end() - 3.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_round() {
+        let t = Timeline {
+            rounds: vec![stat(0, 0.2, 0), stat(1, 0.1, 2)],
+            events: Vec::new(),
+        };
+        let dir = std::env::temp_dir().join("stl_sgd_timeline_test");
+        let path = dir.join("timeline.csv");
+        t.write_csv(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s.lines().count(), 3); // header + 2 rounds
+        assert!(s.starts_with("round,steps,start,"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

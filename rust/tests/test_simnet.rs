@@ -1,0 +1,253 @@
+//! simnet <-> closed-form calibration equivalence and determinism.
+//!
+//! The contract (see rust/src/simnet/mod.rs): under the zero-variance
+//! `homogeneous` profile the discrete-event engine must reproduce the
+//! closed-form `sim::SimClock` totals *bit-for-bit* — same repeated
+//! -addition folds, same allreduce pricing — across every collective and
+//! any (N, d, comm_period). And any profile, however random, must be a
+//! pure function of the seed: identical configs yield identical event
+//! timelines.
+
+use stl_sgd::algo::{AlgoSpec, Phase, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::comm::Algorithm;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::sim::{ComputeModel, NetworkModel, SimClock};
+use stl_sgd::simnet::{ClusterProfile, Detail, SimNet};
+use stl_sgd::testing::{check, gen, PropConfig};
+
+const ALGS: [Algorithm; 3] = [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree];
+
+/// The closed-form clock for a round schedule, accumulated in the same
+/// order the coordinator prices rounds.
+fn closed_form_clock(
+    phases: &[Phase],
+    n: usize,
+    d: usize,
+    net: &NetworkModel,
+    cm: &ComputeModel,
+    alg: Algorithm,
+) -> SimClock {
+    let mut clock = SimClock::default();
+    let comm = net.allreduce_seconds(alg, n, d);
+    for p in phases {
+        let k = p.comm_period.max(1);
+        let full = p.steps / k;
+        let rem = p.steps % k;
+        for _ in 0..full {
+            clock.add_compute(cm.round_compute_seconds(p.batch, d, k));
+            clock.add_comm(comm);
+        }
+        if rem > 0 {
+            clock.add_compute(cm.round_compute_seconds(p.batch, d, rem));
+            clock.add_comm(comm);
+        }
+    }
+    clock
+}
+
+#[test]
+fn homogeneous_engine_matches_closed_form_bit_for_bit() {
+    // Property sweep: random (N, d, k, rounds) per case, one collective
+    // per case, engine totals must equal the closed-form totals exactly.
+    let net = NetworkModel::default();
+    let cm = ComputeModel::default();
+    check(
+        PropConfig {
+            cases: 48,
+            seed: 0x51,
+        },
+        "simnet homogeneous == closed form",
+        |rng, case| {
+            let alg = ALGS[case % 3];
+            let n = gen::usize_in(rng, 2, 33);
+            let d = gen::usize_in(rng, 8, 2048);
+            let k = gen::usize_in(rng, 1, 12) as u64;
+            let batch = gen::usize_in(rng, 1, 64);
+            let rounds = gen::usize_in(rng, 1, 6);
+            let mut sim = SimNet::new(
+                ClusterProfile::homogeneous(),
+                net,
+                cm,
+                alg,
+                n,
+                d,
+                case as u64,
+                Detail::Rounds,
+            );
+            let mut actual = SimClock::default();
+            let mut expect = SimClock::default();
+            for _ in 0..rounds {
+                let rt = sim.price_round(k, batch);
+                actual.add_compute(rt.compute_span);
+                actual.add_comm(rt.comm_seconds);
+                expect.add_compute(cm.round_compute_seconds(batch, d, k));
+                expect.add_comm(net.allreduce_seconds(alg, n, d));
+                if rt.max_barrier_wait != 0.0 || rt.dropped != 0 {
+                    return Err(format!(
+                        "homogeneous round has waits/drops: {rt:?} (alg={alg:?} n={n})"
+                    ));
+                }
+            }
+            if actual.compute_seconds.to_bits() != expect.compute_seconds.to_bits() {
+                return Err(format!(
+                    "compute {} != {} (alg={alg:?} n={n} d={d} k={k})",
+                    actual.compute_seconds, expect.compute_seconds
+                ));
+            }
+            if actual.comm_seconds.to_bits() != expect.comm_seconds.to_bits() {
+                return Err(format!(
+                    "comm {} != {} (alg={alg:?} n={n} d={d} k={k})",
+                    actual.comm_seconds, expect.comm_seconds
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn homogeneous_end_to_end_totals_match_closed_form() {
+    // Whole-coordinator equivalence: a real experiment priced through
+    // simnet lands on exactly the closed-form clock, for both a fixed
+    // comm period and the stagewise STL schedule, on every collective.
+    for variant in [Variant::LocalSgd, Variant::StlSc] {
+        for alg in ALGS {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = Workload::LogregTest;
+            cfg.engine = "native".into();
+            cfg.n_clients = 6; // non-power-of-two: exercises the Tree fix
+            cfg.collective = alg;
+            cfg.total_steps = 230;
+            cfg.algo = AlgoSpec {
+                variant,
+                eta1: 0.3,
+                k1: 7.0,
+                t1: 40,
+                batch: 8,
+                iid: true,
+                ..Default::default()
+            };
+            let trace = workloads::run_experiment(&cfg).unwrap();
+            let mut spec = cfg.algo.clone();
+            spec.shard_size = 64 / cfg.n_clients; // a9a_like(seed, 64, 16) iid shards
+            let phases = spec.phases(cfg.total_steps);
+            let expect = closed_form_clock(
+                &phases,
+                cfg.n_clients,
+                16,
+                &NetworkModel::default(),
+                &ComputeModel::default(),
+                alg,
+            );
+            assert_eq!(
+                trace.clock.compute_seconds.to_bits(),
+                expect.compute_seconds.to_bits(),
+                "{variant:?}/{alg:?} compute"
+            );
+            assert_eq!(
+                trace.clock.comm_seconds.to_bits(),
+                expect.comm_seconds.to_bits(),
+                "{variant:?}/{alg:?} comm"
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_timeline_for_every_profile() {
+    for profile in ClusterProfile::presets() {
+        let mk = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = Workload::LogregTest;
+            cfg.engine = "native".into();
+            cfg.n_clients = 4;
+            cfg.total_steps = 120;
+            cfg.seed = 13;
+            cfg.cluster = profile;
+            cfg.algo = AlgoSpec {
+                variant: Variant::LocalSgd,
+                eta1: 0.3,
+                k1: 6.0,
+                batch: 8,
+                ..Default::default()
+            };
+            workloads::run_experiment(&cfg).unwrap()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.timeline, b.timeline, "{} timeline", profile.name);
+        assert_eq!(
+            a.clock.total().to_bits(),
+            b.clock.total().to_bits(),
+            "{} clock",
+            profile.name
+        );
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.loss, pb.loss, "{} iter {}", profile.name, pa.iter);
+            assert_eq!(
+                pa.sim_seconds.to_bits(),
+                pb.sim_seconds.to_bits(),
+                "{} iter {}",
+                profile.name,
+                pa.iter
+            );
+        }
+    }
+}
+
+#[test]
+fn different_seeds_price_differently_under_noise() {
+    let price = |seed: u64| {
+        let mut sim = SimNet::new(
+            ClusterProfile::heavy_tail_stragglers(),
+            NetworkModel::default(),
+            ComputeModel::default(),
+            Algorithm::Ring,
+            8,
+            1000,
+            seed,
+            Detail::Off,
+        );
+        let mut total = 0.0;
+        for _ in 0..20 {
+            let rt = sim.price_round(8, 16);
+            total += rt.compute_span + rt.comm_seconds;
+        }
+        total
+    };
+    assert_ne!(price(1).to_bits(), price(2).to_bits());
+}
+
+#[test]
+fn stragglers_make_frequent_sync_costlier() {
+    // Under heavy-tail stragglers, SyncSGD (a barrier every step) must
+    // pay more simulated time than Local SGD (k = 8) for the same step
+    // budget — the effect the closed-form span model cannot express.
+    let run = |variant: Variant, k1: f64| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = Workload::LogregTest;
+        cfg.engine = "native".into();
+        cfg.n_clients = 8;
+        cfg.total_steps = 240;
+        cfg.cluster = ClusterProfile::heavy_tail_stragglers();
+        cfg.algo = AlgoSpec {
+            variant,
+            eta1: 0.3,
+            k1,
+            batch: 8,
+            ..Default::default()
+        };
+        workloads::run_experiment(&cfg).unwrap()
+    };
+    let sync = run(Variant::SyncSgd, 1.0);
+    let local = run(Variant::LocalSgd, 8.0);
+    assert!(sync.comm.rounds > local.comm.rounds);
+    assert!(
+        sync.clock.total() > local.clock.total(),
+        "sync={} local={}",
+        sync.clock.total(),
+        local.clock.total()
+    );
+    // Barrier-wait accounting is populated under heterogeneity.
+    assert!(local.timeline.total_max_barrier_wait() > 0.0);
+}

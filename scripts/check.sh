@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate, one command: build, tests, formatting.
+#
+#   scripts/check.sh           # full gate
+#   scripts/check.sh --no-fmt  # skip the formatting check (older toolchains)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" != "--no-fmt" ]]; then
+    cargo fmt --check
+fi
+
+echo "check.sh: all green"
