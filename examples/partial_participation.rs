@@ -1,0 +1,163 @@
+//! Partial participation study: time-to-accuracy across participation
+//! policies x cluster profiles, with algorithm-visible dropout.
+//!
+//!     cargo run --release --example partial_participation -- \
+//!         [--policies all,arrived,0.5,0.25] \
+//!         [--clusters flaky-federated,elastic-federated] \
+//!         [--steps 3000] [--clients 8] [--k1 16] [--gap 1e-3] \
+//!         [--out-dir results/partial]
+//!
+//! PR-1's straggler study priced faults as timing only — a dropped client
+//! still entered every average. This study exercises the elastic-membership
+//! path: under `arrived` the round averages only the clients that made the
+//! barrier, under a fraction the server additionally samples the fleet
+//! FedAvg-style, and non-participants are rolled back to their last-synced
+//! model. Outputs one trace CSV and one timeline CSV (with participation
+//! columns) per cell, plus a summary CSV of rounds, partial rounds, mean
+//! participation, simulated seconds and time/rounds-to-gap.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "partial_participation",
+        "STL-SGD time-to-accuracy across participation policies and cluster profiles",
+    )
+    .opt(
+        "policies",
+        "all,arrived,0.5,0.25",
+        "comma-separated participation policies (all | arrived | fraction in (0,1])",
+    )
+    .opt(
+        "clusters",
+        "flaky-federated,elastic-federated",
+        "comma-separated cluster profiles to sweep",
+    )
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("algorithm", "stl-sc", "algorithm (sync|local|stl-sc|...)")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "16", "initial communication period")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt("gap", "1e-3", "objective-gap target for time-to-accuracy")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/partial", "output directory")
+    .parse();
+
+    let policies: Vec<ParticipationPolicy> = args
+        .get_list("policies")
+        .iter()
+        .map(|s| {
+            ParticipationPolicy::parse(s)
+                .unwrap_or_else(|| panic!("unknown participation policy {s:?}"))
+        })
+        .collect();
+    let clusters: Vec<ClusterProfile> = args
+        .get_list("clusters")
+        .iter()
+        .map(|s| {
+            ClusterProfile::parse(s).unwrap_or_else(|| panic!("unknown cluster profile {s:?}"))
+        })
+        .collect();
+    let workload = Workload::parse(args.get("workload")).expect("convex workload");
+    anyhow::ensure!(workload.is_convex(), "partial_participation needs a convex workload");
+    let variant = Variant::parse(args.get("algorithm"))
+        .unwrap_or_else(|| panic!("unknown algorithm {:?}", args.get("algorithm")));
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let gap = args.get_f64("gap");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    let f_star = workloads::compute_f_star(workload, seed, 2000);
+    println!(
+        "workload={} algorithm={} N={n} steps={steps} k1={k1} gap={gap:.0e} f*={f_star:.6}",
+        workload.name(),
+        variant.name()
+    );
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join("summary.csv"),
+        &[
+            "cluster",
+            "participation",
+            "rounds",
+            "partial_rounds",
+            "empty_rounds",
+            "mean_participants",
+            "dropped_client_rounds",
+            "churn_left",
+            "churn_joined",
+            "sim_total_seconds",
+            "final_gap",
+            "seconds_to_gap",
+            "rounds_to_gap",
+        ],
+    )?;
+
+    for cluster in &clusters {
+        println!("\ncluster = {}", cluster.name);
+        for &policy in &policies {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = workload;
+            cfg.n_clients = n;
+            cfg.total_steps = steps;
+            cfg.seed = seed;
+            cfg.cluster = *cluster;
+            cfg.participation = policy;
+            cfg.algo = AlgoSpec {
+                variant,
+                eta1: 3.2,
+                alpha: 1e-3,
+                k1,
+                t1,
+                batch: 32,
+                iid: true,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let trace = workloads::run_experiment(&cfg)?;
+            let to_gap_s = trace.seconds_to_gap(f_star, gap);
+            let to_gap_r = trace.rounds_to_gap(f_star, gap);
+            println!(
+                "  participation={:<8} rounds={:<5} partial={:<5} mean_part={:>5.2} \
+                 final_gap={:>10.3e} to_gap={:?}s wall={:.1}s",
+                policy.label(),
+                trace.comm.rounds,
+                trace.comm.partial_rounds,
+                trace.comm.mean_participation(),
+                trace.final_loss() - f_star,
+                to_gap_s.map(|s| (s * 1e3).round() / 1e3),
+                t0.elapsed().as_secs_f64(),
+            );
+            let tag = format!("{}_{}", cluster.name, policy.label());
+            trace.write_csv(&out_dir.join(format!("trace_{tag}.csv")))?;
+            trace.write_timeline_csv(&out_dir.join(format!("timeline_{tag}.csv")))?;
+            summary.row(&[
+                cluster.name.to_string(),
+                policy.label(),
+                trace.comm.rounds.to_string(),
+                trace.comm.partial_rounds.to_string(),
+                trace.comm.empty_rounds.to_string(),
+                format!("{:.4}", trace.comm.mean_participation()),
+                trace.timeline.total_dropped().to_string(),
+                trace.timeline.total_left().to_string(),
+                trace.timeline.total_joined().to_string(),
+                format!("{:.6e}", trace.clock.total()),
+                format!("{:.6e}", trace.final_loss() - f_star),
+                to_gap_s.map(|s| format!("{s:.6e}")).unwrap_or_default(),
+                to_gap_r.map(|r| r.to_string()).unwrap_or_default(),
+            ])?;
+        }
+    }
+    summary.flush()?;
+    println!("\nCSVs written under {}", out_dir.display());
+    Ok(())
+}

@@ -56,6 +56,8 @@ fn main() -> anyhow::Result<()> {
         eval_every_rounds: 2,
         engine: "xla".into(),
         s_percent: 0.0,
+        // cluster/participation defaults: homogeneous fleet, policy `all`.
+        ..ExperimentConfig::default()
     };
 
     eprintln!(

@@ -48,6 +48,16 @@ impl Phase {
     pub fn comm_rounds(&self) -> u64 {
         self.steps.div_ceil(self.comm_period)
     }
+
+    /// Round-count accounting under partial participation: the paper's
+    /// communication complexities (O(N log T) IID, O(sqrt(NT)) Non-IID)
+    /// count *client-round* participations, so a round that averages only
+    /// `participants` of the fleet contributes proportionally less. This
+    /// is the scheduled upper bound; the realized total is
+    /// `CommStats::participant_client_rounds`.
+    pub fn client_rounds(&self, participants: u64) -> u64 {
+        self.comm_rounds() * participants
+    }
 }
 
 #[cfg(test)]
@@ -98,5 +108,21 @@ mod tests {
             inv_gamma: 0.0,
         };
         assert_eq!(p.comm_rounds(), 11);
+    }
+
+    #[test]
+    fn client_rounds_scale_with_participants() {
+        let p = Phase {
+            stage: 1,
+            steps: 100,
+            comm_period: 10,
+            batch: 8,
+            lr: LrSchedule::Const(0.1),
+            reset_anchor: false,
+            inv_gamma: 0.0,
+        };
+        assert_eq!(p.client_rounds(8), 80); // full fleet of 8
+        assert_eq!(p.client_rounds(2), 20); // quarter participation
+        assert_eq!(p.client_rounds(0), 0);
     }
 }

@@ -206,6 +206,7 @@ pub fn run_experiment_with_stop(
         n_clients: cfg.n_clients,
         collective: cfg.collective,
         profile: cfg.cluster,
+        participation: cfg.participation,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,
         seed: cfg.seed,

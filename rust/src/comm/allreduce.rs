@@ -44,6 +44,36 @@ pub fn average(models: &mut [Vec<f32>], alg: Algorithm) {
     }
 }
 
+/// Participant-masked average: replace every model with `mask[i] == true`
+/// by the mean over exactly those models, leaving the other replicas
+/// untouched (they keep their last-synced state and rejoin a later
+/// round's collective). The masked collective runs the *same* dense
+/// schedule over the participant subset — participant results are
+/// bit-identical to calling [`average`] on just those replicas — so the
+/// all-ones mask reproduces the unmasked path exactly and an empty mask
+/// is a no-op (no collective runs when nobody arrived).
+pub fn average_masked(models: &mut [Vec<f32>], alg: Algorithm, mask: &[bool]) {
+    assert_eq!(models.len(), mask.len(), "one mask bit per replica");
+    let idx: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &b)| if b { Some(i) } else { None })
+        .collect();
+    if idx.is_empty() {
+        return;
+    }
+    if idx.len() == models.len() {
+        return average(models, alg);
+    }
+    // Move (not copy) the participant replicas into a dense scratch list,
+    // run the ordinary collective over it, and move them back.
+    let mut sub: Vec<Vec<f32>> = idx.iter().map(|&i| std::mem::take(&mut models[i])).collect();
+    average(&mut sub, alg);
+    for (&i, m) in idx.iter().zip(sub) {
+        models[i] = m;
+    }
+}
+
 fn naive(models: &mut [Vec<f32>]) {
     let n = models.len();
     let d = models[0].len();
@@ -166,7 +196,14 @@ pub fn bytes_per_client(alg: Algorithm, n: usize, d: usize) -> u64 {
     let payload = 4 * d as u64;
     match alg {
         // every client sends its model up + receives the mean; count sends
-        Algorithm::Naive => payload,
+        // (a single participant moves nothing — there is no collective)
+        Algorithm::Naive => {
+            if n <= 1 {
+                0
+            } else {
+                payload
+            }
+        }
         Algorithm::Ring => {
             if n <= 1 {
                 0
@@ -278,6 +315,61 @@ mod tests {
         average(&mut m, Algorithm::Ring);
         let after: f64 = m.iter().flatten().map(|&v| v as f64).sum();
         assert!((before - after).abs() < 1e-3, "{before} vs {after}");
+    }
+
+    #[test]
+    fn masked_average_untouched_nonparticipants_exact_participants() {
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let models = random_models(6, 13, 21);
+            let mask = [true, false, true, true, false, true];
+            let mut masked = models.clone();
+            average_masked(&mut masked, alg, &mask);
+            // Dense reference over just the participants.
+            let mut sub: Vec<Vec<f32>> = models
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &b)| b)
+                .map(|(m, _)| m.clone())
+                .collect();
+            average(&mut sub, alg);
+            let mut k = 0;
+            for i in 0..6 {
+                if mask[i] {
+                    assert_eq!(masked[i], sub[k], "{alg:?} participant {i}");
+                    k += 1;
+                } else {
+                    assert_eq!(masked[i], models[i], "{alg:?} bystander {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_all_ones_matches_unmasked_bitwise() {
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let mut a = random_models(5, 17, 3);
+            let mut b = a.clone();
+            average(&mut a, alg);
+            average_masked(&mut b, alg, &[true; 5]);
+            assert_eq!(a, b, "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn masked_empty_and_singleton_are_noops() {
+        let orig = random_models(4, 9, 5);
+        let mut m = orig.clone();
+        average_masked(&mut m, Algorithm::Ring, &[false; 4]);
+        assert_eq!(m, orig);
+        average_masked(&mut m, Algorithm::Tree, &[false, true, false, false]);
+        assert_eq!(m, orig, "a single participant already holds its own mean");
+    }
+
+    #[test]
+    #[should_panic(expected = "one mask bit per replica")]
+    fn masked_rejects_wrong_mask_len() {
+        let mut m = random_models(3, 4, 1);
+        average_masked(&mut m, Algorithm::Naive, &[true, false]);
     }
 
     #[test]

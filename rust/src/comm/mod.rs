@@ -17,7 +17,7 @@
 
 pub mod allreduce;
 
-pub use allreduce::{average, Algorithm};
+pub use allreduce::{average, average_masked, Algorithm};
 
 /// Communication accounting for one experiment run.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -28,6 +28,15 @@ pub struct CommStats {
     pub bytes_per_client: u64,
     /// Simulated communication seconds (see sim::NetworkModel).
     pub sim_comm_seconds: f64,
+    /// Rounds whose average covered a strict subset of the fleet
+    /// (partial participation; always 0 under policy `all`).
+    pub partial_rounds: u64,
+    /// Rounds where nobody participated, so no collective ran.
+    pub empty_rounds: u64,
+    /// Sum over rounds of the participant count: the client-round total
+    /// the paper's per-client communication complexities count, which a
+    /// round averaging a subset grows by less than a full fleet.
+    pub participant_client_rounds: u64,
 }
 
 impl CommStats {
@@ -35,6 +44,27 @@ impl CommStats {
         self.rounds += 1;
         self.bytes_per_client += bytes_per_client;
         self.sim_comm_seconds += sim_seconds;
+    }
+
+    /// Round-count accounting under partial participation: fold one
+    /// round's participant count (out of `fleet` clients) into the
+    /// partial/empty/client-round tallies.
+    pub fn record_participation(&mut self, participants: u64, fleet: u64) {
+        self.participant_client_rounds += participants;
+        if participants < fleet {
+            self.partial_rounds += 1;
+        }
+        if participants == 0 {
+            self.empty_rounds += 1;
+        }
+    }
+
+    /// Mean participants per recorded round (the fleet size under `all`).
+    pub fn mean_participation(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.participant_client_rounds as f64 / self.rounds as f64
     }
 }
 
@@ -50,5 +80,20 @@ mod tests {
         assert_eq!(s.rounds, 2);
         assert_eq!(s.bytes_per_client, 150);
         assert!((s.sim_comm_seconds - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn participation_accounting() {
+        let mut s = CommStats::default();
+        for participants in [4u64, 3, 0, 4] {
+            s.record_round(10, 0.1);
+            s.record_participation(participants, 4);
+        }
+        assert_eq!(s.rounds, 4);
+        assert_eq!(s.partial_rounds, 2); // the 3- and 0-participant rounds
+        assert_eq!(s.empty_rounds, 1);
+        assert_eq!(s.participant_client_rounds, 11);
+        assert!((s.mean_participation() - 2.75).abs() < 1e-12);
+        assert_eq!(CommStats::default().mean_participation(), 0.0);
     }
 }

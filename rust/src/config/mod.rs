@@ -7,7 +7,7 @@
 
 use crate::algo::{AlgoSpec, Variant};
 use crate::comm::Algorithm;
-use crate::simnet::ClusterProfile;
+use crate::simnet::{ClusterProfile, ParticipationPolicy};
 use crate::util::json::Json;
 
 /// Which dataset/model workload to run.
@@ -94,8 +94,12 @@ pub struct ExperimentConfig {
     pub algo: AlgoSpec,
     pub collective: Algorithm,
     /// Cluster profile for the simnet round pricer ("homogeneous" |
-    /// "mild-hetero" | "heavy-tail-stragglers" | "flaky-federated").
+    /// "mild-hetero" | "heavy-tail-stragglers" | "flaky-federated" |
+    /// "elastic-federated").
     pub cluster: ClusterProfile,
+    /// Partial-participation policy ("all" | "arrived" | a fraction in
+    /// (0, 1], e.g. 0.25 for FedAvg-style client sampling).
+    pub participation: ParticipationPolicy,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -113,6 +117,7 @@ impl Default for ExperimentConfig {
             algo: AlgoSpec::default(),
             collective: Algorithm::Ring,
             cluster: ClusterProfile::homogeneous(),
+            participation: ParticipationPolicy::All,
             eval_every_rounds: 1,
             engine: "threaded".into(),
         }
@@ -163,6 +168,16 @@ impl ExperimentConfig {
         if let Some(p) = gets("cluster") {
             cfg.cluster = ClusterProfile::parse(&p)
                 .ok_or_else(|| anyhow::anyhow!("unknown cluster profile {p}"))?;
+        }
+        if let Some(v) = j.get("participation") {
+            // Accept both "arrived" (string) and 0.25 (number) forms.
+            let s = match (v.as_str(), v.as_f64()) {
+                (Some(s), _) => s.to_string(),
+                (None, Some(f)) => format!("{f}"),
+                _ => anyhow::bail!("participation must be a string or a number"),
+            };
+            cfg.participation = ParticipationPolicy::parse(&s)
+                .ok_or_else(|| anyhow::anyhow!("unknown participation policy {s}"))?;
         }
         if let Some(a) = gets("algorithm") {
             cfg.algo.variant =
@@ -245,6 +260,7 @@ impl ExperimentConfig {
         take!(engine);
         take!(collective);
         take!(cluster);
+        take!(participation);
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
         }
@@ -305,6 +321,23 @@ mod tests {
         assert_eq!(cfg.workload, Workload::LogregTest);
         assert!(cfg.iid);
         assert_eq!(cfg.cluster, ClusterProfile::homogeneous());
+        assert_eq!(cfg.participation, ParticipationPolicy::All);
+    }
+
+    #[test]
+    fn parses_participation_string_and_number() {
+        let j = Json::parse(r#"{"participation": "arrived"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.participation, ParticipationPolicy::Arrived);
+        let j = Json::parse(r#"{"participation": 0.25}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.participation, ParticipationPolicy::Fraction(0.25));
+        for bad in [r#"{"participation": "sometimes"}"#, r#"{"participation": 1.5}"#] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
     }
 
     #[test]
@@ -337,6 +370,11 @@ mod tests {
         cfg.apply_override("cluster", "flaky-federated").unwrap();
         assert_eq!(cfg.cluster, ClusterProfile::flaky_federated());
         assert_eq!(cfg.algo.eta1, 0.4); // untouched by the cluster override
+        cfg.apply_override("participation", "arrived").unwrap();
+        assert_eq!(cfg.participation, ParticipationPolicy::Arrived);
+        cfg.apply_override("participation", "0.5").unwrap();
+        assert_eq!(cfg.participation, ParticipationPolicy::Fraction(0.5));
+        assert_eq!(cfg.cluster, ClusterProfile::flaky_federated()); // kept
     }
 
     #[test]

@@ -106,6 +106,19 @@ impl Trace {
                 "dropped_client_rounds",
                 Json::num(self.timeline.total_dropped() as f64),
             ),
+            (
+                "partial_rounds",
+                Json::num(self.comm.partial_rounds as f64),
+            ),
+            ("empty_rounds", Json::num(self.comm.empty_rounds as f64)),
+            (
+                "participant_client_rounds",
+                Json::num(self.comm.participant_client_rounds as f64),
+            ),
+            (
+                "mean_participation",
+                Json::num(self.comm.mean_participation()),
+            ),
             ("stopped_early", Json::Bool(self.stopped_early)),
             (
                 "points",

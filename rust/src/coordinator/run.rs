@@ -17,7 +17,7 @@ use crate::comm;
 use crate::data::{sampler::MinibatchSampler, Shard};
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel, SimClock};
-use crate::simnet::{ClusterProfile, Detail, SimNet};
+use crate::simnet::{ClusterProfile, Detail, ParticipationPolicy, SimNet};
 
 /// Metric a stop rule watches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,6 +53,14 @@ pub struct RunConfig {
     pub profile: ClusterProfile,
     /// Timeline granularity recorded into the trace.
     pub timeline_detail: Detail,
+    /// Partial-participation policy. `All` (the default) is the PR-1
+    /// invariant, bit-for-bit: every replica enters every average and the
+    /// cluster profile only changes timing. `Arrived` / `Fraction` make
+    /// dropout algorithm-visible: the round averages only the masked
+    /// clients, non-participants are rolled back to their last-synced
+    /// model (a parameter server reusing stale client state), and the
+    /// recorded trace evaluates the server-side averaged model.
+    pub participation: ParticipationPolicy,
 }
 
 impl Default for RunConfig {
@@ -68,6 +76,7 @@ impl Default for RunConfig {
             eval_accuracy: true,
             profile: ClusterProfile::homogeneous(),
             timeline_detail: Detail::Rounds,
+            participation: ParticipationPolicy::All,
         }
     }
 }
@@ -118,7 +127,20 @@ pub fn run(
         dim,
         cfg.seed,
         cfg.timeline_detail,
-    );
+    )
+    .with_policy(cfg.participation);
+
+    // Partial participation bookkeeping (policies other than `All`): the
+    // per-client last-synced snapshots a non-participant is rolled back
+    // to, and the server-side model the trace evaluates. Under `All`
+    // neither is touched and the loop below is the PR-1 code path.
+    let masked = !cfg.participation.is_all();
+    let mut synced: Vec<Vec<f32>> = if masked {
+        (0..n).map(|_| theta0.to_vec()).collect()
+    } else {
+        Vec::new()
+    };
+    let mut server: Vec<f32> = if masked { theta0.to_vec() } else { Vec::new() };
 
     // Initial evaluation (iteration 0, before any work).
     let loss0 = engine.full_loss(&anchor);
@@ -142,8 +164,9 @@ pub fn run(
     'outer: for phase in phases {
         if phase.reset_anchor {
             // Models are synced at phase boundaries; the stage anchor x_s is
-            // the shared iterate.
-            anchor.copy_from_slice(&thetas[0]);
+            // the shared iterate (the server model when a participation
+            // policy leaves some replicas unsynced).
+            anchor.copy_from_slice(if masked { &server } else { &thetas[0] });
         }
         let k = phase.comm_period.max(1);
         let mut batches: Vec<Vec<usize>> = Vec::with_capacity(n);
@@ -164,18 +187,42 @@ pub fn run(
 
             let at_comm_point = (step + 1) % k == 0 || step + 1 == phase.steps;
             if at_comm_point {
-                comm::average(&mut thetas, cfg.collective);
-                let rt = simnet.price_round(steps_in_round, phase.batch);
+                // Price first: the engine's participation mask decides who
+                // enters this round's average (pricing never depends on
+                // the model values, so the order is free).
+                let (rt, part) = simnet.price_round_masked(steps_in_round, phase.batch);
+                let round_bytes = if masked {
+                    comm::average_masked(&mut thetas, cfg.collective, part.as_slice());
+                    for i in 0..n {
+                        if part.participates(i) {
+                            synced[i].copy_from_slice(&thetas[i]);
+                        } else {
+                            // Algorithm-visible dropout: the round's local
+                            // work is lost; the client resumes from its
+                            // last-synced model when it rejoins.
+                            thetas[i].copy_from_slice(&synced[i]);
+                        }
+                    }
+                    if let Some(lead) = part.first() {
+                        server.copy_from_slice(&thetas[lead]);
+                    }
+                    comm::allreduce::bytes_per_client(cfg.collective, part.count(), dim)
+                } else {
+                    comm::average(&mut thetas, cfg.collective);
+                    bytes_per_round
+                };
                 steps_in_round = 0;
                 clock.add_compute(rt.compute_span);
                 clock.add_comm(rt.comm_seconds);
-                comm_stats.record_round(bytes_per_round, rt.comm_seconds);
+                comm_stats.record_round(round_bytes, rt.comm_seconds);
+                comm_stats.record_participation(part.count() as u64, n as u64);
                 rounds += 1;
 
                 if rounds % cfg.eval_every_rounds == 0 {
-                    let loss = engine.full_loss(&thetas[0]);
+                    let eval_model: &[f32] = if masked { &server } else { &thetas[0] };
+                    let loss = engine.full_loss(eval_model);
                     let acc = if cfg.eval_accuracy {
-                        engine.full_accuracy(&thetas[0])
+                        engine.full_accuracy(eval_model)
                     } else {
                         f64::NAN
                     };
@@ -485,6 +532,94 @@ mod tests {
             assert_eq!(a.loss, b.loss, "iter {}", a.iter);
         }
         assert!(tail.clock.total() > homo.clock.total());
+    }
+
+    #[test]
+    fn arrived_equals_all_when_everyone_arrives() {
+        // Under the fault-free homogeneous profile every client reaches
+        // every barrier, so the masked path must reproduce the legacy
+        // path bit-for-bit (mask bookkeeping included).
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let all = run_native(oracle.clone(), &shards, &spec, 200, &base_cfg(4), &theta0);
+        let mut cfg = base_cfg(4);
+        cfg.participation = ParticipationPolicy::Arrived;
+        let arrived = run_native(oracle, &shards, &spec, 200, &cfg, &theta0);
+        assert_eq!(all.points.len(), arrived.points.len());
+        for (pa, pb) in all.points.iter().zip(&arrived.points) {
+            assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "iter {}", pa.iter);
+        }
+        assert_eq!(arrived.comm.partial_rounds, 0);
+        assert_eq!(
+            arrived.comm.participant_client_rounds,
+            arrived.comm.rounds * 4
+        );
+    }
+
+    #[test]
+    fn arrived_on_flaky_averages_subsets_and_changes_trajectory() {
+        let (oracle, shards) = setup(6);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 4.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(6);
+        cfg.profile = ClusterProfile::flaky_federated();
+        let all = run_native(oracle.clone(), &shards, &spec, 480, &cfg, &theta0);
+        cfg.participation = ParticipationPolicy::Arrived;
+        let arrived = run_native(oracle, &shards, &spec, 480, &cfg, &theta0);
+        // Dropout is now algorithm-visible: some rounds averaged a strict
+        // subset, and the learning trajectory is no longer the timing-only
+        // one.
+        assert!(arrived.comm.partial_rounds > 0, "no partial rounds in 120");
+        assert!(
+            arrived.timeline.rounds.iter().any(|r| r.participants < 6),
+            "participation columns never dipped below the fleet"
+        );
+        assert!(
+            all.points.iter().zip(&arrived.points).any(|(a, b)| a.loss != b.loss),
+            "masked averaging never changed the trajectory"
+        );
+        // The trajectory still converges on this convex problem.
+        assert!(arrived.final_loss() < arrived.points[0].loss * 0.95);
+    }
+
+    #[test]
+    fn fraction_policy_runs_and_records_sampling() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(4);
+        cfg.participation = ParticipationPolicy::Fraction(0.5);
+        let trace = run_native(oracle, &shards, &spec, 200, &cfg, &theta0);
+        // ceil(0.5 * 4) = 2 participants every round under homogeneous.
+        assert!(trace.timeline.rounds.iter().all(|r| r.participants == 2));
+        assert_eq!(trace.comm.partial_rounds, trace.comm.rounds);
+        assert_eq!(
+            trace.comm.participant_client_rounds,
+            trace.comm.rounds * 2
+        );
+        assert!(trace.final_loss().is_finite());
     }
 
     #[test]

@@ -164,6 +164,47 @@ mod tests {
     }
 
     #[test]
+    fn threaded_matches_native_under_partial_participation() {
+        // The participation mask is drawn by the simnet engine from the
+        // run seed, never from execution order — so the threaded engine
+        // must walk the identical masked trajectory.
+        use crate::algo::{AlgoSpec, Variant};
+        use crate::coordinator::run::{run, RunConfig};
+        use crate::data::partition;
+        use crate::rng::Rng;
+        use crate::simnet::{ClusterProfile, ParticipationPolicy};
+
+        let ds = Arc::new(synth::a9a_like(2, 256, 12));
+        let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+        let shards = partition::iid(&ds, 4, &mut Rng::new(0));
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let phases = spec.phases(150);
+        let cfg = RunConfig {
+            n_clients: 4,
+            profile: ClusterProfile::flaky_federated(),
+            participation: ParticipationPolicy::Arrived,
+            ..Default::default()
+        };
+        let theta0 = vec![0.0f32; 12];
+        let mut native = NativeCompute::new(oracle.clone());
+        let a = run(&mut native, &shards, &phases, &cfg, &theta0, "native");
+        let mut threaded = ThreadedCompute::new(oracle, 4);
+        let b = run(&mut threaded, &shards, &phases, &cfg, &theta0, "threaded");
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.loss, pb.loss, "iter {}", pa.iter);
+        }
+        assert_eq!(a.timeline, b.timeline);
+    }
+
+    #[test]
     fn more_workers_than_clients_ok() {
         let ds = Arc::new(synth::a9a_like(5, 64, 8));
         let oracle = Arc::new(NativeLogreg::new(ds, 0.0));

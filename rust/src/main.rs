@@ -37,7 +37,12 @@ fn main() -> anyhow::Result<()> {
     .opt(
         "cluster",
         "",
-        "cluster profile (homogeneous|mild-hetero|heavy-tail-stragglers|flaky-federated)",
+        "cluster profile (homogeneous|mild-hetero|heavy-tail-stragglers|flaky-federated|elastic-federated)",
+    )
+    .opt(
+        "participation",
+        "",
+        "participation policy: all (every replica averaged; timing-only faults), arrived (average only clients that made the barrier), or a fraction in (0,1] for FedAvg-style client sampling",
     )
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
@@ -66,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         ("seed", "seed"),
         ("eval-every", "eval_every_rounds"),
         ("cluster", "cluster"),
+        ("participation", "participation"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
@@ -89,7 +95,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     eprintln!(
-        "workload={} algorithm={} engine={} clients={} steps={} partition={} cluster={} seed={}",
+        "workload={} algorithm={} engine={} clients={} steps={} partition={} cluster={} \
+         participation={} seed={}",
         cfg.workload.name(),
         cfg.algo.variant.name(),
         cfg.engine,
@@ -97,6 +104,7 @@ fn main() -> anyhow::Result<()> {
         cfg.total_steps,
         if cfg.iid { "IID".into() } else { format!("Non-IID(s={}%)", cfg.s_percent) },
         cfg.cluster.name,
+        cfg.participation.label(),
         cfg.seed,
     );
 
@@ -126,6 +134,16 @@ fn main() -> anyhow::Result<()> {
         trace.timeline.total_mean_barrier_wait(),
         trace.timeline.total_max_barrier_wait(),
         trace.timeline.total_dropped(),
+    );
+    println!(
+        "participation [{}]: partial_rounds={} empty_rounds={} mean_participants={:.2} \
+         churn: joined={} left={}",
+        cfg.participation.label(),
+        trace.comm.partial_rounds,
+        trace.comm.empty_rounds,
+        trace.comm.mean_participation(),
+        trace.timeline.total_joined(),
+        trace.timeline.total_left(),
     );
     if cfg.workload.is_convex() {
         let f_star = workloads::compute_f_star(cfg.workload, cfg.seed, 2000);

@@ -16,16 +16,29 @@
 //! (see `ComputeModel::round_compute_seconds` and tests/test_simnet.rs).
 
 use super::event::{EventHeap, EventKind};
+use super::participation::{Participation, ParticipationPolicy};
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline, TimelineEvent};
 use crate::comm::Algorithm;
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel};
 
+/// Split labels for the non-client streams. Client timing streams use
+/// labels 1..=n, so the auxiliary streams sit far above any realistic
+/// fleet size.
+const CHURN_STREAM_BASE: u64 = 1 << 40;
+const SAMPLING_STREAM: u64 = 1 << 41;
+
 struct Client {
     rng: Rng,
+    /// Stream for cross-round join/leave churn draws (separate from the
+    /// timing stream so churn never perturbs compute draws).
+    churn_rng: Rng,
     /// Permanent speed multiplier (1.0 = nominal; larger = slower).
     speed: f64,
+    /// Elastic membership: false while the client has churned out of the
+    /// fleet (it does no compute and enters no barrier until it rejoins).
+    present: bool,
 }
 
 /// Discrete-event simulator for one run's cluster.
@@ -40,6 +53,11 @@ pub struct SimNet {
     /// Stream for per-round link jitter (separate from client streams so
     /// comm draws never perturb compute draws).
     link_rng: Rng,
+    /// Stream for `ParticipationPolicy::Fraction` client sampling (only
+    /// consumed under that policy, so timing draws stay policy-invariant).
+    part_rng: Rng,
+    /// How the per-round participation mask is derived.
+    policy: ParticipationPolicy,
     now: f64,
     round: u64,
     pub timeline: Timeline,
@@ -65,7 +83,12 @@ impl SimNet {
             .map(|i| {
                 let mut rng = root.split(i as u64 + 1);
                 let speed = profile.draw_client_speed(&mut rng);
-                Client { rng, speed }
+                Client {
+                    rng,
+                    churn_rng: root.split(CHURN_STREAM_BASE + i as u64),
+                    speed,
+                    present: true,
+                }
             })
             .collect();
         Self {
@@ -77,11 +100,29 @@ impl SimNet {
             detail,
             clients,
             link_rng: root.split(0),
+            part_rng: root.split(SAMPLING_STREAM),
+            policy: ParticipationPolicy::All,
             now: 0.0,
             round: 0,
             timeline: Timeline::default(),
             events_processed: 0,
         }
+    }
+
+    /// Select the participation policy (defaults to
+    /// [`ParticipationPolicy::All`], the PR-1 timing-only fault model).
+    pub fn with_policy(mut self, policy: ParticipationPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy(&self) -> ParticipationPolicy {
+        self.policy
+    }
+
+    /// Clients currently in the fleet (n minus churned-out absentees).
+    pub fn present_clients(&self) -> usize {
+        self.clients.iter().filter(|c| c.present).count()
     }
 
     /// Simulated seconds elapsed across all rounds priced so far.
@@ -101,7 +142,19 @@ impl SimNet {
 
     /// Price one communication round of `steps` local iterations at
     /// per-client batch size `batch`, advancing the simulated clock.
+    /// Convenience wrapper over [`Self::price_round_masked`] for callers
+    /// that only need the timing.
     pub fn price_round(&mut self, steps: u64, batch: usize) -> RoundStat {
+        self.price_round_masked(steps, batch).0
+    }
+
+    /// Price one communication round and emit the algorithm-visible
+    /// [`Participation`] mask the configured policy derives for it:
+    /// `All` is always all-ones (the PR-1 invariant), `Arrived` marks the
+    /// clients that reached the barrier before it released, and
+    /// `Fraction` additionally restricts the round's active set to a
+    /// deterministic sample of the present fleet.
+    pub fn price_round_masked(&mut self, steps: u64, batch: usize) -> (RoundStat, Participation) {
         assert!(steps > 0, "a round prices at least one local step");
         let n = self.clients.len();
         let profile = self.profile;
@@ -122,12 +175,68 @@ impl SimNet {
             });
         }
 
+        // Elastic membership: cross-round join/leave churn, drawn from
+        // per-client streams at round start. No-op (and RNG-free) for
+        // profiles with zero churn knobs.
+        let mut joined = 0u32;
+        let mut left = 0u32;
+        for i in 0..n {
+            let c = &mut self.clients[i];
+            let kind = if c.present {
+                if !profile.draw_leave(&mut c.churn_rng) {
+                    continue;
+                }
+                c.present = false;
+                left += 1;
+                EventKind::ClientLeft { client: i }
+            } else {
+                if !profile.draw_join(&mut c.churn_rng) {
+                    continue;
+                }
+                c.present = true;
+                joined += 1;
+                EventKind::ClientJoined { client: i }
+            };
+            if self.detail == Detail::Steps {
+                self.timeline.events.push(TimelineEvent {
+                    t: start,
+                    round: self.round,
+                    kind,
+                });
+            }
+        }
+
+        // The round's active set: present clients, further subsampled
+        // under the fixed-fraction policy (unsampled clients sit the
+        // round out entirely — no compute, no barrier).
+        let mut active: Vec<bool> = self.clients.iter().map(|c| c.present).collect();
+        if let ParticipationPolicy::Fraction(frac) = self.policy {
+            let mut pool: Vec<usize> = (0..n).filter(|&i| active[i]).collect();
+            let m = if pool.is_empty() {
+                0
+            } else {
+                ((frac * pool.len() as f64).ceil() as usize).clamp(1, pool.len())
+            };
+            // Deterministic partial Fisher-Yates over the present pool.
+            for i in 0..m {
+                let j = i + self.part_rng.below(pool.len() - i);
+                pool.swap(i, j);
+            }
+            active = vec![false; n];
+            for &c in &pool[..m] {
+                active[c] = true;
+            }
+        }
+
         // Seed the heap: each live client's first step completion. Crashed
         // clients never arrive (completion stays +inf) and the barrier
         // timeout carries the round past them.
         let mut heap = EventHeap::new();
         let mut completion = vec![f64::INFINITY; n];
         for i in 0..n {
+            if !active[i] {
+                continue;
+            }
             if profile.draw_crash(&mut self.clients[i].rng) {
                 if self.detail == Detail::Steps {
                     self.timeline.events.push(TimelineEvent {
@@ -182,13 +291,18 @@ impl SimNet {
         }
         self.events_processed += pops + 3; // + round start/barrier/allreduce
 
-        // Barrier release: last arrival, or the timeout deadline if anyone
-        // is still out (crashed, or straggling past it). If nothing bounds
-        // the wait (no timeout, all crashed) fall back to the last arrival
-        // that did happen.
-        let all_done = completion.iter().cloned().fold(0.0f64, f64::max);
-        let exit = if all_done <= deadline && all_done.is_finite() {
-            all_done
+        // Barrier release: last arrival among the active set, or the
+        // timeout deadline if anyone is still out (crashed, or straggling
+        // past it). If nothing bounds the wait (no timeout, all crashed)
+        // fall back to the last arrival that did happen.
+        let mut active_done = 0.0f64;
+        for i in 0..n {
+            if active[i] {
+                active_done = active_done.max(completion[i]);
+            }
+        }
+        let exit = if active_done <= deadline && active_done.is_finite() {
+            active_done
         } else if deadline.is_finite() {
             deadline
         } else {
@@ -198,10 +312,15 @@ impl SimNet {
                 .filter(|c| c.is_finite())
                 .fold(0.0f64, f64::max)
         };
-        let dropped = completion.iter().filter(|&&c| c > exit).count() as u32;
+        let mut dropped = 0u32;
+        for i in 0..n {
+            if active[i] && completion[i] > exit {
+                dropped += 1;
+            }
+        }
         if self.detail == Detail::Steps {
             for (i, &c) in completion.iter().enumerate() {
-                if c > exit && c.is_finite() {
+                if active[i] && c > exit && c.is_finite() {
                     // straggled past the deadline (crashes were recorded
                     // at round start)
                     self.timeline.events.push(TimelineEvent {
@@ -220,15 +339,36 @@ impl SimNet {
 
         let mut max_wait = 0.0f64;
         let mut wait_sum = 0.0f64;
-        for &c in &completion {
-            let wait = exit - c.min(exit);
+        let mut n_active = 0usize;
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            n_active += 1;
+            let wait = exit - completion[i].min(exit);
             max_wait = max_wait.max(wait);
             wait_sum += wait;
         }
-        let mean_wait = wait_sum / n as f64;
+        let mean_wait = wait_sum / n_active.max(1) as f64;
 
-        let base_comm = self.net.allreduce_seconds(self.alg, n, self.dim);
-        let comm = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+        // The algorithm-visible mask: under `All` the full fleet (the
+        // legacy invariant — the average always covers every replica);
+        // otherwise the active clients that made the barrier in time.
+        let participation = match self.policy {
+            ParticipationPolicy::All => Participation::full(n),
+            _ => Participation::from_mask(
+                (0..n).map(|i| active[i] && completion[i] <= exit).collect(),
+            ),
+        };
+        let n_part = participation.count();
+
+        // The collective spans the participants (the whole fleet under
+        // `All`). The jitter draw always consumes the link stream so
+        // timing streams stay aligned across policies; with fewer than two
+        // participants no collective runs at all, so nothing is charged.
+        let base_comm = self.net.allreduce_seconds(self.alg, n_part, self.dim);
+        let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+        let comm = if n_part <= 1 { 0.0 } else { drawn };
         if self.detail == Detail::Steps {
             self.timeline.events.push(TimelineEvent {
                 t: start + exit + comm,
@@ -246,13 +386,16 @@ impl SimNet {
             max_barrier_wait: max_wait,
             mean_barrier_wait: mean_wait,
             dropped,
+            participants: n_part as u32,
+            joined,
+            left,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
         }
         self.now = stat.end();
         self.round += 1;
-        stat
+        (stat, participation)
     }
 }
 
@@ -373,6 +516,97 @@ mod tests {
         assert!(sim.timeline.rounds.is_empty());
         assert!(sim.timeline.events.is_empty());
         assert!(sim.events_processed >= 4 * 5);
+    }
+
+    #[test]
+    fn all_policy_mask_is_always_full() {
+        let mut sim = engine(ClusterProfile::flaky_federated(), 8, 11, Detail::Off);
+        for _ in 0..100 {
+            let (rt, part) = sim.price_round_masked(8, 16);
+            assert!(part.is_full());
+            assert_eq!(part.count(), 8);
+            assert_eq!(rt.participants, 8);
+            assert_eq!(rt.joined + rt.left, 0, "no churn knobs on flaky");
+        }
+    }
+
+    #[test]
+    fn arrived_policy_masks_out_dropped_clients() {
+        let mut sim = engine(ClusterProfile::flaky_federated(), 8, 11, Detail::Rounds)
+            .with_policy(ParticipationPolicy::Arrived);
+        let mut saw_partial = false;
+        for _ in 0..200 {
+            let (rt, part) = sim.price_round_masked(8, 16);
+            assert_eq!(part.count() as u32, rt.participants);
+            assert_eq!(part.count() as u32 + rt.dropped, 8, "arrived + dropped = fleet");
+            saw_partial |= !part.is_full();
+        }
+        assert!(saw_partial, "no partial round in 200 flaky rounds");
+    }
+
+    #[test]
+    fn churn_profile_cycles_membership_deterministically() {
+        let mk = || {
+            engine(ClusterProfile::elastic_federated(), 8, 5, Detail::Rounds)
+                .with_policy(ParticipationPolicy::Arrived)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for r in 0..200 {
+            let (sa, pa) = a.price_round_masked(6, 16);
+            let (sb, pb) = b.price_round_masked(6, 16);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+        }
+        assert!(a.timeline.total_left() > 0, "no leave events in 200 rounds");
+        assert!(a.timeline.total_joined() > 0, "no rejoin events in 200 rounds");
+        // Membership recovers: the fleet is never permanently dead.
+        assert!(a.present_clients() > 0);
+        assert!(a.timeline.rounds.iter().any(|r| r.participants == 8));
+    }
+
+    #[test]
+    fn fraction_policy_samples_fixed_subset_sizes() {
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 3, Detail::Rounds)
+            .with_policy(ParticipationPolicy::Fraction(0.5));
+        let mut masks = std::collections::BTreeSet::new();
+        for _ in 0..32 {
+            let (rt, part) = sim.price_round_masked(4, 16);
+            // No crashes under homogeneous: every sampled client arrives.
+            assert_eq!(part.count(), 4, "ceil(0.5 * 8)");
+            assert_eq!(rt.participants, 4);
+            assert_eq!(rt.dropped, 0);
+            masks.insert(part.indices());
+        }
+        assert!(masks.len() > 1, "sampling never varied the subset");
+    }
+
+    #[test]
+    fn fraction_policy_prices_comm_over_participants() {
+        let net = NetworkModel::default();
+        let mut full = engine(ClusterProfile::homogeneous(), 8, 3, Detail::Off);
+        let mut half = engine(ClusterProfile::homogeneous(), 8, 3, Detail::Off)
+            .with_policy(ParticipationPolicy::Fraction(0.5));
+        let f = full.price_round(4, 16);
+        let h = half.price_round(4, 16);
+        assert_eq!(f.comm_seconds, net.allreduce_seconds(Algorithm::Ring, 8, 1_000));
+        assert_eq!(h.comm_seconds, net.allreduce_seconds(Algorithm::Ring, 4, 1_000));
+        assert!(h.comm_seconds < f.comm_seconds);
+    }
+
+    #[test]
+    fn policy_does_not_perturb_all_policy_timing_streams() {
+        // The sampling stream is separate: an `Arrived` engine prices the
+        // same timings as an `All` engine (the mask, not the clock, is
+        // what changes).
+        let mk = |policy| {
+            engine(ClusterProfile::heavy_tail_stragglers(), 6, 21, Detail::Off).with_policy(policy)
+        };
+        let (mut a, mut b) = (mk(ParticipationPolicy::All), mk(ParticipationPolicy::Arrived));
+        for r in 0..50 {
+            let (sa, sb) = (a.price_round(8, 16), b.price_round(8, 16));
+            assert_eq!(sa.compute_span.to_bits(), sb.compute_span.to_bits(), "round {r}");
+            assert_eq!(sa.comm_seconds.to_bits(), sb.comm_seconds.to_bits(), "round {r}");
+        }
     }
 
     #[test]

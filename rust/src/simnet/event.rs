@@ -13,6 +13,12 @@ use std::collections::BinaryHeap;
 pub enum EventKind {
     /// A communication round begins (all clients start local steps).
     RoundStart,
+    /// Client rejoined the fleet at round start after churning out in an
+    /// earlier round (elastic membership; see `profile::ClusterProfile`).
+    ClientJoined { client: usize },
+    /// Client left the fleet at round start; it stays absent (no compute,
+    /// no barrier) until a later round's join draw brings it back.
+    ClientLeft { client: usize },
     /// Client finished local step `step` (0-based within the round).
     GradDone { client: usize, step: u64 },
     /// Client finished all its local steps and is waiting at the barrier.

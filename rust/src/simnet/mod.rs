@@ -12,14 +12,21 @@
 //!   time-ordered [`event::EventHeap`]; barrier with timeout-and-continue;
 //!   collectives priced by the calibrated [`crate::sim::NetworkModel`]
 //!   plus link jitter.
-//! * [`ClusterProfile`] (profile.rs) — four named presets
+//! * [`ClusterProfile`] (profile.rs) — five named presets
 //!   (`homogeneous`, `mild-hetero`, `heavy-tail-stragglers`,
-//!   `flaky-federated`) selectable via config key `cluster` / CLI
-//!   `--cluster`.
+//!   `flaky-federated`, `elastic-federated`) selectable via config key
+//!   `cluster` / CLI `--cluster`.
 //! * [`Timeline`] / [`RoundStat`] (timeline.rs) — per-round timing
 //!   breakdown (compute span, barrier waits, drops, collective span)
 //!   recorded into [`crate::coordinator::metrics::Trace`] and exportable
 //!   as CSV for the time-to-accuracy studies.
+//! * [`Participation`] / [`ParticipationPolicy`] (participation.rs) —
+//!   algorithm-visible partial participation: each round the engine emits
+//!   a deterministic participant mask (`all` preserves the PR-1
+//!   timing-only fault model bit-for-bit; `arrived` averages only the
+//!   clients that made the barrier; a fraction in (0, 1] adds FedAvg-style
+//!   client sampling), and cluster profiles can add cross-round
+//!   join/leave churn (`elastic-federated`).
 //!
 //! Calibration contract: under the zero-variance `homogeneous` profile the
 //! engine reproduces the closed-form `SimClock` totals *bit-for-bit*
@@ -27,15 +34,17 @@
 //! single source of truth for absolute costs and `simnet` only adds the
 //! distributional structure on top. Everything is seeded through
 //! [`crate::rng`]: the same experiment config run twice yields identical
-//! event timelines. See DESIGN.md for the architecture notes, including
-//! why faults are timing-level only.
+//! event timelines *and* identical participation masks. See DESIGN.md §2
+//! for the participation-policy semantics.
 
 pub mod engine;
 pub mod event;
+pub mod participation;
 pub mod profile;
 pub mod timeline;
 
 pub use engine::SimNet;
 pub use event::EventKind;
+pub use participation::{Participation, ParticipationPolicy};
 pub use profile::ClusterProfile;
 pub use timeline::{Detail, RoundStat, Timeline, TimelineEvent};

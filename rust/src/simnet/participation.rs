@@ -1,0 +1,208 @@
+//! Algorithm-visible partial participation: policies and per-round masks.
+//!
+//! PR-1's fault model was timing-level only — a crashed or timed-out client
+//! was dropped from the round's *timing* but its replica still entered the
+//! arithmetic average (DESIGN.md §2). This module makes dropout visible to
+//! the algorithm: every round the engine emits a [`Participation`] mask and
+//! the coordinator averages only the masked clients, which is the FedAvg
+//! partial-participation setting the ROADMAP names first.
+//!
+//! Three policies:
+//! * [`ParticipationPolicy::All`] — the PR-1 invariant, preserved
+//!   bit-for-bit: every replica enters every average, whatever the cluster
+//!   profile does to the timing. The mask is always all-ones.
+//! * [`ParticipationPolicy::Arrived`] — only clients that reached the
+//!   barrier before it released (not crashed, not churned out, not past the
+//!   timeout) enter the average; the rest keep their last-synced model and
+//!   rejoin at a later round.
+//! * [`ParticipationPolicy::Fraction`] — the server samples a fixed
+//!   fraction of the present fleet each round (deterministic, from a
+//!   dedicated seeded stream); unsampled clients sit the round out
+//!   entirely (no compute, no barrier), sampled clients still have to
+//!   arrive.
+
+/// How the per-round participation mask is derived.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParticipationPolicy {
+    /// Every client's replica enters every average (timing-only faults —
+    /// the legacy invariant, bit-for-bit identical to PR-1).
+    All,
+    /// Average only over clients that arrived at the barrier this round.
+    Arrived,
+    /// Each round, average over a deterministic sample of ~`fraction` of
+    /// the present clients (FedAvg-style client sampling). Must be in
+    /// (0, 1].
+    Fraction(f64),
+}
+
+impl ParticipationPolicy {
+    /// Parse `"all"`, `"arrived"`, or a fraction in (0, 1] (e.g. `"0.25"`).
+    pub fn parse(s: &str) -> Option<ParticipationPolicy> {
+        match s {
+            "all" => Some(ParticipationPolicy::All),
+            "arrived" => Some(ParticipationPolicy::Arrived),
+            _ => s
+                .parse::<f64>()
+                .ok()
+                .filter(|f| *f > 0.0 && *f <= 1.0)
+                .map(ParticipationPolicy::Fraction),
+        }
+    }
+
+    /// Stable textual form; `parse` round-trips it.
+    pub fn label(&self) -> String {
+        match self {
+            ParticipationPolicy::All => "all".into(),
+            ParticipationPolicy::Arrived => "arrived".into(),
+            ParticipationPolicy::Fraction(f) => format!("{f}"),
+        }
+    }
+
+    /// True for the legacy full-participation policy.
+    pub fn is_all(&self) -> bool {
+        matches!(self, ParticipationPolicy::All)
+    }
+}
+
+impl Default for ParticipationPolicy {
+    fn default() -> Self {
+        ParticipationPolicy::All
+    }
+}
+
+/// One round's algorithm-visible participant set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Participation {
+    mask: Vec<bool>,
+    count: usize,
+}
+
+impl Participation {
+    /// Everyone participates (the [`ParticipationPolicy::All`] mask).
+    pub fn full(n: usize) -> Self {
+        Self {
+            mask: vec![true; n],
+            count: n,
+        }
+    }
+
+    pub fn from_mask(mask: Vec<bool>) -> Self {
+        let count = mask.iter().filter(|&&b| b).count();
+        Self { mask, count }
+    }
+
+    /// Fleet size (participants + non-participants).
+    pub fn n(&self) -> usize {
+        self.mask.len()
+    }
+
+    /// Number of participating clients.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.count == self.mask.len()
+    }
+
+    /// True when nobody participates (no collective runs this round).
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn participates(&self, client: usize) -> bool {
+        self.mask[client]
+    }
+
+    pub fn as_slice(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// Lowest participating client index, if any (the coordinator reads the
+    /// post-average server model from this replica).
+    pub fn first(&self) -> Option<usize> {
+        self.mask.iter().position(|&b| b)
+    }
+
+    /// Participating client indices in ascending order.
+    pub fn indices(&self) -> Vec<usize> {
+        self.mask
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| if b { Some(i) } else { None })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_named_policies() {
+        assert_eq!(ParticipationPolicy::parse("all"), Some(ParticipationPolicy::All));
+        assert_eq!(
+            ParticipationPolicy::parse("arrived"),
+            Some(ParticipationPolicy::Arrived)
+        );
+        assert_eq!(
+            ParticipationPolicy::parse("0.25"),
+            Some(ParticipationPolicy::Fraction(0.25))
+        );
+        assert_eq!(
+            ParticipationPolicy::parse("1"),
+            Some(ParticipationPolicy::Fraction(1.0))
+        );
+        for bad in ["", "none", "0", "0.0", "-0.5", "1.5", "nan"] {
+            assert_eq!(ParticipationPolicy::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for p in [
+            ParticipationPolicy::All,
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            assert_eq!(ParticipationPolicy::parse(&p.label()), Some(p));
+        }
+    }
+
+    #[test]
+    fn default_is_all() {
+        assert!(ParticipationPolicy::default().is_all());
+        assert!(!ParticipationPolicy::Arrived.is_all());
+    }
+
+    #[test]
+    fn full_mask_counts_everyone() {
+        let p = Participation::full(5);
+        assert_eq!(p.n(), 5);
+        assert_eq!(p.count(), 5);
+        assert!(p.is_full());
+        assert!(!p.is_empty());
+        assert_eq!(p.first(), Some(0));
+        assert_eq!(p.indices(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn from_mask_counts_and_indexes() {
+        let p = Participation::from_mask(vec![false, true, false, true]);
+        assert_eq!(p.n(), 4);
+        assert_eq!(p.count(), 2);
+        assert!(!p.is_full());
+        assert!(p.participates(1) && !p.participates(2));
+        assert_eq!(p.first(), Some(1));
+        assert_eq!(p.indices(), vec![1, 3]);
+        assert_eq!(p.as_slice(), &[false, true, false, true]);
+    }
+
+    #[test]
+    fn empty_mask() {
+        let p = Participation::from_mask(vec![false; 3]);
+        assert!(p.is_empty());
+        assert_eq!(p.first(), None);
+        assert!(p.indices().is_empty());
+    }
+}

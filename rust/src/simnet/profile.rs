@@ -47,6 +47,15 @@ pub struct ClusterProfile {
     /// `drop_prob > 0`, else a crashed client would stall the round
     /// forever.
     pub timeout_factor: f64,
+    /// Per-round probability that a *present* client leaves the fleet
+    /// (elastic membership). Unlike a crash, leaving persists across
+    /// rounds: the client does no compute and enters no barrier until a
+    /// join draw brings it back. Must be paired with `join_prob > 0`, else
+    /// the fleet shrinks monotonically.
+    pub leave_prob: f64,
+    /// Per-round probability that an *absent* client rejoins the fleet at
+    /// round start.
+    pub join_prob: f64,
 }
 
 impl Default for ClusterProfile {
@@ -71,6 +80,8 @@ impl ClusterProfile {
             latency_jitter_s: 0.0,
             drop_prob: 0.0,
             timeout_factor: 0.0,
+            leave_prob: 0.0,
+            join_prob: 0.0,
         }
     }
 
@@ -115,6 +126,21 @@ impl ClusterProfile {
             latency_jitter_s: 20e-3,
             drop_prob: 0.05,
             timeout_factor: 3.0,
+            leave_prob: 0.0,
+            join_prob: 0.0,
+        }
+    }
+
+    /// Elastic federated fleet: the flaky edge profile plus cross-round
+    /// membership churn — each round a present client leaves with 3%
+    /// probability and an absent one rejoins with 25% (so ~11% of the
+    /// fleet is out at equilibrium, with multi-round absences).
+    pub fn elastic_federated() -> Self {
+        Self {
+            name: "elastic-federated",
+            leave_prob: 0.03,
+            join_prob: 0.25,
+            ..Self::flaky_federated()
         }
     }
 
@@ -124,17 +150,19 @@ impl ClusterProfile {
             "mild-hetero" => Some(Self::mild_hetero()),
             "heavy-tail-stragglers" => Some(Self::heavy_tail_stragglers()),
             "flaky-federated" => Some(Self::flaky_federated()),
+            "elastic-federated" => Some(Self::elastic_federated()),
             _ => None,
         }
     }
 
     /// All shipped presets (CLI help, sweeps, tests).
-    pub fn presets() -> [ClusterProfile; 4] {
+    pub fn presets() -> [ClusterProfile; 5] {
         [
             Self::homogeneous(),
             Self::mild_hetero(),
             Self::heavy_tail_stragglers(),
             Self::flaky_federated(),
+            Self::elastic_federated(),
         ]
     }
 
@@ -147,6 +175,7 @@ impl ClusterProfile {
             && self.link_jitter == 0.0
             && self.latency_jitter_s == 0.0
             && self.drop_prob == 0.0
+            && self.leave_prob == 0.0
     }
 
     /// Permanent speed multiplier for one client (>= 1.0).
@@ -189,6 +218,18 @@ impl ClusterProfile {
     pub fn draw_crash(&self, rng: &mut Rng) -> bool {
         self.drop_prob > 0.0 && rng.uniform() < self.drop_prob
     }
+
+    /// Whether one *present* client leaves the fleet at round start.
+    /// Consumes no RNG state when the churn knob is zero (the bit-exact
+    /// calibration regime, like every other draw helper).
+    pub fn draw_leave(&self, rng: &mut Rng) -> bool {
+        self.leave_prob > 0.0 && rng.uniform() < self.leave_prob
+    }
+
+    /// Whether one *absent* client rejoins the fleet at round start.
+    pub fn draw_join(&self, rng: &mut Rng) -> bool {
+        self.join_prob > 0.0 && rng.uniform() < self.join_prob
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +250,7 @@ mod tests {
         assert!(!ClusterProfile::mild_hetero().is_zero_variance());
         assert!(!ClusterProfile::heavy_tail_stragglers().is_zero_variance());
         assert!(!ClusterProfile::flaky_federated().is_zero_variance());
+        assert!(!ClusterProfile::elastic_federated().is_zero_variance());
     }
 
     #[test]
@@ -220,6 +262,8 @@ mod tests {
         assert_eq!(p.draw_step_factor(&mut rng), 1.0);
         assert_eq!(p.draw_comm_seconds(0.125, &mut rng), 0.125);
         assert!(!p.draw_crash(&mut rng));
+        assert!(!p.draw_leave(&mut rng));
+        assert!(!p.draw_join(&mut rng));
         assert_eq!(rng.next_u64(), before, "rng state was consumed");
     }
 
@@ -253,5 +297,26 @@ mod tests {
                 assert!(p.timeout_factor > 0.0, "{} can stall forever", p.name);
             }
         }
+    }
+
+    #[test]
+    fn churn_presets_can_rejoin() {
+        for p in ClusterProfile::presets() {
+            if p.leave_prob > 0.0 {
+                assert!(p.join_prob > 0.0, "{} shrinks monotonically", p.name);
+            }
+        }
+        let p = ClusterProfile::elastic_federated();
+        assert!(p.leave_prob > 0.0 && p.join_prob > p.leave_prob);
+    }
+
+    #[test]
+    fn churn_draw_rates_near_knobs() {
+        let p = ClusterProfile::elastic_federated();
+        let mut rng = Rng::new(9);
+        let leaves = (0..40_000).filter(|_| p.draw_leave(&mut rng)).count();
+        assert!((800..1_700).contains(&leaves), "{leaves}");
+        let joins = (0..40_000).filter(|_| p.draw_join(&mut rng)).count();
+        assert!((8_500..11_500).contains(&joins), "{joins}");
     }
 }

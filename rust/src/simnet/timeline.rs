@@ -46,10 +46,18 @@ pub struct RoundStat {
     pub comm_seconds: f64,
     /// Longest time any client idled at the barrier.
     pub max_barrier_wait: f64,
-    /// Mean barrier idle time across clients.
+    /// Mean barrier idle time across present clients.
     pub mean_barrier_wait: f64,
     /// Clients that crashed or timed out this round.
     pub dropped: u32,
+    /// Clients whose replica entered this round's average (the
+    /// algorithm-visible participant count; equals the fleet size under
+    /// `ParticipationPolicy::All`).
+    pub participants: u32,
+    /// Clients that rejoined the fleet at this round's start (churn).
+    pub joined: u32,
+    /// Clients that left the fleet at this round's start (churn).
+    pub left: u32,
 }
 
 impl RoundStat {
@@ -86,6 +94,31 @@ impl Timeline {
         self.rounds.iter().map(|r| r.dropped as u64).sum()
     }
 
+    /// Total client-round participations across the run (the denominator
+    /// of the paper's per-client communication complexity under partial
+    /// participation).
+    pub fn total_participants(&self) -> u64 {
+        self.rounds.iter().map(|r| r.participants as u64).sum()
+    }
+
+    /// Rounds whose average covered fewer than `fleet` clients.
+    pub fn partial_rounds(&self, fleet: usize) -> u64 {
+        self.rounds
+            .iter()
+            .filter(|r| (r.participants as usize) < fleet)
+            .count() as u64
+    }
+
+    /// Total join (rejoin) events across the run.
+    pub fn total_joined(&self) -> u64 {
+        self.rounds.iter().map(|r| r.joined as u64).sum()
+    }
+
+    /// Total leave events across the run.
+    pub fn total_left(&self) -> u64 {
+        self.rounds.iter().map(|r| r.left as u64).sum()
+    }
+
     /// Write the per-round breakdown as CSV.
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         let mut w = crate::util::csv::CsvWriter::to_file(
@@ -99,6 +132,9 @@ impl Timeline {
                 "barrier_wait_max",
                 "barrier_wait_mean",
                 "dropped",
+                "participants",
+                "joined",
+                "left",
                 "end",
             ],
         )?;
@@ -112,6 +148,9 @@ impl Timeline {
                 format!("{:.6e}", r.max_barrier_wait),
                 format!("{:.6e}", r.mean_barrier_wait),
                 r.dropped.to_string(),
+                r.participants.to_string(),
+                r.joined.to_string(),
+                r.left.to_string(),
                 format!("{:.6e}", r.end()),
             ])?;
         }
@@ -133,6 +172,9 @@ mod tests {
             max_barrier_wait: wait,
             mean_barrier_wait: wait / 2.0,
             dropped,
+            participants: 4 - dropped,
+            joined: 0,
+            left: dropped.min(1),
         }
     }
 
@@ -145,6 +187,11 @@ mod tests {
         assert!((t.total_max_barrier_wait() - 0.6).abs() < 1e-12);
         assert!((t.total_mean_barrier_wait() - 0.3).abs() < 1e-12);
         assert_eq!(t.total_dropped(), 1);
+        assert_eq!(t.total_participants(), 3 + 4);
+        assert_eq!(t.partial_rounds(4), 1);
+        assert_eq!(t.partial_rounds(3), 0);
+        assert_eq!(t.total_joined(), 0);
+        assert_eq!(t.total_left(), 1);
     }
 
     #[test]
@@ -165,6 +212,7 @@ mod tests {
         let s = std::fs::read_to_string(&path).unwrap();
         assert_eq!(s.lines().count(), 3); // header + 2 rounds
         assert!(s.starts_with("round,steps,start,"));
+        assert!(s.lines().next().unwrap().contains("participants,joined,left"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -42,7 +42,13 @@ where
 pub mod gen {
     use crate::rng::Rng;
 
+    /// Uniform usize in the inclusive range `[lo, hi]`. Panics on an empty
+    /// range (`lo > hi`) instead of underflowing `hi - lo`.
     pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        assert!(
+            lo <= hi,
+            "gen::usize_in: empty range [{lo}, {hi}] (lo must be <= hi)"
+        );
         lo + rng.below(hi - lo + 1)
     }
 
@@ -91,5 +97,20 @@ mod tests {
                 Err(format!("{v} out of range"))
             }
         });
+    }
+
+    #[test]
+    fn usize_in_degenerate_range_is_constant() {
+        let mut rng = crate::rng::Rng::new(1);
+        for lo in [0usize, 1, 7, usize::MAX - 1] {
+            assert_eq!(gen::usize_in(&mut rng, lo, lo), lo);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty range [5, 4]")]
+    fn usize_in_rejects_inverted_range() {
+        let mut rng = crate::rng::Rng::new(1);
+        gen::usize_in(&mut rng, 5, 4);
     }
 }

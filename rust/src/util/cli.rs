@@ -180,6 +180,16 @@ impl Parsed {
             .parse()
             .unwrap_or_else(|_| panic!("--{name} expects a float, got {:?}", self.get(name)))
     }
+
+    /// Comma-separated list value (`--flag a,b,c`), empty entries skipped.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -211,6 +221,18 @@ mod tests {
         assert_eq!(p.get_usize("n"), 32);
         assert_eq!(p.get_f64("eta"), 0.5);
         assert!(p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn list_values_split_on_commas() {
+        let cli = Cli::new("t", "test").opt("xs", "a,b", "list");
+        let p = cli
+            .clone()
+            .parse_from(&["--xs".to_string(), "x, y,,z".to_string()])
+            .unwrap();
+        assert_eq!(p.get_list("xs"), vec!["x", "y", "z"]);
+        let p = cli.parse_from(&[]).unwrap();
+        assert_eq!(p.get_list("xs"), vec!["a", "b"]);
     }
 
     #[test]

@@ -31,6 +31,8 @@ fn convex_cfg(variant: Variant, iid: bool, steps: u64) -> ExperimentConfig {
         collective: stl_sgd::comm::Algorithm::Ring,
         eval_every_rounds: 1,
         engine: "native".into(),
+        // cluster/participation defaults: homogeneous fleet, policy `all`.
+        ..ExperimentConfig::default()
     }
 }
 
@@ -155,6 +157,7 @@ fn mlp_nonconvex_algorithms_learn() {
             eval_every_rounds: 2,
             engine: "threaded".into(),
             s_percent: 0.0,
+            ..ExperimentConfig::default()
         };
         let trace = run(&cfg);
         assert!(

@@ -220,3 +220,86 @@ fn prop_comm_round_count_equals_phase_arithmetic() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_masked_average_participants_match_naive_mean() {
+    // Satellite contract for comm::average_masked: for every collective
+    // and random (N, d, mask), participants end bit-identical to running
+    // the same dense collective over just the participants (and, for the
+    // Naive reference collective, bit-identical to the f64 mean over
+    // participants); non-participants are untouched.
+    check(cfg(96), "masked-average", |rng, case| {
+        let alg = [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree][case % 3];
+        let n = gen::usize_in(rng, 1, 14);
+        let d = gen::usize_in(rng, 1, 64);
+        let models = gen::f32_matrix(rng, n, d, 2.0);
+        let mask: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.6).collect();
+        let mut masked = models.clone();
+        allreduce::average_masked(&mut masked, alg, &mask);
+
+        // Dense reference over the extracted participants.
+        let mut sub: Vec<Vec<f32>> = models
+            .iter()
+            .zip(&mask)
+            .filter(|(_, &b)| b)
+            .map(|(m, _)| m.clone())
+            .collect();
+        let m = sub.len();
+        if m > 0 {
+            allreduce::average(&mut sub, alg);
+        }
+        // Exact f64 mean over participants (what Naive must hit exactly
+        // and the others to rounding error).
+        let exact: Vec<f32> = (0..d)
+            .map(|j| {
+                let s: f64 = models
+                    .iter()
+                    .zip(&mask)
+                    .filter(|(_, &b)| b)
+                    .map(|(mm, _)| mm[j] as f64)
+                    .sum();
+                (s / m.max(1) as f64) as f32
+            })
+            .collect();
+
+        let mut k = 0usize;
+        for i in 0..n {
+            if mask[i] {
+                if masked[i] != sub[k] {
+                    return Err(format!("{alg:?} n={n} d={d}: participant {i} not bit-identical"));
+                }
+                for j in 0..d {
+                    let err = (masked[i][j] - exact[j]).abs();
+                    let tol = if alg == Algorithm::Naive { 0.0 } else { 1e-4 };
+                    if err > tol {
+                        return Err(format!(
+                            "{alg:?} n={n} d={d} m={m}: [{i}][{j}] off mean by {err}"
+                        ));
+                    }
+                }
+                k += 1;
+            } else if masked[i] != models[i] {
+                return Err(format!("{alg:?} n={n} d={d}: bystander {i} was touched"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masked_average_all_ones_is_unmasked() {
+    check(cfg(48), "masked-all-ones", |rng, case| {
+        let alg = [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree][case % 3];
+        let n = gen::usize_in(rng, 1, 12);
+        let d = gen::usize_in(rng, 1, 48);
+        let base = gen::f32_matrix(rng, n, d, 1.5);
+        let mut a = base.clone();
+        let mut b = base;
+        allreduce::average(&mut a, alg);
+        allreduce::average_masked(&mut b, alg, &vec![true; n]);
+        if a != b {
+            return Err(format!("{alg:?} n={n} d={d}: all-ones mask diverged"));
+        }
+        Ok(())
+    });
+}

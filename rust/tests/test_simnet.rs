@@ -251,3 +251,281 @@ fn stragglers_make_frequent_sync_costlier() {
     // Barrier-wait accounting is populated under heterogeneity.
     assert!(local.timeline.total_max_barrier_wait() > 0.0);
 }
+
+// ---------------------------------------------------------------------------
+// Elastic membership / partial participation (PR 2)
+// ---------------------------------------------------------------------------
+
+use stl_sgd::simnet::{ParticipationPolicy, RoundStat, Timeline};
+
+#[test]
+fn policy_all_trajectory_is_profile_invariant_bit_for_bit() {
+    // The PR-1 invariant, now stated as the `all` participation policy:
+    // the cluster profile changes *when* things happen, never *what* is
+    // computed — so under policy `all` every profile (including the new
+    // churny elastic-federated) walks bit-for-bit the same trajectory as
+    // the homogeneous calibration run.
+    let run_with = |profile| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = Workload::LogregTest;
+        cfg.engine = "native".into();
+        cfg.n_clients = 4;
+        cfg.total_steps = 160;
+        cfg.seed = 3;
+        cfg.cluster = profile;
+        cfg.algo = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        workloads::run_experiment(&cfg).unwrap()
+    };
+    let reference = run_with(ClusterProfile::homogeneous());
+    for profile in ClusterProfile::presets() {
+        let trace = run_with(profile);
+        assert_eq!(trace.points.len(), reference.points.len(), "{}", profile.name);
+        for (a, b) in reference.points.iter().zip(&trace.points) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{} iter {}", profile.name, a.iter);
+        }
+        // Policy `all` never reports partial rounds, whatever the faults.
+        assert_eq!(trace.comm.partial_rounds, 0, "{}", profile.name);
+        assert!(
+            trace.timeline.rounds.iter().all(|r| r.participants == 4),
+            "{}: participants dipped under policy all",
+            profile.name
+        );
+    }
+}
+
+#[test]
+fn same_seed_same_participation_masks_and_timelines() {
+    // Identical (config, seed) must yield identical participation-mask
+    // sequences — at the raw engine level and end-to-end through the
+    // coordinator — for the faulty and churny profiles alike.
+    for profile in [
+        ClusterProfile::flaky_federated(),
+        ClusterProfile::elastic_federated(),
+    ] {
+        let mk = || {
+            SimNet::new(
+                profile,
+                NetworkModel::default(),
+                ComputeModel::default(),
+                Algorithm::Ring,
+                8,
+                1000,
+                17,
+                Detail::Rounds,
+            )
+            .with_policy(ParticipationPolicy::Arrived)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for r in 0..120 {
+            let (sa, pa) = a.price_round_masked(6, 16);
+            let (sb, pb) = b.price_round_masked(6, 16);
+            assert_eq!(pa, pb, "{} round {r} mask", profile.name);
+            assert_eq!(sa, sb, "{} round {r} stat", profile.name);
+            assert_eq!(sa.participants as usize, pa.count(), "{} round {r}", profile.name);
+        }
+        assert_eq!(a.timeline, b.timeline, "{}", profile.name);
+
+        let run_once = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = Workload::LogregTest;
+            cfg.engine = "native".into();
+            cfg.n_clients = 6;
+            cfg.total_steps = 240;
+            cfg.seed = 29;
+            cfg.cluster = profile;
+            cfg.participation = ParticipationPolicy::Arrived;
+            cfg.algo = AlgoSpec {
+                variant: Variant::LocalSgd,
+                eta1: 0.3,
+                k1: 4.0,
+                batch: 8,
+                ..Default::default()
+            };
+            workloads::run_experiment(&cfg).unwrap()
+        };
+        let (x, y) = (run_once(), run_once());
+        assert_eq!(x.timeline, y.timeline, "{}", profile.name);
+        for (px, py) in x.points.iter().zip(&y.points) {
+            assert_eq!(px.loss.to_bits(), py.loss.to_bits(), "{}", profile.name);
+        }
+    }
+}
+
+#[test]
+fn elastic_federated_churns_and_arrived_averages_subsets() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = Workload::LogregTest;
+    cfg.engine = "native".into();
+    cfg.n_clients = 6;
+    cfg.total_steps = 480;
+    cfg.seed = 11;
+    cfg.cluster = ClusterProfile::elastic_federated();
+    cfg.participation = ParticipationPolicy::Arrived;
+    cfg.algo = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        k1: 4.0,
+        batch: 8,
+        ..Default::default()
+    };
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    assert!(trace.timeline.total_left() > 0, "no churn departures in 120 rounds");
+    assert!(trace.timeline.total_joined() > 0, "no churn rejoins in 120 rounds");
+    assert!(trace.comm.partial_rounds > 0, "no partial rounds");
+    assert_eq!(
+        trace.comm.partial_rounds,
+        trace.timeline.partial_rounds(6),
+        "CommStats and timeline disagree on partial rounds"
+    );
+    assert_eq!(
+        trace.comm.participant_client_rounds,
+        trace.timeline.total_participants()
+    );
+    assert!(trace.final_loss().is_finite());
+}
+
+#[test]
+fn arrived_subsets_visible_in_timeline_csv() {
+    // Acceptance: under `arrived` the flaky-federated profile shows
+    // rounds averaging strict subsets, visible in the timeline CSV's
+    // participation columns.
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = Workload::LogregTest;
+    cfg.engine = "native".into();
+    cfg.n_clients = 6;
+    cfg.total_steps = 480;
+    cfg.seed = 7;
+    cfg.cluster = ClusterProfile::flaky_federated();
+    cfg.participation = ParticipationPolicy::Arrived;
+    cfg.algo = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        k1: 4.0,
+        batch: 8,
+        ..Default::default()
+    };
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    let dir = std::env::temp_dir().join("stl_sgd_partial_csv_test");
+    let path = dir.join("timeline.csv");
+    trace.write_timeline_csv(&path).unwrap();
+    let s = std::fs::read_to_string(&path).unwrap();
+    let mut lines = s.lines();
+    let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+    let p_col = header.iter().position(|&h| h == "participants").unwrap();
+    let mut saw_strict_subset = false;
+    for (row, stat) in lines.zip(&trace.timeline.rounds) {
+        let fields: Vec<&str> = row.split(',').collect();
+        let participants: u32 = fields[p_col].parse().unwrap();
+        assert_eq!(participants, stat.participants);
+        saw_strict_subset |= participants < 6;
+    }
+    assert!(saw_strict_subset, "CSV never shows a strict-subset round");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn timeline_csv_schema_golden() {
+    // Golden-file guard for the exporter: exact header and an exact
+    // fixed-value row, so schema or float-format drift is caught by
+    // tier-1 instead of by example scripts.
+    let t = Timeline {
+        rounds: vec![RoundStat {
+            round: 0,
+            steps: 10,
+            start: 0.0,
+            compute_span: 0.5,
+            comm_seconds: 0.25,
+            max_barrier_wait: 0.125,
+            mean_barrier_wait: 0.0625,
+            dropped: 1,
+            participants: 3,
+            joined: 1,
+            left: 2,
+        }],
+        events: Vec::new(),
+    };
+    let dir = std::env::temp_dir().join("stl_sgd_csv_golden_test");
+    let path = dir.join("golden.csv");
+    t.write_csv(&path).unwrap();
+    let s = std::fs::read_to_string(&path).unwrap();
+    let golden = "round,steps,start,compute_span,comm_seconds,barrier_wait_max,\
+                  barrier_wait_mean,dropped,participants,joined,left,end\n\
+                  0,10,0.000000e0,5.000000e-1,2.500000e-1,1.250000e-1,6.250000e-2,\
+                  1,3,1,2,7.500000e-1\n";
+    assert_eq!(s, golden);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn timeline_csv_fixed_seed_engine_row_matches_closed_form() {
+    // A fixed-seed row produced by the engine itself: under the
+    // zero-variance homogeneous profile every field is the closed-form
+    // value, so the expected CSV line can be reconstructed exactly.
+    let net = NetworkModel::default();
+    let cm = ComputeModel::default();
+    let mut sim = SimNet::new(
+        ClusterProfile::homogeneous(),
+        net,
+        cm,
+        Algorithm::Ring,
+        4,
+        1000,
+        7,
+        Detail::Rounds,
+    );
+    sim.price_round(5, 32);
+    let dir = std::env::temp_dir().join("stl_sgd_csv_engine_row_test");
+    let path = dir.join("row.csv");
+    sim.timeline.write_csv(&path).unwrap();
+    let s = std::fs::read_to_string(&path).unwrap();
+    let compute = cm.round_compute_seconds(32, 1000, 5);
+    let comm = net.allreduce_seconds(Algorithm::Ring, 4, 1000);
+    let expect_row = format!(
+        "0,5,{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},0,4,0,0,{:.6e}",
+        0.0,
+        compute,
+        comm,
+        0.0,
+        0.0,
+        compute + comm,
+    );
+    assert_eq!(s.lines().nth(1).unwrap(), expect_row);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fraction_sampling_is_deterministic_and_fleetwide_over_time() {
+    // Fixed-fraction sampling: same seed, same sampled subsets; over many
+    // rounds every client is sampled at least once (no starvation).
+    let mk = || {
+        SimNet::new(
+            ClusterProfile::homogeneous(),
+            NetworkModel::default(),
+            ComputeModel::default(),
+            Algorithm::Ring,
+            8,
+            1000,
+            23,
+            Detail::Rounds,
+        )
+        .with_policy(ParticipationPolicy::Fraction(0.25))
+    };
+    let (mut a, mut b) = (mk(), mk());
+    let mut seen = [false; 8];
+    for _ in 0..64 {
+        let (_, pa) = a.price_round_masked(4, 16);
+        let (_, pb) = b.price_round_masked(4, 16);
+        assert_eq!(pa, pb);
+        assert_eq!(pa.count(), 2, "ceil(0.25 * 8)");
+        for i in pa.indices() {
+            seen[i] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "a client was never sampled: {seen:?}");
+}

@@ -135,6 +135,7 @@ fn linear_speedup_iterations_to_target_shrink_with_n() {
             eval_every_rounds: 20,
             engine: "native".into(),
             s_percent: 50.0,
+            ..ExperimentConfig::default()
         };
         let trace = workloads::run_experiment(&cfg).unwrap();
         trace

@@ -3,11 +3,26 @@
 #
 #   scripts/check.sh           # full gate
 #   scripts/check.sh --no-fmt  # skip the formatting check (older toolchains)
+#   scripts/check.sh --smoke   # additionally run the example binaries at
+#                              # tiny sizes so they can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    smoke_out="${TMPDIR:-/tmp}/stl_sgd_smoke"
+    rm -rf "$smoke_out"
+    cargo run --release --example quickstart
+    cargo run --release --example partial_participation -- \
+        --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+        --clusters flaky-federated,elastic-federated \
+        --policies all,arrived,0.5 \
+        --out-dir "$smoke_out"
+    test -s "$smoke_out/summary.csv"
+    echo "check.sh: smoke examples OK ($smoke_out)"
+fi
 
 if [[ "${1:-}" != "--no-fmt" ]]; then
     cargo fmt --check
