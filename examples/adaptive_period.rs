@@ -1,0 +1,190 @@
+//! Adaptive communication-period study: time-to-accuracy across period
+//! controllers x cluster profiles.
+//!
+//!     cargo run --release --example adaptive_period -- \
+//!         [--controllers stagewise,comm-ratio,barrier-aware] \
+//!         [--clusters homogeneous,heavy-tail-stragglers] \
+//!         [--steps 3000] [--clients 8] [--k1 16] [--t1 500] \
+//!         [--target-ratio 1.0] [--barrier-frac 0.05] [--gap 1e-3] \
+//!         [--out-dir results/adaptive]
+//!
+//! STL-SGD fixes its stagewise period offline; the adaptive controllers
+//! (DESIGN.md §5) resize it round by round from the simnet feedback —
+//! comm-vs-compute spans and barrier waits — that tells them when a round
+//! is straggler- or communication-bound. This sweep compares the fixed
+//! schedule against both controllers on each cluster profile and reports
+//! simulated seconds (and rounds) to a target objective gap, plus the
+//! realized mean k each controller settled on. Outputs one trace CSV and
+//! one timeline CSV (with the per-round k column) per cell, a summary
+//! CSV, and the speedup of each adaptive controller over the fixed
+//! schedule on its profile.
+
+use stl_sgd::algo::{AlgoSpec, ControllerSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::simnet::ClusterProfile;
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "adaptive_period",
+        "STL-SGD time-to-accuracy across communication-period controllers and cluster profiles",
+    )
+    .opt(
+        "controllers",
+        "stagewise,comm-ratio,barrier-aware",
+        "comma-separated period controllers (stagewise | comm-ratio | barrier-aware)",
+    )
+    .opt(
+        "clusters",
+        "homogeneous,heavy-tail-stragglers",
+        "comma-separated cluster profiles to sweep",
+    )
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("algorithm", "stl-sc", "algorithm (sync|local|stl-sc|...)")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "16", "initial communication period")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt("target-ratio", "1.0", "comm-ratio controller: target comm/compute ratio")
+    .opt(
+        "barrier-frac",
+        "0.05",
+        "barrier-aware controller: stretch k when mean barrier wait exceeds this fraction of the round span",
+    )
+    .opt("gap", "1e-3", "objective-gap target for time-to-accuracy")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/adaptive", "output directory")
+    .parse();
+
+    let target_ratio = args.get_f64("target-ratio");
+    let barrier_frac = args.get_f64("barrier-frac");
+    let mut controllers: Vec<ControllerSpec> = args
+        .get_list("controllers")
+        .iter()
+        .map(|s| {
+            let spec = ControllerSpec::parse(s)
+                .unwrap_or_else(|| panic!("unknown controller {s:?}"));
+            match spec {
+                ControllerSpec::Stagewise => spec,
+                ControllerSpec::CommRatio { .. } => ControllerSpec::CommRatio {
+                    target: target_ratio,
+                },
+                ControllerSpec::BarrierAware { .. } => ControllerSpec::BarrierAware {
+                    frac: barrier_frac,
+                },
+            }
+        })
+        .collect();
+    // The stagewise baseline must run before the controllers scored
+    // against it, whatever order the flag listed them in.
+    controllers.sort_by_key(|c| !matches!(c, ControllerSpec::Stagewise));
+    let clusters: Vec<ClusterProfile> = args
+        .get_list("clusters")
+        .iter()
+        .map(|s| {
+            ClusterProfile::parse(s).unwrap_or_else(|| panic!("unknown cluster profile {s:?}"))
+        })
+        .collect();
+    let workload = Workload::parse(args.get("workload")).expect("convex workload");
+    anyhow::ensure!(workload.is_convex(), "adaptive_period needs a convex workload");
+    let variant = Variant::parse(args.get("algorithm"))
+        .unwrap_or_else(|| panic!("unknown algorithm {:?}", args.get("algorithm")));
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let gap = args.get_f64("gap");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    let f_star = workloads::compute_f_star(workload, seed, 2000);
+    println!(
+        "workload={} algorithm={} N={n} steps={steps} k1={k1} gap={gap:.0e} f*={f_star:.6}",
+        workload.name(),
+        variant.name()
+    );
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join("summary.csv"),
+        &[
+            "cluster",
+            "controller",
+            "rounds",
+            "mean_realized_k",
+            "barrier_wait_avg_client_seconds",
+            "sim_total_seconds",
+            "final_gap",
+            "seconds_to_gap",
+            "rounds_to_gap",
+            "speedup_vs_stagewise",
+        ],
+    )?;
+
+    for cluster in &clusters {
+        println!("\ncluster = {}", cluster.name);
+        // The fixed schedule is the baseline each adaptive controller is
+        // scored against (when it is part of the sweep).
+        let mut stagewise_to_gap: Option<f64> = None;
+        for &controller in &controllers {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = workload;
+            cfg.n_clients = n;
+            cfg.total_steps = steps;
+            cfg.seed = seed;
+            cfg.cluster = *cluster;
+            cfg.controller = controller;
+            cfg.algo = AlgoSpec {
+                variant,
+                eta1: 3.2,
+                alpha: 1e-3,
+                k1,
+                t1,
+                batch: 32,
+                iid: true,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let trace = workloads::run_experiment(&cfg)?;
+            let to_gap_s = trace.seconds_to_gap(f_star, gap);
+            let to_gap_r = trace.rounds_to_gap(f_star, gap);
+            if controller == ControllerSpec::Stagewise {
+                stagewise_to_gap = to_gap_s;
+            }
+            let speedup = match (stagewise_to_gap, to_gap_s) {
+                (Some(base), Some(s)) if s > 0.0 => Some(base / s),
+                _ => None,
+            };
+            println!(
+                "  controller={:<24} rounds={:<5} mean_k={:>6.1} final_gap={:>10.3e} \
+                 to_gap={:?}s speedup={} wall={:.1}s",
+                controller.describe(),
+                trace.comm.rounds,
+                trace.comm.mean_realized_k(),
+                trace.final_loss() - f_star,
+                to_gap_s.map(|s| (s * 1e3).round() / 1e3),
+                speedup.map(|x| format!("{x:.2}x")).unwrap_or_else(|| "-".into()),
+                t0.elapsed().as_secs_f64(),
+            );
+            let tag = format!("{}_{}", cluster.name, controller.label());
+            trace.write_csv(&out_dir.join(format!("trace_{tag}.csv")))?;
+            trace.write_timeline_csv(&out_dir.join(format!("timeline_{tag}.csv")))?;
+            summary.row(&[
+                cluster.name.to_string(),
+                controller.label().to_string(),
+                trace.comm.rounds.to_string(),
+                format!("{:.4}", trace.comm.mean_realized_k()),
+                format!("{:.6e}", trace.timeline.total_mean_barrier_wait()),
+                format!("{:.6e}", trace.clock.total()),
+                format!("{:.6e}", trace.final_loss() - f_star),
+                to_gap_s.map(|s| format!("{s:.6e}")).unwrap_or_default(),
+                to_gap_r.map(|r| r.to_string()).unwrap_or_default(),
+                speedup.map(|x| format!("{x:.4}")).unwrap_or_default(),
+            ])?;
+        }
+    }
+    summary.flush()?;
+    println!("\nCSVs written under {}", out_dir.display());
+    Ok(())
+}

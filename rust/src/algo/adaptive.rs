@@ -1,0 +1,534 @@
+//! Adaptive communication periods: close the loop from `simnet` into `algo`.
+//!
+//! STL-SGD's stagewise rule fixes the communication period *offline*: k_s
+//! grows as the stage learning rate shrinks, tuned for a fleet whose round
+//! cost is known in advance. The discrete-event pricer measures exactly the
+//! signal that rule cannot see — how much of each round was barrier wait
+//! (stragglers) and how the collective span compares to the compute span —
+//! so this module defines a [`PeriodController`] that consumes that
+//! per-round telemetry ([`RoundFeedback`]) and emits the period for the
+//! *next* round. Stich's *Local SGD Converges Fast and Communicates Little*
+//! and Qin et al.'s *The Role of Local Steps in Local SGD* both show the
+//! best local-step count is regime-dependent; the controllers track the
+//! regime at runtime instead of assuming it.
+//!
+//! Three controllers, selected by config key `controller` / CLI
+//! `--controller`:
+//!
+//! * [`Stagewise`] (default) — replays each phase's scheduled
+//!   `comm_period` untouched. Every pre-controller trajectory and simnet
+//!   timeline is preserved bit-for-bit (tests/test_adaptive.rs).
+//! * [`CommRatio`] — grows/shrinks k multiplicatively to hold the measured
+//!   per-round comm-span/compute-span ratio near a target (knob
+//!   `target_ratio`): when barriers are cheap relative to local work it
+//!   relaxes back toward the schedule, when the collective dominates it
+//!   stretches the period so the round amortizes it.
+//! * [`BarrierAware`] — stretches k whenever the mean barrier idle time
+//!   exceeds a fraction of the round span (knob `barrier_frac`): a
+//!   straggler-bound round means every barrier pays the slowest machine,
+//!   so sync less often; fault-free rounds decay back to the schedule.
+//!
+//! Determinism contract: controllers are pure state machines over the
+//! feedback sequence — no RNG, no wall clock — so identical
+//! `(config, seed)` pairs yield identical realized-k sequences (the
+//! controllers only ever see deterministic [`crate::simnet`] output).
+//! Adaptive periods stay *relative to the phase schedule*: the controller
+//! keeps a multiplier on `Phase::comm_period`, floored at 1.0 (never
+//! syncing more often than the paper's rule) and capped so a pathological
+//! feedback stream cannot stretch a round past `cap x` the schedule.
+
+use super::schedule::Phase;
+use crate::simnet::RoundStat;
+
+/// Per-round telemetry the coordinator feeds back from the pricing engine.
+///
+/// Extracted from [`RoundStat`] (which the engine returns by value even
+/// under `Detail::Off`, so feedback costs nothing and never depends on the
+/// timeline being recorded).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundFeedback {
+    /// Communication round index (0-based).
+    pub round: u64,
+    /// Local steps actually priced into the round — the *realized* k,
+    /// smaller than the commanded period when a phase boundary cut the
+    /// round short.
+    pub realized_k: u64,
+    /// Communication period that was commanded for the round. Controllers
+    /// use `realized_k < k` to recognize phase-boundary-truncated rounds,
+    /// whose short compute span against a full collective is a
+    /// measurement artifact rather than a network signal.
+    pub k: u64,
+    /// Barrier-exit minus round start: local compute plus straggler wait.
+    pub compute_span: f64,
+    /// Collective span (including link jitter).
+    pub comm_seconds: f64,
+    /// Longest time any client idled at this round's barrier.
+    pub max_barrier_wait: f64,
+    /// Mean barrier idle time across the round's active clients.
+    pub mean_barrier_wait: f64,
+    /// Clients whose replica entered the round's average.
+    pub participants: usize,
+    /// Fleet size.
+    pub fleet: usize,
+}
+
+impl RoundFeedback {
+    /// Build the feedback record from one priced round.
+    pub fn from_stat(rt: &RoundStat, fleet: usize) -> Self {
+        Self {
+            round: rt.round,
+            realized_k: rt.steps,
+            k: rt.k,
+            compute_span: rt.compute_span,
+            comm_seconds: rt.comm_seconds,
+            max_barrier_wait: rt.max_barrier_wait,
+            mean_barrier_wait: rt.mean_barrier_wait,
+            participants: rt.participants as usize,
+            fleet,
+        }
+    }
+
+    /// Total round span (compute + collective).
+    pub fn round_span(&self) -> f64 {
+        self.compute_span + self.comm_seconds
+    }
+
+    /// Collective span relative to the compute span (0 when the round did
+    /// no compute — an impossible round, but the ratio stays finite).
+    pub fn comm_ratio(&self) -> f64 {
+        if self.compute_span > 0.0 {
+            self.comm_seconds / self.compute_span
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of the round span the *mean* client idled at the barrier
+    /// (0 for a zero-length round).
+    pub fn barrier_frac(&self) -> f64 {
+        let span = self.round_span();
+        if span > 0.0 {
+            self.mean_barrier_wait / span
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A communication-period controller: the coordinator asks it for the
+/// upcoming round's period and feeds every completed round's telemetry
+/// back before asking again.
+///
+/// Contract: `period` must return a value >= 1 and be a pure function of
+/// the controller state and the phase; `observe` folds exactly one round
+/// into that state. No RNG, no wall clock — determinism of the realized-k
+/// sequence is part of the API (DESIGN.md §5).
+pub trait PeriodController {
+    /// Stable controller name (reports, CSV tags).
+    fn name(&self) -> &'static str;
+
+    /// Communication period for the upcoming round of `phase` (>= 1).
+    fn period(&mut self, phase: &Phase) -> u64;
+
+    /// Fold one completed round's telemetry into the controller state.
+    fn observe(&mut self, fb: &RoundFeedback);
+}
+
+/// The paper's fixed stagewise rule: the phase schedule *is* the period.
+/// Feedback is ignored; this controller exists so the adaptive machinery
+/// has a bit-for-bit-identical legacy mode as its default.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stagewise;
+
+impl PeriodController for Stagewise {
+    fn name(&self) -> &'static str {
+        "stagewise"
+    }
+
+    fn period(&mut self, phase: &Phase) -> u64 {
+        phase.comm_period.max(1)
+    }
+
+    fn observe(&mut self, _fb: &RoundFeedback) {}
+}
+
+/// Multiplier state shared by the adaptive controllers: a factor on the
+/// phase's scheduled period, floored at 1.0 (never sync more often than
+/// the schedule) and capped at `cap`.
+#[derive(Clone, Copy, Debug)]
+struct Multiplier {
+    mult: f64,
+    cap: f64,
+}
+
+impl Multiplier {
+    fn new(cap: f64) -> Self {
+        debug_assert!(cap >= 1.0);
+        Self { mult: 1.0, cap }
+    }
+
+    fn grow(&mut self, factor: f64) {
+        self.mult = (self.mult * factor).min(self.cap);
+    }
+
+    fn shrink(&mut self, factor: f64) {
+        self.mult = (self.mult / factor).max(1.0);
+    }
+
+    fn apply(&self, phase: &Phase) -> u64 {
+        let base = phase.comm_period.max(1) as f64;
+        let k = (base * self.mult).round() as u64;
+        k.clamp(1, (base * self.cap).ceil() as u64)
+    }
+}
+
+/// Hold the measured per-round comm/compute ratio near `target`.
+///
+/// When `comm_seconds / compute_span` sits above the target (the
+/// collective dominates the round) the period multiplier grows by `gain`;
+/// when it falls below `target / band` the multiplier decays back toward
+/// the schedule. The deadband `[target / band, target * band]` prevents
+/// oscillation around the fixed point.
+#[derive(Clone, Copy, Debug)]
+pub struct CommRatio {
+    target: f64,
+    band: f64,
+    gain: f64,
+    m: Multiplier,
+}
+
+impl CommRatio {
+    /// Default adaptation constants: 25% multiplicative steps, a 20%
+    /// deadband, and at most 16x the scheduled period.
+    pub fn new(target: f64) -> Self {
+        assert!(
+            target.is_finite() && target > 0.0,
+            "CommRatio target must be a positive finite ratio, got {target}"
+        );
+        Self {
+            target,
+            band: 1.2,
+            gain: 1.25,
+            m: Multiplier::new(16.0),
+        }
+    }
+
+    /// Current multiplier on the scheduled period (diagnostics).
+    pub fn multiplier(&self) -> f64 {
+        self.m.mult
+    }
+}
+
+impl PeriodController for CommRatio {
+    fn name(&self) -> &'static str {
+        "comm-ratio"
+    }
+
+    fn period(&mut self, phase: &Phase) -> u64 {
+        self.m.apply(phase)
+    }
+
+    fn observe(&mut self, fb: &RoundFeedback) {
+        // A phase-boundary-truncated round prices a short compute span
+        // against a full collective: its inflated ratio is a measurement
+        // artifact, not a network signal, so it never moves the state.
+        if fb.realized_k < fb.k {
+            return;
+        }
+        let ratio = fb.comm_ratio();
+        if ratio > self.target * self.band {
+            self.m.grow(self.gain);
+        } else if ratio < self.target / self.band {
+            self.m.shrink(self.gain);
+        }
+    }
+}
+
+/// Stretch the period while rounds are straggler-bound: grow the
+/// multiplier whenever the mean barrier idle exceeds `frac` of the round
+/// span, decay back toward the schedule otherwise.
+///
+/// The gains are asymmetric (grow 1.5x, decay 1.05x) on purpose: one
+/// straggler-bound round is strong evidence — the whole fleet just idled
+/// behind the slowest machine — while one quiet round is weak evidence,
+/// since heavy-tail stragglers hit only a few percent of steps and most
+/// rounds dodge them. Symmetric gains would let the quiet majority erase
+/// the signal at exactly the small periods where barriers are most
+/// frequent.
+#[derive(Clone, Copy, Debug)]
+pub struct BarrierAware {
+    frac: f64,
+    grow_gain: f64,
+    decay_gain: f64,
+    m: Multiplier,
+}
+
+impl BarrierAware {
+    /// Default adaptation constants: grow 1.5x / decay 1.05x, at most 8x
+    /// the scheduled period (barrier waits keep growing with k under heavy
+    /// tails, so the cap — not the signal — bounds the stretch).
+    pub fn new(frac: f64) -> Self {
+        assert!(
+            frac.is_finite() && frac > 0.0 && frac < 1.0,
+            "BarrierAware fraction must be in (0, 1), got {frac}"
+        );
+        Self {
+            frac,
+            grow_gain: 1.5,
+            decay_gain: 1.05,
+            m: Multiplier::new(8.0),
+        }
+    }
+
+    /// Current multiplier on the scheduled period (diagnostics).
+    pub fn multiplier(&self) -> f64 {
+        self.m.mult
+    }
+}
+
+impl PeriodController for BarrierAware {
+    fn name(&self) -> &'static str {
+        "barrier-aware"
+    }
+
+    fn period(&mut self, phase: &Phase) -> u64 {
+        self.m.apply(phase)
+    }
+
+    fn observe(&mut self, fb: &RoundFeedback) {
+        // Truncated boundary rounds carry a biased wait-vs-span signal
+        // (see CommRatio::observe); ignore them.
+        if fb.realized_k < fb.k {
+            return;
+        }
+        if fb.barrier_frac() > self.frac {
+            self.m.grow(self.grow_gain);
+        } else {
+            self.m.shrink(self.decay_gain);
+        }
+    }
+}
+
+/// Config-level controller selector (the `Box<dyn PeriodController>` is
+/// built per run so [`crate::coordinator::run::RunConfig`] stays `Clone`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ControllerSpec {
+    /// The fixed stagewise schedule (bit-for-bit legacy behaviour).
+    Stagewise,
+    /// [`CommRatio`] with the given target comm/compute ratio.
+    CommRatio { target: f64 },
+    /// [`BarrierAware`] with the given barrier-wait span fraction.
+    BarrierAware { frac: f64 },
+}
+
+impl Default for ControllerSpec {
+    fn default() -> Self {
+        ControllerSpec::Stagewise
+    }
+}
+
+impl ControllerSpec {
+    /// Parse a controller name; knobs keep their defaults (patch them via
+    /// the `target_ratio` / `barrier_frac` config keys).
+    pub fn parse(s: &str) -> Option<ControllerSpec> {
+        match s {
+            "stagewise" => Some(ControllerSpec::Stagewise),
+            "comm-ratio" => Some(ControllerSpec::CommRatio { target: 1.0 }),
+            "barrier-aware" => Some(ControllerSpec::BarrierAware { frac: 0.05 }),
+            _ => None,
+        }
+    }
+
+    /// Stable textual name; [`Self::parse`] round-trips it (knobs aside).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControllerSpec::Stagewise => "stagewise",
+            ControllerSpec::CommRatio { .. } => "comm-ratio",
+            ControllerSpec::BarrierAware { .. } => "barrier-aware",
+        }
+    }
+
+    /// Name plus knobs, for run headers and sweep logs.
+    pub fn describe(&self) -> String {
+        match self {
+            ControllerSpec::Stagewise => "stagewise".into(),
+            ControllerSpec::CommRatio { target } => format!("comm-ratio(target={target})"),
+            ControllerSpec::BarrierAware { frac } => format!("barrier-aware(frac={frac})"),
+        }
+    }
+
+    /// Materialize the controller for one run.
+    pub fn build(&self) -> Box<dyn PeriodController> {
+        match *self {
+            ControllerSpec::Stagewise => Box::new(Stagewise),
+            ControllerSpec::CommRatio { target } => Box::new(CommRatio::new(target)),
+            ControllerSpec::BarrierAware { frac } => Box::new(BarrierAware::new(frac)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::LrSchedule;
+
+    fn phase(k: u64) -> Phase {
+        Phase {
+            stage: 1,
+            steps: 100,
+            comm_period: k,
+            batch: 8,
+            lr: LrSchedule::Const(0.1),
+            reset_anchor: false,
+            inv_gamma: 0.0,
+        }
+    }
+
+    fn fb(realized_k: u64, compute: f64, comm: f64, mean_wait: f64) -> RoundFeedback {
+        RoundFeedback {
+            round: 0,
+            realized_k,
+            k: realized_k,
+            compute_span: compute,
+            comm_seconds: comm,
+            max_barrier_wait: mean_wait * 2.0,
+            mean_barrier_wait: mean_wait,
+            participants: 4,
+            fleet: 4,
+        }
+    }
+
+    #[test]
+    fn stagewise_replays_phase_period() {
+        let mut c = Stagewise;
+        assert_eq!(c.period(&phase(7)), 7);
+        assert_eq!(c.period(&phase(0)), 1, "degenerate period floors at 1");
+        // Feedback, however extreme, never moves it.
+        c.observe(&fb(7, 1e-6, 1.0, 0.5));
+        assert_eq!(c.period(&phase(7)), 7);
+    }
+
+    #[test]
+    fn comm_ratio_grows_when_comm_dominates_and_caps() {
+        let mut c = CommRatio::new(1.0);
+        assert_eq!(c.period(&phase(10)), 10, "starts at the schedule");
+        for _ in 0..64 {
+            c.observe(&fb(10, 1e-4, 1e-2, 0.0)); // ratio 100 >> target
+        }
+        assert_eq!(c.period(&phase(10)), 160, "capped at 16x the schedule");
+        assert!((c.multiplier() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_ratio_decays_back_to_schedule_when_compute_dominates() {
+        let mut c = CommRatio::new(1.0);
+        for _ in 0..8 {
+            c.observe(&fb(10, 1e-4, 1e-2, 0.0));
+        }
+        let stretched = c.period(&phase(10));
+        assert!(stretched > 10);
+        for _ in 0..64 {
+            c.observe(&fb(10, 1e-2, 1e-4, 0.0)); // ratio 0.01 << target
+        }
+        assert_eq!(c.period(&phase(10)), 10, "floored at the schedule");
+        assert!((c.multiplier() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_ratio_deadband_holds_steady() {
+        let mut c = CommRatio::new(1.0);
+        for _ in 0..32 {
+            c.observe(&fb(10, 1.0, 1.1, 0.0)); // within the 20% band
+        }
+        assert_eq!(c.period(&phase(10)), 10);
+    }
+
+    #[test]
+    fn barrier_aware_stretches_on_straggler_waits_and_caps() {
+        let mut c = BarrierAware::new(0.05);
+        assert_eq!(c.period(&phase(16)), 16);
+        for _ in 0..64 {
+            // mean wait is 30% of the span: straggler-bound.
+            c.observe(&fb(16, 0.7, 0.3, 0.3));
+        }
+        assert_eq!(c.period(&phase(16)), 128, "capped at 8x the schedule");
+    }
+
+    #[test]
+    fn barrier_aware_stays_at_schedule_without_waits() {
+        let mut c = BarrierAware::new(0.05);
+        for _ in 0..32 {
+            c.observe(&fb(16, 0.7, 0.3, 0.0));
+        }
+        assert_eq!(c.period(&phase(16)), 16);
+    }
+
+    #[test]
+    fn multiplier_rounds_to_nearest_period() {
+        let mut c = CommRatio::new(1.0);
+        c.observe(&fb(4, 1e-4, 1e-2, 0.0)); // one growth step: mult 1.25
+        assert_eq!(c.period(&phase(4)), 5); // round(4 * 1.25)
+        assert_eq!(c.period(&phase(2)), 3); // round(2 * 1.25) = 2.5 -> 3
+        assert_eq!(c.period(&phase(1)), 1); // round(1.25) = 1
+    }
+
+    #[test]
+    fn truncated_boundary_rounds_do_not_move_controllers() {
+        // A commanded-40 round cut to 10 realized steps has ~4x the
+        // steady-state comm ratio purely by truncation; both adaptive
+        // controllers must discard it instead of growing on the artifact.
+        let mut c = CommRatio::new(1.0);
+        let mut f = fb(10, 1e-4, 1e-2, 0.0);
+        f.k = 40;
+        for _ in 0..16 {
+            c.observe(&f);
+        }
+        assert_eq!(c.period(&phase(10)), 10);
+        let mut b = BarrierAware::new(0.05);
+        let mut f = fb(10, 0.7, 0.3, 0.3);
+        f.k = 40;
+        for _ in 0..16 {
+            b.observe(&f);
+        }
+        assert_eq!(b.period(&phase(16)), 16);
+    }
+
+    #[test]
+    fn feedback_helpers_are_div_zero_safe() {
+        let z = fb(1, 0.0, 0.0, 0.0);
+        assert_eq!(z.comm_ratio(), 0.0);
+        assert_eq!(z.barrier_frac(), 0.0);
+        assert_eq!(z.round_span(), 0.0);
+        let f = fb(8, 0.5, 0.25, 0.15);
+        assert!((f.round_span() - 0.75).abs() < 1e-12);
+        assert!((f.comm_ratio() - 0.5).abs() < 1e-12);
+        assert!((f.barrier_frac() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_parse_label_roundtrip_and_build_names() {
+        for name in ["stagewise", "comm-ratio", "barrier-aware"] {
+            let spec = ControllerSpec::parse(name).unwrap();
+            assert_eq!(spec.label(), name);
+            assert_eq!(spec.build().name(), name);
+        }
+        assert_eq!(ControllerSpec::parse("nope"), None);
+        assert_eq!(ControllerSpec::default(), ControllerSpec::Stagewise);
+        assert_eq!(
+            ControllerSpec::CommRatio { target: 0.5 }.describe(),
+            "comm-ratio(target=0.5)"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite ratio")]
+    fn comm_ratio_rejects_non_positive_target() {
+        let _ = CommRatio::new(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be in (0, 1)")]
+    fn barrier_aware_rejects_out_of_range_fraction() {
+        let _ = BarrierAware::new(1.5);
+    }
+}

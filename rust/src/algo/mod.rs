@@ -7,9 +7,18 @@
 //! This factorization is exactly how the paper presents STL-SGD: Local SGD
 //! (Algorithm 1) as the subalgorithm, stagewise parameter tuning on top
 //! (Algorithms 2 & 3).
+//!
+//! On top of the fixed schedules, [`adaptive`] closes the loop from the
+//! [`crate::simnet`] round pricer back into the schedule: a
+//! [`adaptive::PeriodController`] can resize the communication period
+//! round-by-round from measured barrier-wait / comm-span feedback
+//! (DESIGN.md §5), with the default [`adaptive::Stagewise`] controller
+//! replaying the paper's rule bit-for-bit.
 
+pub mod adaptive;
 pub mod schedule;
 pub mod spec;
 
+pub use adaptive::{ControllerSpec, PeriodController, RoundFeedback};
 pub use schedule::{LrSchedule, Phase};
 pub use spec::{AlgoSpec, Variant};

@@ -42,19 +42,32 @@ pub struct Phase {
 }
 
 impl Phase {
-    /// Number of communication rounds this phase triggers (the coordinator
-    /// averages whenever the within-phase step count reaches a multiple of
-    /// k, plus once at the phase boundary if it doesn't land on one).
+    /// Number of communication rounds this phase *schedules* under its
+    /// fixed `comm_period`: the coordinator averages whenever the
+    /// within-phase step count reaches a multiple of k, plus once at the
+    /// phase boundary if it doesn't land on one. When the boundary *does*
+    /// coincide with a k-multiple, the boundary comm and the k-multiple
+    /// comm are the same single round — `div_ceil` counts it once, and
+    /// tests/test_adaptive.rs pins the loop to the same arithmetic.
+    ///
+    /// This is schedule-side accounting only: an adaptive
+    /// [`crate::algo::PeriodController`] resizes the period round by
+    /// round, so the *realized* count must be read from
+    /// `CommStats::rounds` (they agree under the `Stagewise` controller).
     pub fn comm_rounds(&self) -> u64 {
         self.steps.div_ceil(self.comm_period)
     }
 
-    /// Round-count accounting under partial participation: the paper's
+    /// Client-round accounting under partial participation: the paper's
     /// communication complexities (O(N log T) IID, O(sqrt(NT)) Non-IID)
     /// count *client-round* participations, so a round that averages only
-    /// `participants` of the fleet contributes proportionally less. This
-    /// is the scheduled upper bound; the realized total is
-    /// `CommStats::participant_client_rounds`.
+    /// `participants` of the fleet contributes proportionally less.
+    ///
+    /// Like [`Self::comm_rounds`] this is the *scheduled* upper bound —
+    /// realized accounting flows from `CommStats`:
+    /// `CommStats::client_rounds(fleet)` for the full-fleet realization
+    /// and `CommStats::participant_client_rounds` for the
+    /// participant-weighted one.
     pub fn client_rounds(&self, participants: u64) -> u64 {
         self.comm_rounds() * participants
     }

@@ -207,6 +207,7 @@ pub fn run_experiment_with_stop(
         collective: cfg.collective,
         profile: cfg.cluster,
         participation: cfg.participation,
+        controller: cfg.controller,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,
         seed: cfg.seed,

@@ -37,13 +37,20 @@ pub struct CommStats {
     /// the paper's per-client communication complexities count, which a
     /// round averaging a subset grows by less than a full fleet.
     pub participant_client_rounds: u64,
+    /// Total local steps priced across all rounds — the sum of realized
+    /// per-round communication periods. `local_steps / rounds` is the
+    /// realized mean k, which an adaptive
+    /// [`crate::algo::PeriodController`] can move away from the scheduled
+    /// `Phase::comm_period`.
+    pub local_steps: u64,
 }
 
 impl CommStats {
-    pub fn record_round(&mut self, bytes_per_client: u64, sim_seconds: f64) {
+    pub fn record_round(&mut self, bytes_per_client: u64, sim_seconds: f64, steps: u64) {
         self.rounds += 1;
         self.bytes_per_client += bytes_per_client;
         self.sim_comm_seconds += sim_seconds;
+        self.local_steps += steps;
     }
 
     /// Round-count accounting under partial participation: fold one
@@ -66,6 +73,25 @@ impl CommStats {
         }
         self.participant_client_rounds as f64 / self.rounds as f64
     }
+
+    /// Mean realized communication period across the run (0 before any
+    /// round). Equals the schedule's k under the `Stagewise` controller
+    /// (up to phase-boundary truncation); adaptive controllers move it.
+    pub fn mean_realized_k(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.local_steps as f64 / self.rounds as f64
+    }
+
+    /// Realized full-fleet client-round count (`rounds x fleet`): the
+    /// ground truth that `Phase::client_rounds` only *schedules* — under
+    /// an adaptive controller the two diverge, and this (plus the
+    /// participant-weighted `participant_client_rounds`) is what reports
+    /// must use.
+    pub fn client_rounds(&self, fleet: u64) -> u64 {
+        self.rounds * fleet
+    }
 }
 
 #[cfg(test)]
@@ -75,18 +101,22 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let mut s = CommStats::default();
-        s.record_round(100, 0.5);
-        s.record_round(50, 0.25);
+        s.record_round(100, 0.5, 10);
+        s.record_round(50, 0.25, 6);
         assert_eq!(s.rounds, 2);
         assert_eq!(s.bytes_per_client, 150);
         assert!((s.sim_comm_seconds - 0.75).abs() < 1e-12);
+        assert_eq!(s.local_steps, 16);
+        assert!((s.mean_realized_k() - 8.0).abs() < 1e-12);
+        assert_eq!(s.client_rounds(8), 16);
+        assert_eq!(CommStats::default().mean_realized_k(), 0.0);
     }
 
     #[test]
     fn participation_accounting() {
         let mut s = CommStats::default();
         for participants in [4u64, 3, 0, 4] {
-            s.record_round(10, 0.1);
+            s.record_round(10, 0.1, 5);
             s.record_participation(participants, 4);
         }
         assert_eq!(s.rounds, 4);

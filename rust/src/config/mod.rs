@@ -5,7 +5,7 @@
 //! reads a JSON file (see `configs/` for the shipped presets) and applies
 //! `--key value` overrides.
 
-use crate::algo::{AlgoSpec, Variant};
+use crate::algo::{AlgoSpec, ControllerSpec, Variant};
 use crate::comm::Algorithm;
 use crate::simnet::{ClusterProfile, ParticipationPolicy};
 use crate::util::json::Json;
@@ -100,6 +100,10 @@ pub struct ExperimentConfig {
     /// Partial-participation policy ("all" | "arrived" | a fraction in
     /// (0, 1], e.g. 0.25 for FedAvg-style client sampling).
     pub participation: ParticipationPolicy,
+    /// Communication-period controller ("stagewise" | "comm-ratio" |
+    /// "barrier-aware"); keys `target_ratio` / `barrier_frac` tune the
+    /// adaptive variants (DESIGN.md §5).
+    pub controller: ControllerSpec,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -118,6 +122,7 @@ impl Default for ExperimentConfig {
             collective: Algorithm::Ring,
             cluster: ClusterProfile::homogeneous(),
             participation: ParticipationPolicy::All,
+            controller: ControllerSpec::Stagewise,
             eval_every_rounds: 1,
             engine: "threaded".into(),
         }
@@ -178,6 +183,25 @@ impl ExperimentConfig {
             };
             cfg.participation = ParticipationPolicy::parse(&s)
                 .ok_or_else(|| anyhow::anyhow!("unknown participation policy {s}"))?;
+        }
+        if let Some(c) = gets("controller") {
+            cfg.controller = ControllerSpec::parse(&c)
+                .ok_or_else(|| anyhow::anyhow!("unknown controller {c}"))?;
+        }
+        if let Some(v) = getf("target_ratio") {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "target_ratio must be a positive finite ratio, got {v}"
+            );
+            if let ControllerSpec::CommRatio { target } = &mut cfg.controller {
+                *target = v;
+            }
+        }
+        if let Some(v) = getf("barrier_frac") {
+            anyhow::ensure!(v > 0.0 && v < 1.0, "barrier_frac must be in (0, 1), got {v}");
+            if let ControllerSpec::BarrierAware { frac } = &mut cfg.controller {
+                *frac = v;
+            }
         }
         if let Some(a) = gets("algorithm") {
             cfg.algo.variant =
@@ -261,6 +285,26 @@ impl ExperimentConfig {
         take!(collective);
         take!(cluster);
         take!(participation);
+        // Copy a patched controller only when it changes the controller
+        // *kind*: re-stating the current name (say, a wrapper script's
+        // default `--controller comm-ratio`) must not silently reset
+        // knobs tuned earlier back to the parse defaults.
+        if j.get("controller").is_some() && tmp.controller.label() != cfg.controller.label() {
+            cfg.controller = tmp.controller;
+        }
+        // Controller knobs patch the *current* controller in place, so
+        // `--target-ratio 0.5` can follow `--controller comm-ratio` across
+        // separate overrides (validation ran in `from_json` above).
+        if let Some(v) = j.get("target_ratio").and_then(|v| v.as_f64()) {
+            if let ControllerSpec::CommRatio { target } = &mut cfg.controller {
+                *target = v;
+            }
+        }
+        if let Some(v) = j.get("barrier_frac").and_then(|v| v.as_f64()) {
+            if let ControllerSpec::BarrierAware { frac } = &mut cfg.controller {
+                *frac = v;
+            }
+        }
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
         }
@@ -338,6 +382,51 @@ mod tests {
                 "{bad}"
             );
         }
+    }
+
+    #[test]
+    fn parses_controller_and_knobs() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::Stagewise);
+        let j = Json::parse(r#"{"controller": "comm-ratio", "target_ratio": 0.5}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::CommRatio { target: 0.5 });
+        let j = Json::parse(r#"{"controller": "barrier-aware", "barrier_frac": 0.1}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::BarrierAware { frac: 0.1 });
+        // A knob for a different controller is inert, not an error.
+        let j = Json::parse(r#"{"controller": "stagewise", "target_ratio": 0.5}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::Stagewise);
+        for bad in [
+            r#"{"controller": "pid"}"#,
+            r#"{"target_ratio": 0}"#,
+            r#"{"barrier_frac": 1.0}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn controller_overrides_compose_across_calls() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("controller", "comm-ratio").unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::CommRatio { target: 1.0 });
+        cfg.apply_override("target_ratio", "0.25").unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::CommRatio { target: 0.25 });
+        // Unrelated overrides keep the tuned controller.
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::CommRatio { target: 0.25 });
+        assert_eq!(cfg.algo.eta1, 0.4);
+        // Re-stating the same controller name keeps the tuned knob...
+        cfg.apply_override("controller", "comm-ratio").unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::CommRatio { target: 0.25 });
+        // ...while switching kinds takes the new controller's defaults.
+        cfg.apply_override("controller", "barrier-aware").unwrap();
+        assert_eq!(cfg.controller, ControllerSpec::BarrierAware { frac: 0.05 });
     }
 
     #[test]

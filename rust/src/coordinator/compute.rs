@@ -36,6 +36,45 @@ pub trait ClientCompute {
         inv_gamma: f32,
     );
 
+    /// Like [`Self::grads`], but gradients are needed only for clients
+    /// with `active[i]` — the coordinator knows at round start which
+    /// clients sit the round out (churned out, or unsampled under a
+    /// fraction participation policy) and their local work would be
+    /// discarded at the comm point anyway (DESIGN.md §2). Implementations
+    /// may skip inactive clients entirely, leaving placeholder values
+    /// (empty or zero gradients, zero losses) in their slots; callers
+    /// must not read inactive slots and must pair this with
+    /// [`Self::step_masked`] on the same engine. The default ignores the
+    /// mask — correct for every engine, it just does the wasted work.
+    fn grads_masked(
+        &mut self,
+        thetas: &[Vec<f32>],
+        batches: &[Vec<usize>],
+        active: &[bool],
+    ) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let _ = active;
+        self.grads(thetas, batches)
+    }
+
+    /// Like [`Self::step`], restricted to active clients. Inactive
+    /// replicas' post-step values are unspecified — the coordinator rolls
+    /// every non-participant back to its last-synced model at the comm
+    /// point, so both "left untouched" (native engines) and "stepped with
+    /// a placeholder gradient" (fixed-shape batched artifacts) are
+    /// trajectory-equivalent. The default ignores the mask.
+    fn step_masked(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+        active: &[bool],
+    ) {
+        let _ = active;
+        self.step(thetas, grads, anchor, eta, inv_gamma)
+    }
+
     /// Full-dataset objective at a (usually averaged) iterate.
     fn full_loss(&mut self, theta: &[f32]) -> f64;
 
@@ -84,6 +123,48 @@ impl ClientCompute for NativeCompute {
         }
     }
 
+    fn grads_masked(
+        &mut self,
+        thetas: &[Vec<f32>],
+        batches: &[Vec<usize>],
+        active: &[bool],
+    ) -> (Vec<Vec<f32>>, Vec<f32>) {
+        assert_eq!(thetas.len(), batches.len());
+        assert_eq!(thetas.len(), active.len());
+        let mut gs = Vec::with_capacity(thetas.len());
+        let mut ls = Vec::with_capacity(thetas.len());
+        for i in 0..thetas.len() {
+            if active[i] {
+                let (g, l) = self.oracle.grad_minibatch(&thetas[i], &batches[i]);
+                gs.push(g);
+                ls.push(l);
+            } else {
+                // Skipped: no oracle call; the slot is a placeholder the
+                // caller must not read.
+                gs.push(Vec::new());
+                ls.push(0.0);
+            }
+        }
+        (gs, ls)
+    }
+
+    fn step_masked(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+        active: &[bool],
+    ) {
+        assert_eq!(thetas.len(), active.len());
+        for i in 0..thetas.len() {
+            if active[i] {
+                crate::linalg::fused_local_step(&mut thetas[i], &grads[i], anchor, eta, inv_gamma);
+            }
+        }
+    }
+
     fn full_loss(&mut self, theta: &[f32]) -> f64 {
         self.oracle.full_loss(theta)
     }
@@ -111,6 +192,33 @@ mod tests {
         assert_eq!(gs[0], g0);
         assert_eq!(ls[0], l0);
         assert_eq!(gs.len(), 2);
+    }
+
+    #[test]
+    fn masked_grads_skip_inactive_and_match_dense_on_active() {
+        let ds = Arc::new(synth::a9a_like(1, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut engine = NativeCompute::new(oracle);
+        let thetas = vec![vec![0.1f32; 8], vec![-0.1f32; 8], vec![0.2f32; 8]];
+        let batches: Vec<Vec<usize>> = (0..3).map(|i| (i * 8..(i + 1) * 8).collect()).collect();
+        let (dense, dl) = engine.grads(&thetas, &batches);
+        let mask = [true, false, true];
+        let (masked, ml) = engine.grads_masked(&thetas, &batches, &mask);
+        assert_eq!(masked[0], dense[0]);
+        assert_eq!(masked[2], dense[2]);
+        assert!(masked[1].is_empty(), "inactive slot is a placeholder");
+        assert_eq!(ml[0], dl[0]);
+        assert_eq!(ml[1], 0.0);
+        // step_masked steps the active replicas and leaves the inactive
+        // one untouched (placeholder gradient never read).
+        let anchor = vec![0.0f32; 8];
+        let mut ts = thetas.clone();
+        engine.step_masked(&mut ts, &masked, &anchor, 0.1, 0.0, &mask);
+        assert_eq!(ts[1], thetas[1]);
+        assert_ne!(ts[0], thetas[0]);
+        // All-active mask reproduces the dense path bit-for-bit.
+        let (all, _) = engine.grads_masked(&thetas, &batches, &[true; 3]);
+        assert_eq!(all, dense);
     }
 
     #[test]

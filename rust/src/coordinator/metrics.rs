@@ -25,8 +25,14 @@ pub struct TracePoint {
     pub stage: usize,
     /// Learning rate in effect.
     pub eta: f64,
-    /// Communication period in effect.
+    /// Communication period in effect (the schedule's `comm_period` under
+    /// the `Stagewise` controller; an adaptive controller moves it round
+    /// by round).
     pub k: u64,
+    /// Realized period of the round that triggered this evaluation: the
+    /// local steps actually priced into it (0 for the pre-training point;
+    /// smaller than `k` when a phase boundary cut the round short).
+    pub realized_k: u64,
 }
 
 /// Full run record.
@@ -119,6 +125,7 @@ impl Trace {
                 "mean_participation",
                 Json::num(self.comm.mean_participation()),
             ),
+            ("mean_realized_k", Json::num(self.comm.mean_realized_k())),
             ("stopped_early", Json::Bool(self.stopped_early)),
             (
                 "points",
@@ -136,6 +143,7 @@ impl Trace {
                                 ("stage", Json::num(p.stage as f64)),
                                 ("eta", Json::num(p.eta)),
                                 ("k", Json::num(p.k as f64)),
+                                ("realized_k", Json::num(p.realized_k as f64)),
                             ])
                         })
                         .collect(),
@@ -148,7 +156,18 @@ impl Trace {
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         let mut w = crate::util::csv::CsvWriter::to_file(
             path,
-            &["iter", "rounds", "epoch", "loss", "accuracy", "sim_seconds", "stage", "eta", "k"],
+            &[
+                "iter",
+                "rounds",
+                "epoch",
+                "loss",
+                "accuracy",
+                "sim_seconds",
+                "stage",
+                "eta",
+                "k",
+                "realized_k",
+            ],
         )?;
         for p in &self.points {
             w.row(&[
@@ -161,6 +180,7 @@ impl Trace {
                 p.stage.to_string(),
                 format!("{:.6e}", p.eta),
                 p.k.to_string(),
+                p.realized_k.to_string(),
             ])?;
         }
         w.flush()
@@ -188,6 +208,7 @@ mod tests {
             stage: 0,
             eta: 0.1,
             k: 10,
+            realized_k: 10,
         }
     }
 

@@ -3,8 +3,12 @@
 //! This is Algorithm 1 (Local SGD) as the inner loop, with the stagewise
 //! outer loop of Algorithms 2/3 flattened into the phase list: every
 //! iteration each client takes one (prox-)SGD step on its shard; whenever
-//! the within-phase step counter hits the phase's communication period (or
-//! the phase ends), the models are averaged by the configured collective,
+//! the within-round step counter hits the communication period in effect —
+//! the phase's scheduled `comm_period` under the default `Stagewise`
+//! controller, or whatever the configured
+//! [`crate::algo::PeriodController`] commanded after the previous round's
+//! feedback — or the phase ends, the models are averaged by the configured
+//! collective,
 //! the round is priced by the [`crate::simnet`] discrete-event engine
 //! under the configured cluster profile (the `homogeneous` default
 //! reproduces the closed-form [`crate::sim`] model exactly), and — on the
@@ -12,7 +16,7 @@
 
 use super::compute::ClientCompute;
 use super::metrics::{Trace, TracePoint};
-use crate::algo::Phase;
+use crate::algo::{ControllerSpec, Phase, RoundFeedback};
 use crate::comm;
 use crate::data::{sampler::MinibatchSampler, Shard};
 use crate::rng::Rng;
@@ -61,6 +65,18 @@ pub struct RunConfig {
     /// model (a parameter server reusing stale client state), and the
     /// recorded trace evaluates the server-side averaged model.
     pub participation: ParticipationPolicy,
+    /// Communication-period controller (DESIGN.md §5). The default
+    /// `Stagewise` replays each phase's fixed `comm_period` bit-for-bit;
+    /// the adaptive controllers resize the period round by round from the
+    /// simnet feedback of the round just priced.
+    pub controller: ControllerSpec,
+    /// Skip gradient computation for clients known at round start to sit
+    /// the round out (churned-out absentees, unsampled clients under a
+    /// fraction policy). Trajectories are bit-identical either way — the
+    /// coordinator rolls non-participants back at the comm point — so
+    /// this is purely an oracle-call saving; the flag exists for the
+    /// counting-oracle regression test (tests/test_adaptive.rs).
+    pub skip_inactive_compute: bool,
 }
 
 impl Default for RunConfig {
@@ -77,6 +93,8 @@ impl Default for RunConfig {
             profile: ClusterProfile::homogeneous(),
             timeline_detail: Detail::Rounds,
             participation: ParticipationPolicy::All,
+            controller: ControllerSpec::Stagewise,
+            skip_inactive_compute: true,
         }
     }
 }
@@ -142,6 +160,21 @@ pub fn run(
     };
     let mut server: Vec<f32> = if masked { theta0.to_vec() } else { Vec::new() };
 
+    // The communication-period controller: `Stagewise` (the default)
+    // replays `phase.comm_period` exactly; adaptive controllers resize the
+    // period from the telemetry of each priced round (DESIGN.md §5).
+    let mut controller = cfg.controller.build();
+
+    // Wasted-compute fix (DESIGN.md §2): under a masked policy, clients
+    // that are known at round start to sit the round out (churned out, or
+    // unsampled under `Fraction`) skip gradient work entirely — their
+    // local steps would be discarded at the comm point anyway. Samplers
+    // still advance for everyone so rejoin trajectories stay
+    // bit-identical. Under `All` every replica enters the average, so
+    // nothing can be skipped.
+    let skip_inactive = masked && cfg.skip_inactive_compute;
+    let mut active = vec![true; n];
+
     // Initial evaluation (iteration 0, before any work).
     let loss0 = engine.full_loss(&anchor);
     let acc0 = if cfg.eval_accuracy {
@@ -159,6 +192,7 @@ pub fn run(
         stage: phases[0].stage,
         eta: phases[0].lr.at(0),
         k: phases[0].comm_period,
+        realized_k: 0,
     });
 
     'outer: for phase in phases {
@@ -168,29 +202,39 @@ pub fn run(
             // policy leaves some replicas unsynced).
             anchor.copy_from_slice(if masked { &server } else { &thetas[0] });
         }
-        let k = phase.comm_period.max(1);
+        let mut k = controller.period(phase).max(1);
         let mut batches: Vec<Vec<usize>> = Vec::with_capacity(n);
         let mut steps_in_round: u64 = 0;
         for step in 0..phase.steps {
+            if steps_in_round == 0 && skip_inactive {
+                // Round start: learn who sits this round out. The draw is
+                // cached inside the engine and consumed by the pricing
+                // call at the comm point, so streams stay bit-identical
+                // to the unsplit path.
+                active.copy_from_slice(simnet.begin_round());
+            }
             let eta = phase.lr.at(t) as f32;
 
             batches.clear();
             for s in samplers.iter_mut() {
+                // Every sampler advances — including inactive clients' —
+                // so a client that rejoins later resumes the exact stream
+                // position it would have had.
                 batches.push(s.sample(phase.batch));
             }
-            let (grads, _losses) = engine.grads(&thetas, &batches);
-            engine.step(&mut thetas, &grads, &anchor, eta, phase.inv_gamma);
+            let (grads, _losses) = engine.grads_masked(&thetas, &batches, &active);
+            engine.step_masked(&mut thetas, &grads, &anchor, eta, phase.inv_gamma, &active);
 
             t += 1;
             steps_in_round += 1;
             examples_per_client += phase.batch as u64;
 
-            let at_comm_point = (step + 1) % k == 0 || step + 1 == phase.steps;
+            let at_comm_point = steps_in_round == k || step + 1 == phase.steps;
             if at_comm_point {
                 // Price first: the engine's participation mask decides who
                 // enters this round's average (pricing never depends on
                 // the model values, so the order is free).
-                let (rt, part) = simnet.price_round_masked(steps_in_round, phase.batch);
+                let (rt, part) = simnet.price_round_scheduled(steps_in_round, phase.batch, k);
                 let round_bytes = if masked {
                     comm::average_masked(&mut thetas, cfg.collective, part.as_slice());
                     for i in 0..n {
@@ -214,9 +258,16 @@ pub fn run(
                 steps_in_round = 0;
                 clock.add_compute(rt.compute_span);
                 clock.add_comm(rt.comm_seconds);
-                comm_stats.record_round(round_bytes, rt.comm_seconds);
+                comm_stats.record_round(round_bytes, rt.comm_seconds, rt.steps);
                 comm_stats.record_participation(part.count() as u64, n as u64);
                 rounds += 1;
+
+                // Close the simnet -> algo loop: fold the round's
+                // telemetry into the controller, then ask it for the next
+                // period (a no-op handshake under `Stagewise`).
+                let k_round = k;
+                controller.observe(&RoundFeedback::from_stat(&rt, n));
+                k = controller.period(phase).max(1);
 
                 if rounds % cfg.eval_every_rounds == 0 {
                     let eval_model: &[f32] = if masked { &server } else { &thetas[0] };
@@ -235,7 +286,8 @@ pub fn run(
                         sim_seconds: clock.total(),
                         stage: phase.stage,
                         eta: eta as f64,
-                        k,
+                        k: k_round,
+                        realized_k: rt.steps,
                     });
                     if let Some(stop) = &cfg.stop {
                         let hit = match stop.metric {

@@ -119,6 +119,54 @@ impl ClientCompute for ThreadedCompute {
         }
     }
 
+    fn grads_masked(
+        &mut self,
+        thetas: &[Vec<f32>],
+        batches: &[Vec<usize>],
+        active: &[bool],
+    ) -> (Vec<Vec<f32>>, Vec<f32>) {
+        assert_eq!(thetas.len(), batches.len());
+        assert_eq!(thetas.len(), active.len());
+        let n = thetas.len();
+        // Scatter only the active clients (same slot -> worker mapping as
+        // the dense path, so results are bit-identical per client).
+        let mut dispatched = 0usize;
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            self.cmd_tx[i % self.n_workers]
+                .send(Cmd::Grad(i, thetas[i].clone(), batches[i].clone()))
+                .expect("worker died");
+            dispatched += 1;
+        }
+        let mut gs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut ls = vec![0.0f32; n];
+        for _ in 0..dispatched {
+            let (slot, g, l) = self.res_rx.recv().expect("worker died");
+            gs[slot] = g;
+            ls[slot] = l;
+        }
+        (gs, ls)
+    }
+
+    fn step_masked(
+        &mut self,
+        thetas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+        active: &[bool],
+    ) {
+        assert_eq!(thetas.len(), active.len());
+        for i in 0..thetas.len() {
+            if active[i] {
+                crate::linalg::fused_local_step(&mut thetas[i], &grads[i], anchor, eta, inv_gamma);
+            }
+        }
+    }
+
     fn full_loss(&mut self, theta: &[f32]) -> f64 {
         self.oracle.full_loss(theta)
     }
@@ -148,6 +196,22 @@ mod tests {
         let (gs_b, ls_b) = par.grads(&thetas, &batches);
         assert_eq!(gs_a, gs_b);
         assert_eq!(ls_a, ls_b);
+    }
+
+    #[test]
+    fn threaded_masked_grads_match_native_masked() {
+        let ds = Arc::new(synth::a9a_like(7, 256, 12));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut seq = NativeCompute::new(oracle.clone());
+        let mut par = ThreadedCompute::new(oracle, 3);
+        let thetas: Vec<Vec<f32>> = (0..6).map(|i| vec![0.02 * i as f32; 12]).collect();
+        let batches: Vec<Vec<usize>> = (0..6).map(|i| (i * 4..(i + 1) * 4).collect()).collect();
+        let mask = [true, false, true, true, false, true];
+        let (ga, la) = seq.grads_masked(&thetas, &batches, &mask);
+        let (gb, lb) = par.grads_masked(&thetas, &batches, &mask);
+        assert_eq!(ga, gb);
+        assert_eq!(la, lb);
+        assert!(gb[1].is_empty() && gb[4].is_empty(), "inactive slots skipped");
     }
 
     #[test]

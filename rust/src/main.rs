@@ -44,6 +44,17 @@ fn main() -> anyhow::Result<()> {
         "",
         "participation policy: all (every replica averaged; timing-only faults), arrived (average only clients that made the barrier), or a fraction in (0,1] for FedAvg-style client sampling",
     )
+    .opt(
+        "controller",
+        "",
+        "communication-period controller: stagewise (the paper's fixed schedule), comm-ratio (hold comm/compute near --target-ratio), barrier-aware (stretch k when barrier waits exceed --barrier-frac of the round span)",
+    )
+    .opt("target-ratio", "", "comm-ratio controller: target per-round comm/compute ratio")
+    .opt(
+        "barrier-frac",
+        "",
+        "barrier-aware controller: stretch k when the mean barrier wait exceeds this fraction of the round span",
+    )
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
     .opt("out-timeline", "", "write per-round timing breakdown CSV to this path")
@@ -72,6 +83,9 @@ fn main() -> anyhow::Result<()> {
         ("eval-every", "eval_every_rounds"),
         ("cluster", "cluster"),
         ("participation", "participation"),
+        ("controller", "controller"),
+        ("target-ratio", "target_ratio"),
+        ("barrier-frac", "barrier_frac"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
@@ -96,7 +110,7 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!(
         "workload={} algorithm={} engine={} clients={} steps={} partition={} cluster={} \
-         participation={} seed={}",
+         participation={} controller={} seed={}",
         cfg.workload.name(),
         cfg.algo.variant.name(),
         cfg.engine,
@@ -105,6 +119,7 @@ fn main() -> anyhow::Result<()> {
         if cfg.iid { "IID".into() } else { format!("Non-IID(s={}%)", cfg.s_percent) },
         cfg.cluster.name,
         cfg.participation.label(),
+        cfg.controller.describe(),
         cfg.seed,
     );
 
@@ -113,9 +128,11 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
-        "done: iters={} rounds={} bytes/client={} final_loss={:.6e} final_acc={:.4} wall={:.1}s",
+        "done: iters={} rounds={} mean_realized_k={:.1} bytes/client={} final_loss={:.6e} \
+         final_acc={:.4} wall={:.1}s",
         trace.total_iters,
         trace.comm.rounds,
+        trace.comm.mean_realized_k(),
         trace.comm.bytes_per_client,
         trace.final_loss(),
         trace.final_accuracy(),

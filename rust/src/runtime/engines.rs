@@ -223,6 +223,27 @@ impl XlaCompute {
         (x, y)
     }
 
+    /// One client's transformer gradient: the tfm grad artifact is
+    /// single-client, executed once per replica (data-parallel), which is
+    /// what lets the masked path skip whole invocations.
+    fn tfm_grad_one(&mut self, theta: &[f32], batch: &[usize]) -> (Vec<f32>, f32) {
+        let mut theta_pad = vec![0.0f32; self.pp];
+        theta_pad[..self.p].copy_from_slice(theta);
+        let mut toks = vec![0.0f32; self.b * self.d_in];
+        for (j, &idx) in batch.iter().enumerate() {
+            toks[j * self.d_in..(j + 1) * self.d_in].copy_from_slice(self.dataset.x.row(idx));
+        }
+        let outs = self
+            .grad
+            .execute_f32(&[
+                Artifact::literal_f32(&theta_pad, &[self.pp]).unwrap(),
+                Artifact::literal_f32(&toks, &[self.b, self.d_in]).unwrap(),
+            ])
+            .expect("tfm_grad artifact");
+        self.calls += 1;
+        (outs[0][..self.p].to_vec(), outs[1][0])
+    }
+
     fn eval_both(&mut self, theta: &[f32]) -> (f64, f64) {
         if let Some((cached, loss, acc)) = &self.last_eval {
             if cached.as_slice() == theta {
@@ -338,27 +359,45 @@ impl ClientCompute for XlaCompute {
                 let mut gs = Vec::with_capacity(self.n);
                 let mut ls = Vec::with_capacity(self.n);
                 for (i, theta) in thetas.iter().enumerate() {
-                    let mut theta_pad = vec![0.0f32; self.pp];
-                    theta_pad[..self.p].copy_from_slice(theta);
-                    let mut toks = vec![0.0f32; self.b * self.d_in];
-                    for (j, &idx) in batches[i].iter().enumerate() {
-                        toks[j * self.d_in..(j + 1) * self.d_in]
-                            .copy_from_slice(self.dataset.x.row(idx));
-                    }
-                    let outs = self
-                        .grad
-                        .execute_f32(&[
-                            Artifact::literal_f32(&theta_pad, &[self.pp]).unwrap(),
-                            Artifact::literal_f32(&toks, &[self.b, self.d_in]).unwrap(),
-                        ])
-                        .expect("tfm_grad artifact");
-                    self.calls += 1;
-                    gs.push(outs[0][..self.p].to_vec());
-                    ls.push(outs[1][0]);
+                    let (g, l) = self.tfm_grad_one(theta, &batches[i]);
+                    gs.push(g);
+                    ls.push(l);
                 }
                 (gs, ls)
             }
         }
+    }
+
+    fn grads_masked(
+        &mut self,
+        thetas: &[Vec<f32>],
+        batches: &[Vec<usize>],
+        active: &[bool],
+    ) -> (Vec<Vec<f32>>, Vec<f32>) {
+        // The logreg/mlp grad artifacts are compiled for the whole fleet
+        // (one fixed-shape batched invocation), so there is nothing to
+        // skip — fall through to the dense path. The transformer artifact
+        // runs one invocation per client, so inactive clients genuinely
+        // save executable calls; their slots carry zero gradients so the
+        // (all-client, fixed-shape) fused-step artifact stays safe to run.
+        if !matches!(self.kind, ModelKind::Tfm { .. }) || active.iter().all(|&a| a) {
+            return self.grads(thetas, batches);
+        }
+        assert_eq!(thetas.len(), self.n, "engine compiled for {} clients", self.n);
+        assert_eq!(thetas.len(), active.len());
+        let mut gs = Vec::with_capacity(self.n);
+        let mut ls = Vec::with_capacity(self.n);
+        for (i, theta) in thetas.iter().enumerate() {
+            if active[i] {
+                let (g, l) = self.tfm_grad_one(theta, &batches[i]);
+                gs.push(g);
+                ls.push(l);
+            } else {
+                gs.push(vec![0.0f32; self.p]);
+                ls.push(0.0);
+            }
+        }
+        (gs, ls)
     }
 
     fn step(

@@ -41,6 +41,23 @@ struct Client {
     present: bool,
 }
 
+/// Membership decisions drawn at round start — cross-round churn plus the
+/// `Fraction` policy's sampled active set — split out of the pricing call
+/// so the coordinator can learn *before any local step runs* which clients
+/// sit the round out (the wasted-compute fix, DESIGN.md §2). Cached by
+/// [`SimNet::begin_round`] and consumed by the next pricing call.
+struct PendingRound {
+    /// Clients doing local work this round (present and, under
+    /// `Fraction`, sampled).
+    active: Vec<bool>,
+    joined: u32,
+    left: u32,
+    /// Churn transitions in draw order, emitted into the `Detail::Steps`
+    /// event stream at pricing time (after `RoundStart`, exactly where the
+    /// single-call path recorded them).
+    churn: Vec<EventKind>,
+}
+
 /// Discrete-event simulator for one run's cluster.
 pub struct SimNet {
     profile: ClusterProfile,
@@ -58,6 +75,9 @@ pub struct SimNet {
     part_rng: Rng,
     /// How the per-round participation mask is derived.
     policy: ParticipationPolicy,
+    /// Round-start membership draw waiting to be consumed by the next
+    /// pricing call (see [`Self::begin_round`]).
+    pending: Option<PendingRound>,
     now: f64,
     round: u64,
     pub timeline: Timeline,
@@ -102,6 +122,7 @@ impl SimNet {
             link_rng: root.split(0),
             part_rng: root.split(SAMPLING_STREAM),
             policy: ParticipationPolicy::All,
+            pending: None,
             now: 0.0,
             round: 0,
             timeline: Timeline::default(),
@@ -140,46 +161,21 @@ impl SimNet {
         std::mem::take(&mut self.timeline)
     }
 
-    /// Price one communication round of `steps` local iterations at
-    /// per-client batch size `batch`, advancing the simulated clock.
-    /// Convenience wrapper over [`Self::price_round_masked`] for callers
-    /// that only need the timing.
-    pub fn price_round(&mut self, steps: u64, batch: usize) -> RoundStat {
-        self.price_round_masked(steps, batch).0
-    }
-
-    /// Price one communication round and emit the algorithm-visible
-    /// [`Participation`] mask the configured policy derives for it:
-    /// `All` is always all-ones (the PR-1 invariant), `Arrived` marks the
-    /// clients that reached the barrier before it released, and
-    /// `Fraction` additionally restricts the round's active set to a
-    /// deterministic sample of the present fleet.
-    pub fn price_round_masked(&mut self, steps: u64, batch: usize) -> (RoundStat, Participation) {
-        assert!(steps > 0, "a round prices at least one local step");
+    /// Draw the upcoming round's membership: cross-round join/leave churn
+    /// and, under [`ParticipationPolicy::Fraction`], the sampled active
+    /// set. Per-stream draw order is identical to the legacy single-call
+    /// pricing path, so timings and masks are bit-for-bit unchanged
+    /// whether or not [`Self::begin_round`] splits the draw out.
+    fn draw_membership(&mut self) -> PendingRound {
         let n = self.clients.len();
         let profile = self.profile;
-        let g = self.cm.grad_seconds(batch, self.dim);
-        let start = self.now;
-        let nominal_span = g * steps as f64;
-        let deadline = if profile.timeout_factor > 0.0 {
-            profile.timeout_factor * nominal_span
-        } else {
-            f64::INFINITY
-        };
-
-        if self.detail == Detail::Steps {
-            self.timeline.events.push(TimelineEvent {
-                t: start,
-                round: self.round,
-                kind: EventKind::RoundStart,
-            });
-        }
 
         // Elastic membership: cross-round join/leave churn, drawn from
         // per-client streams at round start. No-op (and RNG-free) for
         // profiles with zero churn knobs.
         let mut joined = 0u32;
         let mut left = 0u32;
+        let mut churn = Vec::new();
         for i in 0..n {
             let c = &mut self.clients[i];
             let kind = if c.present {
@@ -197,13 +193,7 @@ impl SimNet {
                 joined += 1;
                 EventKind::ClientJoined { client: i }
             };
-            if self.detail == Detail::Steps {
-                self.timeline.events.push(TimelineEvent {
-                    t: start,
-                    round: self.round,
-                    kind,
-                });
-            }
+            churn.push(kind);
         }
 
         // The round's active set: present clients, further subsampled
@@ -225,6 +215,95 @@ impl SimNet {
             active = vec![false; n];
             for &c in &pool[..m] {
                 active[c] = true;
+            }
+        }
+
+        PendingRound {
+            active,
+            joined,
+            left,
+            churn,
+        }
+    }
+
+    /// Draw (and cache) the upcoming round's membership and return the
+    /// active set: clients absent from it are known *now* — before any
+    /// local step runs — to sit the round out (churned out, or unsampled
+    /// under `Fraction`), so the coordinator can skip their gradient work.
+    /// Clients that crash or straggle past the barrier timeout are *not*
+    /// excluded here; that is only discovered at the barrier. Idempotent
+    /// until the next pricing call consumes the cached draw, and entirely
+    /// optional: pricing calls that were not preceded by `begin_round`
+    /// draw the identical membership themselves.
+    pub fn begin_round(&mut self) -> &[bool] {
+        if self.pending.is_none() {
+            let p = self.draw_membership();
+            self.pending = Some(p);
+        }
+        &self.pending.as_ref().expect("pending round just drawn").active
+    }
+
+    /// Price one communication round of `steps` local iterations at
+    /// per-client batch size `batch`, advancing the simulated clock.
+    /// Convenience wrapper over [`Self::price_round_masked`] for callers
+    /// that only need the timing.
+    pub fn price_round(&mut self, steps: u64, batch: usize) -> RoundStat {
+        self.price_round_masked(steps, batch).0
+    }
+
+    /// Price one communication round and emit the algorithm-visible
+    /// [`Participation`] mask the configured policy derives for it:
+    /// `All` is always all-ones (the PR-1 invariant), `Arrived` marks the
+    /// clients that reached the barrier before it released, and
+    /// `Fraction` additionally restricts the round's active set to a
+    /// deterministic sample of the present fleet. Records the realized
+    /// step count as the round's period ([`RoundStat::k`]).
+    pub fn price_round_masked(&mut self, steps: u64, batch: usize) -> (RoundStat, Participation) {
+        self.price_round_scheduled(steps, batch, steps)
+    }
+
+    /// Like [`Self::price_round_masked`], additionally recording `period`
+    /// — the communication period the schedule or controller had in effect
+    /// — into [`RoundStat::k`]. The realized `steps` can be smaller when a
+    /// phase boundary cut the round short.
+    pub fn price_round_scheduled(
+        &mut self,
+        steps: u64,
+        batch: usize,
+        period: u64,
+    ) -> (RoundStat, Participation) {
+        assert!(steps > 0, "a round prices at least one local step");
+        let n = self.clients.len();
+        let profile = self.profile;
+        let g = self.cm.grad_seconds(batch, self.dim);
+        let start = self.now;
+        let nominal_span = g * steps as f64;
+        let deadline = if profile.timeout_factor > 0.0 {
+            profile.timeout_factor * nominal_span
+        } else {
+            f64::INFINITY
+        };
+
+        // Membership: use the round-start draw if the coordinator already
+        // made it (via `begin_round`), else draw it now — bit-identical
+        // either way, since the draws come from dedicated streams.
+        let PendingRound { active, joined, left, churn } = match self.pending.take() {
+            Some(p) => p,
+            None => self.draw_membership(),
+        };
+
+        if self.detail == Detail::Steps {
+            self.timeline.events.push(TimelineEvent {
+                t: start,
+                round: self.round,
+                kind: EventKind::RoundStart,
+            });
+            for kind in churn {
+                self.timeline.events.push(TimelineEvent {
+                    t: start,
+                    round: self.round,
+                    kind,
+                });
             }
         }
 
@@ -380,6 +459,7 @@ impl SimNet {
         let stat = RoundStat {
             round: self.round,
             steps,
+            k: period,
             start,
             compute_span: exit,
             comm_seconds: comm,
@@ -607,6 +687,59 @@ mod tests {
             assert_eq!(sa.compute_span.to_bits(), sb.compute_span.to_bits(), "round {r}");
             assert_eq!(sa.comm_seconds.to_bits(), sb.comm_seconds.to_bits(), "round {r}");
         }
+    }
+
+    #[test]
+    fn begin_round_split_is_bit_identical_to_single_call() {
+        // Splitting the membership draw out of the pricing call must not
+        // change a single bit of timing, mask, or timeline — for churny
+        // and sampled policies alike.
+        for policy in [
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            let mk = || {
+                engine(ClusterProfile::elastic_federated(), 8, 13, Detail::Steps)
+                    .with_policy(policy)
+            };
+            let (mut single, mut split) = (mk(), mk());
+            for r in 0..100 {
+                let pre: Vec<bool> = split.begin_round().to_vec();
+                let (sa, pa) = single.price_round_masked(6, 16);
+                let (sb, pb) = split.price_round_masked(6, 16);
+                assert_eq!(sa, sb, "round {r}");
+                assert_eq!(pa, pb, "round {r}");
+                // Participation can only shrink at the barrier (crashes,
+                // timeouts) relative to the round-start active set — it
+                // never grows past it.
+                for i in 0..8 {
+                    assert!(!pb.participates(i) || pre[i], "round {r} client {i}");
+                }
+            }
+            assert_eq!(single.timeline, split.timeline, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn begin_round_is_idempotent_until_priced() {
+        let mut sim = engine(ClusterProfile::elastic_federated(), 8, 5, Detail::Off)
+            .with_policy(ParticipationPolicy::Fraction(0.5));
+        for _ in 0..50 {
+            let a = sim.begin_round().to_vec();
+            let b = sim.begin_round().to_vec();
+            assert_eq!(a, b);
+            sim.price_round(4, 16);
+        }
+    }
+
+    #[test]
+    fn scheduled_period_recorded_in_round_stat() {
+        let mut sim = engine(ClusterProfile::homogeneous(), 4, 1, Detail::Rounds);
+        let (rt, _) = sim.price_round_scheduled(3, 16, 10);
+        assert_eq!(rt.steps, 3);
+        assert_eq!(rt.k, 10, "phase-boundary round keeps the commanded period");
+        let rt = sim.price_round(5, 16);
+        assert_eq!(rt.k, 5, "direct pricing records the realized steps as k");
     }
 
     #[test]

@@ -36,8 +36,14 @@ pub struct TimelineEvent {
 pub struct RoundStat {
     /// Communication round (0-based).
     pub round: u64,
-    /// Local steps priced into this round.
+    /// Local steps priced into this round (the *realized* communication
+    /// period).
     pub steps: u64,
+    /// Communication period in effect when the round was scheduled (an
+    /// adaptive [`crate::algo::PeriodController`] moves this round by
+    /// round). Equals `steps` except when a phase boundary cut the round
+    /// short.
+    pub k: u64,
     /// Absolute simulated time at round start.
     pub start: f64,
     /// Barrier exit minus round start: local compute plus straggler wait.
@@ -126,6 +132,7 @@ impl Timeline {
             &[
                 "round",
                 "steps",
+                "k",
                 "start",
                 "compute_span",
                 "comm_seconds",
@@ -142,6 +149,7 @@ impl Timeline {
             w.row(&[
                 r.round.to_string(),
                 r.steps.to_string(),
+                r.k.to_string(),
                 format!("{:.6e}", r.start),
                 format!("{:.6e}", r.compute_span),
                 format!("{:.6e}", r.comm_seconds),
@@ -166,6 +174,7 @@ mod tests {
         RoundStat {
             round,
             steps: 10,
+            k: 10,
             start: round as f64,
             compute_span: 0.5,
             comm_seconds: 0.25,
@@ -211,7 +220,7 @@ mod tests {
         t.write_csv(&path).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert_eq!(s.lines().count(), 3); // header + 2 rounds
-        assert!(s.starts_with("round,steps,start,"));
+        assert!(s.starts_with("round,steps,k,start,"));
         assert!(s.lines().next().unwrap().contains("participants,joined,left"));
         let _ = std::fs::remove_dir_all(&dir);
     }

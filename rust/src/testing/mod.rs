@@ -52,6 +52,52 @@ pub mod gen {
         lo + rng.below(hi - lo + 1)
     }
 
+    /// Uniform f64 in the half-open range `[lo, hi)`. Guard parity with
+    /// [`usize_in`]: panics on an inverted range (or non-finite bounds)
+    /// instead of silently producing out-of-range or NaN values; the
+    /// degenerate `lo == hi` is valid and returns `lo`.
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        assert!(
+            lo.is_finite() && hi.is_finite(),
+            "gen::f64_in: non-finite bounds [{lo}, {hi}]"
+        );
+        assert!(
+            lo <= hi,
+            "gen::f64_in: empty range [{lo}, {hi}] (lo must be <= hi)"
+        );
+        lo + rng.uniform() * (hi - lo)
+    }
+
+    /// Sample an index with probability proportional to `weights[i]`.
+    /// Guard parity with [`usize_in`]: panics on an empty weight list,
+    /// a negative/non-finite weight, or an all-zero total instead of
+    /// silently returning a biased or out-of-range index.
+    pub fn weighted(rng: &mut Rng, weights: &[f64]) -> usize {
+        assert!(!weights.is_empty(), "gen::weighted: empty weight list");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "gen::weighted: weights must be finite and non-negative, got {weights:?}"
+        );
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0,
+            "gen::weighted: total weight must be positive, got {total}"
+        );
+        let mut x = rng.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        // Float rounding can leave x a hair past the last bucket; land on
+        // the last positive-weight index.
+        weights
+            .iter()
+            .rposition(|w| *w > 0.0)
+            .expect("total > 0 implies a positive weight")
+    }
+
     pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
         (0..len).map(|_| rng.normal_f32() * scale).collect()
     }
@@ -112,5 +158,71 @@ mod tests {
     fn usize_in_rejects_inverted_range() {
         let mut rng = crate::rng::Rng::new(1);
         gen::usize_in(&mut rng, 5, 4);
+    }
+
+    #[test]
+    fn f64_in_bounds_and_degenerate() {
+        check(PropConfig::default(), "f64_in", |rng, _| {
+            let v = gen::f64_in(rng, -2.5, 7.0);
+            if (-2.5..7.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+        let mut rng = crate::rng::Rng::new(1);
+        assert_eq!(gen::f64_in(&mut rng, 3.25, 3.25), 3.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty range [1, 0.5]")]
+    fn f64_in_rejects_inverted_range() {
+        let mut rng = crate::rng::Rng::new(1);
+        gen::f64_in(&mut rng, 1.0, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite bounds")]
+    fn f64_in_rejects_nan_bounds() {
+        let mut rng = crate::rng::Rng::new(1);
+        gen::f64_in(&mut rng, 0.0, f64::NAN);
+    }
+
+    #[test]
+    fn weighted_respects_weights_and_skips_zeros() {
+        let mut rng = crate::rng::Rng::new(9);
+        let weights = [0.0, 1.0, 3.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..4_000 {
+            counts[gen::weighted(&mut rng, &weights)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 0);
+        // ~1000 vs ~3000 expected.
+        assert!((700..1_300).contains(&counts[1]), "{counts:?}");
+        assert!((2_700..3_300).contains(&counts[2]), "{counts:?}");
+        // Degenerate single bucket.
+        assert_eq!(gen::weighted(&mut rng, &[0.5]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty weight list")]
+    fn weighted_rejects_empty_list() {
+        let mut rng = crate::rng::Rng::new(1);
+        gen::weighted(&mut rng, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "total weight must be positive")]
+    fn weighted_rejects_all_zero_weights() {
+        let mut rng = crate::rng::Rng::new(1);
+        gen::weighted(&mut rng, &[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn weighted_rejects_negative_weights() {
+        let mut rng = crate::rng::Rng::new(1);
+        gen::weighted(&mut rng, &[1.0, -0.25]);
     }
 }

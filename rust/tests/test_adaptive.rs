@@ -1,0 +1,326 @@
+//! Adaptive communication-period controllers (DESIGN.md §5) and the
+//! wasted-compute fix.
+//!
+//! Three contracts are pinned here:
+//! * the default `Stagewise` controller realizes exactly the fixed
+//!   phase-arithmetic schedule — trajectories *and* simnet timelines are
+//!   bit-for-bit identical to an independent replay, across every cluster
+//!   preset;
+//! * adaptive controllers are deterministic: identical `(config, seed)`
+//!   yields the identical realized-k sequence;
+//! * under masked participation, compute for clients known to sit the
+//!   round out is skipped — oracle-call counts drop in proportion to the
+//!   sampled fraction with bit-identical trajectories (counting oracle).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, ControllerSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig, ThreadedCompute};
+use stl_sgd::data::{partition, synth, Dataset};
+use stl_sgd::grad::{logreg::NativeLogreg, Oracle};
+use stl_sgd::rng::Rng;
+use stl_sgd::sim::{ComputeModel, NetworkModel};
+use stl_sgd::simnet::{ClusterProfile, Detail, ParticipationPolicy, SimNet};
+
+fn base_cfg(profile: ClusterProfile, variant: Variant, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = Workload::LogregTest; // a9a_like(seed, 64, 16): dim 16
+    cfg.engine = "native".into();
+    cfg.n_clients = 4;
+    cfg.total_steps = 230;
+    cfg.seed = seed;
+    cfg.cluster = profile;
+    cfg.algo = AlgoSpec {
+        variant,
+        eta1: 0.3,
+        k1: 7.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    };
+    cfg
+}
+
+#[test]
+fn stagewise_controller_realizes_phase_arithmetic_bit_for_bit_on_every_preset() {
+    // (a) Rounds match the scheduled Phase arithmetic exactly, and (b) an
+    // independent raw SimNet fed that schedule reconstructs the identical
+    // timeline — so the controller-driven loop places every comm point
+    // exactly where the fixed-k loop did, on every cluster preset.
+    for profile in ClusterProfile::presets() {
+        for variant in [Variant::LocalSgd, Variant::StlSc] {
+            let cfg = base_cfg(profile, variant, 19);
+            assert_eq!(cfg.controller, ControllerSpec::Stagewise, "default");
+            let trace = workloads::run_experiment(&cfg).unwrap();
+            let phases = cfg.algo.phases(cfg.total_steps);
+            let scheduled: u64 = phases.iter().map(|p| p.comm_rounds()).sum();
+            assert_eq!(
+                trace.comm.rounds, scheduled,
+                "{} {variant:?}: realized rounds != scheduled",
+                profile.name
+            );
+            assert_eq!(trace.comm.local_steps, cfg.total_steps, "{}", profile.name);
+            assert_eq!(trace.comm.client_rounds(4), scheduled * 4);
+
+            let mut sim = SimNet::new(
+                profile,
+                NetworkModel::default(),
+                ComputeModel::default(),
+                cfg.collective,
+                cfg.n_clients,
+                16,
+                cfg.seed,
+                Detail::Rounds,
+            );
+            for p in &phases {
+                let k = p.comm_period.max(1);
+                for _ in 0..p.steps / k {
+                    sim.price_round_scheduled(k, p.batch, k);
+                }
+                if p.steps % k > 0 {
+                    sim.price_round_scheduled(p.steps % k, p.batch, k);
+                }
+            }
+            assert_eq!(
+                sim.take_timeline(),
+                trace.timeline,
+                "{} {variant:?}: timeline drifted from the fixed schedule",
+                profile.name
+            );
+            // The realized-k trace column reports the triggering round.
+            for p in &trace.points[1..] {
+                assert!(p.realized_k >= 1 && p.realized_k <= p.k, "iter {}", p.iter);
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_controllers_are_deterministic_in_config_and_seed() {
+    for spec in [
+        ControllerSpec::CommRatio { target: 1.0 },
+        ControllerSpec::BarrierAware { frac: 0.05 },
+    ] {
+        for profile in [
+            ClusterProfile::heavy_tail_stragglers(),
+            ClusterProfile::elastic_federated(),
+        ] {
+            let mk = || {
+                let mut cfg = base_cfg(profile, Variant::LocalSgd, 29);
+                cfg.controller = spec;
+                if profile.leave_prob > 0.0 {
+                    cfg.participation = ParticipationPolicy::Arrived;
+                }
+                workloads::run_experiment(&cfg).unwrap()
+            };
+            let (a, b) = (mk(), mk());
+            let ks = |t: &stl_sgd::coordinator::Trace| {
+                t.timeline.rounds.iter().map(|r| (r.k, r.steps)).collect::<Vec<_>>()
+            };
+            assert_eq!(ks(&a), ks(&b), "{} {spec:?}: realized-k sequence", profile.name);
+            assert_eq!(a.timeline, b.timeline, "{} {spec:?}", profile.name);
+            for (pa, pb) in a.points.iter().zip(&b.points) {
+                assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{spec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_controllers_stretch_periods_and_cut_simulated_time_under_stragglers() {
+    // The closed loop in action: on the straggler-bound profile both
+    // adaptive controllers sync less often than the fixed schedule and
+    // finish the same step budget in less simulated time.
+    let fixed = workloads::run_experiment(&base_cfg(
+        ClusterProfile::heavy_tail_stragglers(),
+        Variant::LocalSgd,
+        7,
+    ))
+    .unwrap();
+    for spec in [
+        ControllerSpec::CommRatio { target: 1.0 },
+        ControllerSpec::BarrierAware { frac: 0.05 },
+    ] {
+        let mut cfg = base_cfg(ClusterProfile::heavy_tail_stragglers(), Variant::LocalSgd, 7);
+        cfg.controller = spec;
+        let adaptive = workloads::run_experiment(&cfg).unwrap();
+        assert_eq!(adaptive.total_iters, fixed.total_iters);
+        assert!(
+            adaptive.comm.rounds < fixed.comm.rounds,
+            "{spec:?}: {} !< {}",
+            adaptive.comm.rounds,
+            fixed.comm.rounds
+        );
+        assert!(
+            adaptive.comm.mean_realized_k() > fixed.comm.mean_realized_k(),
+            "{spec:?} never stretched the period"
+        );
+        assert!(
+            adaptive.timeline.rounds.iter().any(|r| r.k > 7),
+            "{spec:?}: timeline k column never exceeded the schedule"
+        );
+        assert!(
+            adaptive.clock.total() < fixed.clock.total(),
+            "{spec:?}: {} !< {} simulated seconds",
+            adaptive.clock.total(),
+            fixed.clock.total()
+        );
+    }
+}
+
+#[test]
+fn boundary_coinciding_with_k_multiple_counts_one_round() {
+    // 120 steps at k = 40: the third k-multiple lands exactly on the
+    // phase boundary — the loop must comm once there, not twice, and the
+    // realized accounting must agree with the scheduled arithmetic.
+    let mut cfg = base_cfg(ClusterProfile::homogeneous(), Variant::LocalSgd, 3);
+    cfg.total_steps = 120;
+    cfg.algo.k1 = 40.0;
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    assert_eq!(trace.comm.rounds, 3);
+    assert_eq!(trace.comm.local_steps, 120);
+    assert!((trace.comm.mean_realized_k() - 40.0).abs() < 1e-12);
+    assert!(trace.timeline.rounds.iter().all(|r| r.steps == 40 && r.k == 40));
+
+    // Ragged tail: 130 steps -> 4 rounds, the last realizing only 10 of
+    // the commanded 40.
+    cfg.total_steps = 130;
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    assert_eq!(trace.comm.rounds, 4);
+    assert_eq!(trace.comm.local_steps, 130);
+    let last = trace.timeline.rounds.last().unwrap();
+    assert_eq!((last.steps, last.k), (10, 40));
+    let last_pt = trace.points.last().unwrap();
+    assert_eq!((last_pt.realized_k, last_pt.k), (10, 40));
+}
+
+/// Oracle wrapper that counts gradient calls (the wasted-compute metric).
+struct CountingOracle {
+    inner: Arc<dyn Oracle>,
+    calls: AtomicU64,
+}
+
+impl Oracle for CountingOracle {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.grad_minibatch(theta, indices)
+    }
+
+    fn full_loss(&self, theta: &[f32]) -> f64 {
+        self.inner.full_loss(theta)
+    }
+
+    fn full_accuracy(&self, theta: &[f32]) -> f64 {
+        self.inner.full_accuracy(theta)
+    }
+
+    fn dataset(&self) -> &Arc<Dataset> {
+        self.inner.dataset()
+    }
+}
+
+#[test]
+fn fraction_sampling_skips_unsampled_compute_with_bit_identical_trajectory() {
+    let ds = Arc::new(synth::a9a_like(1, 512, 16));
+    let base_oracle: Arc<dyn Oracle> = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, 4, &mut Rng::new(0));
+    let spec = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        alpha: 1e-3,
+        k1: 5.0,
+        batch: 8,
+        ..Default::default()
+    };
+    let phases = spec.phases(200);
+    let theta0 = vec![0.0f32; 16];
+    let run_once = |skip: bool| {
+        let counting = Arc::new(CountingOracle {
+            inner: base_oracle.clone(),
+            calls: AtomicU64::new(0),
+        });
+        let mut engine = NativeCompute::new(counting.clone());
+        let cfg = RunConfig {
+            n_clients: 4,
+            participation: ParticipationPolicy::Fraction(0.5),
+            skip_inactive_compute: skip,
+            ..Default::default()
+        };
+        let trace = run(&mut engine, &shards, &phases, &cfg, &theta0, "t");
+        (trace, counting.calls.load(Ordering::Relaxed))
+    };
+    let (full, full_calls) = run_once(false);
+    let (skipped, skip_calls) = run_once(true);
+    assert_eq!(full.points.len(), skipped.points.len());
+    for (a, b) in full.points.iter().zip(&skipped.points) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "iter {}", a.iter);
+    }
+    assert_eq!(full.timeline, skipped.timeline);
+    // Oracle calls drop in proportion to the sampled fraction:
+    // ceil(0.5 * 4) = 2 of 4 clients compute each round under the
+    // fault-free homogeneous profile.
+    assert_eq!(full_calls, 200 * 4);
+    assert_eq!(skip_calls, 200 * 2);
+}
+
+#[test]
+fn threaded_engine_matches_native_with_compute_skipping() {
+    // The skip path dispatches a subset of clients to the worker pool;
+    // the masked trajectory must stay identical to the sequential engine.
+    let ds = Arc::new(synth::a9a_like(2, 256, 12));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, 4, &mut Rng::new(0));
+    let spec = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        alpha: 1e-3,
+        k1: 5.0,
+        batch: 8,
+        ..Default::default()
+    };
+    let phases = spec.phases(150);
+    let cfg = RunConfig {
+        n_clients: 4,
+        participation: ParticipationPolicy::Fraction(0.5),
+        ..Default::default()
+    };
+    assert!(cfg.skip_inactive_compute, "skipping is the default");
+    let theta0 = vec![0.0f32; 12];
+    let mut native = NativeCompute::new(oracle.clone());
+    let a = run(&mut native, &shards, &phases, &cfg, &theta0, "native");
+    let mut threaded = ThreadedCompute::new(oracle, 4);
+    let b = run(&mut threaded, &shards, &phases, &cfg, &theta0, "threaded");
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "iter {}", pa.iter);
+    }
+    assert_eq!(a.timeline, b.timeline);
+}
+
+#[test]
+fn skipping_composes_with_adaptive_control_and_churn() {
+    // All three features at once — elastic churn, fraction sampling with
+    // compute skipping, and an adaptive controller — stay deterministic
+    // and converge.
+    let mk = || {
+        let mut cfg = base_cfg(ClusterProfile::elastic_federated(), Variant::LocalSgd, 41);
+        cfg.total_steps = 480;
+        cfg.participation = ParticipationPolicy::Fraction(0.5);
+        cfg.controller = ControllerSpec::BarrierAware { frac: 0.05 };
+        workloads::run_experiment(&cfg).unwrap()
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.timeline, b.timeline);
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits());
+    }
+    assert!(a.final_loss().is_finite());
+    assert!(a.comm.partial_rounds > 0, "sampling never produced a subset round");
+}

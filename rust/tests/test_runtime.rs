@@ -42,6 +42,9 @@ fn logreg_cfg(engine: &str, variant: Variant) -> ExperimentConfig {
         eval_every_rounds: 3,
         engine: engine.into(),
         s_percent: 50.0,
+        // cluster/participation/controller defaults: homogeneous fleet,
+        // policy `all`, stagewise schedule.
+        ..ExperimentConfig::default()
     }
 }
 
@@ -111,6 +114,7 @@ fn xla_mlp_trajectory_close_to_native() {
         eval_every_rounds: 5,
         engine: engine.into(),
         s_percent: 0.0,
+        ..ExperimentConfig::default()
     };
     let native = workloads::run_experiment(&mk("native")).unwrap();
     let xla = workloads::run_experiment(&mk("xla")).unwrap();

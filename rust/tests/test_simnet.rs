@@ -438,6 +438,7 @@ fn timeline_csv_schema_golden() {
         rounds: vec![RoundStat {
             round: 0,
             steps: 10,
+            k: 12,
             start: 0.0,
             compute_span: 0.5,
             comm_seconds: 0.25,
@@ -454,9 +455,9 @@ fn timeline_csv_schema_golden() {
     let path = dir.join("golden.csv");
     t.write_csv(&path).unwrap();
     let s = std::fs::read_to_string(&path).unwrap();
-    let golden = "round,steps,start,compute_span,comm_seconds,barrier_wait_max,\
+    let golden = "round,steps,k,start,compute_span,comm_seconds,barrier_wait_max,\
                   barrier_wait_mean,dropped,participants,joined,left,end\n\
-                  0,10,0.000000e0,5.000000e-1,2.500000e-1,1.250000e-1,6.250000e-2,\
+                  0,10,12,0.000000e0,5.000000e-1,2.500000e-1,1.250000e-1,6.250000e-2,\
                   1,3,1,2,7.500000e-1\n";
     assert_eq!(s, golden);
     let _ = std::fs::remove_dir_all(&dir);
@@ -487,7 +488,7 @@ fn timeline_csv_fixed_seed_engine_row_matches_closed_form() {
     let compute = cm.round_compute_seconds(32, 1000, 5);
     let comm = net.allreduce_seconds(Algorithm::Ring, 4, 1000);
     let expect_row = format!(
-        "0,5,{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},0,4,0,0,{:.6e}",
+        "0,5,5,{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},0,4,0,0,{:.6e}",
         0.0,
         compute,
         comm,

@@ -8,19 +8,31 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-cargo build --release
+# Warnings in the library/binary (rust/src) are errors: dead plumbing
+# from refactors must not linger. Scoped to the release profile (build +
+# smoke runs share one fingerprint, so nothing is rebuilt twice) while
+# `cargo test` keeps its own debug-profile artifacts and flags, so older
+# test code with benign warnings cannot block the gate.
+release_flags="${RUSTFLAGS:-} -D warnings"
+RUSTFLAGS="$release_flags" cargo build --release
 cargo test -q
 
 if [[ "${1:-}" == "--smoke" ]]; then
     smoke_out="${TMPDIR:-/tmp}/stl_sgd_smoke"
     rm -rf "$smoke_out"
-    cargo run --release --example quickstart
-    cargo run --release --example partial_participation -- \
+    RUSTFLAGS="$release_flags" cargo run --release --example quickstart
+    RUSTFLAGS="$release_flags" cargo run --release --example partial_participation -- \
         --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
         --clusters flaky-federated,elastic-federated \
         --policies all,arrived,0.5 \
         --out-dir "$smoke_out"
     test -s "$smoke_out/summary.csv"
+    RUSTFLAGS="$release_flags" cargo run --release --example adaptive_period -- \
+        --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+        --controllers stagewise,comm-ratio,barrier-aware \
+        --clusters heavy-tail-stragglers \
+        --out-dir "$smoke_out/adaptive"
+    test -s "$smoke_out/adaptive/summary.csv"
     echo "check.sh: smoke examples OK ($smoke_out)"
 fi
 
