@@ -1,0 +1,191 @@
+//! Gradient-compression study: time-to-accuracy and bytes-to-accuracy
+//! across compression schedules x cluster profiles.
+//!
+//!     cargo run --release --example compression_sweep -- \
+//!         [--compressors identity,topk,qsgd,topk-anneal] \
+//!         [--clusters homogeneous,heavy-tail-stragglers] \
+//!         [--topk-frac 0.1] [--compress-bits 4] \
+//!         [--workload logreg_a9a] [--algorithm stl-sc] \
+//!         [--steps 3000] [--clients 8] [--k1 16] [--t1 500] \
+//!         [--participation all] [--gap 1e-3] [--out-dir results/compress]
+//!
+//! STL-SGD cuts communication *rounds*; the compression schedules cut the
+//! *bytes per round* (DESIGN.md §6). Both axes meet in the alpha-beta
+//! model: compression shrinks the beta term while every hop still pays
+//! alpha, so its payoff is largest exactly where the stagewise schedule's
+//! is smallest — bandwidth-bound rounds. This sweep compares the exact
+//! baseline against top-k / QSGD operators (fixed and stagewise-annealed)
+//! on each cluster profile and reports simulated seconds, rounds, and
+//! wire bytes to a target objective gap, plus the speedup over the exact
+//! baseline on the same profile. Outputs one trace CSV and one timeline
+//! CSV (with the per-round bytes_exact/bytes_wire/compression_ratio
+//! columns) per cell, and a summary CSV.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::comm::CompressionSchedule;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "compression_sweep",
+        "STL-SGD time-to-accuracy across gradient-compression schedules and cluster profiles",
+    )
+    .opt(
+        "compressors",
+        "identity,topk,qsgd,topk-anneal",
+        "comma-separated compression schedules (identity | topk | qsgd | topk-anneal | qsgd-anneal)",
+    )
+    .opt(
+        "clusters",
+        "homogeneous,heavy-tail-stragglers",
+        "comma-separated cluster profiles to sweep",
+    )
+    .opt("topk-frac", "0.1", "top-k operators: fraction of coordinates kept, in (0, 1]")
+    .opt("compress-bits", "4", "qsgd operators: quantization bit width, in [2, 16]")
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("algorithm", "stl-sc", "algorithm (sync|local|stl-sc|...)")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "16", "initial communication period")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt(
+        "participation",
+        "all",
+        "participation policy (all | arrived | fraction in (0,1]) — composes with error feedback",
+    )
+    .opt("gap", "1e-3", "objective-gap target for time-to-accuracy")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/compress", "output directory")
+    .parse();
+
+    let topk_frac = args.get("topk-frac").to_string();
+    let compress_bits = args.get("compress-bits").to_string();
+    let mut compressors: Vec<String> = args.get_list("compressors");
+    for c in &compressors {
+        CompressionSchedule::parse(c).unwrap_or_else(|| panic!("unknown compressor {c:?}"));
+    }
+    // The exact baseline must run before the schedules scored against it,
+    // whatever order the flag listed them in.
+    compressors.sort_by_key(|c| c != "identity");
+    let clusters: Vec<ClusterProfile> = args
+        .get_list("clusters")
+        .iter()
+        .map(|s| {
+            ClusterProfile::parse(s).unwrap_or_else(|| panic!("unknown cluster profile {s:?}"))
+        })
+        .collect();
+    let workload = Workload::parse(args.get("workload")).expect("convex workload");
+    anyhow::ensure!(workload.is_convex(), "compression_sweep needs a convex workload");
+    let variant = Variant::parse(args.get("algorithm"))
+        .unwrap_or_else(|| panic!("unknown algorithm {:?}", args.get("algorithm")));
+    let participation = ParticipationPolicy::parse(args.get("participation"))
+        .unwrap_or_else(|| panic!("unknown participation policy {:?}", args.get("participation")));
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let gap = args.get_f64("gap");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    let f_star = workloads::compute_f_star(workload, seed, 2000);
+    println!(
+        "workload={} algorithm={} N={n} steps={steps} k1={k1} participation={} gap={gap:.0e} \
+         f*={f_star:.6}",
+        workload.name(),
+        variant.name(),
+        participation.label(),
+    );
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join("summary.csv"),
+        &[
+            "cluster",
+            "compressor",
+            "rounds",
+            "bytes_per_client",
+            "wire_bytes_per_client",
+            "compression_ratio",
+            "sim_comm_seconds",
+            "sim_total_seconds",
+            "final_gap",
+            "seconds_to_gap",
+            "rounds_to_gap",
+            "speedup_vs_identity",
+        ],
+    )?;
+
+    for cluster in &clusters {
+        println!("\ncluster = {}", cluster.name);
+        let mut identity_to_gap: Option<f64> = None;
+        for compressor in &compressors {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = workload;
+            cfg.n_clients = n;
+            cfg.total_steps = steps;
+            cfg.seed = seed;
+            cfg.cluster = *cluster;
+            cfg.participation = participation;
+            cfg.algo = AlgoSpec {
+                variant,
+                eta1: 3.2,
+                alpha: 1e-3,
+                k1,
+                t1,
+                batch: 32,
+                iid: true,
+                ..Default::default()
+            };
+            cfg.apply_override("compressor", compressor)?;
+            cfg.apply_override("topk_frac", &topk_frac)?;
+            cfg.apply_override("compress_bits", &compress_bits)?;
+            let t0 = std::time::Instant::now();
+            let trace = workloads::run_experiment(&cfg)?;
+            let to_gap_s = trace.seconds_to_gap(f_star, gap);
+            let to_gap_r = trace.rounds_to_gap(f_star, gap);
+            if compressor == "identity" {
+                identity_to_gap = to_gap_s;
+            }
+            let speedup = match (identity_to_gap, to_gap_s) {
+                (Some(base), Some(s)) if s > 0.0 => Some(base / s),
+                _ => None,
+            };
+            println!(
+                "  compressor={:<24} rounds={:<5} wire_bytes/client={:<12} ratio={:.4} \
+                 final_gap={:>10.3e} to_gap={:?}s speedup={} wall={:.1}s",
+                cfg.compression.describe(),
+                trace.comm.rounds,
+                trace.comm.wire_bytes_per_client,
+                trace.comm.compression_ratio(),
+                trace.final_loss() - f_star,
+                to_gap_s.map(|s| (s * 1e3).round() / 1e3),
+                speedup.map(|x| format!("{x:.2}x")).unwrap_or_else(|| "-".into()),
+                t0.elapsed().as_secs_f64(),
+            );
+            let tag = format!("{}_{}", cluster.name, compressor);
+            trace.write_csv(&out_dir.join(format!("trace_{tag}.csv")))?;
+            trace.write_timeline_csv(&out_dir.join(format!("timeline_{tag}.csv")))?;
+            summary.row(&[
+                cluster.name.to_string(),
+                compressor.clone(),
+                trace.comm.rounds.to_string(),
+                trace.comm.bytes_per_client.to_string(),
+                trace.comm.wire_bytes_per_client.to_string(),
+                format!("{:.4}", trace.comm.compression_ratio()),
+                format!("{:.6e}", trace.comm.sim_comm_seconds),
+                format!("{:.6e}", trace.clock.total()),
+                format!("{:.6e}", trace.final_loss() - f_star),
+                to_gap_s.map(|s| format!("{s:.6e}")).unwrap_or_default(),
+                to_gap_r.map(|r| r.to_string()).unwrap_or_default(),
+                speedup.map(|x| format!("{x:.4}")).unwrap_or_default(),
+            ])?;
+        }
+    }
+    summary.flush()?;
+    println!("\nCSVs written under {}", out_dir.display());
+    Ok(())
+}

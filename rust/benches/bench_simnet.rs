@@ -1,14 +1,37 @@
 //! simnet microbench: discrete-event engine throughput (events/sec) and
-//! the per-round overhead of timeline recording.
+//! the per-round overhead of timeline recording — plus a CI regression
+//! gate on round-pricing throughput.
 //!
 //! Each priced round processes ~N*k heap events (one per client per local
 //! step) plus the round bookkeeping, so the events/sec figure tracks how
 //! much simulated-cluster fidelity costs the experiment loop.
+//!
+//! Modes (the bench has a custom main, so the workspace manifest must set
+//! `harness = false` for `cargo bench -- <args>` to reach it):
+//!
+//!     cargo bench --bench bench_simnet                    # full report
+//!     cargo bench --bench bench_simnet -- --ci \
+//!         --baseline rust/benches/BENCH_baseline.json \
+//!         --out /tmp/BENCH_ci.json --max-regress 0.25     # CI gate
+//!     cargo bench --bench bench_simnet -- --ci --bless \
+//!         --baseline rust/benches/BENCH_baseline.json     # re-pin baseline
+//!
+//! `--ci` runs a short fixed subset of configurations, writes the measured
+//! events/sec per metric to `--out`, and exits non-zero if any metric
+//! falls more than `--max-regress` below the committed baseline. `--bless`
+//! overwrites the baseline with this machine's measurements (run it on the
+//! reference CI runner after an intentional perf change). The shipped
+//! baseline is seeded conservatively (far below reference-machine
+//! throughput) so the gate catches catastrophic regressions — accidental
+//! O(n^2) heap behaviour, debug-profile builds — on any hardware until a
+//! reference runner blesses tight values.
 
 use stl_sgd::bench_support::harness::Bencher;
 use stl_sgd::comm::Algorithm;
 use stl_sgd::sim::{ComputeModel, NetworkModel};
 use stl_sgd::simnet::{ClusterProfile, Detail, SimNet};
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::json::Json;
 
 const ROUNDS: u64 = 100;
 
@@ -31,7 +54,141 @@ fn price_rounds(profile: ClusterProfile, n: usize, k: u64, detail: Detail) -> f6
     total
 }
 
+/// Events/sec for one (profile, n, k) cell: the CI gate's metric.
+fn events_per_sec(b: &mut Bencher, profile: ClusterProfile, n: usize, k: u64) -> (String, f64) {
+    let name = format!("{}_n{}_k{}", profile.name, n, k);
+    let r = b.run(&name, || {
+        std::hint::black_box(price_rounds(profile, n, k, Detail::Off));
+    });
+    let events = ROUNDS as f64 * (n as f64 * k as f64 + 3.0);
+    (name, events / r.median_s)
+}
+
+fn run_ci(args: &stl_sgd::util::cli::Parsed) -> i32 {
+    let baseline_path = std::path::PathBuf::from(args.get("baseline"));
+    let out_path = args.get("out");
+    let max_regress = args.get_f64("max-regress");
+    let bless = args.get_flag("bless");
+
+    // Short mode: two representative cells (cheap homogeneous rounds and
+    // the straggler-heavy draw path) with the quick harness budget.
+    let mut b = Bencher::quick();
+    let cells = [
+        (ClusterProfile::homogeneous(), 8usize, 16u64),
+        (ClusterProfile::heavy_tail_stragglers(), 32, 16),
+    ];
+    let measured: Vec<(String, f64)> = cells
+        .iter()
+        .map(|&(p, n, k)| events_per_sec(&mut b, p, n, k))
+        .collect();
+
+    let to_json = |metrics: &[(String, f64)], comment: Option<&str>| {
+        let mut pairs = Vec::new();
+        if let Some(c) = comment {
+            pairs.push(("_comment", Json::str(c)));
+        }
+        pairs.push((
+            "events_per_sec",
+            Json::obj(
+                metrics
+                    .iter()
+                    .map(|(name, v)| (name.as_str(), Json::num(*v)))
+                    .collect(),
+            ),
+        ));
+        Json::obj(pairs)
+    };
+    if !out_path.is_empty() {
+        if let Some(dir) = std::path::Path::new(out_path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(out_path, to_json(&measured, None).to_string()).expect("write --out");
+        println!("wrote {out_path}");
+    }
+    if bless {
+        // Keep the baseline self-documenting: carry the existing
+        // `_comment` forward (or seed a fresh one) so a bless never
+        // strips the file's own re-bless instructions.
+        let carried = Json::parse_file(&baseline_path)
+            .ok()
+            .and_then(|j| j.get("_comment").and_then(|c| c.as_str().map(str::to_string)));
+        let comment = carried.unwrap_or_else(|| {
+            "Round-pricing throughput baseline for the bench-regression CI stage \
+             (scripts/ci.sh bench). Blessed on this machine by `bench_simnet --ci --bless`; \
+             re-bless on the reference runner after an intentional perf change."
+                .to_string()
+        });
+        std::fs::write(&baseline_path, to_json(&measured, Some(&comment)).to_string())
+            .expect("write baseline");
+        println!("blessed baseline {}", baseline_path.display());
+        return 0;
+    }
+
+    let baseline = match Json::parse_file(&baseline_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!(
+                "bench_simnet --ci: cannot read baseline {}: {e}",
+                baseline_path.display()
+            );
+            return 1;
+        }
+    };
+    let mut failed = false;
+    for (name, got) in &measured {
+        let Some(base) = baseline
+            .get("events_per_sec")
+            .and_then(|m| m.get(name))
+            .and_then(|v| v.as_f64())
+        else {
+            eprintln!("bench_simnet --ci: baseline has no metric {name:?}; re-bless it");
+            failed = true;
+            continue;
+        };
+        let floor = base * (1.0 - max_regress);
+        let verdict = if *got < floor { "FAIL" } else { "ok" };
+        println!(
+            "  {name:<40} {got:>14.0} events/s  baseline {base:>14.0}  floor {floor:>14.0}  \
+             [{verdict}]"
+        );
+        failed |= *got < floor;
+    }
+    if failed {
+        eprintln!(
+            "bench_simnet --ci: round-pricing throughput regressed more than {:.0}% vs {}",
+            max_regress * 100.0,
+            baseline_path.display()
+        );
+        1
+    } else {
+        0
+    }
+}
+
 fn main() {
+    let args = Cli::new(
+        "bench_simnet",
+        "simnet discrete-event engine microbenchmarks + CI throughput gate",
+    )
+    .flag("ci", "short mode: fixed cells, JSON output, baseline comparison")
+    .flag("bless", "with --ci: overwrite the baseline with this machine's measurements")
+    .opt(
+        "baseline",
+        "rust/benches/BENCH_baseline.json",
+        "committed events/sec baseline the CI gate compares against",
+    )
+    .opt("out", "", "with --ci: write measured metrics to this JSON path (e.g. BENCH_ci.json)")
+    .opt(
+        "max-regress",
+        "0.25",
+        "with --ci: fail when a metric falls more than this fraction below baseline",
+    )
+    .parse();
+
+    if args.get_flag("ci") {
+        std::process::exit(run_ci(&args));
+    }
+
     let mut b = Bencher::default();
     println!("# simnet discrete-event engine microbenchmarks\n");
 

@@ -70,6 +70,13 @@ pub struct RoundFeedback {
     pub participants: usize,
     /// Fleet size.
     pub fleet: usize,
+    /// Wire-over-exact payload ratio of the round's compression operator
+    /// (1.0 under `identity`). The collective span above already reflects
+    /// it — so `CommRatio` trades period against payload automatically —
+    /// but the explicit ratio lets a controller distinguish "comm is cheap
+    /// because the network is fast" from "comm is cheap because the
+    /// schedule is currently compressing hard" (DESIGN.md §6).
+    pub compression_ratio: f64,
 }
 
 impl RoundFeedback {
@@ -85,6 +92,7 @@ impl RoundFeedback {
             mean_barrier_wait: rt.mean_barrier_wait,
             participants: rt.participants as usize,
             fleet,
+            compression_ratio: rt.compression_ratio,
         }
     }
 
@@ -395,6 +403,7 @@ mod tests {
             mean_barrier_wait: mean_wait,
             participants: 4,
             fleet: 4,
+            compression_ratio: 1.0,
         }
     }
 

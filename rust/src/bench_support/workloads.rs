@@ -208,6 +208,7 @@ pub fn run_experiment_with_stop(
         profile: cfg.cluster,
         participation: cfg.participation,
         controller: cfg.controller,
+        compression: cfg.compression,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,
         seed: cfg.seed,

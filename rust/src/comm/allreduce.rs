@@ -193,7 +193,15 @@ fn tree(models: &mut [Vec<f32>]) {
 
 /// Per-client bytes sent for one collective over a d-dim f32 model.
 pub fn bytes_per_client(alg: Algorithm, n: usize, d: usize) -> u64 {
-    let payload = 4 * d as u64;
+    bytes_per_client_payload(alg, n, 4 * d as u64)
+}
+
+/// Per-client bytes for one collective whose per-model message serializes
+/// to `payload` bytes (4d for exact f32, smaller under a
+/// [`super::compress`] operator). The collective-schedule scaling — ring
+/// chunk circulation, tree hop count — applies to whatever payload the
+/// wire format produces, so compressed rounds reuse the exact formulas.
+pub fn bytes_per_client_payload(alg: Algorithm, n: usize, payload: u64) -> u64 {
     match alg {
         // every client sends its model up + receives the mean; count sends
         // (a single participant moves nothing — there is no collective)
@@ -380,6 +388,25 @@ mod tests {
         assert_eq!(bytes_per_client(Algorithm::Ring, 8, d), 7000);
         assert_eq!(bytes_per_client(Algorithm::Tree, 8, d), 12000);
         assert_eq!(bytes_per_client(Algorithm::Ring, 1, d), 0);
+    }
+
+    #[test]
+    fn payload_bytes_scale_the_same_schedule() {
+        // The d-based ledger is exactly the payload-based one at 4d...
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for n in [1usize, 2, 5, 8] {
+                assert_eq!(
+                    bytes_per_client(alg, n, 1000),
+                    bytes_per_client_payload(alg, n, 4000),
+                    "{alg:?} n={n}"
+                );
+            }
+        }
+        // ...and a quarter-size payload moves a quarter of the bytes.
+        assert_eq!(bytes_per_client_payload(Algorithm::Naive, 8, 1000), 1000);
+        assert_eq!(bytes_per_client_payload(Algorithm::Ring, 8, 1000), 1750);
+        assert_eq!(bytes_per_client_payload(Algorithm::Tree, 8, 1000), 3000);
+        assert_eq!(bytes_per_client_payload(Algorithm::Tree, 1, 1000), 0);
     }
 
     #[test]

@@ -1,0 +1,858 @@
+//! Gradient compression: operators, wire formats, stage schedules, and
+//! error-feedback state.
+//!
+//! STL-SGD shrinks communication cost by stretching the *period*; the
+//! orthogonal lever — the one Liang et al.'s variance-reduced Local SGD
+//! and Stich's Local SGD analysis both price as rounds x payload — is
+//! shrinking the *bytes per round*. This module supplies that axis:
+//!
+//! * [`CompressorSpec`] — the operator menu. [`CompressorSpec::Identity`]
+//!   is the exact baseline (and keeps every legacy trajectory bit-for-bit,
+//!   see below); [`CompressorSpec::TopK`] keeps the `frac`-largest-
+//!   magnitude coordinates in an index+value wire format (8 bytes per kept
+//!   entry); [`CompressorSpec::Qsgd`] quantizes to `bits`-bit signed
+//!   levels with one f32 scale per 256-value chunk and *stochastic*
+//!   rounding drawn from a dedicated per-client seeded stream, so runs
+//!   stay deterministic.
+//! * [`CompressionSchedule`] — fixed operator, or a stagewise *anneal*
+//!   that mirrors how the paper's schedule grows k per stage: compress
+//!   aggressively in the early (large-step) stages and relax toward exact
+//!   as the learning rate shrinks — each stage doubles the payload budget
+//!   (top-k fraction / QSGD bits) until the operator becomes `Identity`.
+//! * [`EfState`] + [`average_compressed`] — error-feedback composition
+//!   with the dense collectives: each participant transmits
+//!   `C(theta_i - reference + residual_i)`, keeps
+//!   `residual_i = delta_i - C(delta_i)` for the next round it
+//!   participates in, the decoded deltas are averaged by the *same*
+//!   [`super::average_masked`] schedule the exact path uses, and every
+//!   participant applies `reference + mean_delta`. Non-participants'
+//!   residuals are frozen — not decayed, not reset — exactly like their
+//!   model replicas (DESIGN.md §6).
+//!
+//! Wire-byte accounting is data-independent by construction (top-k keeps
+//! `ceil(frac*d)` entries whatever the values; QSGD's level array has a
+//! fixed bit width), which is what lets [`crate::simnet`] price a round's
+//! collective *before* the averaging runs, preserving the
+//! price-then-average order of the coordinator loop.
+//!
+//! Invariant: `Identity` routes through the exact legacy collectives and
+//! is bit-for-bit identical to the pre-compression code path — enforced
+//! by tests/test_compress.rs across every cluster profile.
+
+use super::allreduce::{average_masked, Algorithm};
+use crate::rng::Rng;
+
+/// Values per QSGD scale chunk (one f32 scale each).
+pub const QSGD_CHUNK: usize = 256;
+
+/// One compression operator with its knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressorSpec {
+    /// Exact transmission (the legacy path, bit-for-bit).
+    Identity,
+    /// Magnitude top-k sparsification: keep `ceil(frac * d)` entries,
+    /// wire format = (u32 index, f32 value) pairs. `frac` in (0, 1].
+    TopK { frac: f64 },
+    /// Stochastic `bits`-bit quantization with a per-chunk f32 scale
+    /// (chunk = [`QSGD_CHUNK`] values). `bits` in [2, 16]: one sign bit
+    /// plus `bits - 1` magnitude bits, levels in
+    /// `[-(2^(bits-1)-1), 2^(bits-1)-1]`.
+    Qsgd { bits: u32 },
+}
+
+impl CompressorSpec {
+    pub fn is_identity(&self) -> bool {
+        matches!(self, CompressorSpec::Identity)
+    }
+
+    /// Stable operator name (CSV tags, run headers).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CompressorSpec::Identity => "identity",
+            CompressorSpec::TopK { .. } => "topk",
+            CompressorSpec::Qsgd { .. } => "qsgd",
+        }
+    }
+
+    /// Name plus knobs, for run headers and sweep logs.
+    pub fn describe(&self) -> String {
+        match self {
+            CompressorSpec::Identity => "identity".into(),
+            CompressorSpec::TopK { frac } => format!("topk(frac={frac})"),
+            CompressorSpec::Qsgd { bits } => format!("qsgd(bits={bits})"),
+        }
+    }
+
+    /// Entries a top-k operator keeps for a d-dim vector.
+    fn topk_kept(frac: f64, d: usize) -> usize {
+        ((frac * d as f64).ceil() as usize).clamp(1, d.max(1))
+    }
+
+    /// Serialized bytes of one client's compressed d-dim message. This is
+    /// the *payload* the alpha-beta model and the byte ledger scale by —
+    /// data-independent, so pricing can run before the values exist.
+    pub fn payload_bytes(&self, d: usize) -> u64 {
+        match *self {
+            CompressorSpec::Identity => 4 * d as u64,
+            CompressorSpec::TopK { frac } => {
+                if d == 0 {
+                    0
+                } else {
+                    8 * Self::topk_kept(frac, d) as u64
+                }
+            }
+            CompressorSpec::Qsgd { bits } => {
+                let full = d / QSGD_CHUNK;
+                let rem = d % QSGD_CHUNK;
+                let mut bytes = 4 * d.div_ceil(QSGD_CHUNK) as u64; // scales
+                bytes += full as u64 * (QSGD_CHUNK * bits as usize).div_ceil(8) as u64;
+                if rem > 0 {
+                    bytes += (rem * bits as usize).div_ceil(8) as u64;
+                }
+                bytes
+            }
+        }
+    }
+
+    /// Wire payload relative to the exact 4d-byte payload (1.0 for
+    /// `Identity`; top-k fractions above 0.5 exceed 1.0 — the index
+    /// overhead outweighs the dropped values).
+    pub fn payload_ratio(&self, d: usize) -> f64 {
+        if d == 0 {
+            return 1.0;
+        }
+        self.payload_bytes(d) as f64 / (4 * d as u64) as f64
+    }
+
+    /// Compress one delta vector. `rng` is the transmitting client's
+    /// dedicated quantization stream; it is consumed only by stochastic
+    /// operators (QSGD draws exactly one uniform per coordinate, whatever
+    /// the values, so streams advance data-independently).
+    pub fn compress(&self, delta: &[f32], rng: &mut Rng) -> Payload {
+        match *self {
+            CompressorSpec::Identity => Payload::Dense(delta.to_vec()),
+            CompressorSpec::TopK { frac } => {
+                let d = delta.len();
+                let k = Self::topk_kept(frac, d).min(d);
+                let mut order: Vec<u32> = (0..d as u32).collect();
+                // Largest magnitude first; ties broken by lower index.
+                // The comparator is a total order, so the selected *set*
+                // is deterministic whatever partition path the O(d)
+                // selection takes — this runs per participant per round,
+                // so no full O(d log d) sort.
+                if k < d {
+                    order.select_nth_unstable_by(k - 1, |&a, &b| {
+                        delta[b as usize]
+                            .abs()
+                            .total_cmp(&delta[a as usize].abs())
+                            .then(a.cmp(&b))
+                    });
+                }
+                let mut idx: Vec<u32> = order[..k].to_vec();
+                idx.sort_unstable(); // ascending-index wire format
+                let val: Vec<f32> = idx.iter().map(|&i| delta[i as usize]).collect();
+                Payload::Sparse { dim: d, idx, val }
+            }
+            CompressorSpec::Qsgd { bits } => {
+                debug_assert!((2..=16).contains(&bits), "qsgd bits out of range: {bits}");
+                let max_level = (1i32 << (bits - 1)) - 1;
+                let mut scales = Vec::with_capacity(delta.len().div_ceil(QSGD_CHUNK));
+                let mut levels = Vec::with_capacity(delta.len());
+                for chunk in delta.chunks(QSGD_CHUNK) {
+                    let max_abs = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                    let scale = if max_abs > 0.0 {
+                        max_abs / max_level as f32
+                    } else {
+                        0.0
+                    };
+                    scales.push(scale);
+                    for &v in chunk {
+                        // Always draw, so the stream position depends only
+                        // on the coordinate count, never on the values.
+                        let u = rng.uniform();
+                        let q = if scale == 0.0 {
+                            0
+                        } else {
+                            let x = (v / scale) as f64;
+                            let lo = x.floor();
+                            let up = u < (x - lo);
+                            (lo as i32 + up as i32).clamp(-max_level, max_level)
+                        };
+                        levels.push(q as i16);
+                    }
+                }
+                Payload::Quantized {
+                    bits,
+                    scales,
+                    levels,
+                }
+            }
+        }
+    }
+}
+
+/// One client's compressed message: enough structure to decode the dense
+/// image and to count the serialized wire bytes honestly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Exact f32 vector (4 bytes/value).
+    Dense(Vec<f32>),
+    /// Top-k: ascending coordinate indices plus their values
+    /// (4 + 4 bytes per kept entry).
+    Sparse {
+        dim: usize,
+        idx: Vec<u32>,
+        val: Vec<f32>,
+    },
+    /// QSGD: one f32 scale per [`QSGD_CHUNK`]-value chunk plus a
+    /// `bits`-bit signed level per value (stored widened to i16; the wire
+    /// count packs them at `bits` bits).
+    Quantized {
+        bits: u32,
+        scales: Vec<f32>,
+        levels: Vec<i16>,
+    },
+}
+
+impl Payload {
+    /// Dense decoded image (what the receiver folds into the average).
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            Payload::Dense(v) => v.clone(),
+            Payload::Sparse { dim, idx, val } => {
+                let mut out = vec![0.0f32; *dim];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            Payload::Quantized { scales, levels, .. } => levels
+                .chunks(QSGD_CHUNK)
+                .zip(scales)
+                .flat_map(|(chunk, &s)| chunk.iter().map(move |&q| q as f32 * s))
+                .collect(),
+        }
+    }
+
+    /// Serialized size on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Dense(v) => 4 * v.len() as u64,
+            Payload::Sparse { idx, .. } => 8 * idx.len() as u64,
+            Payload::Quantized {
+                bits,
+                scales,
+                levels,
+            } => {
+                let mut bytes = 4 * scales.len() as u64;
+                for chunk in levels.chunks(QSGD_CHUNK) {
+                    bytes += (chunk.len() * *bits as usize).div_ceil(8) as u64;
+                }
+                bytes
+            }
+        }
+    }
+}
+
+/// How the operator varies over the run's stages.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressionSchedule {
+    /// The same operator every round.
+    Fixed(CompressorSpec),
+    /// Aggressive early, exact late — the byte-axis mirror of the
+    /// stagewise period rule: stage s uses the base operator with its
+    /// payload budget doubled s-1 times (top-k fraction, QSGD bits),
+    /// becoming `Identity` at the wire-format break-even (top-k frac
+    /// 0.5, where 8B/entry meets the exact 4d payload; QSGD past 16
+    /// bits) — past break-even the lossy operator would cost *more*
+    /// bytes than exact transmission. Single-phase algorithms (stage 0)
+    /// use the base operator as-is.
+    Anneal(CompressorSpec),
+}
+
+impl Default for CompressionSchedule {
+    fn default() -> Self {
+        CompressionSchedule::Fixed(CompressorSpec::Identity)
+    }
+}
+
+impl CompressionSchedule {
+    /// Parse a schedule name; knobs keep their defaults (patch them via
+    /// the `topk_frac` / `compress_bits` config keys).
+    pub fn parse(s: &str) -> Option<CompressionSchedule> {
+        match s {
+            "identity" => Some(CompressionSchedule::Fixed(CompressorSpec::Identity)),
+            "topk" => Some(CompressionSchedule::Fixed(CompressorSpec::TopK { frac: 0.1 })),
+            "qsgd" => Some(CompressionSchedule::Fixed(CompressorSpec::Qsgd { bits: 4 })),
+            "topk-anneal" => {
+                Some(CompressionSchedule::Anneal(CompressorSpec::TopK { frac: 0.1 }))
+            }
+            "qsgd-anneal" => Some(CompressionSchedule::Anneal(CompressorSpec::Qsgd { bits: 4 })),
+            _ => None,
+        }
+    }
+
+    /// Stable textual name; [`Self::parse`] round-trips it (knobs aside).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CompressionSchedule::Fixed(CompressorSpec::Identity)
+            | CompressionSchedule::Anneal(CompressorSpec::Identity) => "identity",
+            CompressionSchedule::Fixed(CompressorSpec::TopK { .. }) => "topk",
+            CompressionSchedule::Fixed(CompressorSpec::Qsgd { .. }) => "qsgd",
+            CompressionSchedule::Anneal(CompressorSpec::TopK { .. }) => "topk-anneal",
+            CompressionSchedule::Anneal(CompressorSpec::Qsgd { .. }) => "qsgd-anneal",
+        }
+    }
+
+    /// Name plus knobs, for run headers and sweep logs.
+    pub fn describe(&self) -> String {
+        match self {
+            CompressionSchedule::Fixed(s) => s.describe(),
+            CompressionSchedule::Anneal(s) => format!("anneal({})", s.describe()),
+        }
+    }
+
+    /// The base operator the knob keys patch.
+    pub fn base(&self) -> CompressorSpec {
+        match self {
+            CompressionSchedule::Fixed(s) | CompressionSchedule::Anneal(s) => *s,
+        }
+    }
+
+    /// True when every stage's operator is `Identity` — the coordinator
+    /// then keeps the exact legacy code path (no reference tracking, no
+    /// residual state), preserving trajectories bit-for-bit.
+    pub fn is_always_identity(&self) -> bool {
+        self.base().is_identity()
+    }
+
+    /// Patch the top-k fraction (inert unless the base operator is
+    /// `TopK`, mirroring the controller-knob semantics).
+    pub fn set_topk_frac(&mut self, f: f64) {
+        match self {
+            CompressionSchedule::Fixed(CompressorSpec::TopK { frac })
+            | CompressionSchedule::Anneal(CompressorSpec::TopK { frac }) => *frac = f,
+            _ => {}
+        }
+    }
+
+    /// Patch the QSGD bit width (inert unless the base operator is
+    /// `Qsgd`).
+    pub fn set_bits(&mut self, b: u32) {
+        match self {
+            CompressionSchedule::Fixed(CompressorSpec::Qsgd { bits })
+            | CompressionSchedule::Anneal(CompressorSpec::Qsgd { bits }) => *bits = b,
+            _ => {}
+        }
+    }
+
+    /// The operator in effect for a phase with the given stage index
+    /// (1-based for the STL variants, 0 for single-phase algorithms —
+    /// treated as the base stage).
+    pub fn spec_for_stage(&self, stage: usize) -> CompressorSpec {
+        match *self {
+            CompressionSchedule::Fixed(s) => s,
+            CompressionSchedule::Anneal(base) => {
+                let relax = stage.saturating_sub(1).min(63) as i32;
+                if relax == 0 {
+                    // The base stage always uses the operator exactly as
+                    // configured — anneal only ever *relaxes* from there.
+                    return base;
+                }
+                match base {
+                    CompressorSpec::Identity => CompressorSpec::Identity,
+                    CompressorSpec::TopK { frac } => {
+                        let f = frac * 2f64.powi(relax);
+                        // Relaxed stages cut over at the wire-format
+                        // break-even: 8 bytes per kept entry meets the
+                        // exact 4d payload at frac 0.5, past which top-k
+                        // is strictly dominated by exact transmission
+                        // (more bytes AND lossy).
+                        if f >= 0.5 {
+                            CompressorSpec::Identity
+                        } else {
+                            CompressorSpec::TopK { frac: f }
+                        }
+                    }
+                    CompressorSpec::Qsgd { bits } => {
+                        let b = (bits as u64) << relax.min(6);
+                        if b > 16 {
+                            CompressorSpec::Identity
+                        } else {
+                            CompressorSpec::Qsgd { bits: b as u32 }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-client error-feedback state: the residual each client accumulates
+/// (what its compressor dropped, re-injected into its next transmission)
+/// and its dedicated stochastic-quantization stream.
+pub struct EfState {
+    residuals: Vec<Vec<f32>>,
+    rngs: Vec<Rng>,
+}
+
+impl EfState {
+    /// Fresh state: zero residuals, per-client streams split off a
+    /// compression-dedicated root so quantization draws never perturb the
+    /// sampler / simnet streams.
+    pub fn new(n: usize, d: usize, seed: u64) -> Self {
+        let root = Rng::new(seed ^ 0xC0_4B1D);
+        Self {
+            residuals: (0..n).map(|_| vec![0.0f32; d]).collect(),
+            rngs: (0..n).map(|i| root.split(i as u64 + 1)).collect(),
+        }
+    }
+
+    /// Client `i`'s current residual (tests; the run loop never reads it
+    /// directly).
+    pub fn residual(&self, i: usize) -> &[f32] {
+        &self.residuals[i]
+    }
+}
+
+/// Per-client payload cost of one compressed round (the collective-
+/// schedule scaling — ring/tree hop counts — is applied by the pricing
+/// layer on top of these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireCost {
+    /// Uncompressed f32 payload bytes (4d).
+    pub payload_exact: u64,
+    /// Serialized compressed payload bytes.
+    pub payload_wire: u64,
+}
+
+/// Compressed masked average with error feedback.
+///
+/// Participants (mask bit set) each compress their delta against the
+/// shared `reference` (the server model both sides agreed on after the
+/// last round they synced), the decoded deltas are averaged by the exact
+/// same dense collective as the uncompressed path, and every participant
+/// ends at `reference + mean_delta` (so participants agree bitwise, like
+/// the exact path). Non-participants are untouched: neither their replica
+/// nor their residual nor their quantization stream advances — a client
+/// that skips ten rounds transmits the same message it would have had it
+/// been repriced the moment it rejoined.
+///
+/// With fewer than two participants no collective runs — the replica,
+/// residual, and stream are all untouched and the cost is zero, matching
+/// both [`average_masked`]'s lone-participant no-op and the pricing model
+/// (the engine charges a 1-participant round zero comm seconds and zero
+/// wire bytes, so a lossy mutation here would be an accuracy penalty the
+/// byte/time ledger never records).
+///
+/// `Identity` *inside* a compressed schedule (an annealed late stage)
+/// still runs the delta path: the dense payload is lossless, so each
+/// participant's pending residual — dropped mass parked by earlier,
+/// lossier stages — is delivered in its first exact round and flushed to
+/// zero, instead of being silently stranded. An all-identity schedule
+/// never reaches this function at all: the coordinator keeps the legacy
+/// collectives bit-for-bit (`CompressionSchedule::is_always_identity`).
+pub fn average_compressed(
+    models: &mut [Vec<f32>],
+    reference: &[f32],
+    alg: Algorithm,
+    spec: CompressorSpec,
+    ef: &mut EfState,
+    mask: &[bool],
+) -> WireCost {
+    let n = models.len();
+    assert_eq!(mask.len(), n, "one mask bit per replica");
+    assert_eq!(ef.residuals.len(), n, "one residual per replica");
+    let d = reference.len();
+    let exact = WireCost {
+        payload_exact: 4 * d as u64,
+        payload_wire: spec.payload_bytes(d),
+    };
+    let idx: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &b)| if b { Some(i) } else { None })
+        .collect();
+    if idx.len() <= 1 {
+        return WireCost {
+            payload_exact: 0,
+            payload_wire: 0,
+        };
+    }
+    // Compress each participant's error-corrected delta and park the
+    // decoded image in its replica slot, so the ordinary dense collective
+    // can average the deltas in place.
+    for &i in &idx {
+        assert_eq!(models[i].len(), d, "replica/reference dim mismatch");
+        let residual = &mut ef.residuals[i];
+        let delta: Vec<f32> = models[i]
+            .iter()
+            .zip(reference)
+            .zip(residual.iter())
+            .map(|((&t, &r), &e)| t - r + e)
+            .collect();
+        let payload = spec.compress(&delta, &mut ef.rngs[i]);
+        debug_assert_eq!(payload.wire_bytes(), exact.payload_wire);
+        let decoded = payload.decode();
+        for ((e, &dl), &dc) in residual.iter_mut().zip(&delta).zip(&decoded) {
+            *e = dl - dc;
+        }
+        models[i] = decoded;
+    }
+    average_masked(models, alg, mask);
+    for &i in &idx {
+        for (t, &r) in models[i].iter_mut().zip(reference) {
+            *t += r;
+        }
+    }
+    exact
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    fn random_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..d).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn identity_payload_roundtrips_exactly() {
+        let v = random_vec(37, 1);
+        let p = CompressorSpec::Identity.compress(&v, &mut rng());
+        assert_eq!(p.decode(), v);
+        assert_eq!(p.wire_bytes(), 4 * 37);
+        assert_eq!(CompressorSpec::Identity.payload_bytes(37), 4 * 37);
+        assert_eq!(CompressorSpec::Identity.payload_ratio(37), 1.0);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let v = vec![0.1f32, -3.0, 0.2, 2.5, -0.05, 0.0, 1.0, -1.5];
+        let spec = CompressorSpec::TopK { frac: 0.5 };
+        let p = spec.compress(&v, &mut rng());
+        let Payload::Sparse { dim, idx, val } = &p else {
+            panic!("topk must produce a sparse payload");
+        };
+        assert_eq!(*dim, 8);
+        assert_eq!(idx, &[1, 3, 6, 7], "4 largest |v|, ascending indices");
+        assert_eq!(val, &[-3.0, 2.5, 1.0, -1.5]);
+        let dec = p.decode();
+        assert_eq!(dec[1], -3.0);
+        assert_eq!(dec[0], 0.0, "dropped entries decode to zero");
+        assert_eq!(p.wire_bytes(), 4 * 8);
+        assert_eq!(spec.payload_bytes(8), 32);
+        assert_eq!(spec.payload_ratio(8), 1.0, "frac 0.5 breaks even at 8B/entry");
+    }
+
+    #[test]
+    fn topk_tie_break_is_low_index_and_kept_count_clamps() {
+        let v = vec![1.0f32; 6];
+        // All magnitudes tie: the low indices win. ceil(0.34 * 6) = 3.
+        let p = CompressorSpec::TopK { frac: 0.34 }.compress(&v, &mut rng());
+        let Payload::Sparse { idx, .. } = &p else { panic!() };
+        assert_eq!(idx, &[0, 1, 2]);
+        let p = CompressorSpec::TopK { frac: 0.01 }.compress(&v, &mut rng());
+        let Payload::Sparse { idx, .. } = &p else { panic!() };
+        assert_eq!(idx, &[0], "kept count floors at 1");
+    }
+
+    #[test]
+    fn qsgd_decode_within_one_level_and_deterministic() {
+        let v = random_vec(300, 7); // spans two chunks
+        let spec = CompressorSpec::Qsgd { bits: 4 };
+        let mut r1 = Rng::new(9).split(1);
+        let mut r2 = Rng::new(9).split(1);
+        let p1 = spec.compress(&v, &mut r1);
+        let p2 = spec.compress(&v, &mut r2);
+        assert_eq!(p1, p2, "same stream, same payload");
+        let Payload::Quantized { scales, .. } = &p1 else { panic!() };
+        assert_eq!(scales.len(), 2);
+        let dec = p1.decode();
+        assert_eq!(dec.len(), 300);
+        for (chunk_i, chunk) in v.chunks(QSGD_CHUNK).enumerate() {
+            let scale = scales[chunk_i];
+            for (j, &orig) in chunk.iter().enumerate() {
+                let got = dec[chunk_i * QSGD_CHUNK + j];
+                assert!(
+                    (got - orig).abs() <= scale + 1e-7,
+                    "chunk {chunk_i}[{j}]: {orig} -> {got} (scale {scale})"
+                );
+            }
+        }
+        assert_eq!(p1.wire_bytes(), spec.payload_bytes(300));
+    }
+
+    #[test]
+    fn qsgd_stream_advances_data_independently() {
+        // Two different inputs consume the same number of draws, so the
+        // stream position after compressing either is identical.
+        let spec = CompressorSpec::Qsgd { bits: 4 };
+        let (a, b) = (random_vec(64, 1), vec![0.0f32; 64]);
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        spec.compress(&a, &mut ra);
+        spec.compress(&b, &mut rb);
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn payload_bytes_formulas() {
+        // qsgd: d=300, bits=4 -> 2 scales (8B) + 256*4/8 + 44*4/8 = 8 + 128 + 22
+        assert_eq!(CompressorSpec::Qsgd { bits: 4 }.payload_bytes(300), 8 + 128 + 22);
+        // topk: d=100, frac=0.25 -> 25 entries * 8B
+        assert_eq!(CompressorSpec::TopK { frac: 0.25 }.payload_bytes(100), 200);
+        assert!(CompressorSpec::TopK { frac: 0.25 }.payload_ratio(100) == 0.5);
+        assert!(CompressorSpec::Qsgd { bits: 4 }.payload_ratio(300) < 0.2);
+    }
+
+    #[test]
+    fn schedule_parse_label_roundtrip() {
+        for name in ["identity", "topk", "qsgd", "topk-anneal", "qsgd-anneal"] {
+            let s = CompressionSchedule::parse(name).unwrap();
+            assert_eq!(s.label(), name);
+        }
+        assert_eq!(CompressionSchedule::parse("zip"), None);
+        assert!(CompressionSchedule::default().is_always_identity());
+        assert!(!CompressionSchedule::parse("topk").unwrap().is_always_identity());
+    }
+
+    #[test]
+    fn anneal_relaxes_to_identity() {
+        let s = CompressionSchedule::Anneal(CompressorSpec::TopK { frac: 0.1 });
+        assert_eq!(s.spec_for_stage(0), CompressorSpec::TopK { frac: 0.1 });
+        assert_eq!(s.spec_for_stage(1), CompressorSpec::TopK { frac: 0.1 });
+        assert_eq!(s.spec_for_stage(2), CompressorSpec::TopK { frac: 0.2 });
+        assert_eq!(s.spec_for_stage(3), CompressorSpec::TopK { frac: 0.4 });
+        // frac 0.8 would be 8B/entry * 0.8d > 4B * d: strictly worse than
+        // exact on both axes, so the anneal cuts over at the 0.5
+        // break-even instead.
+        assert_eq!(s.spec_for_stage(4), CompressorSpec::Identity);
+        assert_eq!(s.spec_for_stage(60), CompressorSpec::Identity, "no overflow");
+
+        // A base fraction at/above break-even still compresses in its
+        // base stage (the user's explicit choice, same as Fixed); only
+        // the *relaxed* stages cut over to exact.
+        let s = CompressionSchedule::Anneal(CompressorSpec::TopK { frac: 0.5 });
+        assert_eq!(s.spec_for_stage(1), CompressorSpec::TopK { frac: 0.5 });
+        assert_eq!(s.spec_for_stage(2), CompressorSpec::Identity);
+
+        let q = CompressionSchedule::Anneal(CompressorSpec::Qsgd { bits: 4 });
+        assert_eq!(q.spec_for_stage(1), CompressorSpec::Qsgd { bits: 4 });
+        assert_eq!(q.spec_for_stage(2), CompressorSpec::Qsgd { bits: 8 });
+        assert_eq!(q.spec_for_stage(3), CompressorSpec::Qsgd { bits: 16 });
+        assert_eq!(q.spec_for_stage(4), CompressorSpec::Identity);
+        assert_eq!(q.spec_for_stage(40), CompressorSpec::Identity, "no overflow");
+
+        let fixed = CompressionSchedule::Fixed(CompressorSpec::Qsgd { bits: 4 });
+        assert_eq!(fixed.spec_for_stage(9), CompressorSpec::Qsgd { bits: 4 });
+    }
+
+    #[test]
+    fn schedule_knob_patching_is_kind_gated() {
+        let mut s = CompressionSchedule::parse("topk").unwrap();
+        s.set_topk_frac(0.25);
+        assert_eq!(s.base(), CompressorSpec::TopK { frac: 0.25 });
+        s.set_bits(8); // inert: not a qsgd schedule
+        assert_eq!(s.base(), CompressorSpec::TopK { frac: 0.25 });
+        let mut q = CompressionSchedule::parse("qsgd-anneal").unwrap();
+        q.set_bits(8);
+        assert_eq!(q.base(), CompressorSpec::Qsgd { bits: 8 });
+    }
+
+    fn models(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..n).map(|i| random_vec(d, seed * 100 + i as u64)).collect()
+    }
+
+    #[test]
+    fn identity_spec_is_lossless_and_matches_the_exact_mean() {
+        // Identity inside a compressed schedule runs the delta path (so a
+        // pending residual can flush); with zero residuals the result is
+        // the exact participant mean up to f32 re-association.
+        let d = 13;
+        let reference = random_vec(d, 55);
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let orig = models(5, d, 3);
+            let mask = [true, true, false, true, true];
+            let mut a = orig.clone();
+            let mut b = orig.clone();
+            let mut ef = EfState::new(5, d, 7);
+            let spec = CompressorSpec::Identity;
+            let cost = average_compressed(&mut a, &reference, alg, spec, &mut ef, &mask);
+            average_masked(&mut b, alg, &mask);
+            for i in 0..5 {
+                if !mask[i] {
+                    assert_eq!(a[i], orig[i], "{alg:?} bystander {i}");
+                    continue;
+                }
+                for (x, y) in a[i].iter().zip(&b[i]) {
+                    assert!((x - y).abs() < 1e-5, "{alg:?} client {i}: {x} vs {y}");
+                }
+            }
+            assert_eq!(cost.payload_exact, cost.payload_wire);
+            // Dense transmission drops nothing: residuals stay zero.
+            assert!(ef.residual(0).iter().all(|&e| e == 0.0));
+        }
+    }
+
+    #[test]
+    fn identity_spec_flushes_residuals_left_by_lossier_stages() {
+        // Anneal reaching an exact late stage: the first Identity round
+        // delivers the dropped mass parked in the residual and zeroes it.
+        let d = 8;
+        let reference = vec![0.0f32; d];
+        let mut m = vec![vec![0.0f32; d]; 2];
+        m[0][0] = 1.0;
+        m[0][1] = 0.5;
+        m[1][0] = 1.0;
+        m[1][1] = 0.5;
+        let mut ef = EfState::new(2, d, 3);
+        let lossy = CompressorSpec::TopK { frac: 0.125 }; // keep 1 of 8
+        average_compressed(&mut m, &reference, Algorithm::Naive, lossy, &mut ef, &[true; 2]);
+        assert_eq!(ef.residual(0)[1], 0.5, "lossy stage parked the dropped coordinate");
+        let reference2 = m[0].clone();
+        average_compressed(
+            &mut m,
+            &reference2,
+            Algorithm::Naive,
+            CompressorSpec::Identity,
+            &mut ef,
+            &[true; 2],
+        );
+        assert!(
+            (m[0][1] - (reference2[1] + 0.5)).abs() < 1e-6,
+            "identity round must deliver the residual mass: {} vs {}",
+            m[0][1],
+            reference2[1] + 0.5
+        );
+        assert!(
+            ef.residual(0).iter().all(|&e| e == 0.0),
+            "identity round must flush the residual"
+        );
+    }
+
+    #[test]
+    fn compressed_participants_agree_and_bystanders_untouched() {
+        let d = 40;
+        let reference = random_vec(d, 77);
+        let mut m = models(4, d, 5);
+        let orig = m.clone();
+        let mask = [true, false, true, true];
+        let mut ef = EfState::new(4, d, 11);
+        let spec = CompressorSpec::TopK { frac: 0.25 };
+        let cost = average_compressed(&mut m, &reference, Algorithm::Ring, spec, &mut ef, &mask);
+        assert_eq!(m[1], orig[1], "bystander replica untouched");
+        assert!(ef.residual(1).iter().all(|&e| e == 0.0), "bystander residual frozen");
+        assert_eq!(m[0], m[2]);
+        assert_eq!(m[0], m[3], "participants end bitwise-identical");
+        assert_ne!(m[0], orig[0], "the average moved the participants");
+        assert_eq!(cost.payload_exact, 4 * d as u64);
+        assert_eq!(cost.payload_wire, spec.payload_bytes(d));
+        // Error feedback holds what the compressor dropped: delta =
+        // decoded + residual, coordinate by coordinate.
+        let delta0: Vec<f32> = orig[0].iter().zip(&reference).map(|(&t, &r)| t - r).collect();
+        let dec_plus_res: Vec<f32> = {
+            // Reconstruct: residual was delta - decoded, so decoded =
+            // delta - residual.
+            delta0.iter().zip(ef.residual(0)).map(|(&dl, &e)| dl - e).collect()
+        };
+        let kept = dec_plus_res.iter().filter(|&&v| v != 0.0).count();
+        assert!(kept <= CompressorSpec::topk_kept(0.25, d), "decoded image is k-sparse");
+    }
+
+    #[test]
+    fn residuals_reinject_dropped_mass_next_round() {
+        // Round 1 drops a coordinate; round 2's transmission includes it
+        // via the residual even if the fresh delta is zero there.
+        let d = 8;
+        let reference = vec![0.0f32; d];
+        let mut m = vec![vec![0.0f32; d]; 2];
+        m[0][0] = 1.0; // big coordinate, kept
+        m[0][1] = 0.5; // dropped by top-1
+        m[1][0] = 1.0;
+        m[1][1] = 0.5;
+        let spec = CompressorSpec::TopK { frac: 0.125 }; // keep 1 of 8
+        let mut ef = EfState::new(2, d, 3);
+        average_compressed(&mut m, &reference, Algorithm::Naive, spec, &mut ef, &[true; 2]);
+        assert_eq!(ef.residual(0)[1], 0.5, "dropped coordinate parked in the residual");
+        assert_eq!(ef.residual(0)[0], 0.0);
+        // No new local work: replicas stay at the averaged model, but the
+        // residual alone now carries coordinate 1 into the next round.
+        let reference2 = m[0].clone();
+        average_compressed(&mut m, &reference2, Algorithm::Naive, spec, &mut ef, &[true; 2]);
+        assert!(
+            (m[0][1] - (reference2[1] + 0.5)).abs() < 1e-6,
+            "residual mass delivered: {} vs {}",
+            m[0][1],
+            reference2[1] + 0.5
+        );
+        assert_eq!(ef.residual(0)[1], 0.0, "residual emptied once transmitted");
+    }
+
+    #[test]
+    fn empty_mask_is_noop_with_zero_cost() {
+        let reference = vec![0.0f32; 6];
+        let mut m = models(3, 6, 9);
+        let orig = m.clone();
+        let mut ef = EfState::new(3, 6, 1);
+        let cost = average_compressed(
+            &mut m,
+            &reference,
+            Algorithm::Ring,
+            CompressorSpec::Qsgd { bits: 4 },
+            &mut ef,
+            &[false; 3],
+        );
+        assert_eq!(m, orig);
+        assert_eq!(cost, WireCost { payload_exact: 0, payload_wire: 0 });
+    }
+
+    #[test]
+    fn single_participant_is_a_noop_like_the_exact_path() {
+        // No collective runs for a lone participant (the engine prices
+        // such a round at zero comm seconds and zero bytes), so the
+        // replica, residual, and quantization stream must all stay
+        // untouched — a lossy mutation here would be an accuracy cost
+        // the ledger never records.
+        let d = 16;
+        let reference = vec![0.0f32; d];
+        let mut m = models(3, d, 21);
+        let orig = m.clone();
+        let mask = [false, true, false];
+        for spec in [
+            CompressorSpec::TopK { frac: 0.25 },
+            CompressorSpec::Qsgd { bits: 4 },
+        ] {
+            let mut ef = EfState::new(3, d, 5);
+            let cost =
+                average_compressed(&mut m, &reference, Algorithm::Ring, spec, &mut ef, &mask);
+            assert_eq!(m, orig, "{spec:?}");
+            assert_eq!(cost, WireCost { payload_exact: 0, payload_wire: 0 }, "{spec:?}");
+            assert!(ef.residual(1).iter().all(|&e| e == 0.0), "{spec:?}");
+            // The stream did not advance: the next draw equals a fresh
+            // stream's first draw.
+            let mut fresh = EfState::new(3, d, 5);
+            assert_eq!(ef.rngs[1].next_u64(), fresh.rngs[1].next_u64(), "{spec:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one mask bit per replica")]
+    fn rejects_wrong_mask_len() {
+        let mut m = models(3, 4, 1);
+        let mut ef = EfState::new(3, 4, 1);
+        average_compressed(
+            &mut m,
+            &[0.0; 4],
+            Algorithm::Naive,
+            CompressorSpec::Identity,
+            &mut ef,
+            &[true; 2],
+        );
+    }
+}

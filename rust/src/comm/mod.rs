@@ -14,18 +14,32 @@
 //!
 //! All three produce the exact arithmetic mean replicated to every client
 //! (property-tested against each other), differing only in simulated cost.
+//!
+//! [`compress`] adds the bytes-per-round axis on top: top-k / QSGD
+//! operators with error-feedback residuals, composed with the same dense
+//! collectives ([`compress::average_compressed`]), and a stage schedule
+//! that can anneal from aggressive compression to exact transmission
+//! (DESIGN.md §6). `identity` keeps this module's legacy semantics
+//! bit-for-bit.
 
 pub mod allreduce;
+pub mod compress;
 
 pub use allreduce::{average, average_masked, Algorithm};
+pub use compress::{average_compressed, CompressionSchedule, CompressorSpec, EfState};
 
 /// Communication accounting for one experiment run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// Number of synchronization rounds (the paper's headline metric).
     pub rounds: u64,
-    /// Total bytes sent per client across the run.
+    /// Total *exact* (uncompressed f32) bytes per client across the run —
+    /// the paper's rounds x payload ledger.
     pub bytes_per_client: u64,
+    /// Total bytes per client actually put on the wire: equals
+    /// `bytes_per_client` under the `identity` compressor, smaller under a
+    /// top-k / QSGD schedule (DESIGN.md §6).
+    pub wire_bytes_per_client: u64,
     /// Simulated communication seconds (see sim::NetworkModel).
     pub sim_comm_seconds: f64,
     /// Rounds whose average covered a strict subset of the fleet
@@ -46,11 +60,27 @@ pub struct CommStats {
 }
 
 impl CommStats {
-    pub fn record_round(&mut self, bytes_per_client: u64, sim_seconds: f64, steps: u64) {
+    pub fn record_round(
+        &mut self,
+        bytes_per_client: u64,
+        wire_bytes_per_client: u64,
+        sim_seconds: f64,
+        steps: u64,
+    ) {
         self.rounds += 1;
         self.bytes_per_client += bytes_per_client;
+        self.wire_bytes_per_client += wire_bytes_per_client;
         self.sim_comm_seconds += sim_seconds;
         self.local_steps += steps;
+    }
+
+    /// Run-realized compression ratio: wire bytes over exact bytes
+    /// (1.0 before any round, and always 1.0 under `identity`).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes_per_client == 0 {
+            return 1.0;
+        }
+        self.wire_bytes_per_client as f64 / self.bytes_per_client as f64
     }
 
     /// Round-count accounting under partial participation: fold one
@@ -101,22 +131,25 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let mut s = CommStats::default();
-        s.record_round(100, 0.5, 10);
-        s.record_round(50, 0.25, 6);
+        s.record_round(100, 25, 0.5, 10);
+        s.record_round(50, 50, 0.25, 6);
         assert_eq!(s.rounds, 2);
         assert_eq!(s.bytes_per_client, 150);
+        assert_eq!(s.wire_bytes_per_client, 75);
+        assert!((s.compression_ratio() - 0.5).abs() < 1e-12);
         assert!((s.sim_comm_seconds - 0.75).abs() < 1e-12);
         assert_eq!(s.local_steps, 16);
         assert!((s.mean_realized_k() - 8.0).abs() < 1e-12);
         assert_eq!(s.client_rounds(8), 16);
         assert_eq!(CommStats::default().mean_realized_k(), 0.0);
+        assert_eq!(CommStats::default().compression_ratio(), 1.0);
     }
 
     #[test]
     fn participation_accounting() {
         let mut s = CommStats::default();
         for participants in [4u64, 3, 0, 4] {
-            s.record_round(10, 0.1, 5);
+            s.record_round(10, 10, 0.1, 5);
             s.record_participation(participants, 4);
         }
         assert_eq!(s.rounds, 4);

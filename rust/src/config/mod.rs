@@ -6,7 +6,7 @@
 //! `--key value` overrides.
 
 use crate::algo::{AlgoSpec, ControllerSpec, Variant};
-use crate::comm::Algorithm;
+use crate::comm::{Algorithm, CompressionSchedule};
 use crate::simnet::{ClusterProfile, ParticipationPolicy};
 use crate::util::json::Json;
 
@@ -104,6 +104,10 @@ pub struct ExperimentConfig {
     /// "barrier-aware"); keys `target_ratio` / `barrier_frac` tune the
     /// adaptive variants (DESIGN.md §5).
     pub controller: ControllerSpec,
+    /// Gradient-compression schedule ("identity" | "topk" | "qsgd" |
+    /// "topk-anneal" | "qsgd-anneal"); keys `topk_frac` / `compress_bits`
+    /// tune the operators (DESIGN.md §6).
+    pub compression: CompressionSchedule,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -123,6 +127,7 @@ impl Default for ExperimentConfig {
             cluster: ClusterProfile::homogeneous(),
             participation: ParticipationPolicy::All,
             controller: ControllerSpec::Stagewise,
+            compression: CompressionSchedule::default(),
             eval_every_rounds: 1,
             engine: "threaded".into(),
         }
@@ -202,6 +207,24 @@ impl ExperimentConfig {
             if let ControllerSpec::BarrierAware { frac } = &mut cfg.controller {
                 *frac = v;
             }
+        }
+        if let Some(c) = gets("compressor") {
+            cfg.compression = CompressionSchedule::parse(&c)
+                .ok_or_else(|| anyhow::anyhow!("unknown compressor {c}"))?;
+        }
+        if let Some(v) = getf("topk_frac") {
+            anyhow::ensure!(
+                v > 0.0 && v <= 1.0,
+                "topk_frac must be in (0, 1], got {v}"
+            );
+            cfg.compression.set_topk_frac(v);
+        }
+        if let Some(v) = getf("compress_bits") {
+            anyhow::ensure!(
+                v.fract() == 0.0 && (2.0..=16.0).contains(&v),
+                "compress_bits must be an integer in [2, 16], got {v}"
+            );
+            cfg.compression.set_bits(v as u32);
         }
         if let Some(a) = gets("algorithm") {
             cfg.algo.variant =
@@ -304,6 +327,18 @@ impl ExperimentConfig {
             if let ControllerSpec::BarrierAware { frac } = &mut cfg.controller {
                 *frac = v;
             }
+        }
+        // Same semantics for the compression schedule: re-stating the
+        // current schedule name keeps tuned knobs, switching kinds takes
+        // the new schedule's defaults, and knob keys patch in place.
+        if j.get("compressor").is_some() && tmp.compression.label() != cfg.compression.label() {
+            cfg.compression = tmp.compression;
+        }
+        if let Some(v) = j.get("topk_frac").and_then(|v| v.as_f64()) {
+            cfg.compression.set_topk_frac(v);
+        }
+        if let Some(v) = j.get("compress_bits").and_then(|v| v.as_f64()) {
+            cfg.compression.set_bits(v as u32);
         }
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
@@ -408,6 +443,79 @@ mod tests {
                 "{bad}"
             );
         }
+    }
+
+    #[test]
+    fn parses_compressor_and_knobs() {
+        use crate::comm::compress::CompressorSpec;
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.compression.is_always_identity());
+        let j = Json::parse(r#"{"compressor": "topk", "topk_frac": 0.25}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::TopK { frac: 0.25 })
+        );
+        let j = Json::parse(r#"{"compressor": "qsgd-anneal", "compress_bits": 8}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Anneal(CompressorSpec::Qsgd { bits: 8 })
+        );
+        // A knob for a different operator is inert, not an error.
+        let j = Json::parse(r#"{"compressor": "qsgd", "topk_frac": 0.25}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::Qsgd { bits: 4 })
+        );
+        for bad in [
+            r#"{"compressor": "gzip"}"#,
+            r#"{"topk_frac": 0}"#,
+            r#"{"topk_frac": 1.5}"#,
+            r#"{"compress_bits": 1}"#,
+            r#"{"compress_bits": 40}"#,
+            r#"{"compress_bits": 4.5}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn compressor_overrides_compose_across_calls() {
+        use crate::comm::compress::CompressorSpec;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("compressor", "topk").unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::TopK { frac: 0.1 })
+        );
+        cfg.apply_override("topk_frac", "0.25").unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::TopK { frac: 0.25 })
+        );
+        // Unrelated overrides keep the tuned schedule.
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::TopK { frac: 0.25 })
+        );
+        // Re-stating the same schedule name keeps the tuned knob...
+        cfg.apply_override("compressor", "topk").unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::TopK { frac: 0.25 })
+        );
+        // ...while switching kinds takes the new schedule's defaults.
+        cfg.apply_override("compressor", "qsgd").unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionSchedule::Fixed(CompressorSpec::Qsgd { bits: 4 })
+        );
     }
 
     #[test]

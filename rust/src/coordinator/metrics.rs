@@ -98,6 +98,14 @@ impl Trace {
             ("total_iters", Json::num(self.total_iters as f64)),
             ("rounds", Json::num(self.comm.rounds as f64)),
             ("bytes_per_client", Json::num(self.comm.bytes_per_client as f64)),
+            (
+                "wire_bytes_per_client",
+                Json::num(self.comm.wire_bytes_per_client as f64),
+            ),
+            (
+                "compression_ratio",
+                Json::num(self.comm.compression_ratio()),
+            ),
             ("sim_comm_seconds", Json::num(self.comm.sim_comm_seconds)),
             ("sim_compute_seconds", Json::num(self.clock.compute_seconds)),
             (

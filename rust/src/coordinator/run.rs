@@ -77,6 +77,12 @@ pub struct RunConfig {
     /// this is purely an oracle-call saving; the flag exists for the
     /// counting-oracle regression test (tests/test_adaptive.rs).
     pub skip_inactive_compute: bool,
+    /// Gradient-compression schedule (DESIGN.md §6). The default
+    /// `identity` keeps the exact legacy collectives bit-for-bit; top-k /
+    /// QSGD operators compress each participant's delta against the
+    /// server model with per-client error-feedback residuals, and the
+    /// round's collective is priced on the compressed wire bytes.
+    pub compression: comm::CompressionSchedule,
 }
 
 impl Default for RunConfig {
@@ -95,6 +101,7 @@ impl Default for RunConfig {
             participation: ParticipationPolicy::All,
             controller: ControllerSpec::Stagewise,
             skip_inactive_compute: true,
+            compression: comm::CompressionSchedule::default(),
         }
     }
 }
@@ -135,7 +142,6 @@ pub fn run(
     let mut examples_per_client: u64 = 0;
     let shard_size = shards[0].len().max(1) as f64;
 
-    let bytes_per_round = comm::allreduce::bytes_per_client(cfg.collective, n, dim);
     let mut simnet = SimNet::new(
         cfg.profile,
         cfg.network,
@@ -153,12 +159,27 @@ pub fn run(
     // to, and the server-side model the trace evaluates. Under `All`
     // neither is touched and the loop below is the PR-1 code path.
     let masked = !cfg.participation.is_all();
+    // Gradient compression (DESIGN.md §6): when any stage compresses, the
+    // server model doubles as the shared reference each participant's
+    // delta is taken against, and per-client error-feedback residuals
+    // persist across rounds. An all-`identity` schedule keeps the legacy
+    // collectives bit-for-bit (no reference tracking, no residual state).
+    let compressing = !cfg.compression.is_always_identity();
     let mut synced: Vec<Vec<f32>> = if masked {
         (0..n).map(|_| theta0.to_vec()).collect()
     } else {
         Vec::new()
     };
-    let mut server: Vec<f32> = if masked { theta0.to_vec() } else { Vec::new() };
+    let mut server: Vec<f32> = if masked || compressing {
+        theta0.to_vec()
+    } else {
+        Vec::new()
+    };
+    let mut ef = if compressing {
+        Some(comm::EfState::new(n, dim, cfg.seed))
+    } else {
+        None
+    };
 
     // The communication-period controller: `Stagewise` (the default)
     // replays `phase.comm_period` exactly; adaptive controllers resize the
@@ -232,33 +253,53 @@ pub fn run(
             let at_comm_point = steps_in_round == k || step + 1 == phase.steps;
             if at_comm_point {
                 // Price first: the engine's participation mask decides who
-                // enters this round's average (pricing never depends on
-                // the model values, so the order is free).
-                let (rt, part) = simnet.price_round_scheduled(steps_in_round, phase.batch, k);
-                let round_bytes = if masked {
+                // enters this round's average, and the round's wire bytes
+                // are data-independent (pricing never depends on the model
+                // values, so the order is free).
+                let comp = cfg.compression.spec_for_stage(phase.stage);
+                let (rt, part) =
+                    simnet.price_round_compressed(steps_in_round, phase.batch, k, comp);
+                if let Some(ef) = ef.as_mut() {
+                    // Compressed collective: participants transmit their
+                    // error-corrected delta against the server model and
+                    // all end at `server + mean_delta` (bitwise-agreeing,
+                    // like the exact path). Under `All` the mask is
+                    // all-ones and only the payload changes.
+                    comm::average_compressed(
+                        &mut thetas,
+                        &server,
+                        cfg.collective,
+                        comp,
+                        ef,
+                        part.as_slice(),
+                    );
+                } else if masked {
                     comm::average_masked(&mut thetas, cfg.collective, part.as_slice());
+                } else {
+                    comm::average(&mut thetas, cfg.collective);
+                }
+                if masked {
                     for i in 0..n {
                         if part.participates(i) {
                             synced[i].copy_from_slice(&thetas[i]);
                         } else {
                             // Algorithm-visible dropout: the round's local
                             // work is lost; the client resumes from its
-                            // last-synced model when it rejoins.
+                            // last-synced model (and, under compression,
+                            // its frozen residual) when it rejoins.
                             thetas[i].copy_from_slice(&synced[i]);
                         }
                     }
+                }
+                if masked || compressing {
                     if let Some(lead) = part.first() {
                         server.copy_from_slice(&thetas[lead]);
                     }
-                    comm::allreduce::bytes_per_client(cfg.collective, part.count(), dim)
-                } else {
-                    comm::average(&mut thetas, cfg.collective);
-                    bytes_per_round
-                };
+                }
                 steps_in_round = 0;
                 clock.add_compute(rt.compute_span);
                 clock.add_comm(rt.comm_seconds);
-                comm_stats.record_round(round_bytes, rt.comm_seconds, rt.steps);
+                comm_stats.record_round(rt.bytes_exact, rt.bytes_wire, rt.comm_seconds, rt.steps);
                 comm_stats.record_participation(part.count() as u64, n as u64);
                 rounds += 1;
 

@@ -55,6 +55,13 @@ fn main() -> anyhow::Result<()> {
         "",
         "barrier-aware controller: stretch k when the mean barrier wait exceeds this fraction of the round span",
     )
+    .opt(
+        "compressor",
+        "",
+        "gradient-compression schedule: identity (exact), topk, qsgd, or the stagewise anneals topk-anneal/qsgd-anneal (aggressive early, exact late)",
+    )
+    .opt("topk-frac", "", "top-k compressor: fraction of coordinates kept, in (0, 1]")
+    .opt("compress-bits", "", "qsgd compressor: quantization bit width, in [2, 16]")
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
     .opt("out-timeline", "", "write per-round timing breakdown CSV to this path")
@@ -86,6 +93,9 @@ fn main() -> anyhow::Result<()> {
         ("controller", "controller"),
         ("target-ratio", "target_ratio"),
         ("barrier-frac", "barrier_frac"),
+        ("compressor", "compressor"),
+        ("topk-frac", "topk_frac"),
+        ("compress-bits", "compress_bits"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
@@ -110,7 +120,7 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!(
         "workload={} algorithm={} engine={} clients={} steps={} partition={} cluster={} \
-         participation={} controller={} seed={}",
+         participation={} controller={} compressor={} seed={}",
         cfg.workload.name(),
         cfg.algo.variant.name(),
         cfg.engine,
@@ -120,6 +130,7 @@ fn main() -> anyhow::Result<()> {
         cfg.cluster.name,
         cfg.participation.label(),
         cfg.controller.describe(),
+        cfg.compression.describe(),
         cfg.seed,
     );
 
@@ -128,12 +139,14 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
-        "done: iters={} rounds={} mean_realized_k={:.1} bytes/client={} final_loss={:.6e} \
-         final_acc={:.4} wall={:.1}s",
+        "done: iters={} rounds={} mean_realized_k={:.1} bytes/client={} wire_bytes/client={} \
+         compression_ratio={:.4} final_loss={:.6e} final_acc={:.4} wall={:.1}s",
         trace.total_iters,
         trace.comm.rounds,
         trace.comm.mean_realized_k(),
         trace.comm.bytes_per_client,
+        trace.comm.wire_bytes_per_client,
+        trace.comm.compression_ratio(),
         trace.final_loss(),
         trace.final_accuracy(),
         wall,

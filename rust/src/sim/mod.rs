@@ -40,10 +40,20 @@ impl NetworkModel {
     /// across n clients (all links run in parallel; the span is the
     /// longest dependency chain).
     pub fn allreduce_seconds(&self, alg: Algorithm, n: usize, d: usize) -> f64 {
+        self.allreduce_seconds_payload(alg, n, 4.0 * d as f64)
+    }
+
+    /// Like [`Self::allreduce_seconds`], but priced on the serialized
+    /// per-model message size in `bytes` — the hook the gradient-
+    /// compression schedules use: a top-k / QSGD payload shrinks the beta
+    /// (bandwidth) term while every hop still pays alpha, so compression
+    /// helps exactly where the paper's analysis says bandwidth-bound
+    /// collectives live. At `bytes = 4d` this is bit-for-bit
+    /// `allreduce_seconds` (the exact path never drifts).
+    pub fn allreduce_seconds_payload(&self, alg: Algorithm, n: usize, bytes: f64) -> f64 {
         if n <= 1 {
             return 0.0;
         }
-        let bytes = 4.0 * d as f64;
         let nf = n as f64;
         match alg {
             // gather then broadcast: 2 sequential full-model transfers,
@@ -172,6 +182,24 @@ mod tests {
             let small = m.allreduce_seconds(alg, 8, 100);
             let big = m.allreduce_seconds(alg, 8, 100_000);
             assert!(big > small);
+        }
+    }
+
+    #[test]
+    fn payload_pricing_matches_exact_at_4d_and_shrinks_beta_only() {
+        let m = NetworkModel::default();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for n in [2usize, 6, 8, 32] {
+                let exact = m.allreduce_seconds(alg, n, 1000);
+                let payload = m.allreduce_seconds_payload(alg, n, 4000.0);
+                assert_eq!(exact.to_bits(), payload.to_bits(), "{alg:?} n={n}");
+                // A quarter payload is cheaper, but not 4x cheaper: the
+                // alpha (latency) term is payload-independent.
+                let quarter = m.allreduce_seconds_payload(alg, n, 1000.0);
+                assert!(quarter < exact, "{alg:?} n={n}");
+                assert!(quarter > exact / 4.0, "{alg:?} n={n}: alpha term vanished");
+            }
+            assert_eq!(m.allreduce_seconds_payload(alg, 1, 4000.0), 0.0);
         }
     }
 

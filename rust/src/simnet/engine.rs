@@ -19,7 +19,7 @@ use super::event::{EventHeap, EventKind};
 use super::participation::{Participation, ParticipationPolicy};
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline, TimelineEvent};
-use crate::comm::Algorithm;
+use crate::comm::{compress::CompressorSpec, Algorithm};
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel};
 
@@ -272,6 +272,25 @@ impl SimNet {
         batch: usize,
         period: u64,
     ) -> (RoundStat, Participation) {
+        self.price_round_compressed(steps, batch, period, CompressorSpec::Identity)
+    }
+
+    /// Like [`Self::price_round_scheduled`], pricing the round's
+    /// collective on the wire bytes of the given compression operator:
+    /// the beta (bandwidth) term of the alpha-beta model scales with the
+    /// serialized payload while every hop still pays alpha, and the
+    /// round's `bytes_exact` / `bytes_wire` / `compression_ratio` land in
+    /// [`RoundStat`] (and the timeline CSV). `Identity` is bit-for-bit
+    /// the uncompressed pricing path. Wire sizes are data-independent
+    /// (see [`crate::comm::compress`]), which is what lets pricing run
+    /// before the round's averaging.
+    pub fn price_round_compressed(
+        &mut self,
+        steps: u64,
+        batch: usize,
+        period: u64,
+        comp: CompressorSpec,
+    ) -> (RoundStat, Participation) {
         assert!(steps > 0, "a round prices at least one local step");
         let n = self.clients.len();
         let profile = self.profile;
@@ -445,7 +464,12 @@ impl SimNet {
         // `All`). The jitter draw always consumes the link stream so
         // timing streams stay aligned across policies; with fewer than two
         // participants no collective runs at all, so nothing is charged.
-        let base_comm = self.net.allreduce_seconds(self.alg, n_part, self.dim);
+        // The beta term prices the operator's serialized payload —
+        // identical to the d-based formula at the exact 4d payload.
+        let payload_wire = comp.payload_bytes(self.dim);
+        let base_comm = self
+            .net
+            .allreduce_seconds_payload(self.alg, n_part, payload_wire as f64);
         let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
         let comm = if n_part <= 1 { 0.0 } else { drawn };
         if self.detail == Detail::Steps {
@@ -469,6 +493,13 @@ impl SimNet {
             participants: n_part as u32,
             joined,
             left,
+            bytes_exact: crate::comm::allreduce::bytes_per_client(self.alg, n_part, self.dim),
+            bytes_wire: crate::comm::allreduce::bytes_per_client_payload(
+                self.alg,
+                n_part,
+                payload_wire,
+            ),
+            compression_ratio: comp.payload_ratio(self.dim),
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -740,6 +771,61 @@ mod tests {
         assert_eq!(rt.k, 10, "phase-boundary round keeps the commanded period");
         let rt = sim.price_round(5, 16);
         assert_eq!(rt.k, 5, "direct pricing records the realized steps as k");
+    }
+
+    #[test]
+    fn compressed_pricing_scales_comm_and_bytes_but_never_compute() {
+        let mk = || engine(ClusterProfile::heavy_tail_stragglers(), 6, 21, Detail::Rounds);
+        let (mut exact, mut comp) = (mk(), mk());
+        let spec = CompressorSpec::TopK { frac: 0.25 };
+        for r in 0..30 {
+            let a = exact.price_round(8, 16);
+            let (b, _) = comp.price_round_compressed(8, 16, 8, spec);
+            assert_eq!(a.compute_span.to_bits(), b.compute_span.to_bits(), "round {r}");
+            assert!(b.comm_seconds < a.comm_seconds, "round {r}");
+            assert_eq!(a.bytes_exact, b.bytes_exact, "round {r}");
+            assert!(b.bytes_wire < b.bytes_exact, "round {r}");
+            assert_eq!(b.compression_ratio, spec.payload_ratio(1_000));
+            assert_eq!(a.bytes_wire, a.bytes_exact, "identity wire == exact");
+            assert_eq!(a.compression_ratio, 1.0);
+        }
+    }
+
+    #[test]
+    fn identity_compressed_pricing_is_bit_identical_to_scheduled() {
+        let mk = || engine(ClusterProfile::flaky_federated(), 6, 3, Detail::Steps)
+            .with_policy(ParticipationPolicy::Arrived);
+        let (mut a, mut b) = (mk(), mk());
+        for r in 0..60 {
+            let (sa, pa) = a.price_round_scheduled(5, 16, 7);
+            let (sb, pb) = b.price_round_compressed(5, 16, 7, CompressorSpec::Identity);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+        }
+        assert_eq!(a.timeline, b.timeline);
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+    }
+
+    #[test]
+    fn compressed_round_bytes_follow_the_collective_schedule() {
+        // d = 1000, qsgd 4-bit: payload = 4 scales (16B) + 1000*4/8 = 516B.
+        let spec = CompressorSpec::Qsgd { bits: 4 };
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 1, Detail::Rounds);
+        let (rt, _) = sim.price_round_compressed(4, 16, 4, spec);
+        let payload = spec.payload_bytes(1_000);
+        assert_eq!(payload, 16 + 500);
+        assert_eq!(
+            rt.bytes_wire,
+            crate::comm::allreduce::bytes_per_client_payload(Algorithm::Ring, 8, payload)
+        );
+        assert_eq!(
+            rt.bytes_exact,
+            crate::comm::allreduce::bytes_per_client(Algorithm::Ring, 8, 1_000)
+        );
+        assert_eq!(
+            rt.comm_seconds,
+            NetworkModel::default().allreduce_seconds_payload(Algorithm::Ring, 8, payload as f64)
+        );
     }
 
     #[test]

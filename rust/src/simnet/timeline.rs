@@ -64,6 +64,17 @@ pub struct RoundStat {
     pub joined: u32,
     /// Clients that left the fleet at this round's start (churn).
     pub left: u32,
+    /// Per-client exact (uncompressed f32) bytes this round's collective
+    /// would move.
+    pub bytes_exact: u64,
+    /// Per-client bytes actually priced on the wire (compressed payload
+    /// through the same collective schedule; equals `bytes_exact` under
+    /// the `identity` compressor).
+    pub bytes_wire: u64,
+    /// Wire payload over exact payload for the round's operator (1.0 for
+    /// `identity`; data-independent, so it reflects the schedule, not the
+    /// values).
+    pub compression_ratio: f64,
 }
 
 impl RoundStat {
@@ -115,6 +126,16 @@ impl Timeline {
             .count() as u64
     }
 
+    /// Total per-client exact bytes across the run's collectives.
+    pub fn total_bytes_exact(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_exact).sum()
+    }
+
+    /// Total per-client wire bytes across the run's collectives.
+    pub fn total_bytes_wire(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_wire).sum()
+    }
+
     /// Total join (rejoin) events across the run.
     pub fn total_joined(&self) -> u64 {
         self.rounds.iter().map(|r| r.joined as u64).sum()
@@ -142,6 +163,9 @@ impl Timeline {
                 "participants",
                 "joined",
                 "left",
+                "bytes_exact",
+                "bytes_wire",
+                "compression_ratio",
                 "end",
             ],
         )?;
@@ -159,6 +183,9 @@ impl Timeline {
                 r.participants.to_string(),
                 r.joined.to_string(),
                 r.left.to_string(),
+                r.bytes_exact.to_string(),
+                r.bytes_wire.to_string(),
+                format!("{:.4}", r.compression_ratio),
                 format!("{:.6e}", r.end()),
             ])?;
         }
@@ -184,6 +211,9 @@ mod tests {
             participants: 4 - dropped,
             joined: 0,
             left: dropped.min(1),
+            bytes_exact: 4000,
+            bytes_wire: 1000,
+            compression_ratio: 0.25,
         }
     }
 
@@ -201,6 +231,8 @@ mod tests {
         assert_eq!(t.partial_rounds(3), 0);
         assert_eq!(t.total_joined(), 0);
         assert_eq!(t.total_left(), 1);
+        assert_eq!(t.total_bytes_exact(), 8000);
+        assert_eq!(t.total_bytes_wire(), 2000);
     }
 
     #[test]
@@ -221,7 +253,11 @@ mod tests {
         let s = std::fs::read_to_string(&path).unwrap();
         assert_eq!(s.lines().count(), 3); // header + 2 rounds
         assert!(s.starts_with("round,steps,k,start,"));
-        assert!(s.lines().next().unwrap().contains("participants,joined,left"));
+        assert!(s
+            .lines()
+            .next()
+            .unwrap()
+            .contains("participants,joined,left,bytes_exact,bytes_wire,compression_ratio,end"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

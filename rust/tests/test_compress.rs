@@ -1,0 +1,296 @@
+//! Gradient-compression pricing (DESIGN.md §6).
+//!
+//! Contracts pinned here:
+//! * the `identity` compressor is bit-for-bit identical to the
+//!   pre-compression code path — trajectories *and* simnet timelines —
+//!   across every cluster preset and participation policy (the PR-4
+//!   analogue of the `all`-participation and `stagewise`-controller
+//!   invariants from PRs 2–3);
+//! * `topk` / `qsgd` shrink `bytes_wire` (timeline CSV and CommStats) by
+//!   exactly the configured, data-independent payload ratio while leaving
+//!   compute spans untouched;
+//! * error-feedback residuals of non-participants are frozen, not
+//!   decayed, under partial participation;
+//! * compressed runs are deterministic in `(config, seed)` (QSGD's
+//!   stochastic rounding draws from dedicated per-client streams) and
+//!   still converge on the convex workload.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::comm::compress::{average_compressed, CompressorSpec, EfState};
+use stl_sgd::comm::Algorithm;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::rng::Rng;
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+
+fn base_cfg(profile: ClusterProfile, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = Workload::LogregTest; // a9a_like(seed, 64, 16): dim 16
+    cfg.engine = "native".into();
+    cfg.n_clients = 4;
+    cfg.total_steps = 240;
+    cfg.seed = seed;
+    cfg.cluster = profile;
+    cfg.algo = AlgoSpec {
+        variant: Variant::StlSc,
+        eta1: 0.3,
+        k1: 4.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    };
+    cfg
+}
+
+#[test]
+fn identity_compressor_is_bit_for_bit_on_every_preset_and_policy() {
+    // Acceptance gate: `--compressor identity` reproduces the
+    // pre-compression trajectories and timelines exactly. The default
+    // config (no compression key) is the pre-PR behaviour the rest of the
+    // suite pins, so equality against it, bitwise, across every cluster
+    // preset and policy, is the invariant.
+    for profile in ClusterProfile::presets() {
+        for policy in [ParticipationPolicy::All, ParticipationPolicy::Arrived] {
+            let mut legacy = base_cfg(profile, 19);
+            legacy.participation = policy;
+            let mut explicit = legacy.clone();
+            explicit.apply_override("compressor", "identity").unwrap();
+            assert!(explicit.compression.is_always_identity());
+            let a = workloads::run_experiment(&legacy).unwrap();
+            let b = workloads::run_experiment(&explicit).unwrap();
+            assert_eq!(a.points.len(), b.points.len(), "{} {policy:?}", profile.name);
+            for (pa, pb) in a.points.iter().zip(&b.points) {
+                assert_eq!(
+                    pa.loss.to_bits(),
+                    pb.loss.to_bits(),
+                    "{} {policy:?} iter {}",
+                    profile.name,
+                    pa.iter
+                );
+            }
+            assert_eq!(a.timeline, b.timeline, "{} {policy:?}", profile.name);
+            assert_eq!(a.comm, b.comm, "{} {policy:?}", profile.name);
+            // Identity's wire ledger is the exact ledger.
+            assert_eq!(b.comm.wire_bytes_per_client, b.comm.bytes_per_client);
+            assert!(b
+                .timeline
+                .rounds
+                .iter()
+                .all(|r| r.bytes_wire == r.bytes_exact && r.compression_ratio == 1.0));
+        }
+    }
+}
+
+#[test]
+fn topk_and_qsgd_cut_wire_bytes_by_the_configured_ratio() {
+    // dim 16: topk frac 0.25 keeps 4 entries -> 32B of 64B (ratio 0.5);
+    // qsgd 4-bit -> 4B scale + 8B levels = 12B of 64B (ratio 0.1875).
+    for (name, knob_key, knob_val, expect) in [
+        ("topk", "topk_frac", "0.25", CompressorSpec::TopK { frac: 0.25 }),
+        ("qsgd", "compress_bits", "4", CompressorSpec::Qsgd { bits: 4 }),
+    ] {
+        let mut cfg = base_cfg(ClusterProfile::homogeneous(), 7);
+        cfg.apply_override("compressor", name).unwrap();
+        cfg.apply_override(knob_key, knob_val).unwrap();
+        let exact = workloads::run_experiment(&base_cfg(ClusterProfile::homogeneous(), 7)).unwrap();
+        let compressed = workloads::run_experiment(&cfg).unwrap();
+        let ratio = expect.payload_ratio(16);
+        assert!(ratio < 1.0, "{name}");
+        assert_eq!(compressed.comm.rounds, exact.comm.rounds, "{name}");
+        assert_eq!(
+            compressed.comm.bytes_per_client, exact.comm.bytes_per_client,
+            "{name}: the exact ledger is compression-independent"
+        );
+        for r in &compressed.timeline.rounds {
+            assert_eq!(r.compression_ratio, ratio, "{name} round {}", r.round);
+            assert!(r.bytes_wire < r.bytes_exact, "{name} round {}", r.round);
+            assert_eq!(
+                r.bytes_wire,
+                stl_sgd::comm::allreduce::bytes_per_client_payload(
+                    Algorithm::Ring,
+                    r.participants as usize,
+                    expect.payload_bytes(16),
+                ),
+                "{name} round {}",
+                r.round
+            );
+        }
+        assert!(
+            (compressed.comm.compression_ratio() - ratio).abs() < 1e-12,
+            "{name}: run ledger ratio {} != {ratio}",
+            compressed.comm.compression_ratio()
+        );
+        // Cheaper wire bytes mean cheaper simulated communication.
+        assert!(
+            compressed.clock.comm_seconds < exact.clock.comm_seconds,
+            "{name}"
+        );
+        // Compute pricing is untouched by the payload.
+        assert_eq!(
+            compressed.clock.compute_seconds.to_bits(),
+            exact.clock.compute_seconds.to_bits(),
+            "{name}"
+        );
+        // Lossy averaging changes the trajectory but still converges.
+        assert!(
+            exact.points.iter().zip(&compressed.points).any(|(a, b)| a.loss != b.loss),
+            "{name}: compression never changed the trajectory"
+        );
+        assert!(
+            compressed.final_loss() < compressed.points[0].loss * 0.9,
+            "{name}: compressed run failed to converge ({} -> {})",
+            compressed.points[0].loss,
+            compressed.final_loss()
+        );
+    }
+}
+
+#[test]
+fn anneal_schedule_relaxes_ratio_across_stages() {
+    // StlSc grows stages; topk-anneal doubles the kept fraction per stage
+    // until exact. The timeline ratio must be non-decreasing over rounds
+    // and reach 1.0 in the late stages of a long-enough run.
+    let mut cfg = base_cfg(ClusterProfile::homogeneous(), 11);
+    cfg.total_steps = 1200;
+    cfg.apply_override("compressor", "topk-anneal").unwrap();
+    cfg.apply_override("topk_frac", "0.25").unwrap();
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    let ratios: Vec<f64> = trace.timeline.rounds.iter().map(|r| r.compression_ratio).collect();
+    assert!(ratios.windows(2).all(|w| w[0] <= w[1]), "ratio must anneal monotonically");
+    assert!(*ratios.first().unwrap() < 1.0, "early stages must compress");
+    assert_eq!(*ratios.last().unwrap(), 1.0, "late stages must be exact");
+    assert!(trace.final_loss() < trace.points[0].loss * 0.9);
+}
+
+#[test]
+fn compressed_runs_are_deterministic_in_config_and_seed() {
+    for (compressor, profile) in [
+        ("qsgd", ClusterProfile::heavy_tail_stragglers()),
+        ("topk", ClusterProfile::elastic_federated()),
+    ] {
+        let mk = || {
+            let mut cfg = base_cfg(profile, 29);
+            cfg.apply_override("compressor", compressor).unwrap();
+            if profile.leave_prob > 0.0 {
+                cfg.participation = ParticipationPolicy::Arrived;
+            }
+            workloads::run_experiment(&cfg).unwrap()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.timeline, b.timeline, "{compressor} {}", profile.name);
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(
+                pa.loss.to_bits(),
+                pb.loss.to_bits(),
+                "{compressor} {} iter {}",
+                profile.name,
+                pa.iter
+            );
+        }
+    }
+}
+
+#[test]
+fn compression_composes_with_partial_participation_and_stays_finite() {
+    // All the PR-2/3/4 features at once: flaky cluster, arrived policy,
+    // adaptive controller, qsgd compression.
+    let mut cfg = base_cfg(ClusterProfile::flaky_federated(), 41);
+    cfg.total_steps = 480;
+    cfg.participation = ParticipationPolicy::Arrived;
+    cfg.apply_override("controller", "comm-ratio").unwrap();
+    cfg.apply_override("compressor", "qsgd").unwrap();
+    let trace = workloads::run_experiment(&cfg).unwrap();
+    assert!(trace.comm.partial_rounds > 0, "flaky never produced a subset round");
+    assert!(trace.final_loss().is_finite());
+    assert!(trace.comm.wire_bytes_per_client < trace.comm.bytes_per_client);
+}
+
+#[test]
+fn nonparticipant_residuals_are_frozen_not_decayed() {
+    // Satellite contract: compose `average_masked`-style partial
+    // participation with compression — a client outside the round's mask
+    // must keep its residual bit-for-bit (a parameter server cannot touch
+    // state it never heard from), while participants' residuals update.
+    let d = 32;
+    let n = 4;
+    let spec = CompressorSpec::TopK { frac: 0.25 };
+    let mut rng = Rng::new(3);
+    let mut models: Vec<Vec<f32>> =
+        (0..n).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+    let reference = vec![0.0f32; d];
+    let mut ef = EfState::new(n, d, 9);
+
+    // Round 1: everyone participates; every residual becomes non-zero
+    // (top-k drops 24 of 32 coordinates of a dense normal delta).
+    average_compressed(&mut models, &reference, Algorithm::Ring, spec, &mut ef, &[true; n]);
+    let after_round1: Vec<Vec<f32>> = (0..n).map(|i| ef.residual(i).to_vec()).collect();
+    for (i, r) in after_round1.iter().enumerate() {
+        assert!(r.iter().any(|&e| e != 0.0), "client {i} residual empty after round 1");
+    }
+
+    // Local drift before round 2, so participants transmit something new.
+    let reference2 = models[0].clone();
+    for m in models.iter_mut() {
+        for v in m.iter_mut() {
+            *v += rng.normal_f32() * 0.1;
+        }
+    }
+    let frozen_model = models[1].clone();
+
+    // Round 2: client 1 sits out.
+    let mask = [true, false, true, true];
+    average_compressed(&mut models, &reference2, Algorithm::Ring, spec, &mut ef, &mask);
+    assert_eq!(
+        ef.residual(1),
+        after_round1[1].as_slice(),
+        "non-participant residual must be frozen bit-for-bit"
+    );
+    assert_eq!(models[1], frozen_model, "non-participant replica untouched");
+    for i in [0usize, 2, 3] {
+        assert_ne!(
+            ef.residual(i),
+            after_round1[i].as_slice(),
+            "participant {i} residual should have updated"
+        );
+    }
+}
+
+#[test]
+fn frozen_stream_resumes_identically_after_absence() {
+    // A qsgd client that skips rounds must transmit from the exact stream
+    // position it left at — absent rounds consume none of its draws.
+    let d = 16;
+    let spec = CompressorSpec::Qsgd { bits: 4 };
+    let delta: Vec<f32> = {
+        let mut r = Rng::new(5);
+        (0..d).map(|_| r.normal_f32()).collect()
+    };
+    let mk_models = || vec![delta.clone(), delta.clone()];
+    let reference = vec![0.0f32; d];
+
+    // Fleet A: client 1 participates in rounds 1 and 2 — its stream makes
+    // draws #1 and #2, each over the same fresh delta.
+    let mut ef_a = EfState::new(2, d, 77);
+    for _ in 0..2 {
+        let mut m = mk_models();
+        average_compressed(&mut m, &reference, Algorithm::Naive, spec, &mut ef_a, &[true; 2]);
+    }
+
+    // Fleet B: client 1 sits out round 1, then participates twice with
+    // the same fresh deltas. If absence consumed any of its draws, its
+    // first participation would quantize with different uniforms and the
+    // residual after two participations would diverge from fleet A's.
+    let mut ef_b = EfState::new(2, d, 77);
+    let mut mb = mk_models();
+    average_compressed(&mut mb, &reference, Algorithm::Naive, spec, &mut ef_b, &[true, false]);
+    for _ in 0..2 {
+        let mut mb = mk_models();
+        average_compressed(&mut mb, &reference, Algorithm::Naive, spec, &mut ef_b, &[true; 2]);
+    }
+    assert_eq!(
+        ef_a.residual(1),
+        ef_b.residual(1),
+        "absent rounds must not advance the quantization stream"
+    );
+}

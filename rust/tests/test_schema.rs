@@ -1,0 +1,93 @@
+//! Golden-schema gate: the CSV headers every downstream consumer (figure
+//! scripts, sweep summaries, external plotting) keys on.
+//!
+//! The golden header lines are checked-in files under tests/goldens/, so
+//! schema drift — adding, renaming, or reordering a column — fails this
+//! test (and the `schema` CI stage, scripts/ci.sh) instead of silently
+//! breaking plots downstream. To change a schema intentionally, update the
+//! exporter *and* the golden in the same commit.
+
+use stl_sgd::coordinator::{Trace, TracePoint};
+use stl_sgd::simnet::{RoundStat, Timeline};
+
+const TIMELINE_GOLDEN: &str = include_str!("goldens/timeline_header.txt");
+const TRACE_GOLDEN: &str = include_str!("goldens/trace_header.txt");
+
+fn header_of(path: &std::path::Path) -> String {
+    let s = std::fs::read_to_string(path).unwrap();
+    s.lines().next().unwrap_or_default().to_string()
+}
+
+#[test]
+fn timeline_csv_header_matches_checked_in_golden() {
+    let t = Timeline {
+        rounds: vec![RoundStat {
+            round: 0,
+            steps: 4,
+            k: 4,
+            start: 0.0,
+            compute_span: 1.0,
+            comm_seconds: 0.5,
+            max_barrier_wait: 0.0,
+            mean_barrier_wait: 0.0,
+            dropped: 0,
+            participants: 2,
+            joined: 0,
+            left: 0,
+            bytes_exact: 64,
+            bytes_wire: 32,
+            compression_ratio: 0.5,
+        }],
+        events: Vec::new(),
+    };
+    let dir = std::env::temp_dir().join("stl_sgd_schema_timeline");
+    let path = dir.join("timeline.csv");
+    t.write_csv(&path).unwrap();
+    assert_eq!(
+        header_of(&path),
+        TIMELINE_GOLDEN.trim_end(),
+        "timeline CSV header drifted from tests/goldens/timeline_header.txt"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_csv_header_matches_checked_in_golden() {
+    let t = Trace {
+        algorithm: "schema".into(),
+        points: vec![TracePoint {
+            iter: 0,
+            rounds: 0,
+            epoch: 0.0,
+            loss: 0.5,
+            accuracy: 0.5,
+            sim_seconds: 0.0,
+            stage: 0,
+            eta: 0.1,
+            k: 1,
+            realized_k: 0,
+        }],
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join("stl_sgd_schema_trace");
+    let path = dir.join("trace.csv");
+    t.write_csv(&path).unwrap();
+    assert_eq!(
+        header_of(&path),
+        TRACE_GOLDEN.trim_end(),
+        "trace CSV header drifted from tests/goldens/trace_header.txt"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn goldens_include_the_compression_columns() {
+    // The bytes axis is load-bearing for the compression sweeps: a golden
+    // "update" that drops these columns must fail loudly here.
+    for col in ["bytes_exact", "bytes_wire", "compression_ratio"] {
+        assert!(
+            TIMELINE_GOLDEN.split(',').any(|c| c.trim() == col),
+            "timeline golden lost column {col}"
+        );
+    }
+}

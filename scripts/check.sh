@@ -1,12 +1,27 @@
 #!/usr/bin/env bash
 # Tier-1 gate, one command: build, tests, formatting.
 #
-#   scripts/check.sh           # full gate
-#   scripts/check.sh --no-fmt  # skip the formatting check (older toolchains)
-#   scripts/check.sh --smoke   # additionally run the example binaries at
-#                              # tiny sizes so they can't silently rot
+#   scripts/check.sh                   # full gate
+#   scripts/check.sh --no-fmt          # skip the formatting check (older toolchains)
+#   scripts/check.sh --smoke           # additionally run the example binaries at
+#                                      # tiny sizes so they can't silently rot
+#   scripts/check.sh --smoke --quick   # smoke minus the sweep examples (fast path:
+#                                      # quickstart only)
+#   scripts/check.sh --no-build        # skip build+test (CI pipelines that already
+#                                      # ran them as their own stages, scripts/ci.sh)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+no_fmt=0 smoke=0 quick=0 no_build=0
+for arg in "$@"; do
+    case "$arg" in
+        --no-fmt) no_fmt=1 ;;
+        --smoke) smoke=1 ;;
+        --quick) quick=1 ;;
+        --no-build) no_build=1 ;;
+        *) echo "check.sh: unknown flag $arg" >&2; exit 2 ;;
+    esac
+done
 
 # Warnings in the library/binary (rust/src) are errors: dead plumbing
 # from refactors must not linger. Scoped to the release profile (build +
@@ -14,29 +29,41 @@ cd "$(dirname "$0")/.."
 # `cargo test` keeps its own debug-profile artifacts and flags, so older
 # test code with benign warnings cannot block the gate.
 release_flags="${RUSTFLAGS:-} -D warnings"
-RUSTFLAGS="$release_flags" cargo build --release
-cargo test -q
 
-if [[ "${1:-}" == "--smoke" ]]; then
+if [[ $no_build -eq 0 ]]; then
+    RUSTFLAGS="$release_flags" cargo build --release
+    cargo test -q
+fi
+
+if [[ $smoke -eq 1 ]]; then
     smoke_out="${TMPDIR:-/tmp}/stl_sgd_smoke"
     rm -rf "$smoke_out"
     RUSTFLAGS="$release_flags" cargo run --release --example quickstart
-    RUSTFLAGS="$release_flags" cargo run --release --example partial_participation -- \
-        --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
-        --clusters flaky-federated,elastic-federated \
-        --policies all,arrived,0.5 \
-        --out-dir "$smoke_out"
-    test -s "$smoke_out/summary.csv"
-    RUSTFLAGS="$release_flags" cargo run --release --example adaptive_period -- \
-        --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
-        --controllers stagewise,comm-ratio,barrier-aware \
-        --clusters heavy-tail-stragglers \
-        --out-dir "$smoke_out/adaptive"
-    test -s "$smoke_out/adaptive/summary.csv"
+    if [[ $quick -eq 0 ]]; then
+        RUSTFLAGS="$release_flags" cargo run --release --example partial_participation -- \
+            --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+            --clusters flaky-federated,elastic-federated \
+            --policies all,arrived,0.5 \
+            --out-dir "$smoke_out"
+        test -s "$smoke_out/summary.csv"
+        RUSTFLAGS="$release_flags" cargo run --release --example adaptive_period -- \
+            --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+            --controllers stagewise,comm-ratio,barrier-aware \
+            --clusters heavy-tail-stragglers \
+            --out-dir "$smoke_out/adaptive"
+        test -s "$smoke_out/adaptive/summary.csv"
+        RUSTFLAGS="$release_flags" cargo run --release --example compression_sweep -- \
+            --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+            --compressors identity,topk,qsgd,topk-anneal \
+            --clusters homogeneous,heavy-tail-stragglers \
+            --topk-frac 0.25 --compress-bits 4 \
+            --out-dir "$smoke_out/compress"
+        test -s "$smoke_out/compress/summary.csv"
+    fi
     echo "check.sh: smoke examples OK ($smoke_out)"
 fi
 
-if [[ "${1:-}" != "--no-fmt" ]]; then
+if [[ $no_fmt -eq 0 ]]; then
     cargo fmt --check
 fi
 

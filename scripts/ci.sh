@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# CI pipeline: the scripts/check.sh gates split into separately *named*
+# stages, so a red pipeline is attributable to one stage instead of one
+# opaque exit code. `.github/workflows/ci.yml` runs each stage as its own
+# job; offline runners can execute the same pipeline with this script.
+#
+#   scripts/ci.sh                # every stage, in order
+#   scripts/ci.sh build test     # selected stages
+#
+# Stages:
+#   build   release build of rust/src with -D warnings
+#   test    cargo test -q (full suite, debug profile)
+#   schema  golden CSV-schema gate only (tests/test_schema.rs + goldens/)
+#   bench   bench-regression smoke: bench_simnet --ci in short mode, emits
+#           BENCH_ci.json, fails on >25% round-pricing throughput
+#           regression vs rust/benches/BENCH_baseline.json
+#   smoke   example binaries at tiny sizes (check.sh --smoke, build+test
+#           skipped -- the build/test stages own those)
+#   fmt     cargo fmt --check
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+release_flags="${RUSTFLAGS:-} -D warnings"
+bench_out="${BENCH_CI_OUT:-${TMPDIR:-/tmp}/BENCH_ci.json}"
+
+banner() { printf '\n==== ci: %s ====\n' "$1"; }
+
+stage_build() { RUSTFLAGS="$release_flags" cargo build --release; }
+stage_test() { cargo test -q; }
+stage_schema() { cargo test -q --test test_schema; }
+stage_bench() {
+    # `cargo run` cannot select bench targets; `cargo bench -- <args>`
+    # forwards to the binary (the benches use custom main()s, so the
+    # future manifest must set `harness = false` on them).
+    RUSTFLAGS="$release_flags" cargo bench --bench bench_simnet -- --ci \
+        --baseline rust/benches/BENCH_baseline.json \
+        --out "$bench_out" \
+        --max-regress 0.25
+}
+stage_smoke() { scripts/check.sh --smoke --no-build --no-fmt; }
+stage_fmt() { cargo fmt --check; }
+
+all_stages=(build test schema bench smoke fmt)
+stages=("$@")
+if [[ ${#stages[@]} -eq 0 ]]; then
+    stages=("${all_stages[@]}")
+fi
+
+for stage in "${stages[@]}"; do
+    case "$stage" in
+        build | test | schema | bench | smoke | fmt)
+            banner "$stage"
+            "stage_$stage"
+            ;;
+        *)
+            echo "ci.sh: unknown stage '$stage' (known: ${all_stages[*]})" >&2
+            exit 2
+            ;;
+    esac
+done
+
+echo
+echo "ci.sh: all requested stages green (${stages[*]})"
