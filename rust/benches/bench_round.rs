@@ -1,21 +1,50 @@
 //! End-to-end iteration/round bench: the full coordinator loop (sample ->
 //! grads -> fused step -> average) on native, threaded, and — when the
 //! artifacts are built — the XLA engine. This is the paper's iteration
-//! span and the primary L3 perf target.
+//! span and the primary L3 perf target — the loop the flat-arena hot path
+//! (DESIGN.md §7) exists to make fast.
+//!
+//! Modes (custom main; the workspace manifest must set `harness = false`):
+//!
+//!     cargo bench --bench bench_round                     # full report
+//!     cargo bench --bench bench_round -- --ci \
+//!         --baseline rust/benches/BENCH_baseline.json \
+//!         --out /tmp/BENCH_ci.json --max-regress 0.25     # CI gate
+//!     cargo bench --bench bench_round -- --ci --bless \
+//!         --baseline rust/benches/BENCH_baseline.json     # re-pin baseline
+//!
+//! `--ci` runs a short fixed cell set, *merges* the measured iters/sec
+//! into `--out` under the `round_iters_per_sec` key (so it can share
+//! BENCH_ci.json with `bench_simnet --ci`, which owns `events_per_sec`),
+//! and exits non-zero when any metric falls more than `--max-regress`
+//! below the committed baseline. Like the simnet gate, the shipped
+//! baseline is seeded conservatively (far below reference-machine
+//! throughput) so the gate catches catastrophic regressions — debug
+//! builds, accidental per-step allocation storms — on any hardware until
+//! a reference runner blesses tight values.
 
 use std::sync::Arc;
 use stl_sgd::algo::{AlgoSpec, Variant};
 use stl_sgd::bench_support::harness::Bencher;
+use stl_sgd::comm::CompressionSchedule;
 use stl_sgd::coordinator::{run, ClientCompute, NativeCompute, RunConfig, ThreadedCompute};
-use stl_sgd::data::{partition, synth};
+use stl_sgd::data::{partition, synth, Shard};
 use stl_sgd::grad::logreg::NativeLogreg;
 use stl_sgd::rng::Rng;
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::json::Json;
 
-fn main() {
-    let mut b = Bencher::default();
-    println!("# end-to-end coordinator round benchmarks (100 iterations / run)\n");
+const ITERS: u64 = 100;
 
-    let n = 8;
+struct Setup {
+    oracle: Arc<NativeLogreg>,
+    shards: Vec<Shard>,
+    phases: Vec<stl_sgd::algo::Phase>,
+    theta0: Vec<f32>,
+}
+
+fn setup(n: usize) -> Setup {
     let ds = Arc::new(synth::a9a_like(1, 8192, 123));
     let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-4));
     let shards = partition::iid(&ds, n, &mut Rng::new(0));
@@ -28,27 +57,193 @@ fn main() {
         iid: true,
         ..Default::default()
     };
-    let phases = spec.phases(100);
-    let cfg = RunConfig {
+    Setup {
+        oracle,
+        shards,
+        phases: spec.phases(ITERS),
+        theta0: vec![0.0f32; 123],
+    }
+}
+
+fn base_cfg(n: usize) -> RunConfig {
+    RunConfig {
         n_clients: n,
         eval_every_rounds: 1_000_000, // no eval: isolate the loop
         ..Default::default()
+    }
+}
+
+/// Iters/sec for one named coordinator-loop cell: the CI gate's metric.
+fn loop_iters_per_sec(
+    b: &mut Bencher,
+    name: &str,
+    s: &Setup,
+    cfg: &RunConfig,
+) -> (String, f64) {
+    let r = b.run(name, || {
+        let mut e = NativeCompute::new(s.oracle.clone());
+        std::hint::black_box(run(&mut e, &s.shards, &s.phases, cfg, &s.theta0, "b"));
+    });
+    (name.to_string(), ITERS as f64 / r.median_s)
+}
+
+fn run_ci(args: &stl_sgd::util::cli::Parsed) -> i32 {
+    let baseline_path = std::path::PathBuf::from(args.get("baseline"));
+    let out_path = args.get("out");
+    let max_regress = args.get_f64("max-regress");
+    let bless = args.get_flag("bless");
+
+    // Short mode: the plain sweep loop, and the loop with every hot-path
+    // feature engaged at once (straggler pricing, masked averaging,
+    // compressed payloads) so a regression in any layer trips the gate.
+    let mut b = Bencher::quick();
+    let s = setup(8);
+    let plain = base_cfg(8);
+    let mut loaded = base_cfg(8);
+    loaded.profile = ClusterProfile::flaky_federated();
+    loaded.participation = ParticipationPolicy::Arrived;
+    loaded.compression = CompressionSchedule::parse("topk").unwrap();
+    let measured = vec![
+        loop_iters_per_sec(&mut b, "native_n8_d123_k10", &s, &plain),
+        loop_iters_per_sec(&mut b, "native_flaky_arrived_topk_n8_d123_k10", &s, &loaded),
+    ];
+
+    let section = Json::obj(
+        measured
+            .iter()
+            .map(|(name, v)| (name.as_str(), Json::num(*v)))
+            .collect(),
+    );
+    // Merge-write: keep whatever other benches (bench_simnet --ci) already
+    // put in the out/baseline file, replacing only our section.
+    let merged_into = |path: &std::path::Path, comment: Option<&str>| {
+        let mut obj = Json::parse_file(path)
+            .ok()
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
+        if let Some(c) = comment {
+            obj.entry("_comment".to_string()).or_insert_with(|| Json::str(c));
+        }
+        obj.insert("round_iters_per_sec".to_string(), section.clone());
+        Json::Obj(obj)
     };
-    let theta0 = vec![0.0f32; 123];
+    if !out_path.is_empty() {
+        let out = std::path::Path::new(out_path);
+        if let Some(dir) = out.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(out, merged_into(out, None).to_string()).expect("write --out");
+        println!("wrote {out_path}");
+    }
+    if bless {
+        let merged = merged_into(
+            &baseline_path,
+            Some(
+                "Coordinator round-throughput baseline for the bench-regression CI stage \
+                 (scripts/ci.sh bench). Blessed by `bench_round --ci --bless`; re-bless on the \
+                 reference runner after an intentional perf change.",
+            ),
+        );
+        std::fs::write(&baseline_path, merged.to_string()).expect("write baseline");
+        println!("blessed baseline {}", baseline_path.display());
+        return 0;
+    }
+
+    let baseline = match Json::parse_file(&baseline_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!(
+                "bench_round --ci: cannot read baseline {}: {e}",
+                baseline_path.display()
+            );
+            return 1;
+        }
+    };
+    let mut failed = false;
+    for (name, got) in &measured {
+        let Some(base) = baseline
+            .get("round_iters_per_sec")
+            .and_then(|m| m.get(name))
+            .and_then(|v| v.as_f64())
+        else {
+            eprintln!("bench_round --ci: baseline has no metric {name:?}; re-bless it");
+            failed = true;
+            continue;
+        };
+        let floor = base * (1.0 - max_regress);
+        let verdict = if *got < floor { "FAIL" } else { "ok" };
+        println!(
+            "  {name:<44} {got:>12.0} iters/s  baseline {base:>12.0}  floor {floor:>12.0}  \
+             [{verdict}]"
+        );
+        failed |= *got < floor;
+    }
+    if failed {
+        eprintln!(
+            "bench_round --ci: round throughput regressed more than {:.0}% vs {}",
+            max_regress * 100.0,
+            baseline_path.display()
+        );
+        1
+    } else {
+        0
+    }
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_round",
+        "end-to-end coordinator round benchmarks + CI throughput gate",
+    )
+    .flag("ci", "short mode: fixed cells, merge JSON output, baseline comparison")
+    .flag("bless", "with --ci: overwrite the baseline's round metrics with this machine's")
+    .opt(
+        "baseline",
+        "rust/benches/BENCH_baseline.json",
+        "committed iters/sec baseline the CI gate compares against",
+    )
+    .opt("out", "", "with --ci: merge measured metrics into this JSON path (e.g. BENCH_ci.json)")
+    .opt(
+        "max-regress",
+        "0.25",
+        "with --ci: fail when a metric falls more than this fraction below baseline",
+    )
+    .parse();
+
+    if args.get_flag("ci") {
+        std::process::exit(run_ci(&args));
+    }
+
+    let mut b = Bencher::default();
+    println!("# end-to-end coordinator round benchmarks ({ITERS} iterations / run)\n");
+
+    let s = setup(8);
+    let cfg = base_cfg(8);
 
     let r = b.run("loop native N=8 d=123 B=32 (100 it)", || {
-        let mut e = NativeCompute::new(oracle.clone());
-        std::hint::black_box(run(&mut e, &shards, &phases, &cfg, &theta0, "b"));
+        let mut e = NativeCompute::new(s.oracle.clone());
+        std::hint::black_box(run(&mut e, &s.shards, &s.phases, &cfg, &s.theta0, "b"));
     });
-    println!("  {}", r.throughput(100.0, "iters"));
+    println!("  {}", r.throughput(ITERS as f64, "iters"));
 
     for workers in [2usize, 4, 8] {
         let r = b.run(&format!("loop threaded({workers}) N=8 (100 it)"), || {
-            let mut e = ThreadedCompute::new(oracle.clone(), workers);
-            std::hint::black_box(run(&mut e, &shards, &phases, &cfg, &theta0, "b"));
+            let mut e = ThreadedCompute::new(s.oracle.clone(), workers);
+            std::hint::black_box(run(&mut e, &s.shards, &s.phases, &cfg, &s.theta0, "b"));
         });
-        println!("  {}", r.throughput(100.0, "iters"));
+        println!("  {}", r.throughput(ITERS as f64, "iters"));
     }
+
+    // The loaded cell: stragglers + masked averaging + compression.
+    let mut loaded = base_cfg(8);
+    loaded.profile = ClusterProfile::flaky_federated();
+    loaded.participation = ParticipationPolicy::Arrived;
+    loaded.compression = CompressionSchedule::parse("topk").unwrap();
+    let r = b.run("loop native flaky+arrived+topk N=8 (100 it)", || {
+        let mut e = NativeCompute::new(s.oracle.clone());
+        std::hint::black_box(run(&mut e, &s.shards, &s.phases, &loaded, &s.theta0, "b"));
+    });
+    println!("  {}", r.throughput(ITERS as f64, "iters"));
 
     // XLA engine (artifact shapes: N=4, B=8, d=16).
     if stl_sgd::runtime::artifacts_available() {
@@ -56,16 +251,16 @@ fn main() {
         let ds = Arc::new(synth::a9a_like(1, 64, 16));
         let shards = partition::iid(&ds, 4, &mut Rng::new(0));
         let spec = AlgoSpec {
-            batch: 8,
+            variant: Variant::LocalSgd,
+            eta1: 0.5,
+            alpha: 1e-3,
             k1: 10.0,
-            ..spec
-        };
-        let phases = spec.phases(100);
-        let cfg = RunConfig {
-            n_clients: 4,
-            eval_every_rounds: 1_000_000,
+            batch: 8,
+            iid: true,
             ..Default::default()
         };
+        let phases = spec.phases(ITERS);
+        let cfg = base_cfg(4);
         let theta0 = vec![0.0f32; 16];
         let client = xla::PjRtClient::cpu().unwrap();
         let manifest = Manifest::load(&default_artifacts_dir()).unwrap();
@@ -74,7 +269,7 @@ fn main() {
         let r = b.run("loop xla N=4 d=16 B=8 (100 it)", || {
             std::hint::black_box(run(&mut engine, &shards, &phases, &cfg, &theta0, "b"));
         });
-        println!("  {}", r.throughput(100.0, "iters"));
+        println!("  {}", r.throughput(ITERS as f64, "iters"));
         println!("  (per-iteration = grad artifact + fused-step artifact execution)");
         let _ = engine.dim();
     } else {

@@ -82,44 +82,47 @@ fn run_ci(args: &stl_sgd::util::cli::Parsed) -> i32 {
         .map(|&(p, n, k)| events_per_sec(&mut b, p, n, k))
         .collect();
 
-    let to_json = |metrics: &[(String, f64)], comment: Option<&str>| {
-        let mut pairs = Vec::new();
+    let section = Json::obj(
+        measured
+            .iter()
+            .map(|(name, v)| (name.as_str(), Json::num(*v)))
+            .collect(),
+    );
+    // Merge-write: the baseline (and a shared BENCH_ci.json) also carries
+    // other benches' sections (`bench_round --ci` owns
+    // `round_iters_per_sec`); each gate may only replace its own.
+    let merged_into = |path: &std::path::Path, comment: Option<&str>| {
+        let mut obj = Json::parse_file(path)
+            .ok()
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
         if let Some(c) = comment {
-            pairs.push(("_comment", Json::str(c)));
+            // Keep the baseline self-documenting: carry the existing
+            // `_comment` forward (or seed a fresh one) so a bless never
+            // strips the file's own re-bless instructions.
+            obj.entry("_comment".to_string()).or_insert_with(|| Json::str(c));
         }
-        pairs.push((
-            "events_per_sec",
-            Json::obj(
-                metrics
-                    .iter()
-                    .map(|(name, v)| (name.as_str(), Json::num(*v)))
-                    .collect(),
-            ),
-        ));
-        Json::obj(pairs)
+        obj.insert("events_per_sec".to_string(), section.clone());
+        Json::Obj(obj)
     };
     if !out_path.is_empty() {
-        if let Some(dir) = std::path::Path::new(out_path).parent() {
+        let out = std::path::Path::new(out_path);
+        if let Some(dir) = out.parent() {
             let _ = std::fs::create_dir_all(dir);
         }
-        std::fs::write(out_path, to_json(&measured, None).to_string()).expect("write --out");
+        std::fs::write(out, merged_into(out, None).to_string()).expect("write --out");
         println!("wrote {out_path}");
     }
     if bless {
-        // Keep the baseline self-documenting: carry the existing
-        // `_comment` forward (or seed a fresh one) so a bless never
-        // strips the file's own re-bless instructions.
-        let carried = Json::parse_file(&baseline_path)
-            .ok()
-            .and_then(|j| j.get("_comment").and_then(|c| c.as_str().map(str::to_string)));
-        let comment = carried.unwrap_or_else(|| {
-            "Round-pricing throughput baseline for the bench-regression CI stage \
-             (scripts/ci.sh bench). Blessed on this machine by `bench_simnet --ci --bless`; \
-             re-bless on the reference runner after an intentional perf change."
-                .to_string()
-        });
-        std::fs::write(&baseline_path, to_json(&measured, Some(&comment)).to_string())
-            .expect("write baseline");
+        let merged = merged_into(
+            &baseline_path,
+            Some(
+                "Round-pricing throughput baseline for the bench-regression CI stage \
+                 (scripts/ci.sh bench). Blessed on this machine by `bench_simnet --ci --bless`; \
+                 re-bless on the reference runner after an intentional perf change.",
+            ),
+        );
+        std::fs::write(&baseline_path, merged.to_string()).expect("write baseline");
         println!("blessed baseline {}", baseline_path.display());
         return 0;
     }

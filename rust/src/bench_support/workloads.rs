@@ -209,6 +209,7 @@ pub fn run_experiment_with_stop(
         participation: cfg.participation,
         controller: cfg.controller,
         compression: cfg.compression,
+        timeline_detail: cfg.timeline_detail,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,
         seed: cfg.seed,

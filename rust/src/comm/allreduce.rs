@@ -5,6 +5,18 @@
 //! The data movement mirrors the real algorithm's schedule (so step counts
 //! and per-step payloads are faithful for the cost model), executed over
 //! in-process buffers.
+//!
+//! Since PR 5 all three schedules run through one allocation-free core
+//! written over a row-view abstraction ([`Rows`]): within a ring step the
+//! chunk each client reads and the chunk written into it are always
+//! distinct (read chunk `(i - s) mod n`, written chunk `(i - 1 - s) mod
+//! n`), so the old per-step `to_vec()` snapshots were never needed — the
+//! sends can be applied in place, in client order, and every destination
+//! cell still receives exactly the pre-step value, bit-for-bit. The same
+//! core serves the legacy `Vec<Vec<f32>>` entry points and the
+//! [`crate::linalg::ModelArena`] entry points ([`average_arena`] /
+//! [`average_arena_masked`]), whose only scratch is the arena's own spare
+//! row (used by the naive schedule's mean) and participant-index list.
 
 /// Collective algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,47 +86,185 @@ pub fn average_masked(models: &mut [Vec<f32>], alg: Algorithm, mask: &[bool]) {
     }
 }
 
-fn naive(models: &mut [Vec<f32>]) {
-    let n = models.len();
-    let d = models[0].len();
-    let mut mean = vec![0.0f32; d];
-    // f64 accumulation: the naive (leader) collective is also the reference
-    // the other two are tested against.
+/// Arena entry point: average all rows of the arena in place (the
+/// full-fleet collective over the flat model block). Bit-identical to
+/// [`average`] on the equivalent `Vec<Vec<f32>>` layout.
+pub fn average_arena(arena: &mut crate::linalg::ModelArena, alg: Algorithm) {
+    let n = arena.n_rows();
+    if n <= 1 {
+        return;
+    }
+    let (data, d, idx, scratch) = arena.collective_parts();
+    idx.clear();
+    idx.extend(0..n);
+    let mut rows = ArenaRows {
+        data,
+        d,
+        rows: idx.as_slice(),
+    };
+    match alg {
+        Algorithm::Naive => naive_core(&mut rows, scratch),
+        Algorithm::Ring => ring_core(&mut rows),
+        Algorithm::Tree => tree_core(&mut rows),
+    }
+}
+
+/// Arena entry point for the masked collective: rows with `mask[i] ==
+/// true` end at the mean over exactly those rows; bystander rows are
+/// untouched. Runs the same dense schedule over the participant subset as
+/// [`average_masked`] — participant results are bit-identical — but
+/// allocation-free: the participant list and the naive schedule's mean
+/// row live in the arena's own scratch.
+pub fn average_arena_masked(arena: &mut crate::linalg::ModelArena, alg: Algorithm, mask: &[bool]) {
+    assert_eq!(arena.n_rows(), mask.len(), "one mask bit per replica");
+    let (data, d, idx, scratch) = arena.collective_parts();
+    idx.clear();
+    for (i, &b) in mask.iter().enumerate() {
+        if b {
+            idx.push(i);
+        }
+    }
+    if idx.len() <= 1 {
+        // A lone participant already holds its own mean; with nobody
+        // arrived no collective runs at all.
+        return;
+    }
+    let mut rows = ArenaRows {
+        data,
+        d,
+        rows: idx.as_slice(),
+    };
+    match alg {
+        Algorithm::Naive => naive_core(&mut rows, scratch),
+        Algorithm::Ring => ring_core(&mut rows),
+        Algorithm::Tree => tree_core(&mut rows),
+    }
+}
+
+/// Row-view abstraction the collective cores are written over: a set of
+/// equal-width f32 rows with split-borrow access to two distinct rows at
+/// once. Implemented for the legacy `Vec<Vec<f32>>` layout and for a
+/// masked subset of [`crate::linalg::ModelArena`] rows.
+trait Rows {
+    fn n_rows(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn row(&self, i: usize) -> &[f32];
+    fn row_mut(&mut self, i: usize) -> &mut [f32];
+    /// Rows `a` and `b` (logical indices, `a != b`), both mutable.
+    fn pair_mut(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]);
+}
+
+struct VecRows<'a>(&'a mut [Vec<f32>]);
+
+impl Rows for VecRows<'_> {
+    fn n_rows(&self) -> usize {
+        self.0.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.0[0].len()
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.0[i]
+    }
+
+    fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.0[i]
+    }
+
+    fn pair_mut(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        debug_assert_ne!(a, b);
+        if a < b {
+            let (lo, hi) = self.0.split_at_mut(b);
+            (lo[a].as_mut_slice(), hi[0].as_mut_slice())
+        } else {
+            let (lo, hi) = self.0.split_at_mut(a);
+            (hi[0].as_mut_slice(), lo[b].as_mut_slice())
+        }
+    }
+}
+
+/// A masked subset of arena rows: logical row `i` is block row `rows[i]`.
+struct ArenaRows<'a> {
+    data: &'a mut [f32],
+    d: usize,
+    rows: &'a [usize],
+}
+
+impl Rows for ArenaRows<'_> {
+    fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        let r = self.rows[i];
+        &self.data[r * self.d..(r + 1) * self.d]
+    }
+
+    fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let r = self.rows[i];
+        &mut self.data[r * self.d..(r + 1) * self.d]
+    }
+
+    fn pair_mut(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        let (ra, rb) = (self.rows[a], self.rows[b]);
+        debug_assert_ne!(ra, rb);
+        let d = self.d;
+        if ra < rb {
+            let (lo, hi) = self.data.split_at_mut(rb * d);
+            (&mut lo[ra * d..(ra + 1) * d], &mut hi[..d])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(ra * d);
+            (&mut hi[..d], &mut lo[rb * d..(rb + 1) * d])
+        }
+    }
+}
+
+/// Gather-to-leader mean with f64 accumulation (also the reference the
+/// other two schedules are tested against). `scratch` holds the mean row.
+fn naive_core<R: Rows>(rows: &mut R, scratch: &mut [f32]) {
+    let n = rows.n_rows();
+    let d = rows.dim();
+    let mean = &mut scratch[..d];
     for j in 0..d {
         let mut acc = 0.0f64;
-        for m in models.iter() {
-            acc += m[j] as f64;
+        for i in 0..n {
+            acc += rows.row(i)[j] as f64;
         }
         mean[j] = (acc / n as f64) as f32;
     }
-    for m in models.iter_mut() {
-        m.copy_from_slice(&mean);
+    for i in 0..n {
+        rows.row_mut(i).copy_from_slice(mean);
     }
 }
 
 /// Ring allreduce: N-1 reduce-scatter steps + N-1 all-gather steps over
 /// d/N-sized chunks. After the reduce-scatter, client i owns the fully
 /// reduced chunk i+1; the all-gather circulates the finished chunks.
-fn ring(models: &mut [Vec<f32>]) {
-    let n = models.len();
-    let d = models[0].len();
-    // Chunk boundaries (chunk c = [bounds[c], bounds[c+1]))
-    let bounds: Vec<usize> = (0..=n).map(|c| c * d / n).collect();
+/// Applied in place: within one step, the chunk read from client i and
+/// the chunk written into it are always distinct, so no snapshot is
+/// needed and every destination receives the pre-step value bit-for-bit.
+fn ring_core<R: Rows>(rows: &mut R) {
+    let n = rows.n_rows();
+    let d = rows.dim();
+    debug_assert!(n >= 2);
+    // Chunk boundaries (chunk c = [bound(c), bound(c+1)))
+    let bound = |c: usize| c * d / n;
 
-    // Reduce-scatter: at step s, client i sends chunk (i - s) to client i+1,
-    // which adds it into its replica.
+    // Reduce-scatter: at step s, client i sends chunk (i - s) to client
+    // i+1, which adds it into its replica.
     for s in 0..n - 1 {
-        // Snapshot the chunks being sent this step (simultaneous sends).
-        let sends: Vec<(usize, Vec<f32>)> = (0..n)
-            .map(|i| {
-                let c = (i + n - s) % n;
-                (c, models[i][bounds[c]..bounds[c + 1]].to_vec())
-            })
-            .collect();
         for i in 0..n {
+            let c = (i + n - s) % n;
             let dst = (i + 1) % n;
-            let (c, payload) = &sends[i];
-            let dst_chunk = &mut models[dst][bounds[*c]..bounds[*c + 1]];
+            let (lo, hi) = (bound(c), bound(c + 1));
+            let (src, dst_row) = rows.pair_mut(i, dst);
+            let (payload, dst_chunk) = (&src[lo..hi], &mut dst_row[lo..hi]);
             for (a, b) in dst_chunk.iter_mut().zip(payload) {
                 *a += b;
             }
@@ -123,22 +273,18 @@ fn ring(models: &mut [Vec<f32>]) {
     // Now client i holds the fully reduced chunk (i + 1) % n.
     // All-gather: circulate finished chunks N-1 times.
     for s in 0..n - 1 {
-        let sends: Vec<(usize, Vec<f32>)> = (0..n)
-            .map(|i| {
-                let c = (i + 1 + n - s) % n;
-                (c, models[i][bounds[c]..bounds[c + 1]].to_vec())
-            })
-            .collect();
         for i in 0..n {
+            let c = (i + 1 + n - s) % n;
             let dst = (i + 1) % n;
-            let (c, payload) = &sends[i];
-            models[dst][bounds[*c]..bounds[*c + 1]].copy_from_slice(payload);
+            let (lo, hi) = (bound(c), bound(c + 1));
+            let (src, dst_row) = rows.pair_mut(i, dst);
+            dst_row[lo..hi].copy_from_slice(&src[lo..hi]);
         }
     }
     // Sum -> mean.
     let inv = 1.0 / n as f32;
-    for m in models.iter_mut() {
-        for v in m.iter_mut() {
+    for i in 0..n {
+        for v in rows.row_mut(i).iter_mut() {
             *v *= inv;
         }
     }
@@ -146,15 +292,14 @@ fn ring(models: &mut [Vec<f32>]) {
 
 /// Recursive doubling on the next power of two (non-participants in the
 /// padding fold into partner 0 first — here N is always the client count,
-/// handled by a pre-reduction for the non-power-of-two tail).
-fn tree(models: &mut [Vec<f32>]) {
-    let n = models.len();
+/// handled by a pre-reduction for the non-power-of-two tail). The final
+/// tail broadcast copies through a split borrow — no whole-model clone.
+fn tree_core<R: Rows>(rows: &mut R) {
+    let n = rows.n_rows();
     let p2 = n.next_power_of_two() / if n.is_power_of_two() { 1 } else { 2 };
     // Fold the tail [p2, n) into [0, n-p2).
     for i in p2..n {
-        let (head, tail) = models.split_at_mut(i);
-        let src = &tail[0];
-        let dst = &mut head[i - p2];
+        let (dst, src) = rows.pair_mut(i - p2, i);
         for (a, b) in dst.iter_mut().zip(src.iter()) {
             *a += b;
         }
@@ -166,9 +311,7 @@ fn tree(models: &mut [Vec<f32>]) {
             let partner = i ^ stride;
             if partner > i && partner < p2 {
                 // exchange + both end with the sum
-                let (lo, hi) = models.split_at_mut(partner);
-                let a = &mut lo[i];
-                let b = &mut hi[0];
+                let (a, b) = rows.pair_mut(i, partner);
                 for j in 0..a.len() {
                     let s = a[j] + b[j];
                     a[j] = s;
@@ -181,14 +324,28 @@ fn tree(models: &mut [Vec<f32>]) {
     // Scale and broadcast to the folded tail.
     let inv = 1.0 / n as f32;
     for i in 0..p2 {
-        for v in models[i].iter_mut() {
+        for v in rows.row_mut(i).iter_mut() {
             *v *= inv;
         }
     }
     for i in p2..n {
-        let src = models[i - p2].clone();
-        models[i].copy_from_slice(&src);
+        let (src, dst) = rows.pair_mut(i - p2, i);
+        dst.copy_from_slice(src);
     }
+}
+
+fn naive(models: &mut [Vec<f32>]) {
+    let d = models[0].len();
+    let mut scratch = vec![0.0f32; d];
+    naive_core(&mut VecRows(models), &mut scratch);
+}
+
+fn ring(models: &mut [Vec<f32>]) {
+    ring_core(&mut VecRows(models));
+}
+
+fn tree(models: &mut [Vec<f32>]) {
+    tree_core(&mut VecRows(models));
 }
 
 /// Per-client bytes sent for one collective over a d-dim f32 model.
@@ -407,6 +564,70 @@ mod tests {
         assert_eq!(bytes_per_client_payload(Algorithm::Ring, 8, 1000), 1750);
         assert_eq!(bytes_per_client_payload(Algorithm::Tree, 8, 1000), 3000);
         assert_eq!(bytes_per_client_payload(Algorithm::Tree, 1, 1000), 0);
+    }
+
+    fn arena_from(models: &[Vec<f32>]) -> crate::linalg::ModelArena {
+        let mut a = crate::linalg::ModelArena::zeros(models.len(), models[0].len());
+        for (i, m) in models.iter().enumerate() {
+            a.row_mut(i).copy_from_slice(m);
+        }
+        a
+    }
+
+    #[test]
+    fn arena_average_matches_legacy_bitwise() {
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let cases = [(2usize, 8usize, 1u64), (3, 7, 2), (5, 5, 3), (8, 33, 4), (6, 1, 5)];
+            for (n, d, seed) in cases {
+                let mut legacy = random_models(n, d, seed);
+                let mut arena = arena_from(&legacy);
+                average(&mut legacy, alg);
+                average_arena(&mut arena, alg);
+                assert_eq!(arena.to_vecs(), legacy, "{alg:?} n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn arena_masked_matches_legacy_masked_bitwise() {
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let legacy_orig = random_models(6, 13, 21);
+            let mask = [true, false, true, true, false, true];
+            let mut legacy = legacy_orig.clone();
+            average_masked(&mut legacy, alg, &mask);
+            let mut arena = arena_from(&legacy_orig);
+            average_arena_masked(&mut arena, alg, &mask);
+            assert_eq!(arena.to_vecs(), legacy, "{alg:?}");
+            // All-ones mask reproduces the unmasked arena path.
+            let mut a = arena_from(&legacy_orig);
+            let mut b = arena_from(&legacy_orig);
+            average_arena(&mut a, alg);
+            average_arena_masked(&mut b, alg, &[true; 6]);
+            assert_eq!(a.to_vecs(), b.to_vecs(), "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn arena_masked_noops_leave_rows_untouched() {
+        let orig = random_models(4, 9, 5);
+        let mut a = arena_from(&orig);
+        average_arena_masked(&mut a, Algorithm::Ring, &[false; 4]);
+        assert_eq!(a.to_vecs(), orig);
+        average_arena_masked(&mut a, Algorithm::Tree, &[false, true, false, false]);
+        assert_eq!(a.to_vecs(), orig, "a single participant already holds its own mean");
+        // Repeated calls keep reusing the arena scratch without drift.
+        average_arena_masked(&mut a, Algorithm::Naive, &[true, true, false, false]);
+        let after = a.to_vecs();
+        average_arena_masked(&mut a, Algorithm::Naive, &[true, true, false, false]);
+        assert_eq!(a.to_vecs()[0], after[0], "naive mean is idempotent");
+        assert_eq!(a.to_vecs()[2], orig[2], "bystander untouched across calls");
+    }
+
+    #[test]
+    #[should_panic(expected = "one mask bit per replica")]
+    fn arena_masked_rejects_wrong_mask_len() {
+        let mut a = arena_from(&random_models(3, 4, 1));
+        average_arena_masked(&mut a, Algorithm::Naive, &[true, false]);
     }
 
     #[test]

@@ -127,14 +127,36 @@ impl CompressorSpec {
     /// Compress one delta vector. `rng` is the transmitting client's
     /// dedicated quantization stream; it is consumed only by stochastic
     /// operators (QSGD draws exactly one uniform per coordinate, whatever
-    /// the values, so streams advance data-independently).
+    /// the values, so streams advance data-independently). Allocating
+    /// wrapper over [`Self::compress_into`] — both entries run the same
+    /// code, so payloads are bit-identical whichever the caller uses.
     pub fn compress(&self, delta: &[f32], rng: &mut Rng) -> Payload {
+        let mut buf = PayloadBuf::new();
+        self.compress_into(delta, rng, &mut buf);
+        buf.into_payload()
+    }
+
+    /// Allocation-free hot-path entry: compress `delta` into the caller's
+    /// reusable [`PayloadBuf`] (cleared first). The per-client buffers in
+    /// [`EfState`] amortize to zero allocations per round after warmup.
+    pub fn compress_into(&self, delta: &[f32], rng: &mut Rng, buf: &mut PayloadBuf) {
         match *self {
-            CompressorSpec::Identity => Payload::Dense(delta.to_vec()),
+            CompressorSpec::Identity => {
+                buf.kind = PayloadKind::Dense;
+                buf.dense.clear();
+                buf.dense.extend_from_slice(delta);
+            }
             CompressorSpec::TopK { frac } => {
                 let d = delta.len();
                 let k = Self::topk_kept(frac, d).min(d);
-                let mut order: Vec<u32> = (0..d as u32).collect();
+                let PayloadBuf {
+                    ref mut order,
+                    ref mut idx,
+                    ref mut val,
+                    ..
+                } = *buf;
+                order.clear();
+                order.extend(0..d as u32);
                 // Largest magnitude first; ties broken by lower index.
                 // The comparator is a total order, so the selected *set*
                 // is deterministic whatever partition path the O(d)
@@ -148,16 +170,24 @@ impl CompressorSpec {
                             .then(a.cmp(&b))
                     });
                 }
-                let mut idx: Vec<u32> = order[..k].to_vec();
+                idx.clear();
+                idx.extend_from_slice(&order[..k]);
                 idx.sort_unstable(); // ascending-index wire format
-                let val: Vec<f32> = idx.iter().map(|&i| delta[i as usize]).collect();
-                Payload::Sparse { dim: d, idx, val }
+                val.clear();
+                val.extend(idx.iter().map(|&i| delta[i as usize]));
+                buf.kind = PayloadKind::Sparse;
+                buf.dim = d;
             }
             CompressorSpec::Qsgd { bits } => {
                 debug_assert!((2..=16).contains(&bits), "qsgd bits out of range: {bits}");
                 let max_level = (1i32 << (bits - 1)) - 1;
-                let mut scales = Vec::with_capacity(delta.len().div_ceil(QSGD_CHUNK));
-                let mut levels = Vec::with_capacity(delta.len());
+                let PayloadBuf {
+                    ref mut scales,
+                    ref mut levels,
+                    ..
+                } = *buf;
+                scales.clear();
+                levels.clear();
                 for chunk in delta.chunks(QSGD_CHUNK) {
                     let max_abs = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
                     let scale = if max_abs > 0.0 {
@@ -181,12 +211,118 @@ impl CompressorSpec {
                         levels.push(q as i16);
                     }
                 }
-                Payload::Quantized {
-                    bits,
-                    scales,
-                    levels,
+                buf.kind = PayloadKind::Quantized;
+                buf.bits = bits;
+            }
+        }
+    }
+}
+
+/// Which wire format a [`PayloadBuf`] currently holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PayloadKind {
+    Dense,
+    Sparse,
+    Quantized,
+}
+
+/// Reusable compression scratch: the same wire formats as [`Payload`],
+/// but with every backing vector owned by the buffer and recycled across
+/// rounds ([`CompressorSpec::compress_into`] / [`Self::decode_into`]).
+/// One lives per client inside [`EfState`].
+#[derive(Clone, Debug)]
+pub struct PayloadBuf {
+    kind: PayloadKind,
+    // Dense
+    dense: Vec<f32>,
+    // Sparse (top-k)
+    dim: usize,
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    /// Top-k selection scratch (the index permutation select_nth runs on).
+    order: Vec<u32>,
+    // Quantized (QSGD)
+    bits: u32,
+    scales: Vec<f32>,
+    levels: Vec<i16>,
+}
+
+impl Default for PayloadBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PayloadBuf {
+    pub fn new() -> Self {
+        Self {
+            kind: PayloadKind::Dense,
+            dense: Vec::new(),
+            dim: 0,
+            idx: Vec::new(),
+            val: Vec::new(),
+            order: Vec::new(),
+            bits: 0,
+            scales: Vec::new(),
+            levels: Vec::new(),
+        }
+    }
+
+    /// Serialized size on the wire (same ledger as [`Payload::wire_bytes`]).
+    pub fn wire_bytes(&self) -> u64 {
+        match self.kind {
+            PayloadKind::Dense => 4 * self.dense.len() as u64,
+            PayloadKind::Sparse => 8 * self.idx.len() as u64,
+            PayloadKind::Quantized => {
+                let mut bytes = 4 * self.scales.len() as u64;
+                for chunk in self.levels.chunks(QSGD_CHUNK) {
+                    bytes += (chunk.len() * self.bits as usize).div_ceil(8) as u64;
+                }
+                bytes
+            }
+        }
+    }
+
+    /// Dense decoded image written into `out` (overwritten; same values
+    /// as [`Payload::decode`] bit-for-bit).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        match self.kind {
+            PayloadKind::Dense => out.copy_from_slice(&self.dense),
+            PayloadKind::Sparse => {
+                debug_assert_eq!(out.len(), self.dim);
+                out.fill(0.0);
+                for (&i, &v) in self.idx.iter().zip(&self.val) {
+                    out[i as usize] = v;
                 }
             }
+            PayloadKind::Quantized => {
+                for (chunk_i, chunk) in self.levels.chunks(QSGD_CHUNK).enumerate() {
+                    let s = self.scales[chunk_i];
+                    let base = chunk_i * QSGD_CHUNK;
+                    for (j, &q) in chunk.iter().enumerate() {
+                        out[base + j] = q as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move the buffered message into the owning [`Payload`] form (the
+    /// legacy API; consumes the buffers, so only the allocating wrapper
+    /// uses it).
+    fn into_payload(self) -> Payload {
+        match self.kind {
+            PayloadKind::Dense => Payload::Dense(self.dense),
+            PayloadKind::Sparse => Payload::Sparse {
+                dim: self.dim,
+                idx: self.idx,
+                val: self.val,
+            },
+            PayloadKind::Quantized => Payload::Quantized {
+                bits: self.bits,
+                scales: self.scales,
+                levels: self.levels,
+            },
         }
     }
 }
@@ -389,11 +525,19 @@ impl CompressionSchedule {
 }
 
 /// Per-client error-feedback state: the residual each client accumulates
-/// (what its compressor dropped, re-injected into its next transmission)
-/// and its dedicated stochastic-quantization stream.
+/// (what its compressor dropped, re-injected into its next transmission),
+/// its dedicated stochastic-quantization stream, and the reusable
+/// compression scratch the arena hot path encodes/decodes through
+/// (DESIGN.md §7: scratch is call-private, reused across rounds, never
+/// aliased with model state).
 pub struct EfState {
     residuals: Vec<Vec<f32>>,
     rngs: Vec<Rng>,
+    /// Reusable delta buffer (one row; participants are processed one at
+    /// a time, so a single buffer serves the whole fleet).
+    delta: Vec<f32>,
+    /// Reusable wire-format buffers.
+    buf: PayloadBuf,
 }
 
 impl EfState {
@@ -405,6 +549,8 @@ impl EfState {
         Self {
             residuals: (0..n).map(|_| vec![0.0f32; d]).collect(),
             rngs: (0..n).map(|i| root.split(i as u64 + 1)).collect(),
+            delta: vec![0.0f32; d],
+            buf: PayloadBuf::new(),
         }
     }
 
@@ -503,6 +649,74 @@ pub fn average_compressed(
     for &i in &idx {
         for (t, &r) in models[i].iter_mut().zip(reference) {
             *t += r;
+        }
+    }
+    exact
+}
+
+/// Arena hot-path twin of [`average_compressed`]: identical semantics and
+/// bit-identical results over [`crate::linalg::ModelArena`] rows, with
+/// every temporary drawn from [`EfState`]'s reusable scratch (delta row,
+/// wire buffers) and the collective running in place over the arena —
+/// zero allocations per round after warmup. See [`average_compressed`]
+/// for the error-feedback contract (frozen non-participants, lone-
+/// participant no-op, identity-flushes-residuals).
+pub fn average_compressed_arena(
+    arena: &mut crate::linalg::ModelArena,
+    reference: &[f32],
+    alg: Algorithm,
+    spec: CompressorSpec,
+    ef: &mut EfState,
+    mask: &[bool],
+) -> WireCost {
+    let n = arena.n_rows();
+    assert_eq!(mask.len(), n, "one mask bit per replica");
+    assert_eq!(ef.residuals.len(), n, "one residual per replica");
+    let d = reference.len();
+    assert_eq!(arena.dim(), d, "replica/reference dim mismatch");
+    let exact = WireCost {
+        payload_exact: 4 * d as u64,
+        payload_wire: spec.payload_bytes(d),
+    };
+    if mask.iter().filter(|&&b| b).count() <= 1 {
+        return WireCost {
+            payload_exact: 0,
+            payload_wire: 0,
+        };
+    }
+    // Compress each participant's error-corrected delta and park the
+    // decoded image in its arena row, so the in-place collective can
+    // average the deltas directly.
+    let EfState {
+        residuals,
+        rngs,
+        delta,
+        buf,
+    } = ef;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let row = arena.row_mut(i);
+        let residual = &mut residuals[i];
+        for j in 0..d {
+            delta[j] = row[j] - reference[j] + residual[j];
+        }
+        spec.compress_into(delta, &mut rngs[i], buf);
+        debug_assert_eq!(buf.wire_bytes(), exact.payload_wire);
+        buf.decode_into(row); // row now holds the decoded delta image
+        for j in 0..d {
+            residual[j] = delta[j] - row[j];
+        }
+    }
+    super::allreduce::average_arena_masked(arena, alg, mask);
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let row = arena.row_mut(i);
+        for j in 0..d {
+            row[j] += reference[j];
         }
     }
     exact
@@ -839,6 +1053,94 @@ mod tests {
             let mut fresh = EfState::new(3, d, 5);
             assert_eq!(ef.rngs[1].next_u64(), fresh.rngs[1].next_u64(), "{spec:?}");
         }
+    }
+
+    #[test]
+    fn payload_buf_reuse_matches_fresh_compress() {
+        // One buffer recycled across operators and inputs produces the
+        // same payloads as a fresh allocation every time.
+        let mut buf = PayloadBuf::new();
+        for (seed, spec) in [
+            (1u64, CompressorSpec::TopK { frac: 0.3 }),
+            (2, CompressorSpec::Qsgd { bits: 4 }),
+            (3, CompressorSpec::Identity),
+            (4, CompressorSpec::TopK { frac: 0.05 }),
+            (5, CompressorSpec::Qsgd { bits: 8 }),
+        ] {
+            let v = random_vec(300, seed);
+            let mut r1 = Rng::new(seed).split(9);
+            let mut r2 = Rng::new(seed).split(9);
+            spec.compress_into(&v, &mut r1, &mut buf);
+            let fresh = spec.compress(&v, &mut r2);
+            assert_eq!(buf.wire_bytes(), fresh.wire_bytes(), "{spec:?}");
+            let mut dec = vec![0.0f32; 300];
+            buf.decode_into(&mut dec);
+            assert_eq!(dec, fresh.decode(), "{spec:?}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{spec:?} stream position");
+        }
+    }
+
+    #[test]
+    fn arena_compressed_average_matches_legacy_bitwise() {
+        let d = 40;
+        let reference = random_vec(d, 77);
+        let mask = [true, false, true, true];
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for spec in [
+                CompressorSpec::Identity,
+                CompressorSpec::TopK { frac: 0.25 },
+                CompressorSpec::Qsgd { bits: 4 },
+            ] {
+                let orig = models(4, d, 5);
+                let mut legacy = orig.clone();
+                let mut ef_a = EfState::new(4, d, 11);
+                let cost_a =
+                    average_compressed(&mut legacy, &reference, alg, spec, &mut ef_a, &mask);
+                let mut arena = crate::linalg::ModelArena::zeros(4, d);
+                for (i, m) in orig.iter().enumerate() {
+                    arena.row_mut(i).copy_from_slice(m);
+                }
+                let mut ef_b = EfState::new(4, d, 11);
+                let cost_b =
+                    average_compressed_arena(&mut arena, &reference, alg, spec, &mut ef_b, &mask);
+                assert_eq!(cost_a, cost_b, "{alg:?} {spec:?}");
+                assert_eq!(arena.to_vecs(), legacy, "{alg:?} {spec:?}");
+                for i in 0..4 {
+                    assert_eq!(ef_a.residual(i), ef_b.residual(i), "{alg:?} {spec:?} client {i}");
+                }
+                // Streams advanced identically (participants only).
+                for i in [0usize, 2, 3] {
+                    assert_eq!(
+                        ef_a.rngs[i].next_u64(),
+                        ef_b.rngs[i].next_u64(),
+                        "{alg:?} {spec:?} client {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_compressed_lone_participant_is_noop() {
+        let d = 16;
+        let reference = vec![0.0f32; d];
+        let orig = models(3, d, 21);
+        let mut arena = crate::linalg::ModelArena::zeros(3, d);
+        for (i, m) in orig.iter().enumerate() {
+            arena.row_mut(i).copy_from_slice(m);
+        }
+        let mut ef = EfState::new(3, d, 5);
+        let cost = average_compressed_arena(
+            &mut arena,
+            &reference,
+            Algorithm::Ring,
+            CompressorSpec::Qsgd { bits: 4 },
+            &mut ef,
+            &[false, true, false],
+        );
+        assert_eq!(arena.to_vecs(), orig);
+        assert_eq!(cost, WireCost { payload_exact: 0, payload_wire: 0 });
+        assert!(ef.residual(1).iter().all(|&e| e == 0.0));
     }
 
     #[test]

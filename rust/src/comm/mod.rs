@@ -25,8 +25,10 @@
 pub mod allreduce;
 pub mod compress;
 
-pub use allreduce::{average, average_masked, Algorithm};
-pub use compress::{average_compressed, CompressionSchedule, CompressorSpec, EfState};
+pub use allreduce::{average, average_arena, average_arena_masked, average_masked, Algorithm};
+pub use compress::{
+    average_compressed, average_compressed_arena, CompressionSchedule, CompressorSpec, EfState,
+};
 
 /// Communication accounting for one experiment run.
 #[derive(Clone, Debug, Default, PartialEq)]

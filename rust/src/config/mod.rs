@@ -7,7 +7,7 @@
 
 use crate::algo::{AlgoSpec, ControllerSpec, Variant};
 use crate::comm::{Algorithm, CompressionSchedule};
-use crate::simnet::{ClusterProfile, ParticipationPolicy};
+use crate::simnet::{ClusterProfile, Detail, ParticipationPolicy};
 use crate::util::json::Json;
 
 /// Which dataset/model workload to run.
@@ -111,6 +111,12 @@ pub struct ExperimentConfig {
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
+    /// Timeline sink granularity ("off" | "rounds" | "steps", key
+    /// `timeline`). `rounds` (the default) keeps the per-round CSV and
+    /// summary stats; `off` bounds memory on long sweeps that never read
+    /// the timeline; `steps` attaches the per-step event sink (and takes
+    /// the simnet engine off its coalesced fast path).
+    pub timeline_detail: Detail,
 }
 
 impl Default for ExperimentConfig {
@@ -130,6 +136,7 @@ impl Default for ExperimentConfig {
             compression: CompressionSchedule::default(),
             eval_every_rounds: 1,
             engine: "threaded".into(),
+            timeline_detail: Detail::Rounds,
         }
     }
 }
@@ -207,6 +214,10 @@ impl ExperimentConfig {
             if let ControllerSpec::BarrierAware { frac } = &mut cfg.controller {
                 *frac = v;
             }
+        }
+        if let Some(tl) = gets("timeline") {
+            cfg.timeline_detail = Detail::parse(&tl)
+                .ok_or_else(|| anyhow::anyhow!("unknown timeline detail {tl}"))?;
         }
         if let Some(c) = gets("compressor") {
             cfg.compression = CompressionSchedule::parse(&c)
@@ -308,6 +319,9 @@ impl ExperimentConfig {
         take!(collective);
         take!(cluster);
         take!(participation);
+        if j.get("timeline").is_some() {
+            cfg.timeline_detail = tmp.timeline_detail;
+        }
         // Copy a patched controller only when it changes the controller
         // *kind*: re-stating the current name (say, a wrapper script's
         // default `--controller comm-ratio`) must not silently reset
@@ -535,6 +549,22 @@ mod tests {
         // ...while switching kinds takes the new controller's defaults.
         cfg.apply_override("controller", "barrier-aware").unwrap();
         assert_eq!(cfg.controller, ControllerSpec::BarrierAware { frac: 0.05 });
+    }
+
+    #[test]
+    fn parses_timeline_detail() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.timeline_detail, Detail::Rounds);
+        let j = Json::parse(r#"{"timeline": "off"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.timeline_detail, Detail::Off);
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("timeline", "steps").unwrap();
+        assert_eq!(cfg.timeline_detail, Detail::Steps);
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(cfg.timeline_detail, Detail::Steps, "unrelated override keeps it");
+        assert!(ExperimentConfig::from_json(&Json::parse(r#"{"timeline": "verbose"}"#).unwrap())
+            .is_err());
     }
 
     #[test]

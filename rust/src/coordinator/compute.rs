@@ -15,6 +15,7 @@
 //! tests assert trajectory equality between them.
 
 use crate::grad::Oracle;
+use crate::linalg::ModelArena;
 use std::sync::Arc;
 
 /// Engine interface used by the coordinator loop.
@@ -73,6 +74,63 @@ pub trait ClientCompute {
     ) {
         let _ = active;
         self.step(thetas, grads, anchor, eta, inv_gamma)
+    }
+
+    /// Arena hot-path gradients (DESIGN.md §7): client models are rows of
+    /// `thetas`, and each active client's gradient is written into the
+    /// matching row of the caller-preallocated `grads` arena (losses into
+    /// `losses`) — no per-step `Vec<Vec<f32>>`. Inactive rows are
+    /// placeholders the caller must not read (this engine family leaves
+    /// them stale or zeroed; their loss slots are zeroed), mirroring the
+    /// [`Self::grads_masked`] contract. The default bridges through the
+    /// legacy Vec API — bit-identical values for any engine, it just pays
+    /// the arena<->Vec conversion copies — so engines like the XLA
+    /// artifact path keep computing exactly what they computed before
+    /// (their per-step cost is dominated by artifact execution and the
+    /// literal uploads they already paid; an engine where the bridge
+    /// copies matter should override with a native arena path like the
+    /// in-process engines do).
+    fn grads_arena(
+        &mut self,
+        thetas: &ModelArena,
+        batches: &[Vec<usize>],
+        active: &[bool],
+        grads: &mut ModelArena,
+        losses: &mut [f32],
+    ) {
+        let tv = thetas.to_vecs();
+        let (gs, ls) = self.grads_masked(&tv, batches, active);
+        for i in 0..thetas.n_rows() {
+            if active[i] && !gs[i].is_empty() {
+                grads.row_mut(i).copy_from_slice(&gs[i]);
+            } else {
+                // Placeholder slot: zeroed so fixed-shape batched step
+                // engines can safely consume it.
+                grads.row_mut(i).fill(0.0);
+            }
+            losses[i] = ls[i];
+        }
+    }
+
+    /// Arena hot-path fused step: like [`Self::step_masked`] over arena
+    /// rows. Inactive rows' post-step values are unspecified (the
+    /// coordinator rolls every non-participant back at the comm point).
+    /// The default bridges through the legacy Vec API.
+    fn step_arena(
+        &mut self,
+        thetas: &mut ModelArena,
+        grads: &ModelArena,
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+        active: &[bool],
+    ) {
+        let mut tv = thetas.to_vecs();
+        let gv = grads.to_vecs();
+        self.step_masked(&mut tv, &gv, anchor, eta, inv_gamma, active);
+        for (i, row) in tv.iter().enumerate() {
+            thetas.row_mut(i).copy_from_slice(row);
+        }
     }
 
     /// Full-dataset objective at a (usually averaged) iterate.
@@ -165,6 +223,54 @@ impl ClientCompute for NativeCompute {
         }
     }
 
+    fn grads_arena(
+        &mut self,
+        thetas: &ModelArena,
+        batches: &[Vec<usize>],
+        active: &[bool],
+        grads: &mut ModelArena,
+        losses: &mut [f32],
+    ) {
+        assert_eq!(thetas.n_rows(), batches.len());
+        assert_eq!(thetas.n_rows(), active.len());
+        assert_eq!(thetas.n_rows(), grads.n_rows());
+        assert_eq!(thetas.n_rows(), losses.len());
+        for i in 0..thetas.n_rows() {
+            if active[i] {
+                losses[i] =
+                    self.oracle
+                        .grad_minibatch_into(thetas.row(i), &batches[i], grads.row_mut(i));
+            } else {
+                // Skipped: no oracle call; the gradient row is a stale
+                // placeholder the caller (and our step_arena) never reads.
+                losses[i] = 0.0;
+            }
+        }
+    }
+
+    fn step_arena(
+        &mut self,
+        thetas: &mut ModelArena,
+        grads: &ModelArena,
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+        active: &[bool],
+    ) {
+        assert_eq!(thetas.n_rows(), active.len());
+        for i in 0..thetas.n_rows() {
+            if active[i] {
+                crate::linalg::fused_local_step(
+                    thetas.row_mut(i),
+                    grads.row(i),
+                    anchor,
+                    eta,
+                    inv_gamma,
+                );
+            }
+        }
+    }
+
     fn full_loss(&mut self, theta: &[f32]) -> f64 {
         self.oracle.full_loss(theta)
     }
@@ -219,6 +325,130 @@ mod tests {
         // All-active mask reproduces the dense path bit-for-bit.
         let (all, _) = engine.grads_masked(&thetas, &batches, &[true; 3]);
         assert_eq!(all, dense);
+    }
+
+    #[test]
+    fn arena_grads_and_step_match_vec_path_bitwise() {
+        let ds = Arc::new(synth::a9a_like(1, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut engine = NativeCompute::new(oracle);
+        let tv = vec![vec![0.1f32; 8], vec![-0.1f32; 8], vec![0.2f32; 8]];
+        let batches: Vec<Vec<usize>> = (0..3).map(|i| (i * 8..(i + 1) * 8).collect()).collect();
+        let active = [true; 3];
+        let (gs, ls) = engine.grads_masked(&tv, &batches, &active);
+
+        let mut thetas = ModelArena::zeros(3, 8);
+        for (i, t) in tv.iter().enumerate() {
+            thetas.row_mut(i).copy_from_slice(t);
+        }
+        let mut grads = ModelArena::zeros(3, 8);
+        let mut losses = vec![0.0f32; 3];
+        engine.grads_arena(&thetas, &batches, &active, &mut grads, &mut losses);
+        for i in 0..3 {
+            assert_eq!(grads.row(i), gs[i].as_slice(), "client {i}");
+            assert_eq!(losses[i], ls[i], "client {i}");
+        }
+
+        // The fused step over arena rows matches the Vec path bitwise.
+        let mut tv2 = tv.clone();
+        let anchor = vec![0.05f32; 8];
+        engine.step_masked(&mut tv2, &gs, &anchor, 0.1, 0.5, &active);
+        engine.step_arena(&mut thetas, &grads, &anchor, 0.1, 0.5, &active);
+        for i in 0..3 {
+            assert_eq!(thetas.row(i), tv2[i].as_slice(), "client {i}");
+        }
+    }
+
+    #[test]
+    fn arena_masked_skips_inactive_rows_and_never_reads_their_buffers() {
+        // Aliasing/placeholder contract: inactive gradient rows keep
+        // whatever bytes they held (poisoned here with NaN), the inactive
+        // theta row is untouched by step_arena, and neither poisoned
+        // buffer leaks into any active client's result.
+        let ds = Arc::new(synth::a9a_like(1, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut engine = NativeCompute::new(oracle);
+        let tv = vec![vec![0.1f32; 8], vec![-0.1f32; 8], vec![0.2f32; 8]];
+        let batches: Vec<Vec<usize>> = (0..3).map(|i| (i * 8..(i + 1) * 8).collect()).collect();
+        let mask = [true, false, true];
+        let (dense, _) = engine.grads_masked(&tv, &batches, &[true; 3]);
+
+        let mut thetas = ModelArena::zeros(3, 8);
+        for (i, t) in tv.iter().enumerate() {
+            thetas.row_mut(i).copy_from_slice(t);
+        }
+        let mut grads = ModelArena::zeros(3, 8);
+        grads.row_mut(1).fill(f32::NAN); // poison the inactive slot
+        let mut losses = vec![9.0f32; 3];
+        engine.grads_arena(&thetas, &batches, &mask, &mut grads, &mut losses);
+        assert_eq!(grads.row(0), dense[0].as_slice());
+        assert_eq!(grads.row(2), dense[2].as_slice());
+        assert!(grads.row(1).iter().all(|v| v.is_nan()), "placeholder kept, not read");
+        assert_eq!(losses[1], 0.0, "inactive loss slot zeroed");
+
+        let before_row1 = tv[1].clone();
+        let anchor = vec![0.0f32; 8];
+        engine.step_arena(&mut thetas, &grads, &anchor, 0.1, 0.0, &mask);
+        assert_eq!(thetas.row(1), before_row1.as_slice(), "inactive theta untouched");
+        assert!(thetas.row(0).iter().all(|v| v.is_finite()), "no NaN leak");
+        assert!(thetas.row(2).iter().all(|v| v.is_finite()), "no NaN leak");
+    }
+
+    #[test]
+    fn default_arena_bridge_matches_override() {
+        // A minimal engine that only implements the legacy Vec API; the
+        // trait's default arena methods must produce the same values the
+        // native override does (the XLA engine relies on this bridge).
+        struct Bridge(NativeCompute);
+        impl ClientCompute for Bridge {
+            fn dim(&self) -> usize {
+                self.0.dim()
+            }
+            fn grads(
+                &mut self,
+                thetas: &[Vec<f32>],
+                batches: &[Vec<usize>],
+            ) -> (Vec<Vec<f32>>, Vec<f32>) {
+                self.0.grads(thetas, batches)
+            }
+            fn step(
+                &mut self,
+                thetas: &mut [Vec<f32>],
+                grads: &[Vec<f32>],
+                anchor: &[f32],
+                eta: f32,
+                inv_gamma: f32,
+            ) {
+                self.0.step(thetas, grads, anchor, eta, inv_gamma)
+            }
+            fn full_loss(&mut self, theta: &[f32]) -> f64 {
+                self.0.full_loss(theta)
+            }
+            fn full_accuracy(&mut self, theta: &[f32]) -> f64 {
+                self.0.full_accuracy(theta)
+            }
+        }
+        let ds = Arc::new(synth::a9a_like(1, 64, 8));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut native = NativeCompute::new(oracle.clone());
+        let mut bridge = Bridge(NativeCompute::new(oracle));
+        let mut thetas = ModelArena::zeros(2, 8);
+        thetas.row_mut(0).copy_from_slice(&[0.1; 8]);
+        thetas.row_mut(1).copy_from_slice(&[-0.1; 8]);
+        let batches: Vec<Vec<usize>> = (0..2).map(|i| (i * 8..(i + 1) * 8).collect()).collect();
+        let active = [true; 2];
+        let (mut ga, mut gb) = (ModelArena::zeros(2, 8), ModelArena::zeros(2, 8));
+        let (mut la, mut lb) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        native.grads_arena(&thetas, &batches, &active, &mut ga, &mut la);
+        bridge.grads_arena(&thetas, &batches, &active, &mut gb, &mut lb);
+        assert_eq!(ga, gb);
+        assert_eq!(la, lb);
+        let mut ta = thetas.clone();
+        let mut tb = thetas.clone();
+        let anchor = vec![0.0f32; 8];
+        native.step_arena(&mut ta, &ga, &anchor, 0.2, 0.1, &active);
+        bridge.step_arena(&mut tb, &gb, &anchor, 0.2, 0.1, &active);
+        assert_eq!(ta, tb);
     }
 
     #[test]

@@ -4,10 +4,12 @@
 
 pub mod compute;
 pub mod metrics;
+pub mod reference;
 pub mod run;
 pub mod threaded;
 
 pub use compute::{ClientCompute, NativeCompute};
 pub use metrics::{Trace, TracePoint};
+pub use reference::run_reference;
 pub use run::{run, run_native, Metric, RunConfig, StopRule};
 pub use threaded::ThreadedCompute;

@@ -1,0 +1,232 @@
+//! The pre-arena coordinator loop, kept verbatim as the bit-identity
+//! oracle for the flat-arena hot path.
+//!
+//! PR 5 rebuilt [`super::run::run`] around a contiguous
+//! [`crate::linalg::ModelArena`] (allocation-free rounds, in-place
+//! collectives, zero-copy threaded dispatch). The contract is that the
+//! rewrite changes *when and where bytes live, never what is computed* —
+//! and this module is how that contract stays testable: it is the old
+//! `Vec<Vec<f32>>` loop, using the legacy engine entry points
+//! ([`super::compute::ClientCompute::grads_masked`] /
+//! [`super::compute::ClientCompute::step_masked`]), the legacy
+//! collectives ([`crate::comm::average`] / [`crate::comm::average_masked`]
+//! / [`crate::comm::average_compressed`]) and the allocating sampler
+//! entry. `tests/test_arena.rs` runs both loops across cluster preset x
+//! participation policy x compressor x controller and asserts bitwise
+//! equality of every trace point, timeline row, and accounting total —
+//! the same pattern the closed-form `sim` clock plays for `simnet`.
+//!
+//! Do not optimize this file. Its value is being the slow, obviously-
+//! equivalent spelling of the algorithm.
+
+use super::compute::ClientCompute;
+use super::metrics::{Trace, TracePoint};
+use super::run::RunConfig;
+use crate::algo::{Phase, RoundFeedback};
+use crate::comm;
+use crate::data::{sampler::MinibatchSampler, Shard};
+use crate::rng::Rng;
+use crate::sim::SimClock;
+use crate::simnet::SimNet;
+
+/// Execute `phases` with `engine` over `shards` — the legacy layout.
+/// Signature-compatible with [`super::run::run`]; see the module docs.
+pub fn run_reference(
+    engine: &mut dyn ClientCompute,
+    shards: &[Shard],
+    phases: &[Phase],
+    cfg: &RunConfig,
+    theta0: &[f32],
+    algorithm_name: &str,
+) -> Trace {
+    assert_eq!(shards.len(), cfg.n_clients, "one shard per client");
+    assert!(!phases.is_empty());
+    let n = cfg.n_clients;
+    let dim = engine.dim();
+    assert_eq!(theta0.len(), dim);
+
+    let root = Rng::new(cfg.seed);
+    let mut samplers: Vec<MinibatchSampler> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| MinibatchSampler::new(s.clone(), &root, i as u64))
+        .collect();
+
+    let mut thetas: Vec<Vec<f32>> = (0..n).map(|_| theta0.to_vec()).collect();
+    let mut anchor = theta0.to_vec();
+
+    let mut trace = Trace {
+        algorithm: algorithm_name.to_string(),
+        ..Default::default()
+    };
+    let mut clock = SimClock::default();
+    let mut comm_stats = comm::CommStats::default();
+    let mut t: u64 = 0;
+    let mut rounds: u64 = 0;
+    let mut examples_per_client: u64 = 0;
+    let shard_size = shards[0].len().max(1) as f64;
+
+    let mut simnet = SimNet::new(
+        cfg.profile,
+        cfg.network,
+        cfg.compute_model,
+        cfg.collective,
+        n,
+        dim,
+        cfg.seed,
+        cfg.timeline_detail,
+    )
+    .with_policy(cfg.participation);
+
+    let masked = !cfg.participation.is_all();
+    let compressing = !cfg.compression.is_always_identity();
+    let mut synced: Vec<Vec<f32>> = if masked {
+        (0..n).map(|_| theta0.to_vec()).collect()
+    } else {
+        Vec::new()
+    };
+    let mut server: Vec<f32> = if masked || compressing {
+        theta0.to_vec()
+    } else {
+        Vec::new()
+    };
+    let mut ef = if compressing {
+        Some(comm::EfState::new(n, dim, cfg.seed))
+    } else {
+        None
+    };
+
+    let mut controller = cfg.controller.build();
+
+    let skip_inactive = masked && cfg.skip_inactive_compute;
+    let mut active = vec![true; n];
+
+    // Initial evaluation (iteration 0, before any work).
+    let loss0 = engine.full_loss(&anchor);
+    let acc0 = if cfg.eval_accuracy {
+        engine.full_accuracy(&anchor)
+    } else {
+        f64::NAN
+    };
+    trace.points.push(TracePoint {
+        iter: 0,
+        rounds: 0,
+        epoch: 0.0,
+        loss: loss0,
+        accuracy: acc0,
+        sim_seconds: 0.0,
+        stage: phases[0].stage,
+        eta: phases[0].lr.at(0),
+        k: phases[0].comm_period,
+        realized_k: 0,
+    });
+
+    'outer: for phase in phases {
+        if phase.reset_anchor {
+            anchor.copy_from_slice(if masked { &server } else { &thetas[0] });
+        }
+        let mut k = controller.period(phase).max(1);
+        let mut batches: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut steps_in_round: u64 = 0;
+        for step in 0..phase.steps {
+            if steps_in_round == 0 && skip_inactive {
+                active.copy_from_slice(simnet.begin_round());
+            }
+            let eta = phase.lr.at(t) as f32;
+
+            batches.clear();
+            for s in samplers.iter_mut() {
+                batches.push(s.sample(phase.batch));
+            }
+            let (grads, _losses) = engine.grads_masked(&thetas, &batches, &active);
+            engine.step_masked(&mut thetas, &grads, &anchor, eta, phase.inv_gamma, &active);
+
+            t += 1;
+            steps_in_round += 1;
+            examples_per_client += phase.batch as u64;
+
+            let at_comm_point = steps_in_round == k || step + 1 == phase.steps;
+            if at_comm_point {
+                let comp = cfg.compression.spec_for_stage(phase.stage);
+                let (rt, part) =
+                    simnet.price_round_compressed(steps_in_round, phase.batch, k, comp);
+                if let Some(ef) = ef.as_mut() {
+                    comm::average_compressed(
+                        &mut thetas,
+                        &server,
+                        cfg.collective,
+                        comp,
+                        ef,
+                        part.as_slice(),
+                    );
+                } else if masked {
+                    comm::average_masked(&mut thetas, cfg.collective, part.as_slice());
+                } else {
+                    comm::average(&mut thetas, cfg.collective);
+                }
+                if masked {
+                    for i in 0..n {
+                        if part.participates(i) {
+                            synced[i].copy_from_slice(&thetas[i]);
+                        } else {
+                            thetas[i].copy_from_slice(&synced[i]);
+                        }
+                    }
+                }
+                if masked || compressing {
+                    if let Some(lead) = part.first() {
+                        server.copy_from_slice(&thetas[lead]);
+                    }
+                }
+                steps_in_round = 0;
+                clock.add_compute(rt.compute_span);
+                clock.add_comm(rt.comm_seconds);
+                comm_stats.record_round(rt.bytes_exact, rt.bytes_wire, rt.comm_seconds, rt.steps);
+                comm_stats.record_participation(part.count() as u64, n as u64);
+                rounds += 1;
+
+                let k_round = k;
+                controller.observe(&RoundFeedback::from_stat(&rt, n));
+                k = controller.period(phase).max(1);
+
+                if rounds % cfg.eval_every_rounds == 0 {
+                    let eval_model: &[f32] = if masked { &server } else { &thetas[0] };
+                    let loss = engine.full_loss(eval_model);
+                    let acc = if cfg.eval_accuracy {
+                        engine.full_accuracy(eval_model)
+                    } else {
+                        f64::NAN
+                    };
+                    trace.points.push(TracePoint {
+                        iter: t,
+                        rounds,
+                        epoch: examples_per_client as f64 / shard_size,
+                        loss,
+                        accuracy: acc,
+                        sim_seconds: clock.total(),
+                        stage: phase.stage,
+                        eta: eta as f64,
+                        k: k_round,
+                        realized_k: rt.steps,
+                    });
+                    if let Some(stop) = &cfg.stop {
+                        let hit = match stop.metric {
+                            super::run::Metric::Loss => loss <= stop.threshold,
+                            super::run::Metric::Accuracy => acc >= stop.threshold,
+                        };
+                        if hit {
+                            trace.stopped_early = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    trace.total_iters = t;
+    trace.comm = comm_stats;
+    trace.clock = clock;
+    trace.timeline = simnet.take_timeline();
+    trace
+}

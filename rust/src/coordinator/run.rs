@@ -19,6 +19,7 @@ use super::metrics::{Trace, TracePoint};
 use crate::algo::{ControllerSpec, Phase, RoundFeedback};
 use crate::comm;
 use crate::data::{sampler::MinibatchSampler, Shard};
+use crate::linalg::ModelArena;
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel, SimClock};
 use crate::simnet::{ClusterProfile, Detail, ParticipationPolicy, SimNet};
@@ -107,6 +108,16 @@ impl Default for RunConfig {
 }
 
 /// Execute `phases` with `engine` over `shards`, starting from `theta0`.
+///
+/// Hot-path layout (PR 5, DESIGN.md §7): client models and gradients live
+/// as rows of two preallocated [`ModelArena`]s; per-step gradients are
+/// written in place through [`ClientCompute::grads_arena`], batches reuse
+/// per-client index buffers, and the comm point runs the in-place arena
+/// collectives. After warmup a round performs no heap allocation. The
+/// pre-arena loop is preserved verbatim in
+/// [`super::reference::run_reference`] and the two are property-tested
+/// bitwise-equal across cluster preset x participation policy x
+/// compressor x controller (tests/test_arena.rs).
 pub fn run(
     engine: &mut dyn ClientCompute,
     shards: &[Shard],
@@ -128,7 +139,12 @@ pub fn run(
         .map(|(i, s)| MinibatchSampler::new(s.clone(), &root, i as u64))
         .collect();
 
-    let mut thetas: Vec<Vec<f32>> = (0..n).map(|_| theta0.to_vec()).collect();
+    // Flat model arena: one contiguous N x d block per run; gradients get
+    // a twin arena and losses a reusable buffer. These are the only
+    // model-sized allocations the whole run makes.
+    let mut thetas = ModelArena::replicate(n, theta0);
+    let mut grads = ModelArena::zeros(n, dim);
+    let mut losses = vec![0.0f32; n];
     let mut anchor = theta0.to_vec();
 
     let mut trace = Trace {
@@ -165,10 +181,10 @@ pub fn run(
     // persist across rounds. An all-`identity` schedule keeps the legacy
     // collectives bit-for-bit (no reference tracking, no residual state).
     let compressing = !cfg.compression.is_always_identity();
-    let mut synced: Vec<Vec<f32>> = if masked {
-        (0..n).map(|_| theta0.to_vec()).collect()
+    let mut synced: ModelArena = if masked {
+        ModelArena::replicate(n, theta0)
     } else {
-        Vec::new()
+        ModelArena::zeros(0, dim)
     };
     let mut server: Vec<f32> = if masked || compressing {
         theta0.to_vec()
@@ -216,15 +232,18 @@ pub fn run(
         realized_k: 0,
     });
 
+    // Per-client minibatch index buffers, reused across every step.
+    let mut batches: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+
     'outer: for phase in phases {
         if phase.reset_anchor {
             // Models are synced at phase boundaries; the stage anchor x_s is
             // the shared iterate (the server model when a participation
             // policy leaves some replicas unsynced).
-            anchor.copy_from_slice(if masked { &server } else { &thetas[0] });
+            let src: &[f32] = if masked { &server } else { thetas.row(0) };
+            anchor.copy_from_slice(src);
         }
         let mut k = controller.period(phase).max(1);
-        let mut batches: Vec<Vec<usize>> = Vec::with_capacity(n);
         let mut steps_in_round: u64 = 0;
         for step in 0..phase.steps {
             if steps_in_round == 0 && skip_inactive {
@@ -236,15 +255,14 @@ pub fn run(
             }
             let eta = phase.lr.at(t) as f32;
 
-            batches.clear();
-            for s in samplers.iter_mut() {
+            for (s, buf) in samplers.iter_mut().zip(batches.iter_mut()) {
                 // Every sampler advances — including inactive clients' —
                 // so a client that rejoins later resumes the exact stream
                 // position it would have had.
-                batches.push(s.sample(phase.batch));
+                s.sample_into(phase.batch, buf);
             }
-            let (grads, _losses) = engine.grads_masked(&thetas, &batches, &active);
-            engine.step_masked(&mut thetas, &grads, &anchor, eta, phase.inv_gamma, &active);
+            engine.grads_arena(&thetas, &batches, &active, &mut grads, &mut losses);
+            engine.step_arena(&mut thetas, &grads, &anchor, eta, phase.inv_gamma, &active);
 
             t += 1;
             steps_in_round += 1;
@@ -265,7 +283,7 @@ pub fn run(
                     // all end at `server + mean_delta` (bitwise-agreeing,
                     // like the exact path). Under `All` the mask is
                     // all-ones and only the payload changes.
-                    comm::average_compressed(
+                    comm::average_compressed_arena(
                         &mut thetas,
                         &server,
                         cfg.collective,
@@ -274,26 +292,26 @@ pub fn run(
                         part.as_slice(),
                     );
                 } else if masked {
-                    comm::average_masked(&mut thetas, cfg.collective, part.as_slice());
+                    comm::average_arena_masked(&mut thetas, cfg.collective, part.as_slice());
                 } else {
-                    comm::average(&mut thetas, cfg.collective);
+                    comm::average_arena(&mut thetas, cfg.collective);
                 }
                 if masked {
                     for i in 0..n {
                         if part.participates(i) {
-                            synced[i].copy_from_slice(&thetas[i]);
+                            synced.row_mut(i).copy_from_slice(thetas.row(i));
                         } else {
                             // Algorithm-visible dropout: the round's local
                             // work is lost; the client resumes from its
                             // last-synced model (and, under compression,
                             // its frozen residual) when it rejoins.
-                            thetas[i].copy_from_slice(&synced[i]);
+                            thetas.row_mut(i).copy_from_slice(synced.row(i));
                         }
                     }
                 }
                 if masked || compressing {
                     if let Some(lead) = part.first() {
-                        server.copy_from_slice(&thetas[lead]);
+                        server.copy_from_slice(thetas.row(lead));
                     }
                 }
                 steps_in_round = 0;
@@ -311,7 +329,7 @@ pub fn run(
                 k = controller.period(phase).max(1);
 
                 if rounds % cfg.eval_every_rounds == 0 {
-                    let eval_model: &[f32] = if masked { &server } else { &thetas[0] };
+                    let eval_model: &[f32] = if masked { &server } else { thetas.row(0) };
                     let loss = engine.full_loss(eval_model);
                     let acc = if cfg.eval_accuracy {
                         engine.full_accuracy(eval_model)

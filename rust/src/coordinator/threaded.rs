@@ -10,16 +10,52 @@
 //! Gradients are bit-identical to [`super::compute::NativeCompute`] (same
 //! oracle, same inputs), so the engines are interchangeable; the threaded
 //! one simply parallelizes the per-client work across cores.
+//!
+//! The arena hot path ([`ClientCompute::grads_arena`]) ships `(ptr, len)`
+//! row views over the channels instead of cloning thetas/batches and
+//! shipping gradient vectors back: each worker reads its client's theta
+//! row and batch in place and writes the gradient straight into that
+//! client's row of the caller's gradient arena. Safety argument
+//! (DESIGN.md §7): the leader dispatches disjoint rows (one task per
+//! client slot), blocks on the result channel until *every* dispatched
+//! task has answered before returning — so the borrows the pointers were
+//! taken from strictly outlive all worker access, and the channel
+//! round-trip provides the happens-before edge that makes the workers'
+//! writes visible to the leader.
 
 use super::compute::ClientCompute;
 use crate::grad::Oracle;
+use crate::linalg::ModelArena;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+/// A `&[T]` flattened to (ptr, len) so it can cross a channel. Only ever
+/// constructed by the leader from borrows that it keeps alive until every
+/// dispatched task has been gathered (see the module docs).
+struct RawView<T>(*const T, usize);
+unsafe impl<T: Sync> Send for RawView<T> {}
+
+/// A `&mut [T]` flattened to (ptr, len). The leader hands out at most one
+/// view per arena row per dispatch, so worker writes never alias.
+struct RawViewMut<T>(*mut T, usize);
+unsafe impl<T: Send> Send for RawViewMut<T> {}
+
+/// One zero-copy gradient task: read `theta`/`batch` in place, write the
+/// gradient into `grad`.
+struct RowTask {
+    slot: usize,
+    theta: RawView<f32>,
+    batch: RawView<usize>,
+    grad: RawViewMut<f32>,
+}
+
 enum Cmd {
-    /// (client slot, theta, batch indices)
+    /// (client slot, theta, batch indices) — legacy cloning path, kept for
+    /// the Vec-based API (and the bit-identity reference loop).
     Grad(usize, Vec<f32>, Vec<usize>),
+    /// Arena path: row views into leader-owned buffers.
+    GradRow(RowTask),
     Shutdown,
 }
 
@@ -52,6 +88,24 @@ impl ThreadedCompute {
                         Cmd::Grad(slot, theta, batch) => {
                             let (g, l) = oracle.grad_minibatch(&theta, &batch);
                             if res_tx.send((slot, g, l)).is_err() {
+                                return;
+                            }
+                        }
+                        Cmd::GradRow(task) => {
+                            // SAFETY: the leader keeps the borrows these
+                            // views were taken from alive until it has
+                            // gathered every dispatched result, and no two
+                            // in-flight tasks share a grad row (module
+                            // docs).
+                            let theta =
+                                unsafe { std::slice::from_raw_parts(task.theta.0, task.theta.1) };
+                            let batch =
+                                unsafe { std::slice::from_raw_parts(task.batch.0, task.batch.1) };
+                            let grad = unsafe {
+                                std::slice::from_raw_parts_mut(task.grad.0, task.grad.1)
+                            };
+                            let l = oracle.grad_minibatch_into(theta, batch, grad);
+                            if res_tx.send((task.slot, Vec::new(), l)).is_err() {
                                 return;
                             }
                         }
@@ -167,6 +221,84 @@ impl ClientCompute for ThreadedCompute {
         }
     }
 
+    fn grads_arena(
+        &mut self,
+        thetas: &ModelArena,
+        batches: &[Vec<usize>],
+        active: &[bool],
+        grads: &mut ModelArena,
+        losses: &mut [f32],
+    ) {
+        let n = thetas.n_rows();
+        assert_eq!(n, batches.len());
+        assert_eq!(n, active.len());
+        assert_eq!(n, grads.n_rows());
+        assert_eq!(n, losses.len());
+        assert_eq!(thetas.dim(), grads.dim());
+        // Scatter row views for the active clients (same slot -> worker
+        // mapping as the dense path, so per-client results are
+        // bit-identical). Gradient rows are handed out at most once each,
+        // so worker writes never alias. All row pointers derive from ONE
+        // base borrow of the gradient block: re-borrowing the arena per
+        // row would invalidate the earlier rows' pointers under the
+        // aliasing model.
+        let d = grads.dim();
+        let grad_base = grads.data_mut().as_mut_ptr();
+        let mut dispatched = 0usize;
+        for i in 0..n {
+            if !active[i] {
+                losses[i] = 0.0;
+                continue;
+            }
+            let theta = thetas.row(i);
+            let batch = batches[i].as_slice();
+            // SAFETY: row i occupies [i * d, (i + 1) * d) of the block the
+            // base pointer was derived from; rows are disjoint per slot.
+            let grad_row = unsafe { grad_base.add(i * d) };
+            self.cmd_tx[i % self.n_workers]
+                .send(Cmd::GradRow(RowTask {
+                    slot: i,
+                    theta: RawView(theta.as_ptr(), theta.len()),
+                    batch: RawView(batch.as_ptr(), batch.len()),
+                    grad: RawViewMut(grad_row, d),
+                }))
+                .expect("worker died");
+            dispatched += 1;
+        }
+        // Gather every dispatched result before returning: this is what
+        // keeps the raw views alive for the whole of the workers' access
+        // and publishes their writes back to the leader.
+        for _ in 0..dispatched {
+            let (slot, _, l) = self.res_rx.recv().expect("worker died");
+            losses[slot] = l;
+        }
+    }
+
+    fn step_arena(
+        &mut self,
+        thetas: &mut ModelArena,
+        grads: &ModelArena,
+        anchor: &[f32],
+        eta: f32,
+        inv_gamma: f32,
+        active: &[bool],
+    ) {
+        // Leader-side, like the legacy step: the fused update is memory-
+        // bound and not worth a channel round-trip per client.
+        assert_eq!(thetas.n_rows(), active.len());
+        for i in 0..thetas.n_rows() {
+            if active[i] {
+                crate::linalg::fused_local_step(
+                    thetas.row_mut(i),
+                    grads.row(i),
+                    anchor,
+                    eta,
+                    inv_gamma,
+                );
+            }
+        }
+    }
+
     fn full_loss(&mut self, theta: &[f32]) -> f64 {
         self.oracle.full_loss(theta)
     }
@@ -212,6 +344,39 @@ mod tests {
         assert_eq!(ga, gb);
         assert_eq!(la, lb);
         assert!(gb[1].is_empty() && gb[4].is_empty(), "inactive slots skipped");
+    }
+
+    #[test]
+    fn threaded_arena_grads_match_native_arena_bitwise() {
+        let ds = Arc::new(synth::a9a_like(7, 256, 12));
+        let oracle = Arc::new(NativeLogreg::new(ds, 0.01));
+        let mut seq = NativeCompute::new(oracle.clone());
+        let mut par = ThreadedCompute::new(oracle, 3);
+        let mut thetas = ModelArena::zeros(6, 12);
+        for i in 0..6 {
+            thetas.row_mut(i).fill(0.02 * i as f32);
+        }
+        let batches: Vec<Vec<usize>> = (0..6).map(|i| (i * 4..(i + 1) * 4).collect()).collect();
+        let mask = [true, false, true, true, false, true];
+        let (mut ga, mut gb) = (ModelArena::zeros(6, 12), ModelArena::zeros(6, 12));
+        let (mut la, mut lb) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+        seq.grads_arena(&thetas, &batches, &mask, &mut ga, &mut la);
+        par.grads_arena(&thetas, &batches, &mask, &mut gb, &mut lb);
+        for i in 0..6 {
+            if mask[i] {
+                assert_eq!(ga.row(i), gb.row(i), "client {i}");
+            }
+        }
+        assert_eq!(la, lb);
+        // Repeated dispatches reuse the same rows without corruption.
+        for _ in 0..50 {
+            par.grads_arena(&thetas, &batches, &mask, &mut gb, &mut lb);
+        }
+        for i in 0..6 {
+            if mask[i] {
+                assert_eq!(ga.row(i), gb.row(i), "client {i} after reuse");
+            }
+        }
     }
 
     #[test]

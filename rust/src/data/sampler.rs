@@ -28,8 +28,21 @@ impl MinibatchSampler {
     /// Sample `b` global indices (uniformly from the shard, with
     /// replacement).
     pub fn sample(&mut self, b: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(b);
+        self.sample_into(b, &mut out);
+        out
+    }
+
+    /// Like [`Self::sample`], reusing the caller's buffer (cleared first)
+    /// — the allocation-free hot-path entry. Draw-for-draw identical to
+    /// `sample`, so trajectories do not depend on which entry the
+    /// coordinator uses.
+    pub fn sample_into(&mut self, b: usize, out: &mut Vec<usize>) {
         assert!(!self.shard.is_empty(), "cannot sample from empty shard");
-        (0..b).map(|_| self.shard.indices[self.rng.below(self.shard.len())]).collect()
+        out.clear();
+        for _ in 0..b {
+            out.push(self.shard.indices[self.rng.below(self.shard.len())]);
+        }
     }
 
     pub fn shard_len(&self) -> usize {

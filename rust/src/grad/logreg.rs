@@ -27,9 +27,16 @@ impl Oracle for NativeLogreg {
     }
 
     fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32) {
-        debug_assert_eq!(theta.len(), self.dim());
-        let b = indices.len();
         let mut grad = vec![0.0f32; theta.len()];
+        let loss = self.grad_minibatch_into(theta, indices, &mut grad);
+        (grad, loss)
+    }
+
+    fn grad_minibatch_into(&self, theta: &[f32], indices: &[usize], out: &mut [f32]) -> f32 {
+        debug_assert_eq!(theta.len(), self.dim());
+        debug_assert_eq!(out.len(), theta.len());
+        let b = indices.len();
+        out.fill(0.0);
         let mut loss = 0.0f32;
         for &i in indices {
             let xi = self.dataset.x.row(i);
@@ -37,19 +44,19 @@ impl Oracle for NativeLogreg {
             let m = yi * dot(xi, theta);
             // d/dtheta softplus(-m) = -y * sigmoid(-m) * x
             let s = sigmoid(-m);
-            axpy(-yi * s / b as f32, xi, &mut grad);
+            axpy(-yi * s / b as f32, xi, out);
             loss += softplus_neg(m);
         }
         loss /= b as f32;
         if self.lam != 0.0 {
             let mut reg = 0.0f32;
             for j in 0..theta.len() {
-                grad[j] += self.lam * theta[j];
+                out[j] += self.lam * theta[j];
                 reg += theta[j] * theta[j];
             }
             loss += 0.5 * self.lam * reg;
         }
-        (grad, loss)
+        loss
     }
 
     fn full_loss(&self, theta: &[f32]) -> f64 {

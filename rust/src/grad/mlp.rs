@@ -141,14 +141,22 @@ impl Oracle for NativeMlp {
     }
 
     fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32) {
+        let mut grad = vec![0.0f32; theta.len()];
+        let loss = self.grad_minibatch_into(theta, indices, &mut grad);
+        (grad, loss)
+    }
+
+    fn grad_minibatch_into(&self, theta: &[f32], indices: &[usize], out: &mut [f32]) -> f32 {
         debug_assert_eq!(theta.len(), self.dim());
+        debug_assert_eq!(out.len(), theta.len());
         let dims = self.arch.layer_dims();
         let offs = self.arch.offsets();
         let n_layers = dims.len();
         let b = indices.len();
         let inv_b = 1.0 / b as f32;
 
-        let mut grad = vec![0.0f32; theta.len()];
+        let grad = out;
+        grad.fill(0.0);
         let mut loss = 0.0f32;
 
         // Scratch reused across the whole minibatch (no per-example allocs).
@@ -202,7 +210,7 @@ impl Oracle for NativeMlp {
                 }
             }
         }
-        (grad, loss * inv_b)
+        loss * inv_b
     }
 
     fn full_loss(&self, theta: &[f32]) -> f64 {

@@ -30,6 +30,20 @@ pub trait Oracle: Send + Sync {
     /// global example indices.
     fn grad_minibatch(&self, theta: &[f32], indices: &[usize]) -> (Vec<f32>, f32);
 
+    /// Like [`Self::grad_minibatch`], but the gradient is written into the
+    /// caller-provided buffer (overwritten, not accumulated) and only the
+    /// loss is returned. This is the allocation-free hot-path entry the
+    /// arena engines use (DESIGN.md §7); the native oracles override it
+    /// with in-place implementations and implement `grad_minibatch` on top
+    /// of it, so both entries compute bit-identical values. The default
+    /// delegates to `grad_minibatch` and copies — correct for any oracle,
+    /// it just pays the allocation.
+    fn grad_minibatch_into(&self, theta: &[f32], indices: &[usize], out: &mut [f32]) -> f32 {
+        let (g, l) = self.grad_minibatch(theta, indices);
+        out.copy_from_slice(&g);
+        l
+    }
+
     /// Full-dataset objective value (used for the objective-gap metric).
     fn full_loss(&self, theta: &[f32]) -> f64;
 

@@ -1,0 +1,155 @@
+//! Flat model arena: every client replica as one row of a contiguous
+//! `N x d` f32 block.
+//!
+//! The coordinator hot loop used to keep client models as `Vec<Vec<f32>>`
+//! — N separately heap-allocated vectors that the engines cloned over
+//! channels and the collectives snapshotted chunk by chunk. The arena
+//! replaces that with a single allocation whose rows are handed out as
+//! plain slices, so
+//!
+//! * gradient engines write into caller-provided rows instead of returning
+//!   fresh `Vec<Vec<f32>>`s ([`crate::coordinator::compute::ClientCompute`]
+//!   `grads_arena` / `step_arena`),
+//! * the threaded engine ships `(ptr, len)` row views over its channels
+//!   instead of cloning thetas (DESIGN.md §7),
+//! * the collectives rotate slices in place
+//!   ([`crate::comm::allreduce::average_arena_masked`]) with the arena's
+//!   own scratch row as the only temporary.
+//!
+//! Ownership contract (DESIGN.md §7): the arena owns the bytes; rows are
+//! borrowed views and never escape a call. The `scratch` row and the
+//! `idx` list are *collective-private* scratch — valid only inside one
+//! collective call, never read across calls — which is what keeps whole
+//! rounds allocation-free without aliasing model state.
+
+/// Contiguous `n x d` block of f32 model (or gradient) rows, plus the
+/// scratch the in-place collectives reuse.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelArena {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+    /// Participant-row indices, rebuilt by each masked collective call.
+    idx: Vec<usize>,
+    /// One spare row (the naive collective's mean accumulator).
+    scratch: Vec<f32>,
+}
+
+impl ModelArena {
+    /// `n` zero rows of width `d`.
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Self {
+            n,
+            d,
+            data: vec![0.0f32; n * d],
+            idx: Vec::with_capacity(n),
+            scratch: vec![0.0f32; d],
+        }
+    }
+
+    /// `n` rows, each a copy of `row` (the coordinator's "every client
+    /// starts at theta0" initialization).
+    pub fn replicate(n: usize, row: &[f32]) -> Self {
+        let mut arena = Self::zeros(n, row.len());
+        for i in 0..n {
+            arena.row_mut(i).copy_from_slice(row);
+        }
+        arena
+    }
+
+    /// Number of rows (clients).
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    /// Row width (parameter dimension).
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.n);
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.n);
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The whole `n * d` block (tests, norm sweeps).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable view of the whole block. The threaded engine derives all
+    /// of a dispatch's disjoint row pointers from this *single* borrow —
+    /// deriving them row by row through repeated `row_mut` calls would
+    /// invalidate the earlier pointers under the aliasing model.
+    pub(crate) fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Materialize the legacy `Vec<Vec<f32>>` layout (the compatibility
+    /// bridge the default engine implementations use; allocates).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        (0..self.n).map(|i| self.row(i).to_vec()).collect()
+    }
+
+    /// Split the arena into the disjoint parts a collective needs at once:
+    /// the row block, the row width, the participant-index scratch, and
+    /// the spare row. Internal plumbing for [`crate::comm::allreduce`].
+    pub(crate) fn collective_parts(
+        &mut self,
+    ) -> (&mut [f32], usize, &mut Vec<usize>, &mut [f32]) {
+        (
+            self.data.as_mut_slice(),
+            self.d,
+            &mut self.idx,
+            self.scratch.as_mut_slice(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_replicate() {
+        let a = ModelArena::zeros(3, 4);
+        assert_eq!(a.n_rows(), 3);
+        assert_eq!(a.dim(), 4);
+        assert!(a.data().iter().all(|&v| v == 0.0));
+        let b = ModelArena::replicate(2, &[1.0, 2.0]);
+        assert_eq!(b.row(0), &[1.0, 2.0]);
+        assert_eq!(b.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn rows_are_disjoint_views() {
+        let mut a = ModelArena::zeros(2, 3);
+        a.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        a.row_mut(1).copy_from_slice(&[4.0, 5.0, 6.0]);
+        assert_eq!(a.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(a.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn to_vecs_round_trips_rows() {
+        let mut a = ModelArena::zeros(2, 2);
+        a.row_mut(1).copy_from_slice(&[7.0, 8.0]);
+        let v = a.to_vecs();
+        assert_eq!(v, vec![vec![0.0, 0.0], vec![7.0, 8.0]]);
+    }
+
+    #[test]
+    fn empty_arena_is_fine() {
+        let a = ModelArena::zeros(0, 5);
+        assert_eq!(a.n_rows(), 0);
+        assert!(a.to_vecs().is_empty());
+    }
+}

@@ -5,8 +5,10 @@
 //! are written to autovectorize (plain indexed loops over slices, no
 //! iterator chains in the innermost loop).
 
+pub mod arena;
 pub mod matrix;
 
+pub use arena::ModelArena;
 pub use matrix::Matrix;
 
 /// y += alpha * x

@@ -62,6 +62,11 @@ fn main() -> anyhow::Result<()> {
     )
     .opt("topk-frac", "", "top-k compressor: fraction of coordinates kept, in (0, 1]")
     .opt("compress-bits", "", "qsgd compressor: quantization bit width, in [2, 16]")
+    .opt(
+        "timeline",
+        "",
+        "timeline sink granularity: off (bounded memory on long sweeps; no per-round stats), rounds (default; feeds --out-timeline and the summary lines), steps (per-step event sink; disables the simnet coalesced fast path)",
+    )
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
     .opt("out-timeline", "", "write per-round timing breakdown CSV to this path")
@@ -96,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         ("compressor", "compressor"),
         ("topk-frac", "topk_frac"),
         ("compress-bits", "compress_bits"),
+        ("timeline", "timeline"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
@@ -133,6 +139,10 @@ fn main() -> anyhow::Result<()> {
         cfg.compression.describe(),
         cfg.seed,
     );
+
+    if !args.get("out-timeline").is_empty() && cfg.timeline_detail == stl_sgd::simnet::Detail::Off {
+        eprintln!("warning: --out-timeline requested with --timeline off; the CSV will be empty");
+    }
 
     let t0 = std::time::Instant::now();
     let trace = workloads::run_experiment(&cfg)?;

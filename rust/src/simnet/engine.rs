@@ -8,6 +8,15 @@
 //! deadline, dropping late clients for the round), and the collective is
 //! priced by the closed-form [`NetworkModel`] plus link jitter.
 //!
+//! The heap (and every per-step [`TimelineEvent`]) only exists when a
+//! step-level sink is attached (`Detail::Steps`). Otherwise the engine
+//! takes the *coalesced fast path*: per-client completion times are
+//! accumulated directly from the same per-client RNG streams — identical
+//! draw order, identical float additions, bit-identical [`RoundStat`]s —
+//! without N x k heap pops or event allocation (DESIGN.md §7). This is
+//! both the sweep-throughput win and the fix for unbounded event growth
+//! on long runs that never asked for a step timeline.
+//!
 //! Timing is computed in *round-local* seconds (the heap starts each round
 //! at t = 0) so per-round spans are independent of how much simulated time
 //! has already elapsed; under the zero-variance `homogeneous` profile the
@@ -326,65 +335,96 @@ impl SimNet {
             }
         }
 
-        // Seed the heap: each live client's first step completion. Crashed
-        // clients never arrive (completion stays +inf) and the barrier
-        // timeout carries the round past them.
-        let mut heap = EventHeap::new();
+        // Per-client completion times. Two bit-identical evaluation
+        // strategies, keyed on whether a step-event sink is attached:
+        //
+        // * `Detail::Steps` — the full discrete-event heap, popping one
+        //   event per client-step in global time order so every
+        //   `GradDone`/`BarrierEnter` can be recorded with its timestamp.
+        // * otherwise (the coalesced fast path; the coordinator's default)
+        //   — nobody observes the interleaving, only the per-client
+        //   *sums*, and each client's timing draws come from its own
+        //   dedicated stream whose within-stream order is the same
+        //   (crash draw, then one step factor per step) however the heap
+        //   would have interleaved clients. So the engine accumulates
+        //   each client's completion time directly: identical draws,
+        //   identical left-to-right float additions, bit-identical
+        //   `RoundStat`s — property-tested in tests/test_arena.rs — at
+        //   zero heap traffic and zero event construction.
         let mut completion = vec![f64::INFINITY; n];
-        for i in 0..n {
-            if !active[i] {
-                continue;
-            }
-            if profile.draw_crash(&mut self.clients[i].rng) {
-                if self.detail == Detail::Steps {
+        let mut pops = 0u64;
+        if self.detail == Detail::Steps {
+            // Seed the heap: each live client's first step completion.
+            // Crashed clients never arrive (completion stays +inf) and
+            // the barrier timeout carries the round past them.
+            let mut heap = EventHeap::new();
+            for i in 0..n {
+                if !active[i] {
+                    continue;
+                }
+                if profile.draw_crash(&mut self.clients[i].rng) {
                     self.timeline.events.push(TimelineEvent {
                         t: start,
                         round: self.round,
                         kind: EventKind::ClientDropped { client: i },
                     });
+                    continue;
                 }
-                continue;
+                let factor = profile.draw_step_factor(&mut self.clients[i].rng);
+                heap.push(
+                    g * self.clients[i].speed * factor,
+                    EventKind::GradDone { client: i, step: 0 },
+                );
             }
-            let factor = profile.draw_step_factor(&mut self.clients[i].rng);
-            heap.push(
-                g * self.clients[i].speed * factor,
-                EventKind::GradDone { client: i, step: 0 },
-            );
-        }
 
-        // Drain events in time order: every pop either schedules the
-        // client's next step or parks it at the barrier.
-        let mut pops = 0u64;
-        while let Some(ev) = heap.pop() {
-            pops += 1;
-            let EventKind::GradDone { client, step } = ev.kind else {
-                unreachable!("only step completions are scheduled");
-            };
-            if self.detail == Detail::Steps {
+            // Drain events in time order: every pop either schedules the
+            // client's next step or parks it at the barrier.
+            while let Some(ev) = heap.pop() {
+                pops += 1;
+                let EventKind::GradDone { client, step } = ev.kind else {
+                    unreachable!("only step completions are scheduled");
+                };
                 self.timeline.events.push(TimelineEvent {
                     t: start + ev.t,
                     round: self.round,
                     kind: ev.kind,
                 });
-            }
-            if step + 1 < steps {
-                let factor = profile.draw_step_factor(&mut self.clients[client].rng);
-                heap.push(
-                    ev.t + g * self.clients[client].speed * factor,
-                    EventKind::GradDone {
-                        client,
-                        step: step + 1,
-                    },
-                );
-            } else {
-                completion[client] = ev.t;
-                if self.detail == Detail::Steps {
+                if step + 1 < steps {
+                    let factor = profile.draw_step_factor(&mut self.clients[client].rng);
+                    heap.push(
+                        ev.t + g * self.clients[client].speed * factor,
+                        EventKind::GradDone {
+                            client,
+                            step: step + 1,
+                        },
+                    );
+                } else {
+                    completion[client] = ev.t;
                     self.timeline.events.push(TimelineEvent {
                         t: start + ev.t,
                         round: self.round,
                         kind: EventKind::BarrierEnter { client },
                     });
                 }
+            }
+        } else {
+            for i in 0..n {
+                if !active[i] {
+                    continue;
+                }
+                if profile.draw_crash(&mut self.clients[i].rng) {
+                    continue;
+                }
+                let speed = self.clients[i].speed;
+                let mut done = 0.0f64;
+                for _ in 0..steps {
+                    // Same accumulation the heap performs: completion of
+                    // step s+1 = completion of step s + g * speed * factor.
+                    let factor = profile.draw_step_factor(&mut self.clients[i].rng);
+                    done += g * speed * factor;
+                }
+                completion[i] = done;
+                pops += steps;
             }
         }
         self.events_processed += pops + 3; // + round start/barrier/allreduce
@@ -545,6 +585,52 @@ mod tests {
         assert_eq!(rt.max_barrier_wait, 0.0);
         assert_eq!(rt.mean_barrier_wait, 0.0);
         assert_eq!(rt.dropped, 0);
+    }
+
+    #[test]
+    fn coalesced_fast_path_matches_heap_bitwise() {
+        // No step sink attached -> the engine skips the heap entirely,
+        // but every RoundStat, mask, clock value, and events_processed
+        // count must equal the heap path's bit-for-bit.
+        for policy in [
+            ParticipationPolicy::All,
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            for profile in [
+                ClusterProfile::homogeneous(),
+                ClusterProfile::mild_hetero(),
+                ClusterProfile::heavy_tail_stragglers(),
+                ClusterProfile::flaky_federated(),
+                ClusterProfile::elastic_federated(),
+            ] {
+                let mk = |detail| {
+                    SimNet::new(
+                        profile,
+                        NetworkModel::default(),
+                        ComputeModel::default(),
+                        Algorithm::Ring,
+                        6,
+                        1_000,
+                        21,
+                        detail,
+                    )
+                    .with_policy(policy)
+                };
+                let (mut heap, mut fast) = (mk(Detail::Steps), mk(Detail::Rounds));
+                for r in 0..60 {
+                    let (sa, pa) = heap.price_round_masked(7, 16);
+                    let (sb, pb) = fast.price_round_masked(7, 16);
+                    assert_eq!(sa, sb, "{} {policy:?} round {r}", profile.name);
+                    assert_eq!(pa, pb, "{} {policy:?} round {r}", profile.name);
+                }
+                assert_eq!(heap.now().to_bits(), fast.now().to_bits(), "{}", profile.name);
+                assert_eq!(heap.events_processed, fast.events_processed, "{}", profile.name);
+                assert_eq!(heap.timeline.rounds, fast.timeline.rounds, "{}", profile.name);
+                assert!(!heap.timeline.events.is_empty());
+                assert!(fast.timeline.events.is_empty(), "no sink -> no events");
+            }
+        }
     }
 
     #[test]

@@ -10,15 +10,43 @@
 
 use super::event::EventKind;
 
-/// How much the engine records while pricing rounds.
+/// How much the engine records while pricing rounds. Doubles as the
+/// "attached sink" signal: with no step sink (`Off` / `Rounds`) the
+/// engine prices rounds through the coalesced fast path — no event heap,
+/// no per-step [`TimelineEvent`] construction — with bit-identical
+/// [`RoundStat`]s (see `engine.rs`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Detail {
-    /// Record nothing (pure pricing; fastest).
+    /// Record nothing (pure pricing; fastest, bounded memory whatever the
+    /// horizon).
     Off,
     /// One [`RoundStat`] per round.
     Rounds,
-    /// [`RoundStat`]s plus the full event stream.
+    /// [`RoundStat`]s plus the full event stream (the step sink; memory
+    /// grows with N x total steps — request it only when a step timeline
+    /// is actually consumed).
     Steps,
+}
+
+impl Detail {
+    /// Parse `"off"` | `"rounds"` | `"steps"` (the config key `timeline`).
+    pub fn parse(s: &str) -> Option<Detail> {
+        match s {
+            "off" => Some(Detail::Off),
+            "rounds" => Some(Detail::Rounds),
+            "steps" => Some(Detail::Steps),
+            _ => None,
+        }
+    }
+
+    /// Stable textual form; [`Self::parse`] round-trips it.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Detail::Off => "off",
+            Detail::Rounds => "rounds",
+            Detail::Steps => "steps",
+        }
+    }
 }
 
 /// One event with its absolute simulated timestamp.
@@ -196,6 +224,14 @@ impl Timeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn detail_parse_label_roundtrip() {
+        for d in [Detail::Off, Detail::Rounds, Detail::Steps] {
+            assert_eq!(Detail::parse(d.label()), Some(d));
+        }
+        assert_eq!(Detail::parse("verbose"), None);
+    }
 
     fn stat(round: u64, wait: f64, dropped: u32) -> RoundStat {
         RoundStat {

@@ -1,0 +1,271 @@
+//! Flat-arena hot-path bit-identity suite (DESIGN.md §7).
+//!
+//! PR 5 rebuilt the coordinator loop around a contiguous model arena
+//! (allocation-free rounds, in-place collectives, zero-copy threaded
+//! dispatch) and gave the simnet engine a heap-free coalesced pricing
+//! path. The contract is that none of it changes *what is computed*:
+//!
+//! * `coordinator::run` (arena) must equal
+//!   `coordinator::reference::run_reference` (the pre-arena loop, kept
+//!   verbatim) bitwise — every trace point, timeline row, and accounting
+//!   total — across cluster preset x participation policy x compressor x
+//!   controller x collective;
+//! * the threaded engine's zero-copy row dispatch must walk the identical
+//!   trajectory;
+//! * pricing without a step sink (the coalesced path) must produce
+//!   bit-identical `RoundStat`s to pricing with the full event heap.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, ControllerSpec, Variant};
+use stl_sgd::comm::{Algorithm, CompressionSchedule};
+use stl_sgd::coordinator::{run, run_reference, NativeCompute, RunConfig, ThreadedCompute, Trace};
+use stl_sgd::data::{partition, synth, Shard};
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::Rng;
+use stl_sgd::simnet::{ClusterProfile, Detail, ParticipationPolicy};
+
+fn setup(n: usize) -> (Arc<NativeLogreg>, Vec<Shard>) {
+    let ds = Arc::new(synth::a9a_like(2, 512, 16));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, n, &mut Rng::new(0));
+    (oracle, shards)
+}
+
+fn spec() -> AlgoSpec {
+    // Multi-stage STL-SC: exercises stage anneals, anchor resets, and
+    // phase-boundary-truncated rounds.
+    AlgoSpec {
+        variant: Variant::StlSc,
+        eta1: 0.3,
+        k1: 4.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    }
+}
+
+fn assert_traces_bitwise(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.iter, pb.iter, "{tag}: iter");
+        assert_eq!(pa.rounds, pb.rounds, "{tag}: rounds @ iter {}", pa.iter);
+        assert_eq!(pa.epoch.to_bits(), pb.epoch.to_bits(), "{tag}: epoch @ iter {}", pa.iter);
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{tag}: loss @ iter {}", pa.iter);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{tag}: accuracy @ iter {}",
+            pa.iter
+        );
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{tag}: sim_seconds @ iter {}",
+            pa.iter
+        );
+        assert_eq!(pa.stage, pb.stage, "{tag}: stage @ iter {}", pa.iter);
+        assert_eq!(pa.eta.to_bits(), pb.eta.to_bits(), "{tag}: eta @ iter {}", pa.iter);
+        assert_eq!(pa.k, pb.k, "{tag}: k @ iter {}", pa.iter);
+        assert_eq!(pa.realized_k, pb.realized_k, "{tag}: realized_k @ iter {}", pa.iter);
+    }
+    assert_eq!(a.comm, b.comm, "{tag}: comm stats");
+    assert_eq!(
+        a.clock.compute_seconds.to_bits(),
+        b.clock.compute_seconds.to_bits(),
+        "{tag}: compute clock"
+    );
+    assert_eq!(
+        a.clock.comm_seconds.to_bits(),
+        b.clock.comm_seconds.to_bits(),
+        "{tag}: comm clock"
+    );
+    assert_eq!(a.timeline, b.timeline, "{tag}: timeline");
+    assert_eq!(a.total_iters, b.total_iters, "{tag}: total iters");
+    assert_eq!(a.stopped_early, b.stopped_early, "{tag}: stop flag");
+}
+
+fn run_both(cfg: &RunConfig, tag: &str) {
+    let (oracle, shards) = setup(cfg.n_clients);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let mut e1 = NativeCompute::new(oracle.clone());
+    let arena = run(&mut e1, &shards, &phases, cfg, &theta0, "arena");
+    let mut e2 = NativeCompute::new(oracle);
+    let legacy = run_reference(&mut e2, &shards, &phases, cfg, &theta0, "arena");
+    assert_traces_bitwise(&arena, &legacy, tag);
+}
+
+#[test]
+fn arena_equals_legacy_identity_on_every_preset_policy_all() {
+    // Acceptance gate: `--compressor identity` / policy `all` / every
+    // cluster preset is bit-for-bit the pre-PR path under the arena hot
+    // path (which is also the coalesced-pricing path: the default detail
+    // never attaches a step sink).
+    for profile in ClusterProfile::presets() {
+        let cfg = RunConfig {
+            n_clients: 4,
+            profile,
+            ..Default::default()
+        };
+        run_both(&cfg, &format!("identity/all/{}", profile.name));
+    }
+}
+
+#[test]
+fn arena_equals_legacy_across_policies_and_presets() {
+    for profile in ClusterProfile::presets() {
+        for policy in [ParticipationPolicy::Arrived, ParticipationPolicy::Fraction(0.5)] {
+            let cfg = RunConfig {
+                n_clients: 4,
+                profile,
+                participation: policy,
+                ..Default::default()
+            };
+            run_both(&cfg, &format!("identity/{policy:?}/{}", profile.name));
+        }
+    }
+}
+
+#[test]
+fn arena_equals_legacy_across_compressors() {
+    for profile in [
+        ClusterProfile::homogeneous(),
+        ClusterProfile::flaky_federated(),
+        ClusterProfile::elastic_federated(),
+    ] {
+        for policy in [ParticipationPolicy::All, ParticipationPolicy::Arrived] {
+            for comp in ["topk", "qsgd", "topk-anneal", "qsgd-anneal"] {
+                let cfg = RunConfig {
+                    n_clients: 4,
+                    profile,
+                    participation: policy,
+                    compression: CompressionSchedule::parse(comp).unwrap(),
+                    ..Default::default()
+                };
+                run_both(&cfg, &format!("{comp}/{policy:?}/{}", profile.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_equals_legacy_across_controllers_and_collectives() {
+    for controller in [
+        ControllerSpec::CommRatio { target: 1.0 },
+        ControllerSpec::BarrierAware { frac: 0.05 },
+    ] {
+        for collective in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let cfg = RunConfig {
+                n_clients: 6, // non-power-of-two: exercises the tree tail fold
+                profile: ClusterProfile::heavy_tail_stragglers(),
+                participation: ParticipationPolicy::Arrived,
+                collective,
+                controller,
+                compression: CompressionSchedule::parse("topk").unwrap(),
+                ..Default::default()
+            };
+            run_both(&cfg, &format!("topk/arrived/{controller:?}/{collective:?}"));
+        }
+    }
+}
+
+#[test]
+fn arena_equals_legacy_with_step_sink_attached() {
+    // Detail::Steps takes the simnet engine down the full heap path in
+    // both loops: the coordinator layouts must still agree bitwise, and
+    // the recorded event streams must match.
+    let cfg = RunConfig {
+        n_clients: 4,
+        profile: ClusterProfile::elastic_federated(),
+        participation: ParticipationPolicy::Arrived,
+        timeline_detail: Detail::Steps,
+        ..Default::default()
+    };
+    run_both(&cfg, "identity/arrived/elastic/steps-sink");
+}
+
+#[test]
+fn threaded_arena_walks_identical_trajectory() {
+    // Zero-copy row dispatch vs sequential native, on the arena path,
+    // under a masked policy with compression — the full hot path.
+    let (oracle, shards) = setup(4);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let cfg = RunConfig {
+        n_clients: 4,
+        profile: ClusterProfile::flaky_federated(),
+        participation: ParticipationPolicy::Arrived,
+        compression: CompressionSchedule::parse("topk").unwrap(),
+        ..Default::default()
+    };
+    let mut native = NativeCompute::new(oracle.clone());
+    let a = run(&mut native, &shards, &phases, &cfg, &theta0, "native");
+    let mut threaded = ThreadedCompute::new(oracle, 4);
+    let b = run(&mut threaded, &shards, &phases, &cfg, &theta0, "native");
+    assert_traces_bitwise(&a, &b, "threaded-vs-native");
+}
+
+#[test]
+fn coalesced_pricing_equals_heap_pricing_through_the_coordinator() {
+    // Same run, only the timeline detail differs: `Rounds` (coalesced
+    // pricing, the default) vs `Steps` (full heap). Trajectories, round
+    // stats, and clocks must agree bitwise; only the event stream differs.
+    for profile in ClusterProfile::presets() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let phases = spec().phases(240);
+        let mk = |detail| RunConfig {
+            n_clients: 4,
+            profile,
+            participation: ParticipationPolicy::Arrived,
+            timeline_detail: detail,
+            ..Default::default()
+        };
+        let mut e1 = NativeCompute::new(oracle.clone());
+        let fast = run(&mut e1, &shards, &phases, &mk(Detail::Rounds), &theta0, "x");
+        let mut e2 = NativeCompute::new(oracle);
+        let full = run(&mut e2, &shards, &phases, &mk(Detail::Steps), &theta0, "x");
+        assert_eq!(fast.points.len(), full.points.len(), "{}", profile.name);
+        for (pa, pb) in fast.points.iter().zip(&full.points) {
+            assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{} iter {}", profile.name, pa.iter);
+            assert_eq!(
+                pa.sim_seconds.to_bits(),
+                pb.sim_seconds.to_bits(),
+                "{} iter {}",
+                profile.name,
+                pa.iter
+            );
+        }
+        assert_eq!(fast.timeline.rounds, full.timeline.rounds, "{}", profile.name);
+        assert!(fast.timeline.events.is_empty(), "no sink -> no events");
+        assert!(!full.timeline.events.is_empty(), "sink attached -> events recorded");
+        assert_eq!(fast.comm, full.comm, "{}", profile.name);
+    }
+}
+
+#[test]
+fn timeline_off_prices_identically_with_empty_timeline() {
+    // Detail::Off (the long-sweep memory fix): same trajectory and
+    // clocks, nothing recorded.
+    let (oracle, shards) = setup(4);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let mk = |detail| RunConfig {
+        n_clients: 4,
+        profile: ClusterProfile::heavy_tail_stragglers(),
+        timeline_detail: detail,
+        ..Default::default()
+    };
+    let mut e1 = NativeCompute::new(oracle.clone());
+    let off = run(&mut e1, &shards, &phases, &mk(Detail::Off), &theta0, "x");
+    let mut e2 = NativeCompute::new(oracle);
+    let rounds = run(&mut e2, &shards, &phases, &mk(Detail::Rounds), &theta0, "x");
+    for (pa, pb) in off.points.iter().zip(&rounds.points) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "iter {}", pa.iter);
+        assert_eq!(pa.sim_seconds.to_bits(), pb.sim_seconds.to_bits(), "iter {}", pa.iter);
+    }
+    assert!(off.timeline.rounds.is_empty());
+    assert!(off.timeline.events.is_empty());
+    assert_eq!(rounds.timeline.rounds.len() as u64, rounds.comm.rounds);
+}

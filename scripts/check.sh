@@ -6,7 +6,8 @@
 #   scripts/check.sh --smoke           # additionally run the example binaries at
 #                                      # tiny sizes so they can't silently rot
 #   scripts/check.sh --smoke --quick   # smoke minus the sweep examples (fast path:
-#                                      # quickstart only)
+#                                      # quickstart + the round-throughput smoke,
+#                                      # bench_round --ci vs the committed floors)
 #   scripts/check.sh --no-build        # skip build+test (CI pipelines that already
 #                                      # ran them as their own stages, scripts/ci.sh)
 set -euo pipefail
@@ -39,6 +40,16 @@ if [[ $smoke -eq 1 ]]; then
     smoke_out="${TMPDIR:-/tmp}/stl_sgd_smoke"
     rm -rf "$smoke_out"
     RUSTFLAGS="$release_flags" cargo run --release --example quickstart
+    if [[ $quick -eq 1 ]]; then
+        # Throughput smoke: the end-to-end coordinator loop must clear the
+        # committed (conservative) iters/sec floors — catches debug-profile
+        # builds and hot-path allocation regressions in seconds.
+        mkdir -p "$smoke_out"
+        RUSTFLAGS="$release_flags" cargo bench --bench bench_round -- --ci \
+            --baseline rust/benches/BENCH_baseline.json \
+            --out "$smoke_out/BENCH_ci.json"
+        test -s "$smoke_out/BENCH_ci.json"
+    fi
     if [[ $quick -eq 0 ]]; then
         RUSTFLAGS="$release_flags" cargo run --release --example partial_participation -- \
             --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \

@@ -11,9 +11,11 @@
 #   build   release build of rust/src with -D warnings
 #   test    cargo test -q (full suite, debug profile)
 #   schema  golden CSV-schema gate only (tests/test_schema.rs + goldens/)
-#   bench   bench-regression smoke: bench_simnet --ci in short mode, emits
-#           BENCH_ci.json, fails on >25% round-pricing throughput
-#           regression vs rust/benches/BENCH_baseline.json
+#   bench   bench-regression smoke: bench_simnet --ci (round-pricing
+#           events/sec) then bench_round --ci (end-to-end coordinator
+#           iters/sec), both in short mode, merged into BENCH_ci.json;
+#           fails on >25% throughput regression vs
+#           rust/benches/BENCH_baseline.json
 #   smoke   example binaries at tiny sizes (check.sh --smoke, build+test
 #           skipped -- the build/test stages own those)
 #   fmt     cargo fmt --check
@@ -31,8 +33,14 @@ stage_schema() { cargo test -q --test test_schema; }
 stage_bench() {
     # `cargo run` cannot select bench targets; `cargo bench -- <args>`
     # forwards to the binary (the benches use custom main()s, so the
-    # future manifest must set `harness = false` on them).
+    # future manifest must set `harness = false` on them). bench_simnet
+    # writes BENCH_ci.json; bench_round merge-writes its section into the
+    # same file.
     RUSTFLAGS="$release_flags" cargo bench --bench bench_simnet -- --ci \
+        --baseline rust/benches/BENCH_baseline.json \
+        --out "$bench_out" \
+        --max-regress 0.25
+    RUSTFLAGS="$release_flags" cargo bench --bench bench_round -- --ci \
         --baseline rust/benches/BENCH_baseline.json \
         --out "$bench_out" \
         --max-regress 0.25
