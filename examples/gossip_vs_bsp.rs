@@ -1,0 +1,180 @@
+//! Decentralized-execution study: push-sum gossip topologies vs the BSP
+//! server baseline, across cluster profiles.
+//!
+//!     cargo run --release --example gossip_vs_bsp -- \
+//!         [--topologies ring,exponential] \
+//!         [--clusters homogeneous,heavy-tail-stragglers] \
+//!         [--steps 3000] [--clients 8] [--k1 16] [--t1 500] \
+//!         [--gossip-degree 2] [--gap 1e-3] \
+//!         [--out-dir results/gossip]
+//!
+//! STL-SGD's analysis assumes an exact fleet average at every comm point;
+//! the gossip executor (DESIGN.md §8) replaces that global barrier +
+//! collective with per-edge push-sum exchanges, trading consensus accuracy
+//! per round for straggler immunity — a slow client delays only its
+//! neighbors' exchanges, never a fleet-wide barrier, and peer transfers
+//! overlap with the stragglers' remaining compute. This sweep runs the BSP
+//! baseline first on each cluster profile, then every requested topology
+//! in gossip mode, and reports simulated seconds (and rounds) to a target
+//! objective gap plus each topology's speedup over BSP on its profile.
+//! Outputs one trace CSV and one timeline CSV per cell and a summary CSV.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::decentral::{ExecMode, PeerTopology};
+use stl_sgd::simnet::ClusterProfile;
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "gossip_vs_bsp",
+        "STL-SGD time-to-accuracy: push-sum gossip topologies vs the BSP server baseline",
+    )
+    .opt(
+        "topologies",
+        "ring,exponential",
+        "comma-separated peer topologies (ring|torus|exponential|random-regular|full)",
+    )
+    .opt(
+        "clusters",
+        "homogeneous,heavy-tail-stragglers",
+        "comma-separated cluster profiles to sweep",
+    )
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("algorithm", "stl-sc", "algorithm (sync|local|stl-sc|...)")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "16", "initial communication period")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt("gossip-degree", "2", "random-regular topology: out-degree per client")
+    .opt("gap", "1e-3", "objective-gap target for time-to-accuracy")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/gossip", "output directory")
+    .parse();
+
+    let topologies: Vec<PeerTopology> = args
+        .get_list("topologies")
+        .iter()
+        .map(|s| PeerTopology::parse(s).unwrap_or_else(|| panic!("unknown topology {s:?}")))
+        .collect();
+    let clusters: Vec<ClusterProfile> = args
+        .get_list("clusters")
+        .iter()
+        .map(|s| {
+            ClusterProfile::parse(s).unwrap_or_else(|| panic!("unknown cluster profile {s:?}"))
+        })
+        .collect();
+    let workload = Workload::parse(args.get("workload")).expect("convex workload");
+    anyhow::ensure!(workload.is_convex(), "gossip_vs_bsp needs a convex workload");
+    let variant = Variant::parse(args.get("algorithm"))
+        .unwrap_or_else(|| panic!("unknown algorithm {:?}", args.get("algorithm")));
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let degree = args.get_usize("gossip-degree");
+    let gap = args.get_f64("gap");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    let f_star = workloads::compute_f_star(workload, seed, 2000);
+    println!(
+        "workload={} algorithm={} N={n} steps={steps} k1={k1} gap={gap:.0e} f*={f_star:.6}",
+        workload.name(),
+        variant.name()
+    );
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join("summary.csv"),
+        &[
+            "cluster",
+            "mode",
+            "rounds",
+            "bytes_per_client",
+            "barrier_wait_avg_client_seconds",
+            "sim_total_seconds",
+            "final_gap",
+            "seconds_to_gap",
+            "rounds_to_gap",
+            "speedup_vs_bsp",
+        ],
+    )?;
+
+    for cluster in &clusters {
+        println!("\ncluster = {}", cluster.name);
+        // Cell 0 on each profile is the BSP baseline every topology is
+        // scored against.
+        let mut bsp_to_gap: Option<f64> = None;
+        let mut cells: Vec<(String, Option<PeerTopology>)> = vec![("bsp".into(), None)];
+        cells.extend(
+            topologies
+                .iter()
+                .map(|&t| (format!("gossip_{}", t.label()), Some(t))),
+        );
+        for (label, topo) in &cells {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = workload;
+            cfg.n_clients = n;
+            cfg.total_steps = steps;
+            cfg.seed = seed;
+            cfg.cluster = *cluster;
+            if let Some(t) = topo {
+                cfg.mode = ExecMode::Gossip;
+                cfg.topology = *t;
+                cfg.gossip_degree = degree;
+            }
+            cfg.algo = AlgoSpec {
+                variant,
+                eta1: 3.2,
+                alpha: 1e-3,
+                k1,
+                t1,
+                batch: 32,
+                iid: true,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let trace = workloads::run_experiment(&cfg)?;
+            let to_gap_s = trace.seconds_to_gap(f_star, gap);
+            let to_gap_r = trace.rounds_to_gap(f_star, gap);
+            if topo.is_none() {
+                bsp_to_gap = to_gap_s;
+            }
+            let speedup = match (bsp_to_gap, to_gap_s) {
+                (Some(base), Some(s)) if s > 0.0 => Some(base / s),
+                _ => None,
+            };
+            println!(
+                "  mode={:<22} rounds={:<5} bytes/client={:<10} final_gap={:>10.3e} \
+                 to_gap={:?}s speedup={} wall={:.1}s",
+                label,
+                trace.comm.rounds,
+                trace.comm.bytes_per_client,
+                trace.final_loss() - f_star,
+                to_gap_s.map(|s| (s * 1e3).round() / 1e3),
+                speedup.map(|x| format!("{x:.2}x")).unwrap_or_else(|| "-".into()),
+                t0.elapsed().as_secs_f64(),
+            );
+            let tag = format!("{}_{label}", cluster.name);
+            trace.write_csv(&out_dir.join(format!("trace_{tag}.csv")))?;
+            trace.write_timeline_csv(&out_dir.join(format!("timeline_{tag}.csv")))?;
+            summary.row(&[
+                cluster.name.to_string(),
+                label.clone(),
+                trace.comm.rounds.to_string(),
+                trace.comm.bytes_per_client.to_string(),
+                format!("{:.6e}", trace.timeline.total_mean_barrier_wait()),
+                format!("{:.6e}", trace.clock.total()),
+                format!("{:.6e}", trace.final_loss() - f_star),
+                to_gap_s.map(|s| format!("{s:.6e}")).unwrap_or_default(),
+                to_gap_r.map(|r| r.to_string()).unwrap_or_default(),
+                speedup.map(|x| format!("{x:.4}")).unwrap_or_default(),
+            ])?;
+        }
+    }
+    summary.flush()?;
+    println!("\nCSVs written under {}", out_dir.display());
+    Ok(())
+}

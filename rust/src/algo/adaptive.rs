@@ -77,6 +77,11 @@ pub struct RoundFeedback {
     /// because the network is fast" from "comm is cheap because the
     /// schedule is currently compressing hard" (DESIGN.md §6).
     pub compression_ratio: f64,
+    /// Mean staleness (missed rounds) of this round's contributors —
+    /// non-zero only under the `bounded-staleness` execution mode
+    /// (DESIGN.md §8), where a controller can trade staleness against
+    /// barrier waits. Always 0.0 under `bsp` and `gossip`.
+    pub staleness: f64,
 }
 
 impl RoundFeedback {
@@ -93,6 +98,7 @@ impl RoundFeedback {
             participants: rt.participants as usize,
             fleet,
             compression_ratio: rt.compression_ratio,
+            staleness: 0.0,
         }
     }
 
@@ -404,6 +410,7 @@ mod tests {
             participants: 4,
             fleet: 4,
             compression_ratio: 1.0,
+            staleness: 0.0,
         }
     }
 

@@ -209,6 +209,11 @@ pub fn run_experiment_with_stop(
         participation: cfg.participation,
         controller: cfg.controller,
         compression: cfg.compression,
+        mode: cfg.mode,
+        topology: cfg.topology,
+        gossip_degree: cfg.gossip_degree,
+        staleness_bound: cfg.staleness_bound,
+        down_compression: cfg.down_compressor,
         timeline_detail: cfg.timeline_detail,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,

@@ -387,6 +387,28 @@ pub fn bytes_per_client_payload(alg: Algorithm, n: usize, payload: u64) -> u64 {
     }
 }
 
+/// Per-client bytes moved on the *broadcast* (downlink, server-to-client)
+/// leg of a collective whose downlink message serializes to `payload`
+/// bytes — the `bytes_wire_down` column's accounting, priced at the
+/// downlink compressor's payload independently of the uplink ledger
+/// ([`bytes_per_client_payload`], which counts sends):
+///
+/// * Naive: every client receives the mean once.
+/// * Ring: the all-gather half of the 2(N-1) chunk circulation.
+/// * Tree: recursive doubling moves half its hop traffic per direction.
+pub fn bytes_per_client_downlink(alg: Algorithm, n: usize, payload: u64) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    match alg {
+        Algorithm::Naive => payload,
+        Algorithm::Ring => ((n as u64 - 1) * payload) / n as u64,
+        Algorithm::Tree => {
+            payload * (n as u64).next_power_of_two().trailing_zeros() as u64 / 2
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,6 +586,29 @@ mod tests {
         assert_eq!(bytes_per_client_payload(Algorithm::Ring, 8, 1000), 1750);
         assert_eq!(bytes_per_client_payload(Algorithm::Tree, 8, 1000), 3000);
         assert_eq!(bytes_per_client_payload(Algorithm::Tree, 1, 1000), 0);
+    }
+
+    #[test]
+    fn downlink_leg_prices_each_schedule_half() {
+        // Ring and tree split their duplex schedules evenly, so the
+        // downlink leg at a symmetric payload is exactly half the total.
+        for alg in [Algorithm::Ring, Algorithm::Tree] {
+            for n in [2usize, 4, 8] {
+                assert_eq!(
+                    bytes_per_client_downlink(alg, n, 4000) * 2,
+                    bytes_per_client_payload(alg, n, 4000),
+                    "{alg:?} n={n}"
+                );
+            }
+        }
+        // Naive's send ledger is uplink-only; its downlink leg is the one
+        // broadcast receive of the (possibly compressed) mean.
+        assert_eq!(bytes_per_client_downlink(Algorithm::Naive, 8, 1000), 1000);
+        assert_eq!(bytes_per_client_downlink(Algorithm::Ring, 8, 1000), 875);
+        assert_eq!(bytes_per_client_downlink(Algorithm::Tree, 8, 1000), 1500);
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            assert_eq!(bytes_per_client_downlink(alg, 1, 1000), 0);
+        }
     }
 
     fn arena_from(models: &[Vec<f32>]) -> crate::linalg::ModelArena {

@@ -25,7 +25,10 @@
 pub mod allreduce;
 pub mod compress;
 
-pub use allreduce::{average, average_arena, average_arena_masked, average_masked, Algorithm};
+pub use allreduce::{
+    average, average_arena, average_arena_masked, average_masked, bytes_per_client_downlink,
+    Algorithm,
+};
 pub use compress::{
     average_compressed, average_compressed_arena, CompressionSchedule, CompressorSpec, EfState,
 };

@@ -7,6 +7,7 @@
 
 use crate::algo::{AlgoSpec, ControllerSpec, Variant};
 use crate::comm::{Algorithm, CompressionSchedule};
+use crate::decentral::{ExecMode, PeerTopology};
 use crate::simnet::{ClusterProfile, Detail, ParticipationPolicy};
 use crate::util::json::Json;
 
@@ -108,6 +109,22 @@ pub struct ExperimentConfig {
     /// "topk-anneal" | "qsgd-anneal"); keys `topk_frac` / `compress_bits`
     /// tune the operators (DESIGN.md §6).
     pub compression: CompressionSchedule,
+    /// Execution mode ("bsp" | "gossip" | "bounded-staleness"): BSP server
+    /// rounds, push-sum gossip over `topology`, or staleness-folded
+    /// server rounds (DESIGN.md §8).
+    pub mode: ExecMode,
+    /// Peer topology for gossip mode ("ring" | "torus" | "exponential" |
+    /// "random-regular" | "full").
+    pub topology: PeerTopology,
+    /// Out-degree of the `random-regular` topology (key `gossip_degree`;
+    /// the structured topologies fix their own degree).
+    pub gossip_degree: usize,
+    /// Bounded-staleness age bound (key `staleness_bound`); 0 reproduces
+    /// the BSP rollback bit-for-bit.
+    pub staleness_bound: u64,
+    /// Optional downlink compressor schedule (key `down_compressor`, same
+    /// names as `compressor`); absent keeps symmetric pricing.
+    pub down_compressor: Option<CompressionSchedule>,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -134,6 +151,11 @@ impl Default for ExperimentConfig {
             participation: ParticipationPolicy::All,
             controller: ControllerSpec::Stagewise,
             compression: CompressionSchedule::default(),
+            mode: ExecMode::Bsp,
+            topology: PeerTopology::Ring,
+            gossip_degree: 2,
+            staleness_bound: 0,
+            down_compressor: None,
             eval_every_rounds: 1,
             engine: "threaded".into(),
             timeline_detail: Detail::Rounds,
@@ -236,6 +258,34 @@ impl ExperimentConfig {
                 "compress_bits must be an integer in [2, 16], got {v}"
             );
             cfg.compression.set_bits(v as u32);
+        }
+        if let Some(m) = gets("mode") {
+            cfg.mode =
+                ExecMode::parse(&m).ok_or_else(|| anyhow::anyhow!("unknown execution mode {m}"))?;
+        }
+        if let Some(t) = gets("topology") {
+            cfg.topology =
+                PeerTopology::parse(&t).ok_or_else(|| anyhow::anyhow!("unknown topology {t}"))?;
+        }
+        if let Some(v) = getf("gossip_degree") {
+            anyhow::ensure!(
+                v.fract() == 0.0 && v >= 1.0,
+                "gossip_degree must be a positive integer, got {v}"
+            );
+            cfg.gossip_degree = v as usize;
+        }
+        if let Some(v) = getf("staleness_bound") {
+            anyhow::ensure!(
+                v.fract() == 0.0 && v >= 0.0,
+                "staleness_bound must be a non-negative integer, got {v}"
+            );
+            cfg.staleness_bound = v as u64;
+        }
+        if let Some(c) = gets("down_compressor") {
+            cfg.down_compressor = Some(
+                CompressionSchedule::parse(&c)
+                    .ok_or_else(|| anyhow::anyhow!("unknown downlink compressor {c}"))?,
+            );
         }
         if let Some(a) = gets("algorithm") {
             cfg.algo.variant =
@@ -354,6 +404,11 @@ impl ExperimentConfig {
         if let Some(v) = j.get("compress_bits").and_then(|v| v.as_f64()) {
             cfg.compression.set_bits(v as u32);
         }
+        take!(mode);
+        take!(topology);
+        take!(gossip_degree);
+        take!(staleness_bound);
+        take!(down_compressor);
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
         }
@@ -549,6 +604,66 @@ mod tests {
         // ...while switching kinds takes the new controller's defaults.
         cfg.apply_override("controller", "barrier-aware").unwrap();
         assert_eq!(cfg.controller, ControllerSpec::BarrierAware { frac: 0.05 });
+    }
+
+    #[test]
+    fn parses_decentral_keys() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.mode, ExecMode::Bsp);
+        assert_eq!(cfg.topology, PeerTopology::Ring);
+        assert_eq!(cfg.gossip_degree, 2);
+        assert_eq!(cfg.staleness_bound, 0);
+        assert!(cfg.down_compressor.is_none());
+        let j = Json::parse(
+            r#"{"mode": "gossip", "topology": "random-regular", "gossip_degree": 3}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.mode, ExecMode::Gossip);
+        assert_eq!(cfg.topology, PeerTopology::RandomRegular);
+        assert_eq!(cfg.gossip_degree, 3);
+        let j = Json::parse(r#"{"mode": "bounded-staleness", "staleness_bound": 4}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.mode, ExecMode::BoundedStaleness);
+        assert_eq!(cfg.staleness_bound, 4);
+        let j = Json::parse(r#"{"down_compressor": "topk"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(cfg.down_compressor.is_some());
+        for bad in [
+            r#"{"mode": "async"}"#,
+            r#"{"topology": "mesh"}"#,
+            r#"{"gossip_degree": 0}"#,
+            r#"{"gossip_degree": 1.5}"#,
+            r#"{"staleness_bound": -1}"#,
+            r#"{"staleness_bound": 2.5}"#,
+            r#"{"down_compressor": "gzip"}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn decentral_overrides_compose_across_calls() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("mode", "gossip").unwrap();
+        cfg.apply_override("topology", "torus").unwrap();
+        assert_eq!(cfg.mode, ExecMode::Gossip);
+        assert_eq!(cfg.topology, PeerTopology::Torus);
+        // Unrelated overrides keep the decentral knobs.
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(cfg.mode, ExecMode::Gossip);
+        assert_eq!(cfg.topology, PeerTopology::Torus);
+        cfg.apply_override("mode", "bounded-staleness").unwrap();
+        cfg.apply_override("staleness_bound", "3").unwrap();
+        assert_eq!(cfg.mode, ExecMode::BoundedStaleness);
+        assert_eq!(cfg.staleness_bound, 3);
+        cfg.apply_override("down_compressor", "qsgd").unwrap();
+        assert!(cfg.down_compressor.is_some());
+        cfg.apply_override("seed", "11").unwrap();
+        assert!(cfg.down_compressor.is_some(), "unrelated override keeps it");
     }
 
     #[test]

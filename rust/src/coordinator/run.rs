@@ -19,6 +19,7 @@ use super::metrics::{Trace, TracePoint};
 use crate::algo::{ControllerSpec, Phase, RoundFeedback};
 use crate::comm;
 use crate::data::{sampler::MinibatchSampler, Shard};
+use crate::decentral::{ExecMode, GossipEngine, PeerTopology, StalenessFold};
 use crate::linalg::ModelArena;
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel, SimClock};
@@ -84,6 +85,28 @@ pub struct RunConfig {
     /// server model with per-client error-feedback residuals, and the
     /// round's collective is priced on the compressed wire bytes.
     pub compression: comm::CompressionSchedule,
+    /// Execution mode (DESIGN.md §8). `Bsp` (the default) is the
+    /// synchronous server loop above, bit-for-bit the pre-decentral code
+    /// path; `Gossip` replaces the global collective with push-sum
+    /// neighbor exchanges over `topology`; `BoundedStaleness` folds late
+    /// arrivals into the average instead of rolling them back.
+    pub mode: ExecMode,
+    /// Peer topology gossip rounds exchange over (`mode = gossip` only).
+    pub topology: PeerTopology,
+    /// Out-degree of the `random-regular` topology (the structured
+    /// topologies fix their own degree).
+    pub gossip_degree: usize,
+    /// `mode = bounded-staleness`: rounds an absentee may keep local work
+    /// before being rolled back to its last-synced model. 0 reproduces
+    /// the BSP rollback path bit-for-bit.
+    pub staleness_bound: u64,
+    /// Staleness-fold exponent p: a rearriving model enters the average
+    /// with weight `1/(1 + missed_rounds)^p`.
+    pub staleness_exponent: f64,
+    /// Optional downlink (broadcast-leg) compression schedule. `None`
+    /// prices the downlink at the uplink payload — the legacy symmetric
+    /// collective, bit-for-bit.
+    pub down_compression: Option<comm::CompressionSchedule>,
 }
 
 impl Default for RunConfig {
@@ -103,6 +126,12 @@ impl Default for RunConfig {
             controller: ControllerSpec::Stagewise,
             skip_inactive_compute: true,
             compression: comm::CompressionSchedule::default(),
+            mode: ExecMode::Bsp,
+            topology: PeerTopology::Ring,
+            gossip_degree: 2,
+            staleness_bound: 0,
+            staleness_exponent: 1.0,
+            down_compression: None,
         }
     }
 }
@@ -170,11 +199,35 @@ pub fn run(
     )
     .with_policy(cfg.participation);
 
+    // Execution mode (DESIGN.md §8): `Bsp` keeps every branch below
+    // exactly as it was; `Gossip` swaps the comm point for push-sum
+    // neighbor exchanges (no server, no global collective); and
+    // `BoundedStaleness` replaces the rollback loop with an age-tracking
+    // fold. Gossip composes with neither gradient compression (its
+    // exchanges are dense, per-edge) nor a server-side participation
+    // mask (faults drop edges instead of clients).
+    let gossip_mode = cfg.mode == ExecMode::Gossip;
+    let staleness_mode = cfg.mode == ExecMode::BoundedStaleness;
+    assert!(
+        !(gossip_mode && !cfg.compression.is_always_identity()),
+        "gossip rounds exchange dense rows; gradient compression is server-mode only"
+    );
+    assert!(
+        !(gossip_mode && !cfg.participation.is_all()),
+        "gossip has no server-side participation mask; use policy `all` (faults drop edges)"
+    );
+    assert!(
+        !(staleness_mode && !cfg.compression.is_always_identity()),
+        "bounded-staleness folds raw models; combine it with the `identity` schedule"
+    );
+
     // Partial participation bookkeeping (policies other than `All`): the
     // per-client last-synced snapshots a non-participant is rolled back
     // to, and the server-side model the trace evaluates. Under `All`
     // neither is touched and the loop below is the PR-1 code path.
-    let masked = !cfg.participation.is_all();
+    // Bounded staleness always keeps the synced/server state — its commit
+    // path is the generalized rollback.
+    let masked = staleness_mode || (!cfg.participation.is_all() && !gossip_mode);
     // Gradient compression (DESIGN.md §6): when any stage compresses, the
     // server model doubles as the shared reference each participant's
     // delta is taken against, and per-client error-feedback residuals
@@ -197,6 +250,24 @@ pub fn run(
         None
     };
 
+    // Decentralized execution state (DESIGN.md §8). Gossip: the push-sum
+    // engine owns each client's push weight and mixing scratch; the
+    // biased numerator rows live in `thetas` and are de-biased into
+    // `debias_buf` only at eval points. Bounded staleness: the fold
+    // tracks per-client ages and owns the weighted-average scratch.
+    let mut gossip = if gossip_mode {
+        Some(GossipEngine::new(n, dim))
+    } else {
+        None
+    };
+    let mut gossip_edges: Vec<Vec<usize>> = Vec::new();
+    let mut debias_buf: Vec<f32> = Vec::with_capacity(if gossip_mode { dim } else { 0 });
+    let mut stale = if staleness_mode {
+        Some(StalenessFold::new(n, dim, cfg.staleness_exponent))
+    } else {
+        None
+    };
+
     // The communication-period controller: `Stagewise` (the default)
     // replays `phase.comm_period` exactly; adaptive controllers resize the
     // period from the telemetry of each priced round (DESIGN.md §5).
@@ -208,8 +279,11 @@ pub fn run(
     // local steps would be discarded at the comm point anyway. Samplers
     // still advance for everyone so rejoin trajectories stay
     // bit-identical. Under `All` every replica enters the average, so
-    // nothing can be skipped.
-    let skip_inactive = masked && cfg.skip_inactive_compute;
+    // nothing can be skipped. Under `bounded-staleness` with a positive
+    // bound an absentee's local steps survive until it rearrives, so
+    // nothing is wasted and nobody may be skipped either.
+    let keep_local_work = staleness_mode && cfg.staleness_bound > 0;
+    let skip_inactive = masked && cfg.skip_inactive_compute && !keep_local_work;
     let mut active = vec![true; n];
 
     // Initial evaluation (iteration 0, before any work).
@@ -239,8 +313,16 @@ pub fn run(
         if phase.reset_anchor {
             // Models are synced at phase boundaries; the stage anchor x_s is
             // the shared iterate (the server model when a participation
-            // policy leaves some replicas unsynced).
-            let src: &[f32] = if masked { &server } else { thetas.row(0) };
+            // policy leaves some replicas unsynced). Gossip has no global
+            // sync: the anchor is client 0's de-biased consensus estimate.
+            let src: &[f32] = if let Some(g) = gossip.as_ref() {
+                g.debias_into(&thetas, 0, &mut debias_buf);
+                &debias_buf
+            } else if masked {
+                &server
+            } else {
+                thetas.row(0)
+            };
             anchor.copy_from_slice(src);
         }
         let mut k = controller.period(phase).max(1);
@@ -275,45 +357,94 @@ pub fn run(
                 // are data-independent (pricing never depends on the model
                 // values, so the order is free).
                 let comp = cfg.compression.spec_for_stage(phase.stage);
-                let (rt, part) =
-                    simnet.price_round_compressed(steps_in_round, phase.batch, k, comp);
-                if let Some(ef) = ef.as_mut() {
-                    // Compressed collective: participants transmit their
-                    // error-corrected delta against the server model and
-                    // all end at `server + mean_delta` (bitwise-agreeing,
-                    // like the exact path). Under `All` the mask is
-                    // all-ones and only the payload changes.
-                    comm::average_compressed_arena(
-                        &mut thetas,
-                        &server,
-                        cfg.collective,
-                        comp,
-                        ef,
-                        part.as_slice(),
-                    );
-                } else if masked {
-                    comm::average_arena_masked(&mut thetas, cfg.collective, part.as_slice());
-                } else {
-                    comm::average_arena(&mut thetas, cfg.collective);
+                if let Some(down) = &cfg.down_compression {
+                    // Asymmetric pricing (DESIGN.md §6): the broadcast leg
+                    // carries this stage's downlink payload instead of
+                    // mirroring the uplink one.
+                    simnet.set_downlink(Some(down.spec_for_stage(phase.stage)));
                 }
-                if masked {
-                    for i in 0..n {
-                        if part.participates(i) {
-                            synced.row_mut(i).copy_from_slice(thetas.row(i));
+                let mut mean_staleness = 0.0;
+                let (rt, part) = if let Some(g) = gossip.as_mut() {
+                    // Decentralized round: price per-edge exchanges over
+                    // this round's activated topology, then run one
+                    // push-sum mixing step in place over the arena rows.
+                    // Faults drop individual edges inside the pricer;
+                    // `gossip_edges` holds the surviving out-neighbor
+                    // lists, which the mix must match exactly.
+                    let (rt, part) = simnet.price_gossip_round(
+                        steps_in_round,
+                        phase.batch,
+                        k,
+                        cfg.topology,
+                        cfg.gossip_degree,
+                        &mut gossip_edges,
+                    );
+                    g.mix(&mut thetas, &gossip_edges);
+                    (rt, part)
+                } else {
+                    let (rt, part) =
+                        simnet.price_round_compressed(steps_in_round, phase.batch, k, comp);
+                    if let Some(ef) = ef.as_mut() {
+                        // Compressed collective: participants transmit their
+                        // error-corrected delta against the server model and
+                        // all end at `server + mean_delta` (bitwise-agreeing,
+                        // like the exact path). Under `All` the mask is
+                        // all-ones and only the payload changes.
+                        comm::average_compressed_arena(
+                            &mut thetas,
+                            &server,
+                            cfg.collective,
+                            comp,
+                            ef,
+                            part.as_slice(),
+                        );
+                    } else if masked {
+                        if stale.as_ref().map_or(false, |s| s.any_stale(part.as_slice())) {
+                            // A rearriving participant carries un-synced
+                            // local work: fold it in with weight
+                            // 1/(1+age)^p instead of the exact mean.
+                            stale
+                                .as_mut()
+                                .unwrap()
+                                .weighted_average(&mut thetas, part.as_slice());
                         } else {
-                            // Algorithm-visible dropout: the round's local
-                            // work is lost; the client resumes from its
-                            // last-synced model (and, under compression,
-                            // its frozen residual) when it rejoins.
-                            thetas.row_mut(i).copy_from_slice(synced.row(i));
+                            comm::average_arena_masked(&mut thetas, cfg.collective, part.as_slice());
+                        }
+                    } else {
+                        comm::average_arena(&mut thetas, cfg.collective);
+                    }
+                    if masked {
+                        if let Some(s) = stale.as_mut() {
+                            // Bounded staleness: absentees keep their local
+                            // work while within the bound; only clients
+                            // older than the bound are rolled back.
+                            mean_staleness = s.commit(
+                                &mut thetas,
+                                &mut synced,
+                                part.as_slice(),
+                                cfg.staleness_bound,
+                            );
+                        } else {
+                            for i in 0..n {
+                                if part.participates(i) {
+                                    synced.row_mut(i).copy_from_slice(thetas.row(i));
+                                } else {
+                                    // Algorithm-visible dropout: the round's local
+                                    // work is lost; the client resumes from its
+                                    // last-synced model (and, under compression,
+                                    // its frozen residual) when it rejoins.
+                                    thetas.row_mut(i).copy_from_slice(synced.row(i));
+                                }
+                            }
                         }
                     }
-                }
-                if masked || compressing {
-                    if let Some(lead) = part.first() {
-                        server.copy_from_slice(thetas.row(lead));
+                    if masked || compressing {
+                        if let Some(lead) = part.first() {
+                            server.copy_from_slice(thetas.row(lead));
+                        }
                     }
-                }
+                    (rt, part)
+                };
                 steps_in_round = 0;
                 clock.add_compute(rt.compute_span);
                 clock.add_comm(rt.comm_seconds);
@@ -325,11 +456,22 @@ pub fn run(
                 // telemetry into the controller, then ask it for the next
                 // period (a no-op handshake under `Stagewise`).
                 let k_round = k;
-                controller.observe(&RoundFeedback::from_stat(&rt, n));
+                let mut fb = RoundFeedback::from_stat(&rt, n);
+                fb.staleness = mean_staleness;
+                controller.observe(&fb);
                 k = controller.period(phase).max(1);
 
                 if rounds % cfg.eval_every_rounds == 0 {
-                    let eval_model: &[f32] = if masked { &server } else { thetas.row(0) };
+                    let eval_model: &[f32] = if let Some(g) = gossip.as_ref() {
+                        // De-bias only at eval points: divide client 0's
+                        // biased numerator row by its push weight.
+                        g.debias_into(&thetas, 0, &mut debias_buf);
+                        &debias_buf
+                    } else if masked {
+                        &server
+                    } else {
+                        thetas.row(0)
+                    };
                     let loss = engine.full_loss(eval_model);
                     let acc = if cfg.eval_accuracy {
                         engine.full_accuracy(eval_model)
@@ -731,6 +873,85 @@ mod tests {
             trace.comm.rounds * 2
         );
         assert!(trace.final_loss().is_finite());
+    }
+
+    #[test]
+    fn gossip_mode_runs_and_converges() {
+        let (oracle, shards) = setup(4);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 5.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(4);
+        cfg.mode = ExecMode::Gossip;
+        cfg.topology = PeerTopology::Ring;
+        let trace = run_native(oracle, &shards, &spec, 200, &cfg, &theta0);
+        assert_eq!(trace.comm.rounds, 40);
+        // No server broadcast exists: the downlink column stays zero.
+        assert!(trace.timeline.rounds.iter().all(|r| r.bytes_wire_down == 0));
+        assert!(trace.final_loss() < trace.points[0].loss * 0.9);
+    }
+
+    #[test]
+    fn bounded_staleness_bound_zero_is_bitwise_the_rollback_path() {
+        let (oracle, shards) = setup(6);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 4.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(6);
+        cfg.profile = ClusterProfile::flaky_federated();
+        cfg.participation = ParticipationPolicy::Arrived;
+        let bsp = run_native(oracle.clone(), &shards, &spec, 480, &cfg, &theta0);
+        cfg.mode = ExecMode::BoundedStaleness;
+        cfg.staleness_bound = 0;
+        let bs = run_native(oracle, &shards, &spec, 480, &cfg, &theta0);
+        assert_eq!(bsp.points.len(), bs.points.len());
+        for (a, b) in bsp.points.iter().zip(&bs.points) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "iter {}", a.iter);
+        }
+    }
+
+    #[test]
+    fn bounded_staleness_keeps_local_work_within_bound() {
+        let (oracle, shards) = setup(6);
+        let theta0 = vec![0.0f32; 16];
+        let spec = AlgoSpec {
+            variant: Variant::LocalSgd,
+            eta1: 0.3,
+            alpha: 1e-3,
+            k1: 4.0,
+            batch: 8,
+            ..Default::default()
+        };
+        let mut cfg = base_cfg(6);
+        cfg.profile = ClusterProfile::flaky_federated();
+        cfg.participation = ParticipationPolicy::Arrived;
+        let rollback = run_native(oracle.clone(), &shards, &spec, 480, &cfg, &theta0);
+        cfg.mode = ExecMode::BoundedStaleness;
+        cfg.staleness_bound = 4;
+        let folded = run_native(oracle, &shards, &spec, 480, &cfg, &theta0);
+        // Stale rearrivals are folded, not discarded: the trajectory
+        // diverges from the rollback path but still converges.
+        assert!(
+            rollback
+                .points
+                .iter()
+                .zip(&folded.points)
+                .any(|(a, b)| a.loss != b.loss),
+            "bound 4 never changed the trajectory on a flaky fleet"
+        );
+        assert!(folded.final_loss() < folded.points[0].loss * 0.9);
     }
 
     #[test]

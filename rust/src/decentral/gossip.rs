@@ -1,0 +1,261 @@
+//! Push-sum gossip executor over [`crate::linalg::ModelArena`] rows.
+//!
+//! Stochastic Gradient Push keeps two quantities per client: the biased
+//! numerator x_i (the arena row — SGD steps apply to it directly) and a
+//! scalar push weight w_i. Each exchange multiplies both by the same
+//! column-stochastic mixing matrix; the de-biased model x_i / w_i is what
+//! converges to the fleet average, and it is materialized only at
+//! evaluation points (never on the hot path).
+//!
+//! ## Exact weight conservation
+//!
+//! Push weights are integers in fixed point at [`PUSH_WEIGHT_SCALE`]
+//! (2^32), not floats. A sender with m out-neighbors ships
+//! `share = w / (m+1)` (truncating division) to each and keeps
+//! `w - m*share`, so the u64 sum over the fleet is conserved *exactly* —
+//! bitwise, for any topology and any per-edge fault pattern — instead of
+//! drifting by float rounding. The numerator uses the same rational
+//! coefficients (`share/w`, `keep/w` as f64), keeping x and w scaled
+//! consistently so de-biasing stays unbiased. On symmetric constant-degree
+//! graphs every weight stays exactly 1; faults skew individual weights
+//! while the total remains N.
+
+use crate::linalg::ModelArena;
+
+/// Fixed-point scale for push weights: weight 1.0 == `1 << 32` units.
+pub const PUSH_WEIGHT_SCALE: u64 = 1 << 32;
+
+/// Per-fleet push-sum state: weights plus preallocated mixing scratch
+/// (the PR-5 discipline — no allocation after construction).
+#[derive(Clone, Debug)]
+pub struct GossipEngine {
+    n: usize,
+    d: usize,
+    /// Push weights in `PUSH_WEIGHT_SCALE` fixed point, one per arena row.
+    ps: Vec<u64>,
+    ps_next: Vec<u64>,
+    /// f64 numerator accumulator, n*d, reused every mix.
+    acc: Vec<f64>,
+}
+
+impl GossipEngine {
+    pub fn new(n: usize, d: usize) -> Self {
+        Self {
+            n,
+            d,
+            ps: vec![PUSH_WEIGHT_SCALE; n],
+            ps_next: vec![0; n],
+            acc: vec![0.0; n * d],
+        }
+    }
+
+    /// One push-sum exchange: every client pushes `1/(m+1)` of its
+    /// (numerator, weight) pair to each of its `outs[i]` out-neighbors
+    /// and keeps the remainder. Rows are updated in place; clients with
+    /// no out-edges this round (isolated by topology or by per-edge
+    /// faults) keep their state unchanged.
+    pub fn mix(&mut self, arena: &mut ModelArena, outs: &[Vec<usize>]) {
+        let (n, d) = (self.n, self.d);
+        assert_eq!(arena.n_rows(), n, "arena rows != gossip fleet");
+        assert_eq!(arena.dim(), d, "arena dim != gossip dim");
+        assert_eq!(outs.len(), n, "out-neighbor lists != fleet");
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.ps_next.iter_mut().for_each(|p| *p = 0);
+        for j in 0..n {
+            let m = outs[j].len() as u64;
+            let row = arena.row(j);
+            if m == 0 || self.ps[j] == 0 {
+                self.ps_next[j] += self.ps[j];
+                for (idx, &x) in row.iter().enumerate() {
+                    self.acc[j * d + idx] += x as f64;
+                }
+                continue;
+            }
+            let share = self.ps[j] / (m + 1);
+            let keep = self.ps[j] - m * share;
+            let denom = self.ps[j] as f64;
+            let keep_f = keep as f64 / denom;
+            let share_f = share as f64 / denom;
+            self.ps_next[j] += keep;
+            for (idx, &x) in row.iter().enumerate() {
+                self.acc[j * d + idx] += keep_f * x as f64;
+            }
+            for &t in &outs[j] {
+                self.ps_next[t] += share;
+                for (idx, &x) in row.iter().enumerate() {
+                    self.acc[t * d + idx] += share_f * x as f64;
+                }
+            }
+        }
+        for i in 0..n {
+            let row = arena.row_mut(i);
+            for (x, &a) in row.iter_mut().zip(&self.acc[i * d..(i + 1) * d]) {
+                *x = a as f32;
+            }
+        }
+        std::mem::swap(&mut self.ps, &mut self.ps_next);
+    }
+
+    /// De-biased model of client i (`x_i / w_i`) into `out` — the
+    /// evaluation-point materialization. A zero weight (client never
+    /// reached by any mass) falls back to the raw row.
+    pub fn debias_into(&self, arena: &ModelArena, i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        let row = arena.row(i);
+        if self.ps[i] == 0 {
+            out.extend_from_slice(row);
+            return;
+        }
+        let w = self.ps[i] as f64 / PUSH_WEIGHT_SCALE as f64;
+        out.extend(row.iter().map(|&x| (x as f64 / w) as f32));
+    }
+
+    /// Client i's push weight (1.0 at init and on symmetric graphs).
+    pub fn push_weight(&self, i: usize) -> f64 {
+        self.ps[i] as f64 / PUSH_WEIGHT_SCALE as f64
+    }
+
+    /// Integer-exact total: `n * PUSH_WEIGHT_SCALE` forever, by
+    /// construction.
+    pub fn total_units(&self) -> u64 {
+        self.ps.iter().sum()
+    }
+
+    /// Sum of push weights — exactly `n as f64` (the conservation law the
+    /// property tests pin bitwise).
+    pub fn total_push_weight(&self) -> f64 {
+        self.total_units() as f64 / PUSH_WEIGHT_SCALE as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::topology::PeerTopology;
+    use super::*;
+    use crate::rng::Rng;
+
+    fn arena_with(n: usize, d: usize, seed: u64) -> ModelArena {
+        let mut rng = Rng::new(seed);
+        let mut a = ModelArena::zeros(n, d);
+        for i in 0..n {
+            for x in a.row_mut(i) {
+                *x = rng.normal_f32();
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn weights_conserved_bitwise_across_topology_and_faults() {
+        let (n, d) = (9, 7);
+        let mut edge_rng = Rng::new(42);
+        for topo in PeerTopology::all() {
+            let mut arena = arena_with(n, d, 3);
+            let mut g = GossipEngine::new(n, d);
+            let mut outs = Vec::new();
+            let mut topo_rng = Rng::new(7);
+            for round in 0..20u64 {
+                topo.out_neighbors_into(n, round, 3, &mut topo_rng, &mut outs);
+                // Random per-edge faults: drop ~30% of edges.
+                for v in outs.iter_mut() {
+                    v.retain(|_| edge_rng.uniform() >= 0.3);
+                }
+                g.mix(&mut arena, &outs);
+                assert_eq!(g.total_units(), n as u64 * PUSH_WEIGHT_SCALE);
+                assert_eq!(
+                    g.total_push_weight().to_bits(),
+                    (n as f64).to_bits(),
+                    "{} round {round}",
+                    topo.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_graphs_keep_unit_weights() {
+        let (n, d) = (8, 4);
+        let mut arena = arena_with(n, d, 5);
+        let mut g = GossipEngine::new(n, d);
+        let mut outs = Vec::new();
+        let mut rng = Rng::new(1);
+        for round in 0..6u64 {
+            PeerTopology::Ring.out_neighbors_into(n, round, 2, &mut rng, &mut outs);
+            g.mix(&mut arena, &outs);
+            for i in 0..n {
+                assert_eq!(g.push_weight(i).to_bits(), 1.0f64.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn full_topology_one_round_matches_mean() {
+        // Power-of-two fleet: share == keep == 1/n exactly, so one mix is
+        // the plain average (up to f32 rounding of the f64 accumulation).
+        let (n, d) = (4, 6);
+        let mut arena = arena_with(n, d, 9);
+        let mean: Vec<f64> = (0..d)
+            .map(|j| (0..n).map(|i| arena.row(i)[j] as f64).sum::<f64>() / n as f64)
+            .collect();
+        let mut g = GossipEngine::new(n, d);
+        let mut outs = Vec::new();
+        let mut rng = Rng::new(1);
+        PeerTopology::Full.out_neighbors_into(n, 0, 2, &mut rng, &mut outs);
+        g.mix(&mut arena, &outs);
+        let mut buf = Vec::new();
+        for i in 0..n {
+            g.debias_into(&arena, i, &mut buf);
+            for (j, &x) in buf.iter().enumerate() {
+                assert!((x as f64 - mean[j]).abs() < 1e-6, "row {i} coord {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_gossip_contracts_towards_consensus() {
+        let (n, d) = (8, 3);
+        let mut arena = arena_with(n, d, 13);
+        let spread = |a: &ModelArena| -> f32 {
+            (0..d)
+                .map(|j| {
+                    let col: Vec<f32> = (0..n).map(|i| a.row(i)[j]).collect();
+                    col.iter().cloned().fold(f32::MIN, f32::max)
+                        - col.iter().cloned().fold(f32::MAX, f32::min)
+                })
+                .fold(0.0, f32::max)
+        };
+        let before = spread(&arena);
+        let mut g = GossipEngine::new(n, d);
+        let mut outs = Vec::new();
+        let mut rng = Rng::new(1);
+        for round in 0..12u64 {
+            PeerTopology::Ring.out_neighbors_into(n, round, 2, &mut rng, &mut outs);
+            g.mix(&mut arena, &outs);
+        }
+        assert!(spread(&arena) < 0.1 * before, "no contraction");
+    }
+
+    #[test]
+    fn isolated_client_state_is_untouched() {
+        let (n, d) = (4, 5);
+        let mut arena = arena_with(n, d, 21);
+        let frozen: Vec<f32> = arena.row(3).to_vec();
+        let mut g = GossipEngine::new(n, d);
+        // 3 has no out-edges and nobody targets it.
+        let outs = vec![vec![1], vec![0], vec![0, 1], vec![]];
+        g.mix(&mut arena, &outs);
+        assert_eq!(arena.row(3), &frozen[..]);
+        assert_eq!(g.push_weight(3).to_bits(), 1.0f64.to_bits());
+        assert_eq!(g.total_units(), n as u64 * PUSH_WEIGHT_SCALE);
+    }
+
+    #[test]
+    fn debias_identity_at_unit_weight() {
+        let (n, d) = (3, 4);
+        let arena = arena_with(n, d, 2);
+        let g = GossipEngine::new(n, d);
+        let mut buf = Vec::new();
+        g.debias_into(&arena, 1, &mut buf);
+        assert_eq!(&buf[..], arena.row(1)); // x / 1.0 is bitwise x
+    }
+}

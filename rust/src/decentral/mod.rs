@@ -1,0 +1,86 @@
+//! Decentralized execution: gossip/push-sum peer exchanges and
+//! bounded-staleness aggregation.
+//!
+//! Everything else in the repo is bulk-synchronous — a barrier, then one
+//! server-side collective. This module adds the master-less regimes from
+//! the Local SGD literature as a third axis on [`crate::coordinator::run`]
+//! (`RunConfig::mode`):
+//!
+//! * **`bsp`** (default): the existing barrier + collective path,
+//!   bit-for-bit unchanged.
+//! * **`gossip`**: no server. At each communication point peers push
+//!   `1/(m+1)` of their (model, push-weight) pair to their
+//!   [`PeerTopology`] out-neighbors ([`GossipEngine`], SGP-style
+//!   push-sum); `simnet` prices the per-edge transfers and drops
+//!   individual edges on faults instead of whole rounds.
+//! * **`bounded-staleness`**: the server keeps the barrier but folds
+//!   stale cohorts in with weight `1/(1+tau)^p` ([`StalenessFold`])
+//!   instead of rolling their local work back, up to
+//!   `staleness_bound` missed rounds.
+//!
+//! DESIGN.md §8 documents the semantics; tests/test_decentral.rs pins the
+//! conservation and equivalence laws.
+
+pub mod gossip;
+pub mod staleness;
+pub mod topology;
+
+pub use gossip::{GossipEngine, PUSH_WEIGHT_SCALE};
+pub use staleness::StalenessFold;
+pub use topology::{
+    is_column_stochastic, is_doubly_stochastic, mixing_matrix, torus_dims, PeerTopology,
+};
+
+/// Which execution substrate a run uses (`RunConfig::mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Barrier + server collective (the pre-decentral default).
+    Bsp,
+    /// Master-less push-sum gossip over a peer topology.
+    Gossip,
+    /// Barrier + staleness-weighted fold of late cohorts.
+    BoundedStaleness,
+}
+
+impl Default for ExecMode {
+    fn default() -> Self {
+        ExecMode::Bsp
+    }
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "bsp" => Some(Self::Bsp),
+            "gossip" => Some(Self::Gossip),
+            "bounded-staleness" => Some(Self::BoundedStaleness),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Bsp => "bsp",
+            Self::Gossip => "gossip",
+            Self::BoundedStaleness => "bounded-staleness",
+        }
+    }
+
+    pub fn all() -> [ExecMode; 3] {
+        [Self::Bsp, Self::Gossip, Self::BoundedStaleness]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrips() {
+        for m in ExecMode::all() {
+            assert_eq!(ExecMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(ExecMode::parse("async"), None);
+        assert_eq!(ExecMode::default(), ExecMode::Bsp);
+    }
+}

@@ -1,0 +1,197 @@
+//! Bounded-staleness aggregation: fold stale cohorts in, don't roll
+//! them back.
+//!
+//! The BSP masked path treats a client that misses a round as if its
+//! local steps never happened (rollback to the synced model). Bounded
+//! staleness instead lets a non-participant keep training from its stale
+//! base for up to `staleness_bound` missed rounds; when it next makes
+//! the barrier, its (now divergent) model enters the average with weight
+//! `1/(1 + tau)^p` where tau is the number of rounds it missed. Only a
+//! client older than the bound is rolled back, exactly like BSP.
+//!
+//! With `staleness_bound = 0` every miss triggers the rollback and every
+//! participant has tau = 0, so the weighted average is never invoked and
+//! the mode is bit-for-bit the BSP masked path (pinned by
+//! tests/test_decentral.rs).
+
+use crate::linalg::ModelArena;
+
+/// Per-client staleness ages plus preallocated averaging scratch.
+#[derive(Clone, Debug)]
+pub struct StalenessFold {
+    /// Rounds missed since the client last participated.
+    age: Vec<u64>,
+    /// Exponent p in the fold weight `1/(1 + tau)^p`.
+    p: f64,
+    /// f64 weighted-sum accumulator, one model dim.
+    acc: Vec<f64>,
+    /// Materialized weighted mean broadcast to participants.
+    mean: Vec<f32>,
+}
+
+impl StalenessFold {
+    pub fn new(n: usize, d: usize, p: f64) -> Self {
+        Self {
+            age: vec![0; n],
+            p,
+            acc: vec![0.0; d],
+            mean: vec![0.0; d],
+        }
+    }
+
+    /// Rounds client i has missed since it last made a barrier.
+    pub fn age(&self, i: usize) -> u64 {
+        self.age[i]
+    }
+
+    /// Whether any *participant* carries a stale model this round. False
+    /// means the exact BSP collective can run instead (the bit-for-bit
+    /// guarantee at `staleness_bound = 0` hangs on taking that branch).
+    pub fn any_stale(&self, part: &[bool]) -> bool {
+        part.iter()
+            .zip(&self.age)
+            .any(|(&in_round, &age)| in_round && age > 0)
+    }
+
+    /// Staleness-weighted average over the participants, written back to
+    /// every participant row (the decentralized analogue of the masked
+    /// collective). Weight of client i is `1/(1 + age_i)^p`.
+    pub fn weighted_average(&mut self, arena: &mut ModelArena, part: &[bool]) {
+        let n = arena.n_rows();
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        let mut wsum = 0.0f64;
+        for i in 0..n {
+            if !part[i] {
+                continue;
+            }
+            let w = 1.0 / (1.0 + self.age[i] as f64).powf(self.p);
+            wsum += w;
+            for (a, &x) in self.acc.iter_mut().zip(arena.row(i)) {
+                *a += w * x as f64;
+            }
+        }
+        if wsum == 0.0 {
+            return;
+        }
+        for (m, &a) in self.mean.iter_mut().zip(&self.acc) {
+            *m = (a / wsum) as f32;
+        }
+        for i in 0..n {
+            if part[i] {
+                arena.row_mut(i).copy_from_slice(&self.mean);
+            }
+        }
+    }
+
+    /// Post-collective bookkeeping, replacing the BSP rollback loop:
+    /// participants refresh their synced snapshot and reset their age;
+    /// non-participants age by one round and are rolled back (BSP-style)
+    /// only once they exceed `bound`. Returns the mean staleness over
+    /// this round's participants (the `RoundFeedback::staleness` signal).
+    pub fn commit(
+        &mut self,
+        thetas: &mut ModelArena,
+        synced: &mut ModelArena,
+        part: &[bool],
+        bound: u64,
+    ) -> f64 {
+        let n = thetas.n_rows();
+        let mut tau_sum = 0.0f64;
+        let mut participants = 0u64;
+        for i in 0..n {
+            if part[i] {
+                tau_sum += self.age[i] as f64;
+                participants += 1;
+                synced.row_mut(i).copy_from_slice(thetas.row(i));
+                self.age[i] = 0;
+            } else {
+                self.age[i] += 1;
+                if self.age[i] > bound {
+                    thetas.row_mut(i).copy_from_slice(synced.row(i));
+                    self.age[i] = 0;
+                }
+            }
+        }
+        if participants == 0 {
+            0.0
+        } else {
+            tau_sum / participants as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena_of(rows: &[&[f32]]) -> ModelArena {
+        let mut a = ModelArena::zeros(rows.len(), rows[0].len());
+        for (i, r) in rows.iter().enumerate() {
+            a.row_mut(i).copy_from_slice(r);
+        }
+        a
+    }
+
+    #[test]
+    fn bound_zero_commit_is_the_bsp_rollback() {
+        let mut thetas = arena_of(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let mut synced = arena_of(&[&[0.0, 0.0], &[0.5, 0.5], &[9.0, 9.0]]);
+        let mut s = StalenessFold::new(3, 2, 1.0);
+        let part = [true, false, true];
+        assert!(!s.any_stale(&part));
+        let tau = s.commit(&mut thetas, &mut synced, &part, 0);
+        assert_eq!(tau, 0.0);
+        // Participants snapshot forward, non-participant rolled back.
+        assert_eq!(synced.row(0), &[1.0, 2.0]);
+        assert_eq!(thetas.row(1), &[0.5, 0.5]);
+        assert_eq!(synced.row(2), &[5.0, 6.0]);
+        assert_eq!(s.age(1), 0); // reset after rollback
+    }
+
+    #[test]
+    fn within_bound_keeps_local_work_and_ages() {
+        let mut thetas = arena_of(&[&[1.0], &[7.0]]);
+        let mut synced = arena_of(&[&[0.0], &[0.0]]);
+        let mut s = StalenessFold::new(2, 1, 1.0);
+        let part = [true, false];
+        s.commit(&mut thetas, &mut synced, &part, 2);
+        assert_eq!(thetas.row(1), &[7.0]); // kept, not rolled back
+        assert_eq!(s.age(1), 1);
+        s.commit(&mut thetas, &mut synced, &part, 2);
+        assert_eq!(s.age(1), 2);
+        s.commit(&mut thetas, &mut synced, &part, 2);
+        // Third miss exceeds bound 2: BSP rollback fires.
+        assert_eq!(thetas.row(1), &[0.0]);
+        assert_eq!(s.age(1), 0);
+    }
+
+    #[test]
+    fn rearrival_is_downweighted_by_age() {
+        let mut thetas = arena_of(&[&[0.0], &[12.0]]);
+        let mut synced = arena_of(&[&[0.0], &[0.0]]);
+        let mut s = StalenessFold::new(2, 1, 1.0);
+        // Client 1 misses three rounds (bound large: no rollback).
+        for _ in 0..3 {
+            s.commit(&mut thetas, &mut synced, &[true, false], 10);
+        }
+        let part = [true, true];
+        assert!(s.any_stale(&part));
+        s.weighted_average(&mut thetas, &part);
+        // Weights 1 and 1/4: mean = (0*1 + 12*0.25) / 1.25 = 2.4,
+        // vs 6.0 under the unweighted average.
+        assert!((thetas.row(0)[0] - 2.4).abs() < 1e-6);
+        assert_eq!(thetas.row(0), thetas.row(1));
+        let tau = s.commit(&mut thetas, &mut synced, &part, 10);
+        assert!((tau - 1.5).abs() < 1e-12); // (3 + 0) / 2
+        assert_eq!(s.age(1), 0);
+    }
+
+    #[test]
+    fn empty_round_leaves_models_alone() {
+        let mut thetas = arena_of(&[&[2.0], &[3.0]]);
+        let mut s = StalenessFold::new(2, 1, 1.0);
+        let before0 = thetas.row(0).to_vec();
+        s.weighted_average(&mut thetas, &[false, false]);
+        assert_eq!(thetas.row(0), &before0[..]);
+    }
+}

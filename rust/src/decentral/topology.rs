@@ -1,0 +1,311 @@
+//! Peer topologies for decentralized execution.
+//!
+//! A topology maps each client to its *out-neighbors* for one round: the
+//! peers it pushes its (weighted) model to. Edge sets are deterministic in
+//! (topology, fleet size, round index) — except `random-regular`, which
+//! draws from a dedicated RNG stream the caller owns (seeded like
+//! `simnet`'s client streams), so per-round edge activation replays
+//! bitwise for a fixed seed.
+//!
+//! The induced mixing matrix uses the push-sum convention: column j
+//! (sender j) splits its mass uniformly over itself and its m_j
+//! out-neighbors, weight `1/(m_j + 1)` each. Every such matrix is
+//! column-stochastic by construction (mass is conserved); symmetric
+//! constant-degree graphs (ring, torus, full, and the exponential graph's
+//! per-round permutation offset) are additionally doubly stochastic.
+
+use crate::rng::Rng;
+
+/// Which peers exchange models each round (gossip mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerTopology {
+    /// Bidirectional cycle: out-neighbors `{i-1, i+1} mod n`.
+    Ring,
+    /// 2-D wraparound grid, `r x c` with `r` the largest divisor of n
+    /// at most sqrt(n) (degenerates to a ring when n is prime).
+    Torus,
+    /// One out-neighbor at offset `2^(round mod ceil(log2 n))` — the
+    /// time-varying exponential graph (SGP's directed exponential).
+    Exponential,
+    /// `gossip_degree` distinct random out-neighbors per client per
+    /// round, drawn from the caller's seeded stream.
+    RandomRegular,
+    /// All-to-all: every other client. One round of push-sum over this
+    /// graph reproduces the BSP mean (exactly for power-of-two n).
+    Full,
+}
+
+impl Default for PeerTopology {
+    fn default() -> Self {
+        PeerTopology::Ring
+    }
+}
+
+impl PeerTopology {
+    pub fn parse(s: &str) -> Option<PeerTopology> {
+        match s {
+            "ring" => Some(Self::Ring),
+            "torus" => Some(Self::Torus),
+            "exponential" => Some(Self::Exponential),
+            "random-regular" => Some(Self::RandomRegular),
+            "full" => Some(Self::Full),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Ring => "ring",
+            Self::Torus => "torus",
+            Self::Exponential => "exponential",
+            Self::RandomRegular => "random-regular",
+            Self::Full => "full",
+        }
+    }
+
+    /// All shipped topologies (CLI help, sweeps, tests).
+    pub fn all() -> [PeerTopology; 5] {
+        [
+            Self::Ring,
+            Self::Torus,
+            Self::Exponential,
+            Self::RandomRegular,
+            Self::Full,
+        ]
+    }
+
+    /// Fill `out[i]` with client i's out-neighbors for `round`.
+    ///
+    /// Lists are sorted, deduplicated, and never contain `i` itself.
+    /// `degree` is only consulted by `RandomRegular`; `rng` is only
+    /// consumed by `RandomRegular` (callers keep a dedicated stream so
+    /// the other topologies stay RNG-silent, mirroring the zero-variance
+    /// discipline of `simnet`'s draw helpers).
+    pub fn out_neighbors_into(
+        &self,
+        n: usize,
+        round: u64,
+        degree: usize,
+        rng: &mut Rng,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        out.resize(n, Vec::new());
+        for v in out.iter_mut() {
+            v.clear();
+        }
+        if n <= 1 {
+            return;
+        }
+        match self {
+            Self::Ring => {
+                for i in 0..n {
+                    out[i].push((i + 1) % n);
+                    out[i].push((i + n - 1) % n);
+                }
+            }
+            Self::Torus => {
+                let (r, c) = torus_dims(n);
+                for i in 0..n {
+                    let (a, b) = (i / c, i % c);
+                    out[i].push(((a + 1) % r) * c + b);
+                    out[i].push(((a + r - 1) % r) * c + b);
+                    out[i].push(a * c + (b + 1) % c);
+                    out[i].push(a * c + (b + c - 1) % c);
+                }
+            }
+            Self::Exponential => {
+                // ceil(log2 n) for n >= 2; the offset cycles through
+                // 1, 2, 4, ... so max offset 2^(bits-1) < n.
+                let bits = (usize::BITS - (n - 1).leading_zeros()) as u64;
+                let off = 1usize << (round % bits);
+                for i in 0..n {
+                    out[i].push((i + off) % n);
+                }
+            }
+            Self::RandomRegular => {
+                let deg = degree.max(1).min(n - 1);
+                let mut pool: Vec<usize> = Vec::with_capacity(n - 1);
+                for i in 0..n {
+                    pool.clear();
+                    pool.extend((0..n).filter(|&j| j != i));
+                    // Partial Fisher-Yates: first `deg` slots become a
+                    // uniform sample without replacement.
+                    for s in 0..deg {
+                        let j = s + rng.below(pool.len() - s);
+                        pool.swap(s, j);
+                    }
+                    out[i].extend_from_slice(&pool[..deg]);
+                }
+            }
+            Self::Full => {
+                for i in 0..n {
+                    out[i].extend((0..n).filter(|&j| j != i));
+                }
+            }
+        }
+        for (i, v) in out.iter_mut().enumerate() {
+            v.sort_unstable();
+            v.dedup();
+            v.retain(|&j| j != i);
+        }
+    }
+}
+
+/// Row-major `r x c` torus grid: r is the largest divisor of n with
+/// `r*r <= n` (so the grid is as square as n's factorization allows).
+pub fn torus_dims(n: usize) -> (usize, usize) {
+    let mut r = 1;
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            r = d;
+        }
+        d += 1;
+    }
+    (r, n / r)
+}
+
+/// Push-sum mixing matrix induced by the out-neighbor lists: row-major
+/// `n x n`, entry `[t * n + j]` is the weight node t receives from
+/// sender j. Column j splits uniformly: `1/(m_j + 1)` to itself and to
+/// each out-neighbor.
+pub fn mixing_matrix(outs: &[Vec<usize>]) -> Vec<f64> {
+    let n = outs.len();
+    let mut m = vec![0.0f64; n * n];
+    for (j, targets) in outs.iter().enumerate() {
+        let w = 1.0 / (targets.len() + 1) as f64;
+        m[j * n + j] += w;
+        for &t in targets {
+            m[t * n + j] += w;
+        }
+    }
+    m
+}
+
+/// Every column sums to 1 (push-sum mass conservation). Holds for every
+/// matrix `mixing_matrix` builds; checked with a small tolerance.
+pub fn is_column_stochastic(m: &[f64], n: usize) -> bool {
+    (0..n).all(|j| {
+        let s: f64 = (0..n).map(|t| m[t * n + j]).sum();
+        (s - 1.0).abs() < 1e-9
+    })
+}
+
+/// Column-stochastic *and* every row sums to 1: the fixed point of the
+/// mixing is then the exact uniform average (symmetric constant-degree
+/// topologies).
+pub fn is_doubly_stochastic(m: &[f64], n: usize) -> bool {
+    is_column_stochastic(m, n)
+        && (0..n).all(|t| {
+            let s: f64 = (0..n).map(|j| m[t * n + j]).sum();
+            (s - 1.0).abs() < 1e-9
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn neighbors(topo: PeerTopology, n: usize, round: u64, degree: usize) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(11);
+        let mut out = Vec::new();
+        topo.out_neighbors_into(n, round, degree, &mut rng, &mut out);
+        out
+    }
+
+    #[test]
+    fn parse_roundtrips_all() {
+        for t in PeerTopology::all() {
+            assert_eq!(PeerTopology::parse(t.label()), Some(t));
+        }
+        assert_eq!(PeerTopology::parse("nope"), None);
+    }
+
+    #[test]
+    fn ring_has_two_neighbors_and_is_symmetric() {
+        let outs = neighbors(PeerTopology::Ring, 8, 0, 2);
+        for (i, v) in outs.iter().enumerate() {
+            let mut want = vec![(i + 7) % 8, (i + 1) % 8];
+            want.sort_unstable();
+            assert_eq!(v, &want);
+        }
+    }
+
+    #[test]
+    fn torus_dims_factor_sensibly() {
+        assert_eq!(torus_dims(16), (4, 4));
+        assert_eq!(torus_dims(12), (3, 4));
+        assert_eq!(torus_dims(7), (1, 7)); // prime: degenerates to ring
+    }
+
+    #[test]
+    fn torus_degree_four_on_square_grids() {
+        let outs = neighbors(PeerTopology::Torus, 16, 0, 2);
+        for v in &outs {
+            assert_eq!(v.len(), 4);
+        }
+    }
+
+    #[test]
+    fn exponential_offset_cycles_with_round() {
+        let r0 = neighbors(PeerTopology::Exponential, 8, 0, 2);
+        let r1 = neighbors(PeerTopology::Exponential, 8, 1, 2);
+        let r3 = neighbors(PeerTopology::Exponential, 8, 3, 2); // 3 mod 3 = 0
+        assert_eq!(r0[0], vec![1]);
+        assert_eq!(r1[0], vec![2]);
+        assert_eq!(r0, r3);
+    }
+
+    #[test]
+    fn random_regular_is_seeded_and_has_exact_degree() {
+        let a = neighbors(PeerTopology::RandomRegular, 10, 0, 3);
+        let b = neighbors(PeerTopology::RandomRegular, 10, 0, 3);
+        assert_eq!(a, b); // same stream, same edges
+        for (i, v) in a.iter().enumerate() {
+            assert_eq!(v.len(), 3);
+            assert!(!v.contains(&i));
+        }
+    }
+
+    #[test]
+    fn degenerate_fleets_have_no_edges() {
+        for t in PeerTopology::all() {
+            assert!(neighbors(t, 1, 0, 2).iter().all(|v| v.is_empty()));
+            assert!(neighbors(t, 0, 0, 2).is_empty());
+        }
+    }
+
+    #[test]
+    fn every_topology_is_column_stochastic() {
+        for t in PeerTopology::all() {
+            for n in [2usize, 5, 8, 16] {
+                let outs = neighbors(t, n, 2, 3);
+                let m = mixing_matrix(&outs);
+                assert!(is_column_stochastic(&m, n), "{} n={n}", t.label());
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_topologies_are_doubly_stochastic() {
+        for t in [
+            PeerTopology::Ring,
+            PeerTopology::Torus,
+            PeerTopology::Exponential,
+            PeerTopology::Full,
+        ] {
+            let outs = neighbors(t, 16, 1, 2);
+            let m = mixing_matrix(&outs);
+            assert!(is_doubly_stochastic(&m, 16), "{}", t.label());
+        }
+    }
+
+    #[test]
+    fn random_regular_need_not_be_doubly_stochastic() {
+        // In-degrees vary round to round; column-stochasticity is the
+        // invariant, double stochasticity is not.
+        let outs = neighbors(PeerTopology::RandomRegular, 9, 0, 2);
+        let m = mixing_matrix(&outs);
+        assert!(is_column_stochastic(&m, 9));
+    }
+}

@@ -31,6 +31,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod decentral;
 pub mod grad;
 pub mod linalg;
 pub mod rng;

@@ -63,6 +63,27 @@ fn main() -> anyhow::Result<()> {
     .opt("topk-frac", "", "top-k compressor: fraction of coordinates kept, in (0, 1]")
     .opt("compress-bits", "", "qsgd compressor: quantization bit width, in [2, 16]")
     .opt(
+        "mode",
+        "",
+        "execution mode: bsp (synchronous server rounds, the default), gossip (push-sum neighbor exchanges over --topology; no server), bounded-staleness (absentees keep local work up to --staleness-bound missed rounds and are folded back downweighted)",
+    )
+    .opt(
+        "topology",
+        "",
+        "gossip peer topology: ring|torus|exponential|random-regular|full",
+    )
+    .opt("gossip-degree", "", "random-regular topology: out-degree per client")
+    .opt(
+        "staleness-bound",
+        "",
+        "bounded-staleness mode: rounds an absentee may keep local work (0 = BSP rollback, bit-for-bit)",
+    )
+    .opt(
+        "down-compressor",
+        "",
+        "downlink (broadcast-leg) compression schedule, same names as --compressor; absent keeps symmetric pricing",
+    )
+    .opt(
         "timeline",
         "",
         "timeline sink granularity: off (bounded memory on long sweeps; no per-round stats), rounds (default; feeds --out-timeline and the summary lines), steps (per-step event sink; disables the simnet coalesced fast path)",
@@ -101,6 +122,11 @@ fn main() -> anyhow::Result<()> {
         ("compressor", "compressor"),
         ("topk-frac", "topk_frac"),
         ("compress-bits", "compress_bits"),
+        ("mode", "mode"),
+        ("topology", "topology"),
+        ("gossip-degree", "gossip_degree"),
+        ("staleness-bound", "staleness_bound"),
+        ("down-compressor", "down_compressor"),
         ("timeline", "timeline"),
     ] {
         let v = args.get(flag);
@@ -126,7 +152,7 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!(
         "workload={} algorithm={} engine={} clients={} steps={} partition={} cluster={} \
-         participation={} controller={} compressor={} seed={}",
+         participation={} controller={} compressor={} mode={} seed={}",
         cfg.workload.name(),
         cfg.algo.variant.name(),
         cfg.engine,
@@ -137,6 +163,13 @@ fn main() -> anyhow::Result<()> {
         cfg.participation.label(),
         cfg.controller.describe(),
         cfg.compression.describe(),
+        match cfg.mode {
+            stl_sgd::decentral::ExecMode::Gossip =>
+                format!("gossip({})", cfg.topology.label()),
+            stl_sgd::decentral::ExecMode::BoundedStaleness =>
+                format!("bounded-staleness(bound={})", cfg.staleness_bound),
+            stl_sgd::decentral::ExecMode::Bsp => "bsp".to_string(),
+        },
         cfg.seed,
     );
 

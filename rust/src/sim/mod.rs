@@ -80,6 +80,48 @@ impl NetworkModel {
             }
         }
     }
+
+    /// Asymmetric pricing: the reduce (uplink) leg carries `up` bytes per
+    /// model and the broadcast (downlink) leg carries `down` — the hook for
+    /// downlink broadcast compression, where the server's update is
+    /// compressed independently of the clients' gradients. With
+    /// `up == down` (bitwise) this returns `allreduce_seconds_payload`
+    /// verbatim, so the symmetric path never drifts; otherwise each
+    /// collective splits into its two halves:
+    ///
+    /// * Naive: gather at `up` + broadcast at `down` (one alpha each).
+    /// * Ring: (N-1) reduce-scatter steps at `up/N` + (N-1) all-gather
+    ///   steps at `down/N`.
+    /// * Tree: the same hop count, each hop averaging the two directions
+    ///   (recursive doubling interleaves send/recv every hop).
+    pub fn updown_seconds(&self, alg: Algorithm, n: usize, up: f64, down: f64) -> f64 {
+        if up.to_bits() == down.to_bits() {
+            return self.allreduce_seconds_payload(alg, n, up);
+        }
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        match alg {
+            Algorithm::Naive => {
+                (self.alpha + (nf - 1.0) * up * self.beta)
+                    + (self.alpha + (nf - 1.0) * down * self.beta)
+            }
+            Algorithm::Ring => {
+                (nf - 1.0) * (self.alpha + (up / nf) * self.beta)
+                    + (nf - 1.0) * (self.alpha + (down / nf) * self.beta)
+            }
+            Algorithm::Tree => {
+                let hops = if n.is_power_of_two() {
+                    (n as u64).trailing_zeros() as f64
+                } else {
+                    let core = ((n as u64).next_power_of_two() >> 1).trailing_zeros() as f64;
+                    core + 2.0
+                };
+                hops * (self.alpha + 0.5 * (up + down) * self.beta)
+            }
+        }
+    }
 }
 
 /// Simulated clock accumulating compute and communication time.
@@ -200,6 +242,35 @@ mod tests {
                 assert!(quarter > exact / 4.0, "{alg:?} n={n}: alpha term vanished");
             }
             assert_eq!(m.allreduce_seconds_payload(alg, 1, 4000.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn updown_symmetric_is_bitwise_the_payload_path() {
+        let m = NetworkModel::default();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for n in [1usize, 2, 6, 8, 32] {
+                let sym = m.allreduce_seconds_payload(alg, n, 4000.0);
+                let ud = m.updown_seconds(alg, n, 4000.0, 4000.0);
+                assert_eq!(sym.to_bits(), ud.to_bits(), "{alg:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_downlink_is_cheaper_but_keeps_latency() {
+        let m = NetworkModel::default();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for n in [2usize, 6, 8, 32] {
+                let sym = m.updown_seconds(alg, n, 4000.0, 4000.0);
+                let asym = m.updown_seconds(alg, n, 4000.0, 1000.0);
+                assert!(asym < sym, "{alg:?} n={n}");
+                // Only the downlink beta term shrinks: the asymmetric
+                // cost stays above the all-compressed symmetric one.
+                let both = m.updown_seconds(alg, n, 1000.0, 1000.0);
+                assert!(asym > both, "{alg:?} n={n}: uplink term vanished");
+            }
+            assert_eq!(m.updown_seconds(alg, 1, 4000.0, 1000.0), 0.0);
         }
     }
 

@@ -37,6 +37,7 @@ use crate::sim::{ComputeModel, NetworkModel};
 /// fleet size.
 const CHURN_STREAM_BASE: u64 = 1 << 40;
 const SAMPLING_STREAM: u64 = 1 << 41;
+const GOSSIP_STREAM: u64 = 1 << 42;
 
 struct Client {
     rng: Rng,
@@ -82,6 +83,14 @@ pub struct SimNet {
     /// Stream for `ParticipationPolicy::Fraction` client sampling (only
     /// consumed under that policy, so timing draws stay policy-invariant).
     part_rng: Rng,
+    /// Stream for gossip-mode edge draws (random-regular topologies and
+    /// per-edge fault injection). Only consumed by
+    /// [`Self::price_gossip_round`], so BSP pricing is unaffected by its
+    /// existence.
+    gossip_rng: Rng,
+    /// Downlink (broadcast-leg) compressor. `None` prices the downlink at
+    /// the uplink payload — bit-for-bit the symmetric legacy path.
+    down: Option<CompressorSpec>,
     /// How the per-round participation mask is derived.
     policy: ParticipationPolicy,
     /// Round-start membership draw waiting to be consumed by the next
@@ -130,6 +139,8 @@ impl SimNet {
             clients,
             link_rng: root.split(0),
             part_rng: root.split(SAMPLING_STREAM),
+            gossip_rng: root.split(GOSSIP_STREAM),
+            down: None,
             policy: ParticipationPolicy::All,
             pending: None,
             now: 0.0,
@@ -148,6 +159,15 @@ impl SimNet {
 
     pub fn policy(&self) -> ParticipationPolicy {
         self.policy
+    }
+
+    /// Set (or clear) the downlink broadcast compressor for subsequent
+    /// rounds. With `None` (the default) the broadcast leg is priced at
+    /// the uplink payload, keeping the legacy symmetric pricing
+    /// bit-for-bit. The coordinator re-sets this per round so a
+    /// stage-annealed downlink schedule can follow the phases.
+    pub fn set_downlink(&mut self, down: Option<CompressorSpec>) {
+        self.down = down;
     }
 
     /// Clients currently in the fleet (n minus churned-out absentees).
@@ -505,11 +525,18 @@ impl SimNet {
         // timing streams stay aligned across policies; with fewer than two
         // participants no collective runs at all, so nothing is charged.
         // The beta term prices the operator's serialized payload —
-        // identical to the d-based formula at the exact 4d payload.
+        // identical to the d-based formula at the exact 4d payload. A
+        // configured downlink compressor reprices only the broadcast leg
+        // (`updown_seconds` returns the symmetric formula verbatim when
+        // the two payloads agree, so `down: None` cannot drift).
         let payload_wire = comp.payload_bytes(self.dim);
-        let base_comm = self
-            .net
-            .allreduce_seconds_payload(self.alg, n_part, payload_wire as f64);
+        let payload_down = self.down.unwrap_or(comp).payload_bytes(self.dim);
+        let base_comm = self.net.updown_seconds(
+            self.alg,
+            n_part,
+            payload_wire as f64,
+            payload_down as f64,
+        );
         let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
         let comm = if n_part <= 1 { 0.0 } else { drawn };
         if self.detail == Detail::Steps {
@@ -539,7 +566,223 @@ impl SimNet {
                 n_part,
                 payload_wire,
             ),
+            bytes_wire_down: crate::comm::allreduce::bytes_per_client_downlink(
+                self.alg,
+                n_part,
+                payload_down,
+            ),
             compression_ratio: comp.payload_ratio(self.dim),
+        };
+        if self.detail != Detail::Off {
+            self.timeline.rounds.push(stat);
+        }
+        self.now = stat.end();
+        self.round += 1;
+        (stat, participation)
+    }
+
+    /// Price one *gossip* round: `steps` local iterations per client, then
+    /// peer-to-peer push-sum exchanges over `topo` instead of a server
+    /// collective. Writes the round's realized edge set (out-neighbor
+    /// lists, already filtered for faults) into `neighbors` for the
+    /// caller's [`crate::decentral::GossipEngine::mix`].
+    ///
+    /// Differences from the BSP pricing path, by design:
+    ///
+    /// * **Faults drop edges, not rounds.** A client that crashes or
+    ///   straggles past the timeout keeps its local work — it just
+    ///   exchanges with nobody this round (its edges are cleared). On top
+    ///   of that, each surviving directed edge is independently dropped
+    ///   with the profile's `drop_prob` (drawn from the dedicated gossip
+    ///   stream, so BSP timing replays are unaffected).
+    /// * **Per-edge alpha-beta costs.** Every node's transfers serialize
+    ///   on its own link: a node touching `deg` edges (out + in) pays
+    ///   `deg * (alpha + 4d * beta)`, and the round's exchange span is the
+    ///   busiest node's. There is no compression on the peer path, so the
+    ///   payload is always the exact 4d.
+    /// * **Non-blocking overlap.** Early finishers start exchanging while
+    ///   stragglers still compute, so only the portion of the exchange
+    ///   span extending past the last arrival is charged to the round
+    ///   (an optimistic overlap credit of the round's `max_barrier_wait`).
+    ///
+    /// Compute timing draws are identical to the coalesced BSP path
+    /// (same per-client streams, same order). The returned participation
+    /// mask is the *exchange-capable* set: active clients that finished
+    /// their steps by the barrier deadline. With a step sink attached the
+    /// engine records round-start/churn/exit/exchange-done events but no
+    /// per-step completions (the gossip path never builds the heap).
+    pub fn price_gossip_round(
+        &mut self,
+        steps: u64,
+        batch: usize,
+        period: u64,
+        topo: crate::decentral::PeerTopology,
+        degree: usize,
+        neighbors: &mut Vec<Vec<usize>>,
+    ) -> (RoundStat, Participation) {
+        assert!(steps > 0, "a round prices at least one local step");
+        let n = self.clients.len();
+        let profile = self.profile;
+        let g = self.cm.grad_seconds(batch, self.dim);
+        let start = self.now;
+        let nominal_span = g * steps as f64;
+        let deadline = if profile.timeout_factor > 0.0 {
+            profile.timeout_factor * nominal_span
+        } else {
+            f64::INFINITY
+        };
+
+        let PendingRound { active, joined, left, churn } = match self.pending.take() {
+            Some(p) => p,
+            None => self.draw_membership(),
+        };
+
+        if self.detail == Detail::Steps {
+            self.timeline.events.push(TimelineEvent {
+                t: start,
+                round: self.round,
+                kind: EventKind::RoundStart,
+            });
+            for kind in churn {
+                self.timeline.events.push(TimelineEvent {
+                    t: start,
+                    round: self.round,
+                    kind,
+                });
+            }
+        }
+
+        // Per-client completion times: the coalesced accumulation, with
+        // the same per-stream draw order as the BSP paths.
+        let mut completion = vec![f64::INFINITY; n];
+        let mut pops = 0u64;
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            if profile.draw_crash(&mut self.clients[i].rng) {
+                continue;
+            }
+            let speed = self.clients[i].speed;
+            let mut done = 0.0f64;
+            for _ in 0..steps {
+                let factor = profile.draw_step_factor(&mut self.clients[i].rng);
+                done += g * speed * factor;
+            }
+            completion[i] = done;
+            pops += steps;
+        }
+        self.events_processed += pops + 3;
+
+        let mut active_done = 0.0f64;
+        for i in 0..n {
+            if active[i] {
+                active_done = active_done.max(completion[i]);
+            }
+        }
+        let exit = if active_done <= deadline && active_done.is_finite() {
+            active_done
+        } else if deadline.is_finite() {
+            deadline
+        } else {
+            completion
+                .iter()
+                .cloned()
+                .filter(|c| c.is_finite())
+                .fold(0.0f64, f64::max)
+        };
+        let mut dropped = 0u32;
+        for i in 0..n {
+            if active[i] && completion[i] > exit {
+                dropped += 1;
+            }
+        }
+
+        let mut max_wait = 0.0f64;
+        let mut wait_sum = 0.0f64;
+        let mut n_active = 0usize;
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            n_active += 1;
+            let wait = exit - completion[i].min(exit);
+            max_wait = max_wait.max(wait);
+            wait_sum += wait;
+        }
+        let mean_wait = wait_sum / n_active.max(1) as f64;
+
+        // Exchange-capable set: active and arrived by the deadline. A
+        // dropped client keeps its local work (no rollback in gossip) but
+        // its edges vanish for the round.
+        let cap: Vec<bool> = (0..n).map(|i| active[i] && completion[i] <= exit).collect();
+
+        // The round's edge set: topology out-neighbors, pruned to capable
+        // endpoints, each surviving edge then independently fault-dropped.
+        // All draws come from the gossip stream in deterministic
+        // (sender-ascending, target-sorted) order.
+        topo.out_neighbors_into(n, self.round, degree, &mut self.gossip_rng, neighbors);
+        for i in 0..n {
+            if !cap[i] {
+                neighbors[i].clear();
+                continue;
+            }
+            let rng = &mut self.gossip_rng;
+            neighbors[i].retain(|&t| cap[t] && !profile.draw_crash(rng));
+        }
+
+        // Per-node serialized transfer schedule: out-pushes plus in-
+        // receives, each a full 4d-byte model over one alpha-beta link.
+        let mut deg = vec![0u64; n];
+        for i in 0..n {
+            deg[i] += neighbors[i].len() as u64;
+            for &t in &neighbors[i] {
+                deg[t] += 1;
+            }
+        }
+        let max_deg = deg.iter().copied().max().unwrap_or(0);
+        let payload = 4 * self.dim as u64;
+        let base_comm = max_deg as f64 * (self.net.alpha + payload as f64 * self.net.beta);
+        let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+        let comm = if max_deg == 0 {
+            0.0
+        } else {
+            (drawn - max_wait).max(0.0)
+        };
+        if self.detail == Detail::Steps {
+            self.timeline.events.push(TimelineEvent {
+                t: start + exit,
+                round: self.round,
+                kind: EventKind::BarrierExit,
+            });
+            self.timeline.events.push(TimelineEvent {
+                t: start + exit + comm,
+                round: self.round,
+                kind: EventKind::AllreduceDone,
+            });
+        }
+
+        let participation = Participation::from_mask(cap);
+        let stat = RoundStat {
+            round: self.round,
+            steps,
+            k: period,
+            start,
+            compute_span: exit,
+            comm_seconds: comm,
+            max_barrier_wait: max_wait,
+            mean_barrier_wait: mean_wait,
+            dropped,
+            participants: participation.count() as u32,
+            joined,
+            left,
+            // Per-client envelope: the busiest node's exchanged bytes.
+            // Peer exchanges are exact f32 (no compression, no server
+            // broadcast — the downlink column stays 0).
+            bytes_exact: max_deg * payload,
+            bytes_wire: max_deg * payload,
+            bytes_wire_down: 0,
+            compression_ratio: 1.0,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -912,6 +1155,148 @@ mod tests {
             rt.comm_seconds,
             NetworkModel::default().allreduce_seconds_payload(Algorithm::Ring, 8, payload as f64)
         );
+    }
+
+    #[test]
+    fn downlink_compressor_reprices_only_the_broadcast_leg() {
+        let mk = || engine(ClusterProfile::heavy_tail_stragglers(), 6, 21, Detail::Rounds);
+        let (mut sym, mut ident, mut down) = (mk(), mk(), mk());
+        ident.set_downlink(Some(CompressorSpec::Identity));
+        down.set_downlink(Some(CompressorSpec::TopK { frac: 0.25 }));
+        for r in 0..30 {
+            let (a, _) = sym.price_round_compressed(8, 16, 8, CompressorSpec::Identity);
+            let (b, _) = ident.price_round_compressed(8, 16, 8, CompressorSpec::Identity);
+            let (c, _) = down.price_round_compressed(8, 16, 8, CompressorSpec::Identity);
+            // Identity downlink == no downlink override, bit for bit.
+            assert_eq!(a, b, "round {r}");
+            // A compressed downlink cheapens comm, leaves compute and the
+            // uplink ledger untouched, and shrinks only the down column.
+            assert_eq!(a.compute_span.to_bits(), c.compute_span.to_bits(), "round {r}");
+            assert!(c.comm_seconds < a.comm_seconds, "round {r}");
+            assert_eq!(a.bytes_wire, c.bytes_wire, "round {r}");
+            assert!(c.bytes_wire_down < a.bytes_wire_down, "round {r}");
+        }
+    }
+
+    #[test]
+    fn symmetric_rounds_report_the_downlink_half() {
+        // Ring, n=8, d=1000 identity: wire 7000, downlink half 3500.
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 1, Detail::Rounds);
+        let (rt, _) = sim.price_round_masked(4, 16);
+        assert_eq!(rt.bytes_wire, 7000);
+        assert_eq!(rt.bytes_wire_down, 3500);
+    }
+
+    #[test]
+    fn gossip_round_prices_per_edge_costs() {
+        let net = NetworkModel::default();
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 1, Detail::Rounds);
+        let mut edges = Vec::new();
+        let (rt, part) = sim.price_gossip_round(
+            5,
+            16,
+            5,
+            crate::decentral::PeerTopology::Ring,
+            2,
+            &mut edges,
+        );
+        // Zero-variance fleet: everyone arrives, every edge survives.
+        assert!(part.is_full());
+        assert_eq!(rt.participants, 8);
+        for (i, v) in edges.iter().enumerate() {
+            assert_eq!(v.len(), 2, "client {i}");
+        }
+        // Ring: 2 out-pushes + 2 in-receives per node, serialized.
+        let per_edge = net.alpha + 4000.0 * net.beta;
+        assert!((rt.comm_seconds - 4.0 * per_edge).abs() < 1e-15);
+        assert_eq!(rt.bytes_exact, 4 * 4000);
+        assert_eq!(rt.bytes_wire_down, 0);
+        assert_eq!(rt.compression_ratio, 1.0);
+        // Same compute pricing as the BSP path.
+        let mut bsp = engine(ClusterProfile::homogeneous(), 8, 1, Detail::Rounds);
+        let b = bsp.price_round(5, 16);
+        assert_eq!(rt.compute_span.to_bits(), b.compute_span.to_bits());
+    }
+
+    #[test]
+    fn gossip_rounds_are_deterministic_with_faults() {
+        let mk = || engine(ClusterProfile::flaky_federated(), 8, 13, Detail::Rounds);
+        let (mut a, mut b) = (mk(), mk());
+        let (mut ea, mut eb) = (Vec::new(), Vec::new());
+        for r in 0..100 {
+            let (sa, pa) = a.price_gossip_round(
+                6,
+                16,
+                6,
+                crate::decentral::PeerTopology::RandomRegular,
+                3,
+                &mut ea,
+            );
+            let (sb, pb) = b.price_gossip_round(
+                6,
+                16,
+                6,
+                crate::decentral::PeerTopology::RandomRegular,
+                3,
+                &mut eb,
+            );
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+            assert_eq!(ea, eb, "round {r}");
+        }
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+    }
+
+    #[test]
+    fn gossip_faults_drop_edges_not_rounds() {
+        let mut sim = engine(ClusterProfile::flaky_federated(), 8, 11, Detail::Rounds);
+        let mut edges = Vec::new();
+        let mut lost_edges = false;
+        for _ in 0..200 {
+            let (rt, part) = sim.price_gossip_round(
+                6,
+                16,
+                6,
+                crate::decentral::PeerTopology::Ring,
+                2,
+                &mut edges,
+            );
+            // Every round still prices (no whole-round loss) ...
+            assert!(rt.steps == 6);
+            // ... while incapable clients lose exactly their edges.
+            for i in 0..8 {
+                if !part.participates(i) {
+                    assert!(edges[i].is_empty(), "dropped client kept out-edges");
+                }
+                for &t in &edges[i] {
+                    assert!(part.participates(t), "edge into a dropped client");
+                }
+            }
+            lost_edges |= edges.iter().map(|v| v.len()).sum::<usize>() < 16;
+        }
+        assert!(lost_edges, "200 flaky rounds never dropped an edge");
+    }
+
+    #[test]
+    fn gossip_overlap_credits_the_straggler_tail() {
+        // With stragglers, part of the exchange hides behind the barrier
+        // wait: comm is never more than the fault-free per-edge schedule
+        // and sometimes strictly less.
+        let mut sim = engine(ClusterProfile::heavy_tail_stragglers(), 8, 7, Detail::Rounds);
+        let mut edges = Vec::new();
+        let mut credited = false;
+        for _ in 0..100 {
+            let (rt, _) = sim.price_gossip_round(
+                6,
+                16,
+                6,
+                crate::decentral::PeerTopology::Ring,
+                2,
+                &mut edges,
+            );
+            credited |= rt.max_barrier_wait > 0.0 && rt.comm_seconds == 0.0;
+        }
+        assert!(credited, "overlap never absorbed the exchange span");
     }
 
     #[test]

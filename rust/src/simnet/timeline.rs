@@ -99,6 +99,10 @@ pub struct RoundStat {
     /// through the same collective schedule; equals `bytes_exact` under
     /// the `identity` compressor).
     pub bytes_wire: u64,
+    /// Per-client bytes on the broadcast (downlink) leg, priced at the
+    /// downlink compressor's payload when one is configured and at the
+    /// uplink payload otherwise. 0 under gossip (no server broadcast).
+    pub bytes_wire_down: u64,
     /// Wire payload over exact payload for the round's operator (1.0 for
     /// `identity`; data-independent, so it reflects the schedule, not the
     /// values).
@@ -164,6 +168,11 @@ impl Timeline {
         self.rounds.iter().map(|r| r.bytes_wire).sum()
     }
 
+    /// Total per-client downlink (broadcast-leg) wire bytes.
+    pub fn total_bytes_wire_down(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_wire_down).sum()
+    }
+
     /// Total join (rejoin) events across the run.
     pub fn total_joined(&self) -> u64 {
         self.rounds.iter().map(|r| r.joined as u64).sum()
@@ -193,6 +202,7 @@ impl Timeline {
                 "left",
                 "bytes_exact",
                 "bytes_wire",
+                "bytes_wire_down",
                 "compression_ratio",
                 "end",
             ],
@@ -213,6 +223,7 @@ impl Timeline {
                 r.left.to_string(),
                 r.bytes_exact.to_string(),
                 r.bytes_wire.to_string(),
+                r.bytes_wire_down.to_string(),
                 format!("{:.4}", r.compression_ratio),
                 format!("{:.6e}", r.end()),
             ])?;
@@ -249,6 +260,7 @@ mod tests {
             left: dropped.min(1),
             bytes_exact: 4000,
             bytes_wire: 1000,
+            bytes_wire_down: 500,
             compression_ratio: 0.25,
         }
     }
@@ -269,6 +281,7 @@ mod tests {
         assert_eq!(t.total_left(), 1);
         assert_eq!(t.total_bytes_exact(), 8000);
         assert_eq!(t.total_bytes_wire(), 2000);
+        assert_eq!(t.total_bytes_wire_down(), 1000);
     }
 
     #[test]
@@ -293,7 +306,9 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .contains("participants,joined,left,bytes_exact,bytes_wire,compression_ratio,end"));
+            .contains(
+                "participants,joined,left,bytes_exact,bytes_wire,bytes_wire_down,compression_ratio,end"
+            ));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

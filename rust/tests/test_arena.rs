@@ -20,6 +20,7 @@ use stl_sgd::algo::{AlgoSpec, ControllerSpec, Variant};
 use stl_sgd::comm::{Algorithm, CompressionSchedule};
 use stl_sgd::coordinator::{run, run_reference, NativeCompute, RunConfig, ThreadedCompute, Trace};
 use stl_sgd::data::{partition, synth, Shard};
+use stl_sgd::decentral::ExecMode;
 use stl_sgd::grad::logreg::NativeLogreg;
 use stl_sgd::rng::Rng;
 use stl_sgd::simnet::{ClusterProfile, Detail, ParticipationPolicy};
@@ -166,6 +167,33 @@ fn arena_equals_legacy_across_controllers_and_collectives() {
                 ..Default::default()
             };
             run_both(&cfg, &format!("topk/arrived/{controller:?}/{collective:?}"));
+        }
+    }
+}
+
+#[test]
+fn bsp_mode_is_the_default_and_pins_the_legacy_path() {
+    // PR 6 adds `mode` to RunConfig; `bsp` (the default) must keep every
+    // pre-decentral combination bit-for-bit against the reference loop
+    // (which has no mode dispatch at all). State the mode explicitly so
+    // this pin survives a future Default change.
+    assert_eq!(RunConfig::default().mode, ExecMode::Bsp);
+    for profile in [
+        ClusterProfile::flaky_federated(),
+        ClusterProfile::heavy_tail_stragglers(),
+    ] {
+        for policy in [ParticipationPolicy::All, ParticipationPolicy::Arrived] {
+            for comp in ["identity", "topk"] {
+                let cfg = RunConfig {
+                    n_clients: 4,
+                    profile,
+                    participation: policy,
+                    compression: CompressionSchedule::parse(comp).unwrap(),
+                    mode: ExecMode::Bsp,
+                    ..Default::default()
+                };
+                run_both(&cfg, &format!("bsp-mode/{comp}/{policy:?}/{}", profile.name));
+            }
         }
     }
 }

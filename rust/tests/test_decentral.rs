@@ -1,0 +1,232 @@
+//! Decentralized-execution integration suite (DESIGN.md §8).
+//!
+//! Pins the three contracts the `decentral` subsystem ships with:
+//!
+//! * **Conservation.** Push-sum weights sum to exactly N — bitwise —
+//!   after any number of rounds, under every topology and the simnet's
+//!   real fault patterns (per-edge drops, stragglers, churn).
+//! * **Consistency.** Gossip on the full topology with no faults tracks
+//!   the BSP averaged trajectory (it computes the same mean, just
+//!   peer-to-peer), and `bounded-staleness` with `staleness_bound = 0`
+//!   *is* the BSP rollback path bit-for-bit across cluster preset x
+//!   participation policy.
+//! * **Determinism.** Gossip runs are a pure function of the seed for
+//!   every topology, faults included.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::comm::{Algorithm, CompressionSchedule};
+use stl_sgd::coordinator::{run_native, RunConfig, Trace};
+use stl_sgd::data::{partition, synth, Shard};
+use stl_sgd::decentral::{ExecMode, GossipEngine, PeerTopology, PUSH_WEIGHT_SCALE};
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::linalg::ModelArena;
+use stl_sgd::rng::Rng;
+use stl_sgd::sim::{ComputeModel, NetworkModel};
+use stl_sgd::simnet::{ClusterProfile, Detail, ParticipationPolicy, SimNet};
+
+fn setup(n: usize) -> (Arc<NativeLogreg>, Vec<Shard>) {
+    let ds = Arc::new(synth::a9a_like(2, 512, 16));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, n, &mut Rng::new(0));
+    (oracle, shards)
+}
+
+fn spec() -> AlgoSpec {
+    AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        alpha: 1e-3,
+        k1: 4.0,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    }
+}
+
+fn assert_points_bitwise(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{tag}: loss @ iter {}", pa.iter);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{tag}: accuracy @ iter {}",
+            pa.iter
+        );
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{tag}: sim_seconds @ iter {}",
+            pa.iter
+        );
+    }
+}
+
+#[test]
+fn push_sum_weights_conserved_through_simnet_fault_patterns() {
+    // The simnet's real edge-drop machinery (flaky profile: crashes,
+    // timeouts, per-edge faults, churn) against the fixed-point
+    // conservation law: the u64 total never moves, so the f64 total is
+    // exactly N forever.
+    let (n, d) = (6, 40);
+    for topo in PeerTopology::all() {
+        let mut sim = SimNet::new(
+            ClusterProfile::flaky_federated(),
+            NetworkModel::default(),
+            ComputeModel::default(),
+            Algorithm::Ring,
+            n,
+            d,
+            11,
+            Detail::Rounds,
+        );
+        let mut g = GossipEngine::new(n, d);
+        let mut arena = ModelArena::zeros(n, d);
+        let mut rng = Rng::new(3);
+        for i in 0..n {
+            for x in arena.row_mut(i) {
+                *x = rng.normal_f32();
+            }
+        }
+        let mut edges = Vec::new();
+        for round in 0..60 {
+            sim.price_gossip_round(4, 8, 4, topo, 3, &mut edges);
+            g.mix(&mut arena, &edges);
+            assert_eq!(
+                g.total_units(),
+                n as u64 * PUSH_WEIGHT_SCALE,
+                "{} round {round}",
+                topo.label()
+            );
+            assert_eq!(
+                g.total_push_weight().to_bits(),
+                (n as f64).to_bits(),
+                "{} round {round}",
+                topo.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn full_topology_gossip_tracks_the_bsp_average() {
+    // Fault-free full topology on a power-of-two fleet: every mix is the
+    // exact fleet mean, so gossip walks (numerically) the BSP trajectory —
+    // same mean computed peer-to-peer vs through the collective, differing
+    // only in summation order.
+    let (oracle, shards) = setup(4);
+    let theta0 = vec![0.0f32; 16];
+    let base = RunConfig {
+        n_clients: 4,
+        ..Default::default()
+    };
+    let bsp = run_native(oracle.clone(), &shards, &spec(), 240, &base, &theta0);
+    let mut cfg = base;
+    cfg.mode = ExecMode::Gossip;
+    cfg.topology = PeerTopology::Full;
+    let gossip = run_native(oracle, &shards, &spec(), 240, &cfg, &theta0);
+    assert_eq!(bsp.points.len(), gossip.points.len());
+    for (a, b) in bsp.points.iter().zip(&gossip.points) {
+        let denom = a.loss.abs().max(1e-9);
+        assert!(
+            ((a.loss - b.loss) / denom).abs() < 1e-2,
+            "iter {}: bsp {} vs gossip {}",
+            a.iter,
+            a.loss,
+            b.loss
+        );
+    }
+    assert!(gossip.final_loss() < gossip.points[0].loss * 0.9);
+}
+
+#[test]
+fn staleness_bound_zero_is_bitwise_bsp_across_presets_and_policies() {
+    // The regression gate for the third execution mode: with the bound at
+    // 0 every miss rolls back and every participant is fresh, so the whole
+    // run — losses, clocks, timeline rows, comm totals — must be
+    // bit-for-bit the BSP masked path, whatever the cluster does.
+    for profile in ClusterProfile::presets() {
+        for policy in [
+            ParticipationPolicy::All,
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            let (oracle, shards) = setup(4);
+            let theta0 = vec![0.0f32; 16];
+            let mut cfg = RunConfig {
+                n_clients: 4,
+                profile,
+                participation: policy,
+                ..Default::default()
+            };
+            let bsp = run_native(oracle.clone(), &shards, &spec(), 240, &cfg, &theta0);
+            cfg.mode = ExecMode::BoundedStaleness;
+            cfg.staleness_bound = 0;
+            let bs = run_native(oracle, &shards, &spec(), 240, &cfg, &theta0);
+            let tag = format!("{}/{policy:?}", profile.name);
+            assert_points_bitwise(&bsp, &bs, &tag);
+            assert_eq!(bsp.timeline, bs.timeline, "{tag}: timeline");
+            assert_eq!(bsp.comm, bs.comm, "{tag}: comm stats");
+        }
+    }
+}
+
+#[test]
+fn gossip_is_deterministic_per_topology_under_faults() {
+    for topo in PeerTopology::all() {
+        let mk = || {
+            let (oracle, shards) = setup(5);
+            let theta0 = vec![0.0f32; 16];
+            let cfg = RunConfig {
+                n_clients: 5,
+                profile: ClusterProfile::flaky_federated(),
+                mode: ExecMode::Gossip,
+                topology: topo,
+                gossip_degree: 2,
+                ..Default::default()
+            };
+            run_native(oracle, &shards, &spec(), 240, &cfg, &theta0)
+        };
+        let a = mk();
+        let b = mk();
+        let tag = topo.label();
+        assert_points_bitwise(&a, &b, tag);
+        assert_eq!(a.timeline, b.timeline, "{tag}: timeline");
+        assert!(a.final_loss().is_finite(), "{tag}: diverged");
+        // Peer exchanges have no broadcast leg.
+        assert!(
+            a.timeline.rounds.iter().all(|r| r.bytes_wire_down == 0),
+            "{tag}: downlink bytes on a gossip round"
+        );
+    }
+}
+
+#[test]
+fn downlink_compression_reprices_without_touching_the_trajectory() {
+    // The broadcast-leg satellite end to end: a downlink schedule changes
+    // pricing (cheaper comm, smaller bytes_wire_down) and nothing else —
+    // every loss is bitwise the symmetric run's.
+    let (oracle, shards) = setup(4);
+    let theta0 = vec![0.0f32; 16];
+    let base = RunConfig {
+        n_clients: 4,
+        ..Default::default()
+    };
+    let sym = run_native(oracle.clone(), &shards, &spec(), 240, &base, &theta0);
+    let mut cfg = base;
+    cfg.down_compression = Some(CompressionSchedule::parse("topk").unwrap());
+    let asym = run_native(oracle, &shards, &spec(), 240, &cfg, &theta0);
+    assert_eq!(sym.points.len(), asym.points.len());
+    for (a, b) in sym.points.iter().zip(&asym.points) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "iter {}", a.iter);
+    }
+    assert!(asym.clock.comm_seconds < sym.clock.comm_seconds);
+    assert!(asym.timeline.total_bytes_wire_down() < sym.timeline.total_bytes_wire_down());
+    assert_eq!(asym.timeline.total_bytes_wire(), sym.timeline.total_bytes_wire());
+    assert_eq!(
+        asym.clock.compute_seconds.to_bits(),
+        sym.clock.compute_seconds.to_bits(),
+        "downlink pricing must not move compute"
+    );
+}

@@ -36,6 +36,7 @@ fn timeline_csv_header_matches_checked_in_golden() {
             left: 0,
             bytes_exact: 64,
             bytes_wire: 32,
+            bytes_wire_down: 16,
             compression_ratio: 0.5,
         }],
         events: Vec::new(),
@@ -84,7 +85,7 @@ fn trace_csv_header_matches_checked_in_golden() {
 fn goldens_include_the_compression_columns() {
     // The bytes axis is load-bearing for the compression sweeps: a golden
     // "update" that drops these columns must fail loudly here.
-    for col in ["bytes_exact", "bytes_wire", "compression_ratio"] {
+    for col in ["bytes_exact", "bytes_wire", "bytes_wire_down", "compression_ratio"] {
         assert!(
             TIMELINE_GOLDEN.split(',').any(|c| c.trim() == col),
             "timeline golden lost column {col}"

@@ -70,6 +70,12 @@ if [[ $smoke -eq 1 ]]; then
             --topk-frac 0.25 --compress-bits 4 \
             --out-dir "$smoke_out/compress"
         test -s "$smoke_out/compress/summary.csv"
+        RUSTFLAGS="$release_flags" cargo run --release --example gossip_vs_bsp -- \
+            --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+            --topologies ring,exponential,full \
+            --clusters homogeneous,heavy-tail-stragglers \
+            --out-dir "$smoke_out/gossip"
+        test -s "$smoke_out/gossip/summary.csv"
     fi
     echo "check.sh: smoke examples OK ($smoke_out)"
 fi

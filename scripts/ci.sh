@@ -11,6 +11,9 @@
 #   build   release build of rust/src with -D warnings
 #   test    cargo test -q (full suite, debug profile)
 #   schema  golden CSV-schema gate only (tests/test_schema.rs + goldens/)
+#   decentral  decentralized-execution gate (tests/test_decentral.rs:
+#           push-sum conservation, staleness-bound-0 bitwise-BSP,
+#           gossip determinism, downlink repricing)
 #   bench   bench-regression smoke: bench_simnet --ci (round-pricing
 #           events/sec) then bench_round --ci (end-to-end coordinator
 #           iters/sec), both in short mode, merged into BENCH_ci.json;
@@ -30,6 +33,7 @@ banner() { printf '\n==== ci: %s ====\n' "$1"; }
 stage_build() { RUSTFLAGS="$release_flags" cargo build --release; }
 stage_test() { cargo test -q; }
 stage_schema() { cargo test -q --test test_schema; }
+stage_decentral() { cargo test -q --test test_decentral; }
 stage_bench() {
     # `cargo run` cannot select bench targets; `cargo bench -- <args>`
     # forwards to the binary (the benches use custom main()s, so the
@@ -48,7 +52,7 @@ stage_bench() {
 stage_smoke() { scripts/check.sh --smoke --no-build --no-fmt; }
 stage_fmt() { cargo fmt --check; }
 
-all_stages=(build test schema bench smoke fmt)
+all_stages=(build test schema decentral bench smoke fmt)
 stages=("$@")
 if [[ ${#stages[@]} -eq 0 ]]; then
     stages=("${all_stages[@]}")
@@ -56,7 +60,7 @@ fi
 
 for stage in "${stages[@]}"; do
     case "$stage" in
-        build | test | schema | bench | smoke | fmt)
+        build | test | schema | decentral | bench | smoke | fmt)
             banner "$stage"
             "stage_$stage"
             ;;
