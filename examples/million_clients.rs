@@ -1,0 +1,145 @@
+//! Million-client scale smoke: cohort-sparse execution with flat memory.
+//!
+//!     cargo run --release --example million_clients -- \
+//!         --clients 1000000 --participation 0.001 --assert-rss-mb 400
+//!
+//! Runs the cohort-sparse coordinator (`run_cohort_detailed`, DESIGN.md
+//! §9) over a synthetic convex workload with a fleet far larger than
+//! anything the dense path could hold: per-round state is materialized
+//! only for the sampled cohort, so a 1M-client sweep at 0.1%
+//! participation costs ~1k clients of memory and finishes in seconds.
+//! Prints the trace headline plus the store/pricer scale accounting, and
+//! (with `--assert-rss-mb`) fails if peak RSS exceeded the bound — the
+//! CI `scale` stage's gate.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::coordinator::cohort::run_cohort_detailed;
+use stl_sgd::coordinator::{NativeCompute, RunConfig};
+use stl_sgd::data::{partition, synth};
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::Rng;
+use stl_sgd::simnet::{Detail, ParticipationPolicy};
+use stl_sgd::util::cli::Cli;
+
+/// Peak resident set (VmHWM) in MiB from /proc/self/status; None off Linux.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "million_clients",
+        "cohort-sparse coordinator at fleet scale: flat memory, seconds of wall clock",
+    )
+    .opt("clients", "1000000", "fleet size N")
+    .opt("participation", "0.001", "sampled fraction per round, in (0, 1]")
+    .opt("steps", "96", "total iteration budget")
+    .opt("k1", "8", "communication period")
+    .opt("batch", "8", "per-client batch size")
+    .opt("seed", "7", "rng seed")
+    .opt("budget", "0", "cohort store budget in live entries (0 = unbounded)")
+    .opt(
+        "assert-rss-mb",
+        "0",
+        "fail (exit 1) if peak RSS exceeds this many MiB (0 = report only)",
+    )
+    .parse();
+
+    let n: usize = args.get("clients").parse()?;
+    let frac: f64 = args.get("participation").parse()?;
+    let steps: u64 = args.get("steps").parse()?;
+    let k1: f64 = args.get("k1").parse()?;
+    let batch: usize = args.get("batch").parse()?;
+    let seed: u64 = args.get("seed").parse()?;
+    let budget: usize = args.get("budget").parse()?;
+    let rss_bound: f64 = args.get("assert-rss-mb").parse()?;
+    anyhow::ensure!(n >= 1, "--clients must be positive");
+    anyhow::ensure!(frac > 0.0 && frac <= 1.0, "--participation must be in (0, 1]");
+
+    // Tiny convex workload: the point is fleet-state scaling, not the
+    // objective. 16 shards; client c draws from shard c % 16.
+    let ds = Arc::new(synth::a9a_like(seed, 512, 16));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, 16.min(n), &mut Rng::new(0));
+    let theta0 = vec![0.0f32; 16];
+
+    let spec = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        alpha: 1e-3,
+        k1,
+        batch,
+        iid: true,
+        ..Default::default()
+    };
+    let phases = spec.phases(steps);
+
+    let cfg = RunConfig {
+        n_clients: n,
+        participation: ParticipationPolicy::Fraction(frac),
+        cohort: true,
+        cohort_budget: budget,
+        // Only the trace endpoints matter here; per-round eval of a 1M
+        // fleet's server model would dominate the wall clock.
+        eval_every_rounds: u64::MAX,
+        eval_accuracy: false,
+        timeline_detail: Detail::Off,
+        seed,
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut engine = NativeCompute::new(oracle);
+    let (trace, report) =
+        run_cohort_detailed(&mut engine, &shards, &phases, &cfg, &theta0, "local");
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "fleet={} participation={} steps={} rounds={} empty_rounds={} mean_participants={:.1} wall={:.2}s",
+        n,
+        frac,
+        trace.total_iters,
+        trace.comm.rounds,
+        trace.comm.empty_rounds,
+        trace.comm.mean_participation(),
+        wall,
+    );
+    println!(
+        "cohort store: peak_cohort={} live_entries={} live_snapshots={} materialized={} \
+         evicted_clean={} evicted_lossy={} priced_clients={}",
+        report.peak_cohort,
+        report.live_entries,
+        report.live_snapshots,
+        report.store.materialized,
+        report.store.evicted_clean,
+        report.store.evicted_lossy,
+        report.priced_clients,
+    );
+
+    // Flat-memory sanity independent of RSS: state must track the cohort,
+    // not the fleet (<= distinct participants across all rounds).
+    let ceiling = (report.peak_cohort as u64 * trace.comm.rounds).max(1) as usize;
+    anyhow::ensure!(
+        report.live_entries <= ceiling && report.priced_clients <= ceiling,
+        "client state outgrew the sampled cohorts: {} entries / {} priced vs ceiling {}",
+        report.live_entries,
+        report.priced_clients,
+        ceiling,
+    );
+
+    match peak_rss_mb() {
+        Some(mb) => {
+            println!("peak_rss_mb={mb:.1}");
+            if rss_bound > 0.0 && mb > rss_bound {
+                eprintln!("FAIL: peak RSS {mb:.1} MiB exceeds the --assert-rss-mb {rss_bound} bound");
+                std::process::exit(1);
+            }
+        }
+        None => println!("peak_rss_mb=unavailable (no /proc/self/status)"),
+    }
+    Ok(())
+}

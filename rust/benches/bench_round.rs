@@ -161,13 +161,21 @@ fn run_ci(args: &stl_sgd::util::cli::Parsed) -> i32 {
     };
     let mut failed = false;
     for (name, got) in &measured {
-        let Some(base) = baseline
-            .get("round_iters_per_sec")
-            .and_then(|m| m.get(name))
-            .and_then(|v| v.as_f64())
-        else {
+        // A metric that is *absent* from the baseline is a config drift
+        // (fail: re-bless). A metric pinned as `null` is deliberately
+        // unmeasured — trajectory files like BENCH_5.json commit null when
+        // the authoring container has no toolchain — and must skip, not
+        // fail (re-pin protocol: rust/benches/README.md).
+        let Some(entry) = baseline.get("round_iters_per_sec").and_then(|m| m.get(name)) else {
             eprintln!("bench_round --ci: baseline has no metric {name:?}; re-bless it");
             failed = true;
+            continue;
+        };
+        let Some(base) = entry.as_f64() else {
+            println!(
+                "  {name:<44} {got:>12.0} iters/s  baseline null  [skip: unmeasured, \
+                 see rust/benches/README.md]"
+            );
             continue;
         };
         let floor = base * (1.0 - max_regress);

@@ -214,6 +214,8 @@ pub fn run_experiment_with_stop(
         gossip_degree: cfg.gossip_degree,
         staleness_bound: cfg.staleness_bound,
         down_compression: cfg.down_compressor,
+        cohort: cfg.cohort,
+        cohort_budget: cfg.cohort_budget,
         timeline_detail: cfg.timeline_detail,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,

@@ -1,0 +1,457 @@
+//! Cohort-sparse client state: million-client fleets with flat memory.
+//!
+//! The dense coordinator ([`crate::coordinator::run`]) materializes one
+//! `ModelArena` row, one sampler, one error-feedback residual, and one
+//! simnet client per fleet member — `O(N)` memory and `O(N)` per-round
+//! work even when a `fraction` participation policy only ever touches a
+//! few hundred clients per round. This module holds the sparse
+//! replacement the cohort runner ([`crate::coordinator::cohort`]) builds
+//! on:
+//!
+//! * [`ClientStore`] — per-client state keyed by client id, lazily
+//!   materialized on first participation: which committed server snapshot
+//!   the client last synced to, its minibatch-sampler stream position, and
+//!   (once it joins a compressed round) its error-feedback slot. Entries
+//!   are evictable under a memory budget.
+//! * snapshot table — refcounted committed server models. At any round
+//!   start every dense client satisfies `thetas[i] == synced[i] ==` the
+//!   server model of its last participation round (theta0 before it ever
+//!   participates), so a client's full model row is recoverable from a
+//!   *shared* snapshot: the store keeps one `d`-vector per still-referenced
+//!   generation instead of one per client.
+//! * [`SparseAges`] — map-backed staleness ages with the dense `Vec<u64>`
+//!   semantics, shared with [`crate::decentral::StalenessFold`].
+//!
+//! Bitwise-equivalence contract (DESIGN.md §9): at small N the cohort
+//! runner built on this store is pinned bit-for-bit against the dense
+//! arena path across cluster preset x participation policy x compressor
+//! (tests/test_cohort.rs). The contract holds because every piece of
+//! per-client state here is either (a) recoverable exactly from shared
+//! state (model row = snapshot bytes), (b) replayable exactly from a
+//! stateless stream split (sampler fast-forward via
+//! [`crate::data::sampler::MinibatchSampler::skip`], EF streams via
+//! [`crate::comm::compress::ef_client_rng`]), or (c) advanced only when
+//! the dense path advances it too (EF residuals/streams move only on a
+//! client's own >= 2-participant compressed rounds).
+
+use crate::comm::compress::ef_client_rng;
+use crate::data::sampler::MinibatchSampler;
+use crate::rng::Rng;
+use std::collections::HashMap;
+
+/// One client's error-feedback state, materialized lazily at the client's
+/// first compressed (>= 2 participant) round. The dense path builds all N
+/// residuals and streams eagerly at run start, but both start from the
+/// same zero residual and the same stateless stream split, and neither
+/// moves until the client's first compressed round — so lazy
+/// materialization is bit-identical.
+#[derive(Clone, Debug)]
+pub struct EfSlot {
+    pub residual: Vec<f32>,
+    pub rng: Rng,
+}
+
+impl EfSlot {
+    pub fn new(d: usize, seed: u64, client: usize) -> Self {
+        Self {
+            residual: vec![0.0f32; d],
+            rng: ef_client_rng(seed, client),
+        }
+    }
+}
+
+/// Sparse per-client state, lazily materialized on first participation.
+#[derive(Clone, Debug)]
+pub struct ClientEntry {
+    /// Snapshot id of the server model this client last synced to
+    /// (0 = theta0: the client has never committed a round).
+    pub snapshot: u64,
+    /// The client's minibatch stream (identical to the dense sampler for
+    /// this client id once fast-forwarded — see `steps_done`).
+    pub sampler: MinibatchSampler,
+    /// Global steps the sampler has consumed. The dense path advances
+    /// *every* client's sampler every step; a sparse entry lags while the
+    /// client sits out and replays the gap with
+    /// [`MinibatchSampler::skip`] on its next materialization in a round.
+    pub steps_done: u64,
+    /// Error-feedback residual + quantization stream; `None` until the
+    /// client's first compressed round.
+    pub ef: Option<EfSlot>,
+    /// Round counter of the client's last cohort membership (eviction
+    /// recency).
+    pub last_active_round: u64,
+}
+
+#[derive(Clone, Debug)]
+struct Snapshot {
+    theta: Vec<f32>,
+    /// Number of entries whose `snapshot` field points here. Snapshot 0
+    /// (theta0) is pinned and never collected regardless of refs.
+    refs: usize,
+}
+
+/// Store accounting, surfaced by the million-client example and the
+/// scale CI gate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Entries materialized over the run (first-participation events,
+    /// including re-materializations after eviction).
+    pub materialized: u64,
+    /// Evictions that lost nothing: the entry was still at theta0 with no
+    /// error-feedback state, so a later re-materialization is bit-exact.
+    pub evicted_clean: u64,
+    /// Evictions that reset real state (a committed snapshot pointer or a
+    /// live EF residual) back to theta0 — lossy, allowed only under an
+    /// explicit budget.
+    pub evicted_lossy: u64,
+    /// High-water mark of live entries.
+    pub peak_entries: usize,
+}
+
+/// Sparse client-state store: entries keyed by client id plus the
+/// refcounted snapshot table they point into. Memory is proportional to
+/// the number of *distinct clients that ever participated* (bounded
+/// further by `budget`), never to the fleet size.
+#[derive(Clone, Debug)]
+pub struct ClientStore {
+    entries: HashMap<usize, ClientEntry>,
+    snapshots: HashMap<u64, Snapshot>,
+    next_snapshot: u64,
+    /// Max live entries (0 = unlimited). Enforced by
+    /// [`Self::evict_to_budget`] after each round's commit.
+    budget: usize,
+    stats: StoreStats,
+}
+
+impl ClientStore {
+    /// Fresh store around the run's initial model. `budget` caps live
+    /// entries (0 = unlimited — the default, under which every eviction
+    /// guarantee is moot and the bitwise contract is unconditional).
+    pub fn new(theta0: Vec<f32>, budget: usize) -> Self {
+        let mut snapshots = HashMap::new();
+        snapshots.insert(
+            0u64,
+            Snapshot {
+                theta: theta0,
+                refs: 0,
+            },
+        );
+        Self {
+            entries: HashMap::new(),
+            snapshots,
+            next_snapshot: 1,
+            budget,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn theta0(&self) -> &[f32] {
+        &self.snapshots[&0].theta
+    }
+
+    pub fn contains(&self, client: usize) -> bool {
+        self.entries.contains_key(&client)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    /// Still-referenced snapshot generations (theta0 included).
+    pub fn live_snapshots(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    /// Insert a freshly materialized entry (snapshot = theta0, zero steps,
+    /// no EF state). The caller fast-forwards the sampler afterwards.
+    pub fn materialize(&mut self, client: usize, sampler: MinibatchSampler, round: u64) {
+        let prev = self.entries.insert(
+            client,
+            ClientEntry {
+                snapshot: 0,
+                sampler,
+                steps_done: 0,
+                ef: None,
+                last_active_round: round,
+            },
+        );
+        assert!(prev.is_none(), "client {client} materialized twice");
+        self.snapshots.get_mut(&0).expect("theta0 pinned").refs += 1;
+        self.stats.materialized += 1;
+        self.stats.peak_entries = self.stats.peak_entries.max(self.entries.len());
+    }
+
+    pub fn get(&self, client: usize) -> Option<&ClientEntry> {
+        self.entries.get(&client)
+    }
+
+    pub fn get_mut(&mut self, client: usize) -> Option<&mut ClientEntry> {
+        self.entries.get_mut(&client)
+    }
+
+    /// The model row client `client` starts the round from: the bytes of
+    /// its last-synced snapshot (theta0 for never-committed clients).
+    pub fn row(&self, client: usize) -> &[f32] {
+        let e = &self.entries[&client];
+        &self.snapshots[&e.snapshot].theta
+    }
+
+    /// Commit one round: `new_server` becomes a fresh snapshot and every
+    /// participant entry is repointed to it (releasing its old
+    /// generation). Mirrors the dense path's
+    /// `synced.row_mut(i).copy_from_slice(thetas.row(i))` per participant
+    /// — all participant rows agree bitwise after the collective, so one
+    /// shared vector serves them all.
+    pub fn commit_round(&mut self, participants: &[usize], new_server: &[f32]) -> u64 {
+        assert!(!participants.is_empty(), "empty rounds commit nothing");
+        let id = self.next_snapshot;
+        self.next_snapshot += 1;
+        self.snapshots.insert(
+            id,
+            Snapshot {
+                theta: new_server.to_vec(),
+                refs: participants.len(),
+            },
+        );
+        for &c in participants {
+            let e = self.entries.get_mut(&c).expect("participant materialized");
+            let old = e.snapshot;
+            e.snapshot = id;
+            self.release(old);
+        }
+        id
+    }
+
+    fn release(&mut self, id: u64) {
+        if id == 0 {
+            // theta0 is pinned; its refcount only tracks entry churn.
+            let s = self.snapshots.get_mut(&0).expect("theta0 pinned");
+            s.refs = s.refs.saturating_sub(1);
+            return;
+        }
+        let s = self.snapshots.get_mut(&id).expect("live snapshot");
+        s.refs -= 1;
+        if s.refs == 0 {
+            self.snapshots.remove(&id);
+        }
+    }
+
+    /// Enforce the entry budget: evict least-recently-active entries not
+    /// in `protect` (the current cohort, sorted ascending) until at most
+    /// `budget` remain. Never-committed entries with no EF state evict
+    /// *clean* — a later re-materialization replays them bit-exactly.
+    /// Entries carrying a committed snapshot or an EF residual evict
+    /// *lossy* (they restart from theta0 with a fresh EF stream), which is
+    /// the explicit memory/fidelity trade the budget opts into; the
+    /// bitwise contract with the dense path holds when `budget == 0` or no
+    /// lossy eviction fired (DESIGN.md §9).
+    pub fn evict_to_budget(&mut self, protect: &[usize]) {
+        if self.budget == 0 {
+            return;
+        }
+        while self.entries.len() > self.budget {
+            // Deterministic victim choice regardless of map iteration
+            // order: oldest `last_active_round`, ties broken by lowest id.
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(c, _)| protect.binary_search(c).is_err())
+                .map(|(&c, e)| (e.last_active_round, c))
+                .min();
+            let Some((_, c)) = victim else {
+                return; // everything left is protected
+            };
+            let e = self.entries.remove(&c).expect("victim exists");
+            if e.snapshot == 0 && e.ef.is_none() {
+                self.stats.evicted_clean += 1;
+            } else {
+                self.stats.evicted_lossy += 1;
+            }
+            self.release(e.snapshot);
+        }
+    }
+}
+
+/// Sparse staleness ages: the map-backed replacement for
+/// [`crate::decentral::StalenessFold`]'s dense `Vec<u64>`. Only nonzero
+/// ages occupy memory — in steady state that is the absentee set, not the
+/// fleet. Ages are integers, so the sparse representation is trivially
+/// bit-compatible with the dense one.
+#[derive(Clone, Debug, Default)]
+pub struct SparseAges {
+    ages: HashMap<usize, u64>,
+}
+
+impl SparseAges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rounds client `i` has missed since it last participated (0 when
+    /// never tracked — the dense vector's initial state).
+    pub fn get(&self, i: usize) -> u64 {
+        self.ages.get(&i).copied().unwrap_or(0)
+    }
+
+    /// Age client `i` by one missed round; returns the new age.
+    pub fn increment(&mut self, i: usize) -> u64 {
+        let a = self.ages.entry(i).or_insert(0);
+        *a += 1;
+        *a
+    }
+
+    /// Reset client `i` to age 0 (participation or rollback).
+    pub fn reset(&mut self, i: usize) {
+        self.ages.remove(&i);
+    }
+
+    /// Number of clients currently carrying a nonzero age.
+    pub fn nonzero(&self) -> usize {
+        self.ages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Shard;
+
+    fn sampler(id: u64) -> MinibatchSampler {
+        let shard = Shard {
+            indices: (0..32).collect(),
+        };
+        MinibatchSampler::new(shard, &Rng::new(7), id)
+    }
+
+    fn store() -> ClientStore {
+        ClientStore::new(vec![1.0f32, 2.0], 0)
+    }
+
+    #[test]
+    fn materialize_points_at_theta0() {
+        let mut s = store();
+        assert!(!s.contains(4));
+        s.materialize(4, sampler(4), 0);
+        assert!(s.contains(4));
+        assert_eq!(s.row(4), &[1.0, 2.0]);
+        assert_eq!(s.get(4).unwrap().snapshot, 0);
+        assert_eq!(s.stats().materialized, 1);
+        assert_eq!(s.live_snapshots(), 1);
+    }
+
+    #[test]
+    fn commit_repoints_participants_and_collects_dead_generations() {
+        let mut s = store();
+        for c in [2usize, 5, 9] {
+            s.materialize(c, sampler(c as u64), 0);
+        }
+        let g1 = s.commit_round(&[2, 5], &[3.0, 4.0]);
+        assert_eq!(s.row(2), &[3.0, 4.0]);
+        assert_eq!(s.row(5), &[3.0, 4.0]);
+        assert_eq!(s.row(9), &[1.0, 2.0], "non-participant keeps theta0");
+        assert_eq!(s.live_snapshots(), 2);
+
+        // Both generation-1 holders move on: g1 must be collected.
+        let g2 = s.commit_round(&[2, 5, 9], &[5.0, 6.0]);
+        assert_ne!(g1, g2);
+        assert_eq!(s.live_snapshots(), 2, "theta0 + g2 only");
+        assert_eq!(s.row(9), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn theta0_is_pinned_forever() {
+        let mut s = store();
+        s.materialize(0, sampler(0), 0);
+        s.commit_round(&[0], &[9.0, 9.0]);
+        // No entry references theta0 any more, but it must survive: the
+        // next materialized client starts from it.
+        assert_eq!(s.theta0(), &[1.0, 2.0]);
+        s.materialize(1, sampler(1), 1);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn eviction_respects_budget_protection_and_recency() {
+        let mut s = ClientStore::new(vec![0.0f32], 2);
+        for c in 0..4usize {
+            s.materialize(c, sampler(c as u64), c as u64); // rounds 0..3
+        }
+        // Client 3 is in the current cohort; 0 is the LRU victim, then 1.
+        s.evict_to_budget(&[3]);
+        assert_eq!(s.len(), 2);
+        assert!(!s.contains(0) && !s.contains(1));
+        assert!(s.contains(2) && s.contains(3));
+        assert_eq!(s.stats().evicted_clean, 2);
+        assert_eq!(s.stats().evicted_lossy, 0);
+    }
+
+    #[test]
+    fn committed_or_ef_entries_evict_lossy() {
+        let mut s = ClientStore::new(vec![0.0f32], 1);
+        s.materialize(0, sampler(0), 0);
+        s.materialize(1, sampler(1), 1);
+        s.commit_round(&[0], &[7.0]);
+        s.get_mut(1).unwrap().ef = Some(EfSlot::new(1, 3, 1));
+        s.evict_to_budget(&[]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats().evicted_lossy, 1, "snapshot-holding LRU entry");
+        // The snapshot generation the victim held is collected with it.
+        assert_eq!(s.live_snapshots(), 1);
+    }
+
+    #[test]
+    fn eviction_never_removes_protected_entries() {
+        let mut s = ClientStore::new(vec![0.0f32], 1);
+        s.materialize(3, sampler(3), 0);
+        s.materialize(8, sampler(8), 1);
+        s.evict_to_budget(&[3, 8]);
+        assert_eq!(s.len(), 2, "over budget but fully protected");
+    }
+
+    #[test]
+    fn peak_entries_tracks_high_water() {
+        let mut s = ClientStore::new(vec![0.0f32], 0);
+        for c in 0..5usize {
+            s.materialize(c, sampler(c as u64), 0);
+        }
+        assert_eq!(s.stats().peak_entries, 5);
+    }
+
+    #[test]
+    fn sparse_ages_match_dense_semantics() {
+        let mut a = SparseAges::new();
+        assert_eq!(a.get(7), 0);
+        assert_eq!(a.increment(7), 1);
+        assert_eq!(a.increment(7), 2);
+        assert_eq!(a.get(7), 2);
+        assert_eq!(a.nonzero(), 1);
+        a.reset(7);
+        assert_eq!(a.get(7), 0);
+        assert_eq!(a.nonzero(), 0);
+        a.reset(12); // resetting an untracked client is a no-op
+        assert_eq!(a.get(12), 0);
+    }
+
+    #[test]
+    fn ef_slot_stream_matches_dense_ef_state() {
+        // The lazily split stream equals the one EfState::new builds
+        // eagerly for the same (seed, client).
+        let d = 8;
+        let ef = crate::comm::EfState::new(4, d, 42);
+        let slot = EfSlot::new(d, 42, 2);
+        assert_eq!(slot.residual, ef.residual(2));
+        let mut a = slot.rng.clone();
+        let mut b = ef_client_rng(42, 2);
+        for _ in 0..8 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

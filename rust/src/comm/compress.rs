@@ -533,11 +533,9 @@ impl CompressionSchedule {
 pub struct EfState {
     residuals: Vec<Vec<f32>>,
     rngs: Vec<Rng>,
-    /// Reusable delta buffer (one row; participants are processed one at
-    /// a time, so a single buffer serves the whole fleet).
-    delta: Vec<f32>,
-    /// Reusable wire-format buffers.
-    buf: PayloadBuf,
+    /// Reusable encode/decode scratch (participants are processed one at
+    /// a time, so a single scratch serves the whole fleet).
+    scratch: EfScratch,
 }
 
 impl EfState {
@@ -545,12 +543,10 @@ impl EfState {
     /// compression-dedicated root so quantization draws never perturb the
     /// sampler / simnet streams.
     pub fn new(n: usize, d: usize, seed: u64) -> Self {
-        let root = Rng::new(seed ^ 0xC0_4B1D);
         Self {
             residuals: (0..n).map(|_| vec![0.0f32; d]).collect(),
-            rngs: (0..n).map(|i| root.split(i as u64 + 1)).collect(),
-            delta: vec![0.0f32; d],
-            buf: PayloadBuf::new(),
+            rngs: (0..n).map(|i| ef_client_rng(seed, i)).collect(),
+            scratch: EfScratch::new(d),
         }
     }
 
@@ -558,6 +554,71 @@ impl EfState {
     /// directly).
     pub fn residual(&self, i: usize) -> &[f32] {
         &self.residuals[i]
+    }
+}
+
+/// Client `i`'s error-feedback quantization stream — the exact stream
+/// [`EfState::new`] builds eagerly for the whole fleet. Split is stateless
+/// in the parent, so the cohort store can materialize the identical stream
+/// lazily, on a client's first compressed round (DESIGN.md §9).
+pub fn ef_client_rng(seed: u64, client: usize) -> Rng {
+    Rng::new(seed ^ 0xC0_4B1D).split(client as u64 + 1)
+}
+
+/// Reusable compression scratch shared by every participant of a round:
+/// one delta row plus the wire-format buffers. Call-private in the same
+/// sense as the arena's collective scratch (DESIGN.md §7) — reused across
+/// rounds, never aliased with model state.
+pub struct EfScratch {
+    delta: Vec<f32>,
+    buf: PayloadBuf,
+}
+
+impl EfScratch {
+    pub fn new(d: usize) -> Self {
+        Self {
+            delta: vec![0.0f32; d],
+            buf: PayloadBuf::new(),
+        }
+    }
+}
+
+/// One participant's pre-collective half of the error-feedback delta path:
+/// compress the error-corrected delta `row - reference + residual`, park
+/// the decoded image in `row` (for the in-place collective to average),
+/// and bank what the compressor dropped back into `residual`. Shared by
+/// [`average_compressed_arena`] (dense fleet) and the cohort runner
+/// (sparse store), which is what makes their trajectories bit-identical
+/// by construction.
+pub fn ef_encode_row(
+    row: &mut [f32],
+    reference: &[f32],
+    residual: &mut [f32],
+    rng: &mut Rng,
+    spec: CompressorSpec,
+    scratch: &mut EfScratch,
+) {
+    let d = reference.len();
+    debug_assert_eq!(row.len(), d);
+    debug_assert_eq!(residual.len(), d);
+    let EfScratch { delta, buf } = scratch;
+    delta.resize(d, 0.0);
+    for j in 0..d {
+        delta[j] = row[j] - reference[j] + residual[j];
+    }
+    spec.compress_into(delta, rng, buf);
+    debug_assert_eq!(buf.wire_bytes(), spec.payload_bytes(d));
+    buf.decode_into(row); // row now holds the decoded delta image
+    for j in 0..d {
+        residual[j] = delta[j] - row[j];
+    }
+}
+
+/// Post-collective half: every participant lands at
+/// `reference + mean(delta)`.
+pub fn ef_rebase_row(row: &mut [f32], reference: &[f32]) {
+    for j in 0..reference.len() {
+        row[j] += reference[j];
     }
 }
 
@@ -690,34 +751,27 @@ pub fn average_compressed_arena(
     let EfState {
         residuals,
         rngs,
-        delta,
-        buf,
+        scratch,
     } = ef;
     for i in 0..n {
         if !mask[i] {
             continue;
         }
-        let row = arena.row_mut(i);
-        let residual = &mut residuals[i];
-        for j in 0..d {
-            delta[j] = row[j] - reference[j] + residual[j];
-        }
-        spec.compress_into(delta, &mut rngs[i], buf);
-        debug_assert_eq!(buf.wire_bytes(), exact.payload_wire);
-        buf.decode_into(row); // row now holds the decoded delta image
-        for j in 0..d {
-            residual[j] = delta[j] - row[j];
-        }
+        ef_encode_row(
+            arena.row_mut(i),
+            reference,
+            &mut residuals[i],
+            &mut rngs[i],
+            spec,
+            scratch,
+        );
     }
     super::allreduce::average_arena_masked(arena, alg, mask);
     for i in 0..n {
         if !mask[i] {
             continue;
         }
-        let row = arena.row_mut(i);
-        for j in 0..d {
-            row[j] += reference[j];
-        }
+        ef_rebase_row(arena.row_mut(i), reference);
     }
     exact
 }

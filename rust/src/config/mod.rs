@@ -125,6 +125,13 @@ pub struct ExperimentConfig {
     /// Optional downlink compressor schedule (key `down_compressor`, same
     /// names as `compressor`); absent keeps symmetric pricing.
     pub down_compressor: Option<CompressionSchedule>,
+    /// Cohort-sparse execution (key `cohort`, BSP only): route the run
+    /// through the sparse client store + cohort-sized arenas, bit-for-bit
+    /// identical to the dense path (DESIGN.md §9).
+    pub cohort: bool,
+    /// Client-store memory budget in live entries (key `cohort_budget`);
+    /// 0 = unbounded, which is the lossless default.
+    pub cohort_budget: usize,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -156,6 +163,8 @@ impl Default for ExperimentConfig {
             gossip_degree: 2,
             staleness_bound: 0,
             down_compressor: None,
+            cohort: false,
+            cohort_budget: 0,
             eval_every_rounds: 1,
             engine: "threaded".into(),
             timeline_detail: Detail::Rounds,
@@ -280,6 +289,16 @@ impl ExperimentConfig {
                 "staleness_bound must be a non-negative integer, got {v}"
             );
             cfg.staleness_bound = v as u64;
+        }
+        if let Some(v) = getb("cohort") {
+            cfg.cohort = v;
+        }
+        if let Some(v) = getf("cohort_budget") {
+            anyhow::ensure!(
+                v.fract() == 0.0 && v >= 0.0,
+                "cohort_budget must be a non-negative integer, got {v}"
+            );
+            cfg.cohort_budget = v as usize;
         }
         if let Some(c) = gets("down_compressor") {
             cfg.down_compressor = Some(
@@ -409,6 +428,8 @@ impl ExperimentConfig {
         take!(gossip_degree);
         take!(staleness_bound);
         take!(down_compressor);
+        take!(cohort);
+        take!(cohort_budget);
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
         }
@@ -638,6 +659,31 @@ mod tests {
             r#"{"staleness_bound": 2.5}"#,
             r#"{"down_compressor": "gzip"}"#,
         ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn parses_cohort_keys() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(!cfg.cohort);
+        assert_eq!(cfg.cohort_budget, 0);
+        let j = Json::parse(r#"{"cohort": true, "cohort_budget": 128}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(cfg.cohort);
+        assert_eq!(cfg.cohort_budget, 128);
+        // Overrides round-trip (the CLI path) and compose with others.
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("cohort", "true").unwrap();
+        cfg.apply_override("cohort_budget", "64").unwrap();
+        cfg.apply_override("seed", "9").unwrap();
+        assert!(cfg.cohort);
+        assert_eq!(cfg.cohort_budget, 64);
+        assert_eq!(cfg.seed, 9);
+        for bad in [r#"{"cohort_budget": -1}"#, r#"{"cohort_budget": 1.5}"#] {
             assert!(
                 ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
                 "{bad}"

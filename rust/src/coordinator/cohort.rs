@@ -1,0 +1,424 @@
+//! Cohort-sparse coordinator loop: million-client fleets, flat memory.
+//!
+//! [`run_cohort`] executes the same phase schedule as [`super::run::run`]
+//! but materializes state only for the *sampled cohort* of each round:
+//!
+//! * client state lives in a [`crate::cohort::ClientStore`] (last-synced
+//!   snapshot pointer + sampler stream position + lazy error-feedback
+//!   slot), materialized on a client's first participation and evictable
+//!   under `cfg.cohort_budget`;
+//! * the model/gradient arenas are *cohort-sized* and reused across
+//!   rounds ([`crate::linalg::ModelArena::reset_rows`]);
+//! * rounds are priced by the streaming [`crate::simnet::SparseSimNet`],
+//!   which samples k-out-of-N without `O(N)` per-round vectors.
+//!
+//! Bitwise contract (DESIGN.md §9): with `shards.len() == n_clients` the
+//! trace is bit-for-bit identical to the dense path across cluster preset
+//! x participation policy x compressor (tests/test_cohort.rs). The
+//! argument, piece by piece:
+//!
+//! * **Model rows.** At every round start the dense path satisfies
+//!   `thetas[i] == synced[i] ==` the server model of client i's last
+//!   participation (theta0 before its first) — participants are synced at
+//!   the commit and non-participants rolled back. So loading cohort rows
+//!   from the store's shared snapshots reproduces the dense start-of-round
+//!   arena exactly, and the dense rollback of non-participants is the
+//!   no-op of never writing their discarded rows back.
+//! * **Samplers.** The dense loop advances *every* client's sampler every
+//!   step, so any client's stream position is always the global step `t`;
+//!   a lazily materialized entry replays the gap draw-for-draw with
+//!   [`MinibatchSampler::skip`].
+//! * **Collectives.** The masked arena collectives are positional over
+//!   the ascending participant index list, so running them over the
+//!   cohort-local arena (cohort ids ascending) performs the identical
+//!   float schedule; with a full mask they equal the unmasked collective
+//!   bit-for-bit, which covers the `All` policy.
+//! * **Error feedback.** EF residuals/streams advance only for
+//!   participants of rounds with >= 2 participants (the dense compressed
+//!   collective's early return), so a lazily created
+//!   [`crate::cohort::EfSlot`] — zero residual, stream split statelessly
+//!   off the same label — is exactly the dense eager state at its first
+//!   use, and [`crate::comm::compress::ef_encode_row`] /
+//!   [`ef_rebase_row`] are the very functions the dense path runs.
+//! * **Pricing.** [`SparseSimNet`] is pinned bit-identical to
+//!   [`crate::simnet::SimNet`]'s coalesced path (simnet/sparse.rs tests).
+//!
+//! Deliberate deviations, both trajectory-invariant: the runner always
+//! skips inactive compute (`cfg.skip_inactive_compute` is ignored — the
+//! dense flag exists only for an oracle-counting regression), and the
+//! trace always evaluates the server model (bitwise equal to the dense
+//! eval target in every BSP configuration, since under `All` every row
+//! equals the server after the round's full average). BSP only: gossip
+//! and bounded staleness keep the dense loop.
+
+use super::compute::ClientCompute;
+use super::metrics::{Trace, TracePoint};
+use super::run::{Metric, RunConfig};
+use crate::algo::{Phase, RoundFeedback};
+use crate::cohort::{ClientStore, EfSlot, StoreStats};
+use crate::comm;
+use crate::comm::compress::{ef_encode_row, ef_rebase_row, EfScratch};
+use crate::data::{sampler::MinibatchSampler, Shard};
+use crate::decentral::ExecMode;
+use crate::linalg::ModelArena;
+use crate::rng::Rng;
+use crate::sim::SimClock;
+use crate::simnet::SparseSimNet;
+
+/// Scale accounting the million-client example (and the CI `scale` stage)
+/// reads alongside the trace.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CohortReport {
+    pub store: StoreStats,
+    /// Distinct clients the store currently holds.
+    pub live_entries: usize,
+    /// Still-referenced server snapshots (theta0 included).
+    pub live_snapshots: usize,
+    /// Distinct clients the pricing engine materialized timing for.
+    pub priced_clients: usize,
+    /// Largest cohort any round drew (the arenas' high-water row count).
+    pub peak_cohort: usize,
+}
+
+/// One phase-schedule segment for sampler fast-forward: global steps
+/// `[..end)` not covered by an earlier segment draw `batch`-sized batches.
+struct Seg {
+    end: u64,
+    batch: usize,
+}
+
+/// Replay a lagging sampler from global step `from` up to `to` —
+/// draw-for-draw what the dense loop's per-step `sample_into` consumed.
+fn fast_forward(sampler: &mut MinibatchSampler, segs: &[Seg], from: u64, to: u64) {
+    let mut pos = from;
+    for seg in segs {
+        if pos >= to {
+            break;
+        }
+        if pos >= seg.end {
+            continue;
+        }
+        let upto = seg.end.min(to);
+        sampler.skip((upto - pos) as usize * seg.batch);
+        pos = upto;
+    }
+}
+
+/// Cohort-sparse twin of [`super::run::run`]; see the module docs for the
+/// equivalence contract.
+pub fn run_cohort(
+    engine: &mut dyn ClientCompute,
+    shards: &[Shard],
+    phases: &[Phase],
+    cfg: &RunConfig,
+    theta0: &[f32],
+    algorithm_name: &str,
+) -> Trace {
+    run_cohort_detailed(engine, shards, phases, cfg, theta0, algorithm_name).0
+}
+
+/// [`run_cohort`] plus the scale accounting. Unlike the dense path,
+/// `shards.len()` may be smaller than the fleet: client `c` draws from
+/// shard `c % shards.len()` (with equality this is the dense assignment,
+/// which is what the bitwise pin tests rely on).
+pub fn run_cohort_detailed(
+    engine: &mut dyn ClientCompute,
+    shards: &[Shard],
+    phases: &[Phase],
+    cfg: &RunConfig,
+    theta0: &[f32],
+    algorithm_name: &str,
+) -> (Trace, CohortReport) {
+    assert!(
+        cfg.mode == ExecMode::Bsp,
+        "cohort-sparse execution is BSP-only; gossip/bounded-staleness use the dense loop"
+    );
+    assert!(!shards.is_empty(), "at least one shard");
+    assert!(
+        shards.len() <= cfg.n_clients,
+        "more shards than clients: shard c % {} would leave data unused",
+        shards.len()
+    );
+    assert!(!phases.is_empty());
+    let n = cfg.n_clients;
+    let dim = engine.dim();
+    assert_eq!(theta0.len(), dim);
+    let all_policy = cfg.participation.is_all();
+    let compressing = !cfg.compression.is_always_identity();
+
+    let root = Rng::new(cfg.seed);
+    let segs: Vec<Seg> = {
+        let mut acc = 0u64;
+        phases
+            .iter()
+            .map(|p| {
+                acc += p.steps;
+                Seg {
+                    end: acc,
+                    batch: p.batch,
+                }
+            })
+            .collect()
+    };
+
+    let mut store = ClientStore::new(theta0.to_vec(), cfg.cohort_budget);
+    let mut server: Vec<f32> = theta0.to_vec();
+    let mut anchor: Vec<f32> = theta0.to_vec();
+    let mut scratch = EfScratch::new(dim);
+
+    // Cohort-sized arenas, resized (allocation-free past the high-water
+    // mark) to each round's cohort.
+    let mut thetas = ModelArena::zeros(0, dim);
+    let mut grads = ModelArena::zeros(0, dim);
+    let mut losses: Vec<f32> = Vec::new();
+    let mut batches: Vec<Vec<usize>> = Vec::new();
+    let mut all_active: Vec<bool> = Vec::new();
+    let mut part_mask: Vec<bool> = Vec::new();
+    let mut cohort: Vec<usize> = Vec::new();
+    let mut peak_cohort = 0usize;
+
+    let mut net = SparseSimNet::new(
+        cfg.profile,
+        cfg.network,
+        cfg.compute_model,
+        cfg.collective,
+        n,
+        dim,
+        cfg.seed,
+        cfg.timeline_detail,
+    )
+    .with_policy(cfg.participation);
+
+    let mut trace = Trace {
+        algorithm: algorithm_name.to_string(),
+        ..Default::default()
+    };
+    let mut clock = SimClock::default();
+    let mut comm_stats = comm::CommStats::default();
+    let mut controller = cfg.controller.build();
+    let mut t: u64 = 0;
+    let mut rounds: u64 = 0;
+    let mut examples_per_client: u64 = 0;
+    let shard_size = shards[0].len().max(1) as f64;
+
+    let loss0 = engine.full_loss(&anchor);
+    let acc0 = if cfg.eval_accuracy {
+        engine.full_accuracy(&anchor)
+    } else {
+        f64::NAN
+    };
+    trace.points.push(TracePoint {
+        iter: 0,
+        rounds: 0,
+        epoch: 0.0,
+        loss: loss0,
+        accuracy: acc0,
+        sim_seconds: 0.0,
+        stage: phases[0].stage,
+        eta: phases[0].lr.at(0),
+        k: phases[0].comm_period,
+        realized_k: 0,
+    });
+
+    'outer: for phase in phases {
+        if phase.reset_anchor {
+            anchor.copy_from_slice(&server);
+        }
+        let mut k = controller.period(phase).max(1);
+        let mut steps_in_round: u64 = 0;
+        for step in 0..phase.steps {
+            if steps_in_round == 0 {
+                // Round start: draw the cohort and materialize its state.
+                // Under `All` every client computes and averages (the
+                // dense invariant), so the cohort is the whole fleet and
+                // the engine draws membership itself at pricing time —
+                // same streams either way.
+                cohort.clear();
+                if all_policy {
+                    cohort.extend(0..n);
+                } else {
+                    cohort.extend_from_slice(net.begin_round());
+                }
+                peak_cohort = peak_cohort.max(cohort.len());
+
+                thetas.reset_rows(cohort.len());
+                grads.reset_rows(cohort.len());
+                losses.resize(cohort.len(), 0.0);
+                if batches.len() < cohort.len() {
+                    batches.resize(cohort.len(), Vec::new());
+                }
+                all_active.resize(cohort.len(), true);
+                all_active.fill(true);
+
+                for (local, &c) in cohort.iter().enumerate() {
+                    if !store.contains(c) {
+                        let sampler = MinibatchSampler::new(
+                            shards[c % shards.len()].clone(),
+                            &root,
+                            c as u64,
+                        );
+                        store.materialize(c, sampler, rounds);
+                    }
+                    let entry = store.get_mut(c).expect("just ensured");
+                    entry.last_active_round = rounds;
+                    fast_forward(&mut entry.sampler, &segs, entry.steps_done, t);
+                    entry.steps_done = t;
+                    thetas.row_mut(local).copy_from_slice(store.row(c));
+                }
+            }
+            let eta = phase.lr.at(t) as f32;
+
+            for (local, &c) in cohort.iter().enumerate() {
+                let entry = store.get_mut(c).expect("cohort materialized");
+                entry.sampler.sample_into(phase.batch, &mut batches[local]);
+                entry.steps_done += 1;
+            }
+            engine.grads_arena(
+                &thetas,
+                &batches[..cohort.len()],
+                &all_active,
+                &mut grads,
+                &mut losses,
+            );
+            engine.step_arena(&mut thetas, &grads, &anchor, eta, phase.inv_gamma, &all_active);
+
+            t += 1;
+            steps_in_round += 1;
+            examples_per_client += phase.batch as u64;
+
+            let at_comm_point = steps_in_round == k || step + 1 == phase.steps;
+            if at_comm_point {
+                let comp = cfg.compression.spec_for_stage(phase.stage);
+                if let Some(down) = &cfg.down_compression {
+                    net.set_downlink(Some(down.spec_for_stage(phase.stage)));
+                }
+                let (rt, parts) =
+                    net.price_round_compressed(steps_in_round, phase.batch, k, comp);
+                let n_part = parts.len();
+
+                // Cohort-local participant mask (parts is a subset of the
+                // cohort; both sorted ascending).
+                part_mask.resize(cohort.len(), false);
+                part_mask.fill(false);
+                {
+                    let mut pi = 0usize;
+                    for (local, &c) in cohort.iter().enumerate() {
+                        if pi < parts.len() && parts[pi] == c {
+                            part_mask[local] = true;
+                            pi += 1;
+                        }
+                    }
+                    debug_assert_eq!(pi, parts.len(), "participants outside the cohort");
+                }
+
+                if compressing && n_part >= 2 {
+                    // The dense compressed collective, run piecewise over
+                    // the cohort arena: encode participants (ascending),
+                    // average the decoded deltas, rebase. With <= 1
+                    // participant the dense path's early return touches
+                    // nothing — neither rows nor EF state — so the whole
+                    // block is skipped.
+                    for (local, &c) in cohort.iter().enumerate() {
+                        if !part_mask[local] {
+                            continue;
+                        }
+                        let entry = store.get_mut(c).expect("participant materialized");
+                        let slot = entry
+                            .ef
+                            .get_or_insert_with(|| EfSlot::new(dim, cfg.seed, c));
+                        ef_encode_row(
+                            thetas.row_mut(local),
+                            &server,
+                            &mut slot.residual,
+                            &mut slot.rng,
+                            comp,
+                            &mut scratch,
+                        );
+                    }
+                    comm::average_arena_masked(&mut thetas, cfg.collective, &part_mask);
+                    for local in 0..cohort.len() {
+                        if part_mask[local] {
+                            ef_rebase_row(thetas.row_mut(local), &server);
+                        }
+                    }
+                } else if !compressing {
+                    // Exact collective over the participants; a full mask
+                    // is bit-identical to the dense unmasked average (the
+                    // `All` case), and <= 1 participants no-op exactly
+                    // like the dense masked path.
+                    comm::average_arena_masked(&mut thetas, cfg.collective, &part_mask);
+                }
+
+                // Commit: participants all hold the new server model
+                // bitwise (or, for a lone participant, its raw local row —
+                // the dense lone-commit). Empty rounds leave the server
+                // untouched and are counted by the participation ledger.
+                if n_part >= 1 {
+                    let lead_local = part_mask
+                        .iter()
+                        .position(|&b| b)
+                        .expect("n_part >= 1 has a lead");
+                    server.copy_from_slice(thetas.row(lead_local));
+                    store.commit_round(&parts, &server);
+                }
+                store.evict_to_budget(&cohort);
+
+                steps_in_round = 0;
+                clock.add_compute(rt.compute_span);
+                clock.add_comm(rt.comm_seconds);
+                comm_stats.record_round(rt.bytes_exact, rt.bytes_wire, rt.comm_seconds, rt.steps);
+                comm_stats.record_participation(n_part as u64, n as u64);
+                rounds += 1;
+
+                let k_round = k;
+                let fb = RoundFeedback::from_stat(&rt, n);
+                controller.observe(&fb);
+                k = controller.period(phase).max(1);
+
+                if rounds % cfg.eval_every_rounds == 0 {
+                    let loss = engine.full_loss(&server);
+                    let acc = if cfg.eval_accuracy {
+                        engine.full_accuracy(&server)
+                    } else {
+                        f64::NAN
+                    };
+                    trace.points.push(TracePoint {
+                        iter: t,
+                        rounds,
+                        epoch: examples_per_client as f64 / shard_size,
+                        loss,
+                        accuracy: acc,
+                        sim_seconds: clock.total(),
+                        stage: phase.stage,
+                        eta: eta as f64,
+                        k: k_round,
+                        realized_k: rt.steps,
+                    });
+                    if let Some(stop) = &cfg.stop {
+                        let hit = match stop.metric {
+                            Metric::Loss => loss <= stop.threshold,
+                            Metric::Accuracy => acc >= stop.threshold,
+                        };
+                        if hit {
+                            trace.stopped_early = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    trace.total_iters = t;
+    trace.comm = comm_stats;
+    trace.clock = clock;
+    trace.timeline = net.take_timeline();
+    let report = CohortReport {
+        store: store.stats(),
+        live_entries: store.len(),
+        live_snapshots: store.live_snapshots(),
+        priced_clients: net.distinct_clients(),
+        peak_cohort,
+    };
+    (trace, report)
+}

@@ -79,7 +79,11 @@ pub trait ClientCompute {
     /// Arena hot-path gradients (DESIGN.md §7): client models are rows of
     /// `thetas`, and each active client's gradient is written into the
     /// matching row of the caller-preallocated `grads` arena (losses into
-    /// `losses`) — no per-step `Vec<Vec<f32>>`. Inactive rows are
+    /// `losses`) — no per-step `Vec<Vec<f32>>`. Row count is whatever the
+    /// caller passes, not necessarily the fleet size: the cohort runner
+    /// (DESIGN.md §9) hands in arenas sized to the sampled cohort, with
+    /// row r belonging to the r-th cohort member — engines must index by
+    /// row position, never assume row == client id. Inactive rows are
     /// placeholders the caller must not read (this engine family leaves
     /// them stale or zeroed; their loss slots are zeroed), mirroring the
     /// [`Self::grads_masked`] contract. The default bridges through the

@@ -2,12 +2,14 @@
 //! and run traces. See [`run::run`] for the core loop and DESIGN.md §2 for
 //! how the engines relate to the AOT artifact path.
 
+pub mod cohort;
 pub mod compute;
 pub mod metrics;
 pub mod reference;
 pub mod run;
 pub mod threaded;
 
+pub use cohort::run_cohort;
 pub use compute::{ClientCompute, NativeCompute};
 pub use metrics::{Trace, TracePoint};
 pub use reference::run_reference;

@@ -107,6 +107,20 @@ pub struct RunConfig {
     /// prices the downlink at the uplink payload — the legacy symmetric
     /// collective, bit-for-bit.
     pub down_compression: Option<comm::CompressionSchedule>,
+    /// Cohort-sparse execution (DESIGN.md §9): route the run through
+    /// [`super::cohort::run_cohort`] — sparse client-state store, a
+    /// cohort-sized arena reused across rounds, and the streaming
+    /// [`crate::simnet::SparseSimNet`] pricer — so memory and per-round
+    /// work scale with the sampled cohort instead of the fleet.
+    /// Bit-for-bit identical to the dense path (pinned across cluster
+    /// preset x participation policy x compressor in
+    /// tests/test_cohort.rs); BSP mode only.
+    pub cohort: bool,
+    /// Max live entries in the cohort client store (0 = unlimited, the
+    /// default). Entries past the budget are evicted least-recently-active
+    /// first after each round; evicting a never-committed entry is exact,
+    /// evicting one with real state resets it to theta0 (lossy, counted).
+    pub cohort_budget: usize,
 }
 
 impl Default for RunConfig {
@@ -132,6 +146,8 @@ impl Default for RunConfig {
             staleness_bound: 0,
             staleness_exponent: 1.0,
             down_compression: None,
+            cohort: false,
+            cohort_budget: 0,
         }
     }
 }
@@ -155,6 +171,11 @@ pub fn run(
     theta0: &[f32],
     algorithm_name: &str,
 ) -> Trace {
+    if cfg.cohort {
+        // Cohort-sparse path (DESIGN.md §9): same trajectory, memory
+        // proportional to the sampled cohort instead of the fleet.
+        return super::cohort::run_cohort(engine, shards, phases, cfg, theta0, algorithm_name);
+    }
     assert_eq!(shards.len(), cfg.n_clients, "one shard per client");
     assert!(!phases.is_empty());
     let n = cfg.n_clients;

@@ -45,6 +45,21 @@ impl MinibatchSampler {
         }
     }
 
+    /// Advance the stream past one discarded `b`-sized batch without
+    /// materializing it — draw-for-draw identical to [`Self::sample_into`]
+    /// (same `below(shard_len)` calls, so Lemire rejection replays consume
+    /// the same number of raw words). The cohort store uses this to fast-
+    /// forward a lazily materialized client's sampler to the global step
+    /// counter: the dense path advances *every* client's sampler every
+    /// step, so bit-compat requires replaying the skipped batches, not
+    /// counting them (DESIGN.md §9).
+    pub fn skip(&mut self, b: usize) {
+        assert!(!self.shard.is_empty(), "cannot sample from empty shard");
+        for _ in 0..b {
+            let _ = self.rng.below(self.shard.len());
+        }
+    }
+
     pub fn shard_len(&self) -> usize {
         self.shard.len()
     }
@@ -97,6 +112,23 @@ mod tests {
         let _ = c0.sample(16);
         let mut c1 = MinibatchSampler::new(shard(50), &root, 1);
         assert_eq!(c1.sample(16), expected);
+    }
+
+    #[test]
+    fn skip_is_draw_identical_to_sampling() {
+        // A sampler that skipped the first three batches continues exactly
+        // where a sampler that materialized them is.
+        let root = Rng::new(6);
+        let mut dense = MinibatchSampler::new(shard(50), &root, 2);
+        for _ in 0..3 {
+            let _ = dense.sample(16);
+        }
+        let expected = dense.sample(16);
+        let mut lazy = MinibatchSampler::new(shard(50), &root, 2);
+        for _ in 0..3 {
+            lazy.skip(16);
+        }
+        assert_eq!(lazy.sample(16), expected);
     }
 
     #[test]

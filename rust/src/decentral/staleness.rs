@@ -14,13 +14,18 @@
 //! the mode is bit-for-bit the BSP masked path (pinned by
 //! tests/test_decentral.rs).
 
+use crate::cohort::SparseAges;
 use crate::linalg::ModelArena;
 
-/// Per-client staleness ages plus preallocated averaging scratch.
+/// Per-client staleness ages plus preallocated averaging scratch. Ages
+/// live in a [`SparseAges`] map (PR 7): only absentees occupy memory, so
+/// the fold's footprint follows the stale set rather than the fleet.
+/// Ages are integers, so the representation change is exactly value-
+/// preserving — every weight, fold, and rollback decision is unchanged.
 #[derive(Clone, Debug)]
 pub struct StalenessFold {
-    /// Rounds missed since the client last participated.
-    age: Vec<u64>,
+    /// Rounds missed since each client last participated (absent = 0).
+    age: SparseAges,
     /// Exponent p in the fold weight `1/(1 + tau)^p`.
     p: f64,
     /// f64 weighted-sum accumulator, one model dim.
@@ -30,9 +35,9 @@ pub struct StalenessFold {
 }
 
 impl StalenessFold {
-    pub fn new(n: usize, d: usize, p: f64) -> Self {
+    pub fn new(_n: usize, d: usize, p: f64) -> Self {
         Self {
-            age: vec![0; n],
+            age: SparseAges::new(),
             p,
             acc: vec![0.0; d],
             mean: vec![0.0; d],
@@ -41,7 +46,7 @@ impl StalenessFold {
 
     /// Rounds client i has missed since it last made a barrier.
     pub fn age(&self, i: usize) -> u64 {
-        self.age[i]
+        self.age.get(i)
     }
 
     /// Whether any *participant* carries a stale model this round. False
@@ -49,8 +54,8 @@ impl StalenessFold {
     /// guarantee at `staleness_bound = 0` hangs on taking that branch).
     pub fn any_stale(&self, part: &[bool]) -> bool {
         part.iter()
-            .zip(&self.age)
-            .any(|(&in_round, &age)| in_round && age > 0)
+            .enumerate()
+            .any(|(i, &in_round)| in_round && self.age.get(i) > 0)
     }
 
     /// Staleness-weighted average over the participants, written back to
@@ -64,7 +69,7 @@ impl StalenessFold {
             if !part[i] {
                 continue;
             }
-            let w = 1.0 / (1.0 + self.age[i] as f64).powf(self.p);
+            let w = 1.0 / (1.0 + self.age.get(i) as f64).powf(self.p);
             wsum += w;
             for (a, &x) in self.acc.iter_mut().zip(arena.row(i)) {
                 *a += w * x as f64;
@@ -100,16 +105,13 @@ impl StalenessFold {
         let mut participants = 0u64;
         for i in 0..n {
             if part[i] {
-                tau_sum += self.age[i] as f64;
+                tau_sum += self.age.get(i) as f64;
                 participants += 1;
                 synced.row_mut(i).copy_from_slice(thetas.row(i));
-                self.age[i] = 0;
-            } else {
-                self.age[i] += 1;
-                if self.age[i] > bound {
-                    thetas.row_mut(i).copy_from_slice(synced.row(i));
-                    self.age[i] = 0;
-                }
+                self.age.reset(i);
+            } else if self.age.increment(i) > bound {
+                thetas.row_mut(i).copy_from_slice(synced.row(i));
+                self.age.reset(i);
             }
         }
         if participants == 0 {

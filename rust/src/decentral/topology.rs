@@ -301,6 +301,68 @@ mod tests {
     }
 
     #[test]
+    fn tiny_fleets_are_deduped_self_free_and_stochastic() {
+        // Regression for the tiny-fleet duplicate-neighbor bug: on a ring
+        // with n = 2 the clockwise and counter-clockwise neighbors are the
+        // same node, and the torus wraps rows onto themselves — the raw
+        // offset arithmetic emits duplicates and self-edges that would
+        // corrupt the push-sum column weights (1/(m_j + 1) with m_j
+        // counting ghost edges). Property: for every topology at every
+        // fleet size 1..=8, over several rounds, the emitted lists are
+        // sorted, duplicate-free, self-free, in-range, and induce a
+        // column-stochastic mixing matrix.
+        for t in PeerTopology::all() {
+            for n in 1usize..=8 {
+                for round in 0..4u64 {
+                    let outs = neighbors(t, n, round, 3);
+                    assert_eq!(outs.len(), n, "{} n={n}", t.label());
+                    for (i, v) in outs.iter().enumerate() {
+                        let mut sorted = v.clone();
+                        sorted.sort_unstable();
+                        sorted.dedup();
+                        assert_eq!(v, &sorted, "{} n={n} r={round} i={i}: dup/unsorted", t.label());
+                        assert!(!v.contains(&i), "{} n={n} r={round} i={i}: self-edge", t.label());
+                        assert!(v.iter().all(|&j| j < n), "{} n={n} i={i}: out of range", t.label());
+                    }
+                    let m = mixing_matrix(&outs);
+                    assert!(is_column_stochastic(&m, n), "{} n={n} r={round}", t.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn n_two_collapses_every_topology_to_the_single_edge() {
+        // With two nodes the only possible edge set is each pointing at
+        // the other — and its mixing matrix is the exact 1/2-1/2 average.
+        for t in PeerTopology::all() {
+            for round in 0..3u64 {
+                let outs = neighbors(t, 2, round, 3);
+                assert_eq!(outs[0], vec![1], "{} r={round}", t.label());
+                assert_eq!(outs[1], vec![0], "{} r={round}", t.label());
+                let m = mixing_matrix(&outs);
+                assert!(is_doubly_stochastic(&m, 2), "{}", t.label());
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_topologies_stay_doubly_stochastic_at_tiny_sizes() {
+        for t in [
+            PeerTopology::Ring,
+            PeerTopology::Torus,
+            PeerTopology::Exponential,
+            PeerTopology::Full,
+        ] {
+            for n in 2usize..=8 {
+                let outs = neighbors(t, n, 1, 2);
+                let m = mixing_matrix(&outs);
+                assert!(is_doubly_stochastic(&m, n), "{} n={n}", t.label());
+            }
+        }
+    }
+
+    #[test]
     fn random_regular_need_not_be_doubly_stochastic() {
         // In-degrees vary round to round; column-stochasticity is the
         // invariant, double stochasticity is not.

@@ -27,6 +27,7 @@
 
 pub mod algo;
 pub mod bench_support;
+pub mod cohort;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -79,6 +79,17 @@ impl ModelArena {
         &mut self.data[i * self.d..(i + 1) * self.d]
     }
 
+    /// Resize to `n` rows of the same width, reusing the existing
+    /// allocation (capacity only ever grows). New rows are zeroed; rows
+    /// that survive the resize keep their bytes. This is what lets one
+    /// cohort-sized arena be reused across rounds of varying cohort size
+    /// without per-round allocation past the high-water mark
+    /// (DESIGN.md §9).
+    pub fn reset_rows(&mut self, n: usize) {
+        self.data.resize(n * self.d, 0.0);
+        self.n = n;
+    }
+
     /// The whole `n * d` block (tests, norm sweeps).
     pub fn data(&self) -> &[f32] {
         &self.data
@@ -151,5 +162,20 @@ mod tests {
         let a = ModelArena::zeros(0, 5);
         assert_eq!(a.n_rows(), 0);
         assert!(a.to_vecs().is_empty());
+    }
+
+    #[test]
+    fn reset_rows_reuses_capacity_and_zeroes_new_rows() {
+        let mut a = ModelArena::zeros(4, 3);
+        a.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        let cap = a.data.capacity();
+        a.reset_rows(2);
+        assert_eq!(a.n_rows(), 2);
+        assert_eq!(a.row(0), &[1.0, 2.0, 3.0], "surviving rows keep bytes");
+        assert_eq!(a.data.capacity(), cap, "shrinking never reallocates");
+        a.reset_rows(4);
+        assert_eq!(a.n_rows(), 4);
+        assert_eq!(a.data.capacity(), cap, "regrowth within capacity is free");
+        assert!(a.row(3).iter().all(|&v| v == 0.0), "regrown rows are zeroed");
     }
 }

@@ -88,9 +88,18 @@ fn main() -> anyhow::Result<()> {
         "",
         "timeline sink granularity: off (bounded memory on long sweeps; no per-round stats), rounds (default; feeds --out-timeline and the summary lines), steps (per-step event sink; disables the simnet coalesced fast path)",
     )
+    .opt(
+        "cohort-budget",
+        "",
+        "cohort mode: client-store budget in live entries (0 = unbounded, lossless)",
+    )
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
     .opt("out-timeline", "", "write per-round timing breakdown CSV to this path")
+    .flag(
+        "cohort",
+        "route the run through the cohort-sparse client store (BSP only; bit-for-bit identical to the dense path, memory proportional to the sampled cohort)",
+    )
     .flag("noniid", "use the paper's Non-IID partition")
     .flag("paper-defaults", "start from tuned paper hyperparameters for the workload+algorithm")
     .parse();
@@ -128,11 +137,15 @@ fn main() -> anyhow::Result<()> {
         ("staleness-bound", "staleness_bound"),
         ("down-compressor", "down_compressor"),
         ("timeline", "timeline"),
+        ("cohort-budget", "cohort_budget"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
             cfg.apply_override(key, v)?;
         }
+    }
+    if args.get_flag("cohort") {
+        cfg.apply_override("cohort", "true")?;
     }
     if args.get_flag("noniid") {
         cfg.apply_override("iid", "false")?;

@@ -34,9 +34,11 @@ use crate::sim::{ComputeModel, NetworkModel};
 
 /// Split labels for the non-client streams. Client timing streams use
 /// labels 1..=n, so the auxiliary streams sit far above any realistic
-/// fleet size.
-const CHURN_STREAM_BASE: u64 = 1 << 40;
-const SAMPLING_STREAM: u64 = 1 << 41;
+/// fleet size. `pub(crate)` so the sparse engine
+/// ([`crate::simnet::sparse`]) materializes the *identical* streams
+/// lazily (split is stateless in the parent — DESIGN.md §9).
+pub(crate) const CHURN_STREAM_BASE: u64 = 1 << 40;
+pub(crate) const SAMPLING_STREAM: u64 = 1 << 41;
 const GOSSIP_STREAM: u64 = 1 << 42;
 
 struct Client {
@@ -1297,6 +1299,59 @@ mod tests {
             credited |= rt.max_barrier_wait > 0.0 && rt.comm_seconds == 0.0;
         }
         assert!(credited, "overlap never absorbed the exchange span");
+    }
+
+    #[test]
+    fn churn_streams_replay_lazily_per_client() {
+        // The per-client churn stream is `root.split(CHURN_STREAM_BASE + i)`
+        // and `split` is stateless in the parent, so the stream a lazily
+        // materialized client would draw — split off at any later point, in
+        // any order — is bit-identical to the one the dense engine built
+        // eagerly at construction. This is the mechanism that lets the
+        // cohort store sparsify the fleet without perturbing a single
+        // `ClientJoined`/`ClientLeft` decision.
+        let profile = ClusterProfile::elastic_federated();
+        let n = 64usize;
+        let root = Rng::new(33 ^ 0x51D_CAFE);
+
+        // Dense: all clients' churn decisions, drawn round-robin the way
+        // `draw_membership` interleaves them (client-ascending per round).
+        let mut dense: Vec<Rng> =
+            (0..n).map(|i| root.split(CHURN_STREAM_BASE + i as u64)).collect();
+        let mut dense_present = vec![true; n];
+        let mut dense_events: Vec<Vec<bool>> = vec![Vec::new(); n];
+        for _ in 0..50 {
+            for i in 0..n {
+                let flip = if dense_present[i] {
+                    profile.draw_leave(&mut dense[i])
+                } else {
+                    profile.draw_join(&mut dense[i])
+                };
+                if flip {
+                    dense_present[i] = !dense_present[i];
+                }
+                dense_events[i].push(flip);
+            }
+        }
+
+        // Lazy: materialize each client's stream on its own, in reverse
+        // order, and replay its 50 rounds in isolation.
+        for i in (0..n).rev() {
+            let mut rng = root.split(CHURN_STREAM_BASE + i as u64);
+            let mut present = true;
+            for (r, &expect) in dense_events[i].iter().enumerate() {
+                let flip = if present {
+                    profile.draw_leave(&mut rng)
+                } else {
+                    profile.draw_join(&mut rng)
+                };
+                if flip {
+                    present = !present;
+                }
+                assert_eq!(flip, expect, "client {i} round {r}");
+            }
+            assert_eq!(present, dense_present[i], "client {i}");
+        }
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //!   clients that made the barrier; a fraction in (0, 1] adds FedAvg-style
 //!   client sampling), and cluster profiles can add cross-round
 //!   join/leave churn (`elastic-federated`).
+//! * [`SparseSimNet`] (sparse.rs) — bit-identical round pricing with
+//!   cohort-proportional memory: per-client streams materialized lazily on
+//!   first participation, `Fraction` sampling run as a virtual partial
+//!   Fisher-Yates, participant sets returned as sorted id lists instead of
+//!   `O(N)` masks. The engine behind `--cohort` million-client sweeps
+//!   (DESIGN.md §9).
 //!
 //! Calibration contract: under the zero-variance `homogeneous` profile the
 //! engine reproduces the closed-form `SimClock` totals *bit-for-bit*
@@ -41,9 +47,11 @@ pub mod engine;
 pub mod event;
 pub mod participation;
 pub mod profile;
+pub mod sparse;
 pub mod timeline;
 
 pub use engine::SimNet;
+pub use sparse::SparseSimNet;
 pub use event::EventKind;
 pub use participation::{Participation, ParticipationPolicy};
 pub use profile::ClusterProfile;

@@ -1,0 +1,631 @@
+//! Sparse round pricing for million-client fleets.
+//!
+//! [`SparseSimNet`] prices the same rounds as [`super::SimNet`]'s
+//! coalesced fast path — same streams, same draw order, same float
+//! folds, bit-identical [`RoundStat`]s and participant sets — without
+//! ever materializing `O(N)` per-round vectors. Per-client timing state
+//! (the permanent speed multiplier plus the crash/step-factor stream) is
+//! materialized lazily on a client's *first active round* and cached;
+//! [`crate::rng::Rng::split`] is stateless in the parent, so the lazily
+//! split stream is the exact stream the dense engine built eagerly at
+//! construction (property: `engine::tests::churn_streams_replay_lazily_per_client`,
+//! and the dense-parity tests below).
+//!
+//! Membership is streamed the same way:
+//!
+//! * Under [`ParticipationPolicy::Fraction`] with a churn-free profile the
+//!   present pool is the identity permutation, so the partial Fisher-Yates
+//!   runs *virtually* — only the `O(k)` displaced positions are tracked in
+//!   a map while the `below(pool_len - i)` draw sequence stays verbatim.
+//! * Churny profiles (nonzero `leave_prob`/`join_prob`) draw per-client
+//!   churn exactly like the dense engine, which is inherently `O(N)` per
+//!   round; the engine keeps one rng + presence bit per client for that
+//!   case (still no per-round allocation). Million-client sweeps target
+//!   churn-free profiles with `Fraction` sampling, where a round costs
+//!   `O(k log k)` time and the engine's memory is proportional to the
+//!   distinct clients that ever participated (DESIGN.md §9).
+//!
+//! The sparse engine has no step-event sink (`Detail::Steps` is rejected
+//! at construction): a step timeline is `O(N x k)` by definition, which is
+//! exactly what this engine exists to avoid.
+
+use super::participation::ParticipationPolicy;
+use super::profile::ClusterProfile;
+use super::timeline::{Detail, RoundStat, Timeline};
+use crate::comm::{compress::CompressorSpec, Algorithm};
+use crate::rng::Rng;
+use crate::sim::{ComputeModel, NetworkModel};
+use std::collections::HashMap;
+
+/// Lazily materialized per-client timing state: the same `(rng, speed)`
+/// pair the dense engine's `Client` carries, minus the presence bit
+/// (membership lives in [`ChurnState`] / the sampler).
+struct ClientTiming {
+    rng: Rng,
+    speed: f64,
+}
+
+/// Per-client churn streams + presence bits, built only for profiles that
+/// can actually churn (`leave_prob > 0 || join_prob > 0`). Dense `O(N)`
+/// state by necessity — every client's membership evolves every round —
+/// but allocated once and reused, never per round.
+struct ChurnState {
+    rngs: Vec<Rng>,
+    present: Vec<bool>,
+}
+
+/// A round-start membership draw waiting for its pricing call (the sparse
+/// twin of the dense engine's `PendingRound`). `active` is sorted
+/// ascending — the order every dense per-client loop visits clients in.
+struct PendingSparse {
+    active: Vec<usize>,
+    joined: u32,
+    left: u32,
+}
+
+/// Sparse discrete-event round pricer: bit-identical to [`super::SimNet`]
+/// with cohort-proportional memory.
+pub struct SparseSimNet {
+    profile: ClusterProfile,
+    net: NetworkModel,
+    cm: ComputeModel,
+    alg: Algorithm,
+    n: usize,
+    dim: usize,
+    detail: Detail,
+    root: Rng,
+    /// Timing streams for every client that has ever been active.
+    timing: HashMap<usize, ClientTiming>,
+    churn: Option<ChurnState>,
+    link_rng: Rng,
+    part_rng: Rng,
+    down: Option<CompressorSpec>,
+    policy: ParticipationPolicy,
+    pending: Option<PendingSparse>,
+    now: f64,
+    round: u64,
+    pub timeline: Timeline,
+    pub events_processed: u64,
+    /// Virtual Fisher-Yates scratch (position -> value for the few
+    /// positions the partial shuffle has touched).
+    displaced: HashMap<usize, usize>,
+    /// Per-round completion times, aligned with the active list. Reused.
+    completion: Vec<f64>,
+}
+
+impl SparseSimNet {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        profile: ClusterProfile,
+        net: NetworkModel,
+        cm: ComputeModel,
+        alg: Algorithm,
+        n_clients: usize,
+        dim: usize,
+        seed: u64,
+        detail: Detail,
+    ) -> Self {
+        assert!(n_clients >= 1, "simnet needs at least one client");
+        assert!(
+            detail != Detail::Steps,
+            "the sparse engine has no step-event sink (a step timeline is O(N x k)); \
+             use SimNet for Detail::Steps"
+        );
+        let root = Rng::new(seed ^ 0x51D_CAFE);
+        let churn = if profile.leave_prob > 0.0 || profile.join_prob > 0.0 {
+            Some(ChurnState {
+                rngs: (0..n_clients)
+                    .map(|i| root.split(super::engine::CHURN_STREAM_BASE + i as u64))
+                    .collect(),
+                present: vec![true; n_clients],
+            })
+        } else {
+            None
+        };
+        Self {
+            profile,
+            net,
+            cm,
+            alg,
+            n: n_clients,
+            dim,
+            detail,
+            link_rng: root.split(0),
+            part_rng: root.split(super::engine::SAMPLING_STREAM),
+            root,
+            timing: HashMap::new(),
+            churn,
+            down: None,
+            policy: ParticipationPolicy::All,
+            pending: None,
+            now: 0.0,
+            round: 0,
+            timeline: Timeline::default(),
+            events_processed: 0,
+            displaced: HashMap::new(),
+            completion: Vec::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: ParticipationPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy(&self) -> ParticipationPolicy {
+        self.policy
+    }
+
+    /// See [`super::SimNet::set_downlink`].
+    pub fn set_downlink(&mut self, down: Option<CompressorSpec>) {
+        self.down = down;
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn rounds_priced(&self) -> u64 {
+        self.round
+    }
+
+    /// Distinct clients whose timing state has ever been materialized —
+    /// the engine's memory footprint in client units (the scale example's
+    /// headline stat).
+    pub fn distinct_clients(&self) -> usize {
+        self.timing.len()
+    }
+
+    pub fn present_clients(&self) -> usize {
+        match &self.churn {
+            Some(ch) => ch.present.iter().filter(|&&p| p).count(),
+            None => self.n,
+        }
+    }
+
+    pub fn take_timeline(&mut self) -> Timeline {
+        std::mem::take(&mut self.timeline)
+    }
+
+    /// Draw the round's active set: cross-round churn (dense per-client
+    /// draws, only for churny profiles) and, under `Fraction`, the sampled
+    /// subset. Draw-for-draw identical to the dense
+    /// `SimNet::draw_membership` on every stream it touches.
+    fn draw_membership(&mut self) -> PendingSparse {
+        let profile = self.profile;
+        let n = self.n;
+        let mut joined = 0u32;
+        let mut left = 0u32;
+        if let Some(ch) = &mut self.churn {
+            for i in 0..n {
+                if ch.present[i] {
+                    if profile.draw_leave(&mut ch.rngs[i]) {
+                        ch.present[i] = false;
+                        left += 1;
+                    }
+                } else if profile.draw_join(&mut ch.rngs[i]) {
+                    ch.present[i] = true;
+                    joined += 1;
+                }
+            }
+        }
+
+        let active: Vec<usize> = match self.policy {
+            ParticipationPolicy::Fraction(frac) => self.sample_fraction(frac),
+            _ => match &self.churn {
+                Some(ch) => (0..n).filter(|&i| ch.present[i]).collect(),
+                None => (0..n).collect(),
+            },
+        };
+        PendingSparse {
+            active,
+            joined,
+            left,
+        }
+    }
+
+    /// The `Fraction` policy's deterministic partial Fisher-Yates over the
+    /// present pool, returning the sampled ids sorted ascending. With no
+    /// churn state the pool is the identity permutation `0..n`, so the
+    /// shuffle runs virtually: reads and swaps go through the `displaced`
+    /// map (`O(k)` entries) while the `below(pool_len - i)` call sequence
+    /// — and therefore the sampled set — matches the dense engine bit for
+    /// bit.
+    fn sample_fraction(&mut self, frac: f64) -> Vec<usize> {
+        match &self.churn {
+            None => {
+                let len = self.n;
+                let m = ((frac * len as f64).ceil() as usize).clamp(1, len);
+                self.displaced.clear();
+                let mut selected = Vec::with_capacity(m);
+                for i in 0..m {
+                    let j = i + self.part_rng.below(len - i);
+                    let vj = *self.displaced.get(&j).unwrap_or(&j);
+                    let vi = *self.displaced.get(&i).unwrap_or(&i);
+                    selected.push(vj);
+                    self.displaced.insert(j, vi);
+                    self.displaced.insert(i, vj);
+                }
+                selected.sort_unstable();
+                selected
+            }
+            Some(ch) => {
+                let mut pool: Vec<usize> =
+                    (0..self.n).filter(|&i| ch.present[i]).collect();
+                if pool.is_empty() {
+                    return Vec::new();
+                }
+                let m = ((frac * pool.len() as f64).ceil() as usize).clamp(1, pool.len());
+                for i in 0..m {
+                    let j = i + self.part_rng.below(pool.len() - i);
+                    pool.swap(i, j);
+                }
+                pool.truncate(m);
+                pool.sort_unstable();
+                pool
+            }
+        }
+    }
+
+    /// Draw (and cache) the round's membership; see
+    /// [`super::SimNet::begin_round`]. Returns the active client ids,
+    /// sorted ascending — the cohort the coordinator materializes state
+    /// for. Idempotent until the next pricing call consumes the draw.
+    pub fn begin_round(&mut self) -> &[usize] {
+        if self.pending.is_none() {
+            let p = self.draw_membership();
+            self.pending = Some(p);
+        }
+        &self.pending.as_ref().expect("pending round just drawn").active
+    }
+
+    fn timing_mut(&mut self, i: usize) -> &mut ClientTiming {
+        if !self.timing.contains_key(&i) {
+            // Identical to the dense constructor's eager per-client setup:
+            // split the timing stream, draw the permanent speed.
+            let mut rng = self.root.split(i as u64 + 1);
+            let speed = self.profile.draw_client_speed(&mut rng);
+            self.timing.insert(i, ClientTiming { rng, speed });
+        }
+        self.timing.get_mut(&i).expect("just inserted")
+    }
+
+    /// Price one communication round — the sparse twin of
+    /// [`super::SimNet::price_round_compressed`], returning the
+    /// participant ids (sorted ascending) instead of an `O(N)` mask.
+    /// Every stream draw, float fold, and [`RoundStat`] field is
+    /// bit-identical to the dense coalesced path (tests below pin this
+    /// across preset x policy).
+    pub fn price_round_compressed(
+        &mut self,
+        steps: u64,
+        batch: usize,
+        period: u64,
+        comp: CompressorSpec,
+    ) -> (RoundStat, Vec<usize>) {
+        assert!(steps > 0, "a round prices at least one local step");
+        let profile = self.profile;
+        let g = self.cm.grad_seconds(batch, self.dim);
+        let start = self.now;
+        let nominal_span = g * steps as f64;
+        let deadline = if profile.timeout_factor > 0.0 {
+            profile.timeout_factor * nominal_span
+        } else {
+            f64::INFINITY
+        };
+
+        let PendingSparse {
+            active,
+            joined,
+            left,
+        } = match self.pending.take() {
+            Some(p) => p,
+            None => self.draw_membership(),
+        };
+
+        // Per-client completion times: the dense coalesced accumulation,
+        // visiting only the active ids (ascending — the order the dense
+        // loop reaches them in, so the per-stream draw order matches).
+        let mut completion = std::mem::take(&mut self.completion);
+        completion.clear();
+        let mut pops = 0u64;
+        for &i in &active {
+            let t = self.timing_mut(i);
+            if profile.draw_crash(&mut t.rng) {
+                completion.push(f64::INFINITY);
+                continue;
+            }
+            let speed = t.speed;
+            let mut done = 0.0f64;
+            for _ in 0..steps {
+                let factor = profile.draw_step_factor(&mut t.rng);
+                done += g * speed * factor;
+            }
+            completion.push(done);
+            pops += steps;
+        }
+        self.events_processed += pops + 3; // + round start/barrier/allreduce
+
+        // Barrier release: identical 3-case fold as the dense engine
+        // (non-active clients contribute +inf there and are filtered from
+        // every fold, so restricting to the active list changes nothing).
+        let mut active_done = 0.0f64;
+        for &c in &completion {
+            active_done = active_done.max(c);
+        }
+        let exit = if active_done <= deadline && active_done.is_finite() {
+            active_done
+        } else if deadline.is_finite() {
+            deadline
+        } else {
+            completion
+                .iter()
+                .cloned()
+                .filter(|c| c.is_finite())
+                .fold(0.0f64, f64::max)
+        };
+        let mut dropped = 0u32;
+        for &c in &completion {
+            if c > exit {
+                dropped += 1;
+            }
+        }
+
+        let mut max_wait = 0.0f64;
+        let mut wait_sum = 0.0f64;
+        let n_active = active.len();
+        for &c in &completion {
+            let wait = exit - c.min(exit);
+            max_wait = max_wait.max(wait);
+            wait_sum += wait;
+        }
+        let mean_wait = wait_sum / n_active.max(1) as f64;
+
+        // Participant ids: the full fleet under `All` (the legacy
+        // invariant), else the active clients that made the barrier.
+        let participants: Vec<usize> = match self.policy {
+            ParticipationPolicy::All => (0..self.n).collect(),
+            _ => active
+                .iter()
+                .zip(&completion)
+                .filter(|&(_, &c)| c <= exit)
+                .map(|(&i, _)| i)
+                .collect(),
+        };
+        let n_part = participants.len();
+
+        let payload_wire = comp.payload_bytes(self.dim);
+        let payload_down = self.down.unwrap_or(comp).payload_bytes(self.dim);
+        let base_comm = self.net.updown_seconds(
+            self.alg,
+            n_part,
+            payload_wire as f64,
+            payload_down as f64,
+        );
+        let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+        let comm = if n_part <= 1 { 0.0 } else { drawn };
+
+        let stat = RoundStat {
+            round: self.round,
+            steps,
+            k: period,
+            start,
+            compute_span: exit,
+            comm_seconds: comm,
+            max_barrier_wait: max_wait,
+            mean_barrier_wait: mean_wait,
+            dropped,
+            participants: n_part as u32,
+            joined,
+            left,
+            bytes_exact: crate::comm::allreduce::bytes_per_client(self.alg, n_part, self.dim),
+            bytes_wire: crate::comm::allreduce::bytes_per_client_payload(
+                self.alg,
+                n_part,
+                payload_wire,
+            ),
+            bytes_wire_down: crate::comm::allreduce::bytes_per_client_downlink(
+                self.alg,
+                n_part,
+                payload_down,
+            ),
+            compression_ratio: comp.payload_ratio(self.dim),
+        };
+        if self.detail != Detail::Off {
+            self.timeline.rounds.push(stat);
+        }
+        self.now = stat.end();
+        self.round += 1;
+        self.completion = completion;
+        (stat, participants)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SimNet;
+    use super::*;
+
+    fn dense(profile: ClusterProfile, n: usize, seed: u64, policy: ParticipationPolicy) -> SimNet {
+        SimNet::new(
+            profile,
+            NetworkModel::default(),
+            ComputeModel::default(),
+            Algorithm::Ring,
+            n,
+            1_000,
+            seed,
+            Detail::Rounds,
+        )
+        .with_policy(policy)
+    }
+
+    fn sparse(
+        profile: ClusterProfile,
+        n: usize,
+        seed: u64,
+        policy: ParticipationPolicy,
+    ) -> SparseSimNet {
+        SparseSimNet::new(
+            profile,
+            NetworkModel::default(),
+            ComputeModel::default(),
+            Algorithm::Ring,
+            n,
+            1_000,
+            seed,
+            Detail::Rounds,
+        )
+        .with_policy(policy)
+    }
+
+    #[test]
+    fn matches_dense_engine_bitwise_across_presets_and_policies() {
+        for policy in [
+            ParticipationPolicy::All,
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+            ParticipationPolicy::Fraction(0.001),
+        ] {
+            for profile in [
+                ClusterProfile::homogeneous(),
+                ClusterProfile::mild_hetero(),
+                ClusterProfile::heavy_tail_stragglers(),
+                ClusterProfile::flaky_federated(),
+                ClusterProfile::elastic_federated(),
+            ] {
+                let mut d = dense(profile, 8, 21, policy);
+                let mut s = sparse(profile, 8, 21, policy);
+                for r in 0..120 {
+                    let (sa, pa) = d.price_round_compressed(
+                        6,
+                        16,
+                        7,
+                        CompressorSpec::TopK { frac: 0.25 },
+                    );
+                    let (sb, pb) = s.price_round_compressed(
+                        6,
+                        16,
+                        7,
+                        CompressorSpec::TopK { frac: 0.25 },
+                    );
+                    assert_eq!(sa, sb, "{} {policy:?} round {r}", profile.name);
+                    assert_eq!(pa.indices(), pb, "{} {policy:?} round {r}", profile.name);
+                }
+                assert_eq!(d.now().to_bits(), s.now().to_bits(), "{}", profile.name);
+                assert_eq!(d.events_processed, s.events_processed, "{}", profile.name);
+                assert_eq!(d.timeline.rounds, s.timeline.rounds, "{}", profile.name);
+            }
+        }
+    }
+
+    #[test]
+    fn begin_round_split_matches_dense_and_is_idempotent() {
+        for policy in [
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            let mut d = dense(ClusterProfile::elastic_federated(), 8, 13, policy);
+            let mut s = sparse(ClusterProfile::elastic_federated(), 8, 13, policy);
+            for r in 0..100 {
+                let dense_active = d.begin_round().to_vec();
+                let a = s.begin_round().to_vec();
+                let b = s.begin_round().to_vec();
+                assert_eq!(a, b, "idempotent until priced, round {r}");
+                let expect: Vec<usize> = (0..8).filter(|&i| dense_active[i]).collect();
+                assert_eq!(a, expect, "{policy:?} round {r}");
+                let (sa, pa) = d.price_round_compressed(5, 16, 5, CompressorSpec::Identity);
+                let (sb, pb) = s.price_round_compressed(5, 16, 5, CompressorSpec::Identity);
+                assert_eq!(sa, sb, "round {r}");
+                assert_eq!(pa.indices(), pb, "round {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn downlink_override_matches_dense() {
+        let mut d = dense(
+            ClusterProfile::heavy_tail_stragglers(),
+            6,
+            3,
+            ParticipationPolicy::Arrived,
+        );
+        let mut s = sparse(
+            ClusterProfile::heavy_tail_stragglers(),
+            6,
+            3,
+            ParticipationPolicy::Arrived,
+        );
+        d.set_downlink(Some(CompressorSpec::TopK { frac: 0.25 }));
+        s.set_downlink(Some(CompressorSpec::TopK { frac: 0.25 }));
+        for r in 0..40 {
+            let (sa, pa) = d.price_round_compressed(5, 16, 5, CompressorSpec::Identity);
+            let (sb, pb) = s.price_round_compressed(5, 16, 5, CompressorSpec::Identity);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa.indices(), pb, "round {r}");
+        }
+    }
+
+    #[test]
+    fn memory_is_cohort_proportional_without_churn() {
+        // 10k clients at 0.1% participation: after 20 rounds the engine
+        // has materialized timing for (at most) the distinct participants,
+        // nowhere near the fleet.
+        let mut s = sparse(
+            ClusterProfile::mild_hetero(),
+            10_000,
+            5,
+            ParticipationPolicy::Fraction(0.001),
+        );
+        for _ in 0..20 {
+            let (rt, parts) = s.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+            assert!(rt.participants >= 1, "fraction floor guarantees a participant");
+            assert_eq!(parts.len() as u32, rt.participants);
+            assert_eq!(parts.len(), 10, "ceil(0.001 * 10_000)");
+        }
+        assert!(s.distinct_clients() <= 20 * 10);
+        assert!(s.distinct_clients() < 10_000 / 10);
+    }
+
+    #[test]
+    fn tiny_fleet_tiny_fraction_always_has_a_participant() {
+        // Satellite regression: frac 0.001 at n=8 must floor to one
+        // sampled client, not an empty cohort, every single round.
+        let mut s = sparse(
+            ClusterProfile::homogeneous(),
+            8,
+            11,
+            ParticipationPolicy::Fraction(0.001),
+        );
+        for r in 0..100 {
+            let active = s.begin_round().to_vec();
+            assert_eq!(active.len(), 1, "round {r}");
+            let (rt, parts) = s.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+            assert_eq!(parts.len(), 1, "round {r}");
+            assert_eq!(rt.participants, 1, "round {r}");
+            assert_eq!(rt.comm_seconds, 0.0, "lone participant pays no comm");
+        }
+    }
+
+    #[test]
+    fn empty_cohorts_only_arise_from_full_churn_out() {
+        // A profile that drains the fleet (certain leave, no rejoin): once
+        // everyone has churned out, Fraction rounds price with zero
+        // participants and zero comm — the accounting path the coordinator
+        // records as empty_rounds.
+        let mut p = ClusterProfile::homogeneous();
+        p.leave_prob = 1.0;
+        let mut s = sparse(p, 4, 2, ParticipationPolicy::Fraction(0.5));
+        let (_, first) = s.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+        assert!(first.is_empty(), "everyone left before round 0 priced");
+        let (rt, parts) = s.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+        assert!(parts.is_empty());
+        assert_eq!(rt.participants, 0);
+        assert_eq!(rt.comm_seconds, 0.0);
+        assert_eq!(rt.compute_span, 0.0);
+    }
+}

@@ -1,0 +1,310 @@
+//! Cohort-sparse execution bit-identity suite (DESIGN.md §9).
+//!
+//! PR 7 restructures round state around the *sampled cohort*: a sparse
+//! client store (last-synced snapshot + sampler position + lazy EF slot),
+//! cohort-sized arenas, and the streaming `SparseSimNet` pricer. The
+//! contract is that none of it changes *what is computed*: with
+//! `cohort = true` the run must equal the dense `coordinator::run` path
+//! bitwise — every trace point, timeline row, and accounting total —
+//! across cluster preset x participation policy x compressor (plus
+//! controllers, collectives, and downlink compression). Small-fleet
+//! regressions ride along: a tiny `Fraction` never produces an empty
+//! cohort by sampling (floor of one participant), and rounds emptied by
+//! full churn-out are priced and counted, not crashed on.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, ControllerSpec, Variant};
+use stl_sgd::comm::{Algorithm, CompressionSchedule};
+use stl_sgd::coordinator::cohort::run_cohort_detailed;
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig, Trace};
+use stl_sgd::data::{partition, Shard};
+use stl_sgd::data::synth;
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::Rng;
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+
+fn setup(n: usize) -> (Arc<NativeLogreg>, Vec<Shard>) {
+    let ds = Arc::new(synth::a9a_like(2, 512, 16));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, n, &mut Rng::new(0));
+    (oracle, shards)
+}
+
+fn spec() -> AlgoSpec {
+    // Multi-stage STL-SC: stage anneals, anchor resets, phase-truncated
+    // rounds — the schedule shapes the sampler fast-forward segments.
+    AlgoSpec {
+        variant: Variant::StlSc,
+        eta1: 0.3,
+        k1: 4.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    }
+}
+
+fn assert_traces_bitwise(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.iter, pb.iter, "{tag}: iter");
+        assert_eq!(pa.rounds, pb.rounds, "{tag}: rounds @ iter {}", pa.iter);
+        assert_eq!(pa.epoch.to_bits(), pb.epoch.to_bits(), "{tag}: epoch @ iter {}", pa.iter);
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{tag}: loss @ iter {}", pa.iter);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{tag}: accuracy @ iter {}",
+            pa.iter
+        );
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{tag}: sim_seconds @ iter {}",
+            pa.iter
+        );
+        assert_eq!(pa.stage, pb.stage, "{tag}: stage @ iter {}", pa.iter);
+        assert_eq!(pa.eta.to_bits(), pb.eta.to_bits(), "{tag}: eta @ iter {}", pa.iter);
+        assert_eq!(pa.k, pb.k, "{tag}: k @ iter {}", pa.iter);
+        assert_eq!(pa.realized_k, pb.realized_k, "{tag}: realized_k @ iter {}", pa.iter);
+    }
+    assert_eq!(a.comm, b.comm, "{tag}: comm stats");
+    assert_eq!(
+        a.clock.compute_seconds.to_bits(),
+        b.clock.compute_seconds.to_bits(),
+        "{tag}: compute clock"
+    );
+    assert_eq!(
+        a.clock.comm_seconds.to_bits(),
+        b.clock.comm_seconds.to_bits(),
+        "{tag}: comm clock"
+    );
+    assert_eq!(a.timeline, b.timeline, "{tag}: timeline");
+    assert_eq!(a.total_iters, b.total_iters, "{tag}: total iters");
+    assert_eq!(a.stopped_early, b.stopped_early, "{tag}: stop flag");
+}
+
+/// Dense run vs the same config routed through the cohort path; returns
+/// both traces for extra per-test assertions.
+fn run_both(cfg: &RunConfig, tag: &str) -> (Trace, Trace) {
+    assert!(!cfg.cohort, "run_both flips the flag itself");
+    let (oracle, shards) = setup(cfg.n_clients);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let mut e1 = NativeCompute::new(oracle.clone());
+    let dense = run(&mut e1, &shards, &phases, cfg, &theta0, "x");
+    let mut cfg2 = cfg.clone();
+    cfg2.cohort = true;
+    let mut e2 = NativeCompute::new(oracle);
+    let cohort = run(&mut e2, &shards, &phases, &cfg2, &theta0, "x");
+    assert_traces_bitwise(&dense, &cohort, tag);
+    (dense, cohort)
+}
+
+#[test]
+fn cohort_equals_dense_identity_all_on_every_preset() {
+    for profile in ClusterProfile::presets() {
+        let cfg = RunConfig {
+            n_clients: 4,
+            profile,
+            ..Default::default()
+        };
+        run_both(&cfg, &format!("identity/all/{}", profile.name));
+    }
+}
+
+#[test]
+fn cohort_equals_dense_across_policies_and_presets() {
+    for profile in ClusterProfile::presets() {
+        for policy in [
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+            ParticipationPolicy::Fraction(0.25),
+        ] {
+            let cfg = RunConfig {
+                n_clients: 4,
+                profile,
+                participation: policy,
+                ..Default::default()
+            };
+            run_both(&cfg, &format!("identity/{policy:?}/{}", profile.name));
+        }
+    }
+}
+
+#[test]
+fn cohort_equals_dense_across_compressors() {
+    for profile in [
+        ClusterProfile::homogeneous(),
+        ClusterProfile::flaky_federated(),
+        ClusterProfile::elastic_federated(),
+    ] {
+        for policy in [
+            ParticipationPolicy::All,
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            for comp in ["topk", "qsgd", "topk-anneal", "qsgd-anneal"] {
+                let cfg = RunConfig {
+                    n_clients: 4,
+                    profile,
+                    participation: policy,
+                    compression: CompressionSchedule::parse(comp).unwrap(),
+                    ..Default::default()
+                };
+                run_both(&cfg, &format!("{comp}/{policy:?}/{}", profile.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn cohort_equals_dense_across_controllers_collectives_and_downlink() {
+    for controller in [
+        ControllerSpec::CommRatio { target: 1.0 },
+        ControllerSpec::BarrierAware { frac: 0.05 },
+    ] {
+        for collective in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let cfg = RunConfig {
+                n_clients: 6, // non-power-of-two: exercises the tree tail fold
+                profile: ClusterProfile::heavy_tail_stragglers(),
+                participation: ParticipationPolicy::Fraction(0.5),
+                collective,
+                controller,
+                compression: CompressionSchedule::parse("topk").unwrap(),
+                down_compression: CompressionSchedule::parse("qsgd"),
+                ..Default::default()
+            };
+            run_both(&cfg, &format!("topk/frac/{controller:?}/{collective:?}"));
+        }
+    }
+}
+
+#[test]
+fn tiny_fraction_small_fleet_never_samples_an_empty_cohort() {
+    // Satellite regression at the coordinator level: `--participation
+    // 0.001` on a 4-client fleet floors to one sampled client per round
+    // (never zero), and the cohort path pins the dense trajectory.
+    let cfg = RunConfig {
+        n_clients: 4,
+        participation: ParticipationPolicy::Fraction(0.001),
+        ..Default::default()
+    };
+    let (dense, cohort) = run_both(&cfg, "frac-0.001/homogeneous");
+    assert_eq!(dense.comm.empty_rounds, 0);
+    assert_eq!(cohort.comm.empty_rounds, 0);
+    assert!(dense.timeline.rounds.iter().all(|r| r.participants == 1));
+    assert!(dense.comm.rounds > 0);
+}
+
+#[test]
+fn full_churn_out_prices_empty_rounds_with_accounting() {
+    // A fleet that drains (certain leave, no rejoin) must keep running:
+    // empty rounds are priced, counted in `empty_rounds`, and leave the
+    // server model untouched — identically on both paths.
+    let mut profile = ClusterProfile::homogeneous();
+    profile.leave_prob = 1.0;
+    profile.name = "drain";
+    let cfg = RunConfig {
+        n_clients: 4,
+        profile,
+        participation: ParticipationPolicy::Fraction(0.5),
+        ..Default::default()
+    };
+    let (dense, cohort) = run_both(&cfg, "drain/frac-0.5");
+    assert!(dense.comm.empty_rounds > 0, "the drained fleet never emptied a round");
+    assert_eq!(dense.comm.empty_rounds, cohort.comm.empty_rounds);
+    // Post-drain evals all see the frozen server model.
+    let last = dense.points.last().unwrap();
+    assert!(last.loss.is_finite());
+}
+
+#[test]
+fn unbounded_budget_matches_a_budget_that_never_evicts() {
+    // budget = 0 (unbounded) and budget >= fleet are both lossless and
+    // must agree bitwise with each other and the dense path.
+    let base = RunConfig {
+        n_clients: 4,
+        profile: ClusterProfile::elastic_federated(),
+        participation: ParticipationPolicy::Fraction(0.5),
+        compression: CompressionSchedule::parse("topk").unwrap(),
+        ..Default::default()
+    };
+    let (_, unbounded) = run_both(&base, "budget-0");
+    let mut roomy = base.clone();
+    roomy.cohort = true;
+    roomy.cohort_budget = 64;
+    let (oracle, shards) = setup(4);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let mut engine = NativeCompute::new(oracle);
+    let budgeted = run(&mut engine, &shards, &phases, &roomy, &theta0, "x");
+    assert_traces_bitwise(&unbounded, &budgeted, "budget-64");
+}
+
+#[test]
+fn tight_budget_evicts_and_still_converges() {
+    // A budget below the distinct-participant count forces evictions;
+    // lossy ones reset state to theta0 (counted), the run stays finite
+    // and the store never holds more than budget + cohort entries.
+    let (oracle, shards) = setup(6);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let cfg = RunConfig {
+        n_clients: 6,
+        profile: ClusterProfile::flaky_federated(),
+        participation: ParticipationPolicy::Fraction(0.34), // ceil(2.04) = 3 of 6 per round
+        cohort: true,
+        cohort_budget: 2,
+        ..Default::default()
+    };
+    let mut engine = NativeCompute::new(oracle);
+    let (trace, report) =
+        run_cohort_detailed(&mut engine, &shards, &phases, &cfg, &theta0, "x");
+    assert!(trace.final_loss().is_finite());
+    assert!(report.store.materialized > 2, "budget never stressed");
+    assert!(
+        report.store.evicted_clean + report.store.evicted_lossy > 0,
+        "no evictions under a tight budget"
+    );
+    assert!(report.live_entries <= 2 + report.peak_cohort);
+}
+
+#[test]
+fn scale_smoke_memory_tracks_the_cohort_not_the_fleet() {
+    // In-process million-light version of examples/million_clients.rs:
+    // 50k clients at 0.1% participation — state stays within the distinct
+    // participants (cohort-proportional), nowhere near the fleet.
+    let ds = Arc::new(synth::a9a_like(2, 512, 16));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, 16, &mut Rng::new(0));
+    let theta0 = vec![0.0f32; 16];
+    let spec = AlgoSpec {
+        variant: Variant::LocalSgd,
+        eta1: 0.3,
+        alpha: 1e-3,
+        k1: 4.0,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    };
+    let phases = spec.phases(32);
+    let cfg = RunConfig {
+        n_clients: 50_000,
+        participation: ParticipationPolicy::Fraction(0.001),
+        cohort: true,
+        eval_every_rounds: u64::MAX,
+        eval_accuracy: false,
+        timeline_detail: stl_sgd::simnet::Detail::Off,
+        ..Default::default()
+    };
+    let mut engine = NativeCompute::new(oracle);
+    let (trace, report) =
+        run_cohort_detailed(&mut engine, &shards, &phases, &cfg, &theta0, "x");
+    assert_eq!(trace.comm.rounds, 8);
+    assert_eq!(report.peak_cohort, 50); // ceil(0.001 * 50_000)
+    let ceiling = 8 * 50;
+    assert!(report.live_entries <= ceiling, "{}", report.live_entries);
+    assert!(report.priced_clients <= ceiling, "{}", report.priced_clients);
+    assert!(report.live_entries >= 50);
+}

@@ -76,6 +76,11 @@ if [[ $smoke -eq 1 ]]; then
             --clusters homogeneous,heavy-tail-stragglers \
             --out-dir "$smoke_out/gossip"
         test -s "$smoke_out/gossip/summary.csv"
+        # Cohort-sparse scale smoke at a reduced fleet (the full 1M run is
+        # the dedicated `scripts/ci.sh scale` stage); still asserts the
+        # flat-memory RSS bound.
+        RUSTFLAGS="$release_flags" cargo run --release --example million_clients -- \
+            --clients 100000 --participation 0.001 --assert-rss-mb 400
     fi
     echo "check.sh: smoke examples OK ($smoke_out)"
 fi

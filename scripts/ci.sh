@@ -21,6 +21,9 @@
 #           rust/benches/BENCH_baseline.json
 #   smoke   example binaries at tiny sizes (check.sh --smoke, build+test
 #           skipped -- the build/test stages own those)
+#   scale   million-client cohort-sparse smoke (examples/million_clients):
+#           1M clients at 0.1% participation must finish and stay under
+#           the peak-RSS bound -- the DESIGN.md §9 flat-memory gate
 #   fmt     cargo fmt --check
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -50,9 +53,17 @@ stage_bench() {
         --max-regress 0.25
 }
 stage_smoke() { scripts/check.sh --smoke --no-build --no-fmt; }
+stage_scale() {
+    # Flat-memory gate: a 1M-client fleet at 0.1% participation runs in
+    # seconds with cohort-proportional state. The RSS bound is generous
+    # (cohort state is ~1k clients x 16 dims; the bound mostly guards
+    # against accidental O(N) materialization, which costs hundreds of MB).
+    RUSTFLAGS="$release_flags" cargo run --release --example million_clients -- \
+        --clients 1000000 --participation 0.001 --assert-rss-mb 400
+}
 stage_fmt() { cargo fmt --check; }
 
-all_stages=(build test schema decentral bench smoke fmt)
+all_stages=(build test schema decentral bench smoke scale fmt)
 stages=("$@")
 if [[ ${#stages[@]} -eq 0 ]]; then
     stages=("${all_stages[@]}")
@@ -60,7 +71,7 @@ fi
 
 for stage in "${stages[@]}"; do
     case "$stage" in
-        build | test | schema | decentral | bench | smoke | fmt)
+        build | test | schema | decentral | bench | smoke | scale | fmt)
             banner "$stage"
             "stage_$stage"
             ;;
