@@ -1,0 +1,457 @@
+//! The determinism-contract lints (tentpole, ISSUE 8).
+//!
+//! Each lint takes the scanned source tree ([`super::SourceFile`]) and
+//! returns [`Violation`]s; `tests/test_invariants.rs` runs them over the
+//! real `rust/src/` (must be green) and over seeded fixture strings (must
+//! fire). The contracts:
+//!
+//! * **rng-streams** — every `Rng::split` argument in non-test code goes
+//!   through a registered [`crate::rng::streams`] accessor (or is a
+//!   string/char split, which is not an RNG at all). Raw integer labels
+//!   are how two subsystems end up sharing a stream without anyone
+//!   noticing.
+//! * **time-sources** — no `thread_rng`/`SystemTime`/entropy-seeded RNG
+//!   anywhere, and wall-clock `Instant` only in `bench_support/` and the
+//!   launcher's wall-time print. Simulated time is the only clock the run
+//!   path may read.
+//! * **unsafe-hygiene** — `unsafe` only inside the allowlist
+//!   (`coordinator/threaded.rs`), and every occurrence carries a
+//!   `SAFETY:` comment within 5 lines above.
+//! * **hashmap-order** — iterating a `HashMap` in the determinism-critical
+//!   modules must feed an order-insensitive sink (`min`/`max`/count-like)
+//!   or carry an explicit `// ORDER:` justification within 3 lines above.
+//! * **config-parity** — every `ExperimentConfig` JSON key is reachable
+//!   from the CLI (quoted in `main.rs`) and documented (backticked in
+//!   DESIGN.md).
+
+use super::SourceFile;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub lint: &'static str,
+    pub path: String,
+    /// 1-indexed line.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}:{}: {}", self.lint, self.path, self.line, self.msg)
+    }
+}
+
+/// Modules whose HashMap iteration order could leak into traces, wire
+/// accounting, or model state.
+const ORDER_CRITICAL: &[&str] = &["cohort/", "comm/", "decentral/", "simnet/sparse.rs"];
+
+/// The only module allowed to contain `unsafe`.
+const UNSAFE_ALLOWLIST: &[&str] = &["coordinator/threaded.rs"];
+
+/// Index of the first line of the trailing `#[cfg(test)]` module (the
+/// crate convention puts tests last), or `usize::MAX` when the file has
+/// none. Lints about *runtime* determinism skip test regions.
+fn first_test_line(file: &SourceFile) -> usize {
+    file.lines
+        .iter()
+        .position(|l| l.code.contains("#[cfg(test)]"))
+        .unwrap_or(usize::MAX)
+}
+
+/// Extract the argument of a call starting at `open` (index of '(') on
+/// line `li`, balancing parens across up to 4 lines.
+fn call_arg(file: &SourceFile, li: usize, open: usize) -> String {
+    let mut depth = 0usize;
+    let mut arg = String::new();
+    for (k, line) in file.lines.iter().enumerate().skip(li).take(4) {
+        let start = if k == li { open } else { 0 };
+        for c in line.code.chars().skip(start) {
+            match c {
+                '(' | '[' | '{' => {
+                    depth += 1;
+                    if depth > 1 {
+                        arg.push(c);
+                    }
+                }
+                ')' | ']' | '}' => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return arg;
+                    }
+                    arg.push(c);
+                }
+                _ => {
+                    if depth >= 1 {
+                        arg.push(c);
+                    }
+                }
+            }
+        }
+        arg.push(' ');
+    }
+    arg
+}
+
+/// All match positions of `needle` in `hay` at identifier boundaries.
+fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + needle.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    out
+}
+
+/// Lint (a), stream half: every `.split(` call resolves to a registered
+/// stream accessor or is a `str::split` on a literal.
+pub fn lint_rng_streams(files: &[SourceFile]) -> Vec<Violation> {
+    let registered: BTreeSet<&str> = crate::rng::streams::REGISTRY
+        .iter()
+        .map(|d| d.name)
+        .collect();
+    let mut out = Vec::new();
+    for f in files {
+        // The registry itself and the rng substrate define the label
+        // space; their raw labels are the ground truth, not a violation.
+        if f.path.starts_with("rng/") || f.path.starts_with("analysis/") {
+            continue;
+        }
+        let test_start = first_test_line(f);
+        for (li, line) in f.lines.iter().enumerate() {
+            if li >= test_start {
+                break;
+            }
+            let mut from = 0;
+            while let Some(p) = line.code[from..].find(".split(") {
+                let open = from + p + ".split".len();
+                let arg = call_arg(f, li, open);
+                from = open;
+                // `str::split` on a literal pattern: the scanner keeps the
+                // literal's quotes in the code channel.
+                if arg.contains('"') || arg.contains('\'') {
+                    continue;
+                }
+                let referenced: Vec<&str> = registered
+                    .iter()
+                    .copied()
+                    .filter(|&n| !word_positions(&arg, n).is_empty())
+                    .collect();
+                let via_accessor = arg.contains("streams::")
+                    && referenced.len() == 1
+                    && (arg.contains(".label(") || arg.contains(".solo_label("));
+                if !via_accessor {
+                    out.push(Violation {
+                        lint: "rng-streams",
+                        path: f.path.clone(),
+                        line: li + 1,
+                        msg: format!(
+                            "split label `{}` does not resolve to a registered \
+                             rng::streams accessor (declare the stream and use \
+                             .label()/.solo_label())",
+                            arg.trim()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Lint (a), clock half: no ambient entropy or wall-clock time on the run
+/// path.
+pub fn lint_time_sources(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if f.path.starts_with("bench_support/") || f.path.starts_with("analysis/") {
+            continue;
+        }
+        for (li, line) in f.lines.iter().enumerate() {
+            for tok in ["thread_rng", "SystemTime", "from_entropy", "getrandom"] {
+                if !word_positions(&line.code, tok).is_empty() {
+                    out.push(Violation {
+                        lint: "time-sources",
+                        path: f.path.clone(),
+                        line: li + 1,
+                        msg: format!("`{tok}` is a nondeterministic source; derive from the run seed"),
+                    });
+                }
+            }
+            if !word_positions(&line.code, "Instant").is_empty() && f.path != "main.rs" {
+                out.push(Violation {
+                    lint: "time-sources",
+                    path: f.path.clone(),
+                    line: li + 1,
+                    msg: "wall-clock `Instant` outside bench_support/ and the launcher; \
+                          the run path reads simulated time only"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Lint (b): unsafe allowlist + SAFETY comments within 5 lines above.
+pub fn lint_unsafe(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if f.path.starts_with("analysis/") {
+            continue;
+        }
+        let allowed = UNSAFE_ALLOWLIST.contains(&f.path.as_str());
+        for (li, line) in f.lines.iter().enumerate() {
+            if word_positions(&line.code, "unsafe").is_empty() {
+                continue;
+            }
+            if !allowed {
+                out.push(Violation {
+                    lint: "unsafe-hygiene",
+                    path: f.path.clone(),
+                    line: li + 1,
+                    msg: format!(
+                        "`unsafe` outside the allowlist ({})",
+                        UNSAFE_ALLOWLIST.join(", ")
+                    ),
+                });
+                continue;
+            }
+            let tagged = f.lines[li.saturating_sub(5)..=li]
+                .iter()
+                .any(|l| l.comment.contains("SAFETY:"));
+            if !tagged {
+                out.push(Violation {
+                    lint: "unsafe-hygiene",
+                    path: f.path.clone(),
+                    line: li + 1,
+                    msg: "`unsafe` without a `// SAFETY:` comment within 5 lines above".to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Identifier chain ending at byte `end` (exclusive) of `code`, e.g. for
+/// `self.entries.iter()` with `end` at the `.iter` dot this returns
+/// `self.entries`; the last segment is the map name candidate.
+fn receiver_chain(code: &str, end: usize) -> String {
+    let bytes = code.as_bytes();
+    let mut start = end;
+    while start > 0 {
+        let b = bytes[start - 1];
+        if b.is_ascii_alphanumeric() || b == b'_' || b == b'.' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    code[start..end].to_string()
+}
+
+/// Lint (c): HashMap iteration in order-critical modules needs an
+/// order-insensitive sink or an `// ORDER:` tag.
+pub fn lint_hashmap_order(files: &[SourceFile]) -> Vec<Violation> {
+    const ITER_TRIGGERS: &[&str] = &[
+        ".iter()",
+        ".iter_mut()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".into_iter()",
+        ".drain(",
+        ".retain(",
+    ];
+    const ORDER_FREE_SINKS: &[&str] = &[
+        ".min()",
+        ".max()",
+        ".min_by_key(",
+        ".max_by_key(",
+        ".count()",
+        ".all(",
+        ".any(",
+        ".collect::<BTreeMap",
+        ".collect::<BTreeSet",
+        ".collect::<std::collections::BTreeMap",
+        ".collect::<std::collections::BTreeSet",
+    ];
+    let mut out = Vec::new();
+    for f in files {
+        if !ORDER_CRITICAL.iter().any(|m| f.path.starts_with(m)) {
+            continue;
+        }
+        // Collect identifiers declared/initialized as HashMaps anywhere in
+        // the file (fields and locals).
+        let mut maps: BTreeSet<String> = BTreeSet::new();
+        for line in &f.lines {
+            for pat in [": HashMap<", ": HashMap::", "= HashMap::", ": &HashMap<"] {
+                let mut from = 0;
+                while let Some(p) = line.code[from..].find(pat) {
+                    let at = from + p;
+                    // Identifier left of the `:` / `=` (skip spaces, mut).
+                    let left = line.code[..at].trim_end();
+                    let left = left.strip_suffix("mut").unwrap_or(left).trim_end();
+                    let name = receiver_chain(left, left.len());
+                    if let Some(seg) = name.rsplit('.').next() {
+                        if !seg.is_empty() && !seg.chars().next().unwrap().is_ascii_digit() {
+                            maps.insert(seg.to_string());
+                        }
+                    }
+                    from = at + pat.len();
+                }
+            }
+        }
+        if maps.is_empty() {
+            continue;
+        }
+        let test_start = first_test_line(f);
+        for (li, line) in f.lines.iter().enumerate() {
+            if li >= test_start {
+                break;
+            }
+            for trig in ITER_TRIGGERS {
+                let mut from = 0;
+                while let Some(p) = line.code[from..].find(trig) {
+                    let at = from + p;
+                    from = at + trig.len();
+                    // Resolve the receiver; a trigger at the start of a
+                    // continuation line chains off the previous line.
+                    let mut recv = receiver_chain(&line.code, at);
+                    if recv.is_empty() && line.code[..at].trim().is_empty() && li > 0 {
+                        let prev = f.lines[li - 1].code.trim_end();
+                        recv = receiver_chain(prev, prev.len());
+                    }
+                    let Some(seg) = recv.rsplit('.').next() else {
+                        continue;
+                    };
+                    if !maps.contains(seg) {
+                        continue;
+                    }
+                    // Statement span: this line plus up to 8 more, ending
+                    // at the first `;`.
+                    let mut span = String::new();
+                    for l in f.lines.iter().skip(li).take(9) {
+                        span.push_str(&l.code);
+                        span.push(' ');
+                        if l.code.trim_end().ends_with(';') {
+                            break;
+                        }
+                    }
+                    let sink_ok = ORDER_FREE_SINKS.iter().any(|s| span.contains(s));
+                    let tagged = f.lines[li.saturating_sub(3)..=li]
+                        .iter()
+                        .any(|l| l.comment.contains("ORDER:"));
+                    if !sink_ok && !tagged {
+                        out.push(Violation {
+                            lint: "hashmap-order",
+                            path: f.path.clone(),
+                            line: li + 1,
+                            msg: format!(
+                                "HashMap `{seg}` iterated via `{trig}` in an order-critical \
+                                 module without an order-insensitive sink or `// ORDER:` tag"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract the `ExperimentConfig` JSON keys from `config/mod.rs` (raw
+/// channel: the keys live inside string literals).
+pub fn config_keys(files: &[SourceFile]) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let Some(cfg) = files.iter().find(|f| f.path == "config/mod.rs") else {
+        return keys;
+    };
+    let test_start = first_test_line(cfg);
+    for (li, line) in cfg.lines.iter().enumerate() {
+        if li >= test_start {
+            break;
+        }
+        for pat in ["gets(\"", "getf(\"", "getb(\"", ".get(\""] {
+            let mut from = 0;
+            while let Some(p) = line.raw[from..].find(pat) {
+                let start = from + p + pat.len();
+                if let Some(q) = line.raw[start..].find('"') {
+                    keys.insert(line.raw[start..start + q].to_string());
+                }
+                from = start;
+            }
+        }
+    }
+    keys
+}
+
+/// Lint (d): every config key is quoted in `main.rs` (a CLI override
+/// route exists) and backticked in DESIGN.md.
+pub fn lint_config_parity(files: &[SourceFile], design_md: &str) -> Vec<Violation> {
+    let keys = config_keys(files);
+    let mut out = Vec::new();
+    if keys.is_empty() {
+        out.push(Violation {
+            lint: "config-parity",
+            path: "config/mod.rs".into(),
+            line: 1,
+            msg: "no ExperimentConfig keys found — extraction patterns rotted?".into(),
+        });
+        return out;
+    }
+    let main_raw: String = files
+        .iter()
+        .find(|f| f.path == "main.rs")
+        .map(|f| f.lines.iter().map(|l| l.raw.as_str()).collect::<Vec<_>>().join("\n"))
+        .unwrap_or_default();
+    for key in &keys {
+        if !main_raw.contains(&format!("\"{key}\"")) {
+            out.push(Violation {
+                lint: "config-parity",
+                path: "main.rs".into(),
+                line: 1,
+                msg: format!("config key `{key}` has no CLI override route in main.rs"),
+            });
+        }
+        if !design_md.contains(&format!("`{key}`")) {
+            out.push(Violation {
+                lint: "config-parity",
+                path: "DESIGN.md".into(),
+                line: 1,
+                msg: format!("config key `{key}` is not documented (backticked) in DESIGN.md"),
+            });
+        }
+    }
+    out
+}
+
+/// Run every lint, plus the stream-registry validity check.
+pub fn run_all(files: &[SourceFile], design_md: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for problem in crate::rng::streams::check_registry() {
+        out.push(Violation {
+            lint: "rng-streams",
+            path: "rng/streams.rs".into(),
+            line: 1,
+            msg: problem,
+        });
+    }
+    out.extend(lint_rng_streams(files));
+    out.extend(lint_time_sources(files));
+    out.extend(lint_unsafe(files));
+    out.extend(lint_hashmap_order(files));
+    out.extend(lint_config_parity(files, design_md));
+    out
+}

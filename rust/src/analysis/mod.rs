@@ -1,0 +1,129 @@
+//! Invariant analyzer: self-contained static lints + schedule explorer.
+//!
+//! This subsystem turns the crate's prose determinism contracts into
+//! executable checks, with **zero** external dependencies (the offline
+//! build has no `syn`, `loom`, or `clippy` plugins):
+//!
+//! * [`scan`] — a minimal token scanner that splits source lines into
+//!   code/comment channels (strings blanked, comments separated).
+//! * [`lints`] — source-level invariant lints over `rust/src/`:
+//!   RNG stream discipline (every `split` argument resolves to a
+//!   [`crate::rng::streams`] declaration), time-source bans, unsafe
+//!   hygiene (`SAFETY:` + allowlist), HashMap order-sensitivity in
+//!   determinism-critical modules, and config-surface parity
+//!   (config key ⇔ CLI flag ⇔ DESIGN.md).
+//! * [`schedules`] — a mini-loom for the threaded leader-gather
+//!   protocol: exhaustively permutes worker completion interleavings
+//!   at small N and asserts aliasing-freedom, no early reads, and
+//!   bitwise-identical outcomes.
+//!
+//! The driver lives in `rust/tests/test_invariants.rs` and runs as the
+//! `lint` stage of `scripts/ci.sh`. DESIGN.md §10 catalogues the
+//! invariants themselves.
+
+pub mod lints;
+pub mod scan;
+pub mod schedules;
+
+/// One scanned source file: `/`-normalized path relative to `rust/src/`
+/// plus per-line scan channels.
+pub struct SourceFile {
+    /// Path relative to the source root, always `/`-separated
+    /// (e.g. `"simnet/engine.rs"`).
+    pub path: String,
+    /// Scanned lines (see [`scan::Line`]).
+    pub lines: Vec<scan::Line>,
+}
+
+impl SourceFile {
+    /// Build from in-memory source — used by the fixture negative tests.
+    pub fn from_source(path: &str, source: &str) -> Self {
+        SourceFile {
+            path: path.to_string(),
+            lines: scan::scan(source),
+        }
+    }
+}
+
+/// Locate `rust/src/` from wherever the test binary runs: prefer the
+/// compile-time manifest dir, then walk up from the current directory.
+pub fn locate_src_root() -> Option<std::path::PathBuf> {
+    let looks_right = |p: &std::path::Path| p.join("lib.rs").is_file() && p.join("analysis").is_dir();
+    let mut candidates: Vec<std::path::PathBuf> = Vec::new();
+    if let Some(m) = option_env!("CARGO_MANIFEST_DIR") {
+        candidates.push(std::path::Path::new(m).join("src"));
+    }
+    if let Ok(cwd) = std::env::current_dir() {
+        let mut d: Option<&std::path::Path> = Some(cwd.as_path());
+        while let Some(p) = d {
+            candidates.push(p.join("src"));
+            candidates.push(p.join("rust").join("src"));
+            d = p.parent();
+        }
+    }
+    candidates.into_iter().find(|p| looks_right(p))
+}
+
+/// Recursively collect and scan every `.rs` file under `root`, sorted by
+/// normalized relative path for deterministic lint output.
+pub fn walk_sources(root: &std::path::Path) -> std::io::Result<Vec<SourceFile>> {
+    fn visit(
+        dir: &std::path::Path,
+        root: &std::path::Path,
+        out: &mut Vec<(String, std::path::PathBuf)>,
+    ) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                visit(&path, root, out)?;
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((rel, path));
+            }
+        }
+        Ok(())
+    }
+    let mut found: Vec<(String, std::path::PathBuf)> = Vec::new();
+    visit(root, root, &mut found)?;
+    found.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut files = Vec::with_capacity(found.len());
+    for (rel, path) in found {
+        let source = std::fs::read_to_string(&path)?;
+        files.push(SourceFile::from_source(&rel, &source));
+    }
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_source_normalizes_nothing_but_scans() {
+        let f = SourceFile::from_source("cohort/fake.rs", "let x = 1; // hi\n");
+        assert_eq!(f.path, "cohort/fake.rs");
+        assert_eq!(f.lines.len(), 1);
+        assert!(f.lines[0].comment.contains("hi"));
+    }
+
+    #[test]
+    fn walk_finds_this_module() {
+        let root = locate_src_root().expect("src root");
+        let files = walk_sources(&root).expect("walk");
+        assert!(files.iter().any(|f| f.path == "analysis/mod.rs"));
+        assert!(files.iter().any(|f| f.path == "rng/streams.rs"));
+        // Paths are sorted and /-normalized.
+        let paths: Vec<&str> = files.iter().map(|f| f.path.as_str()).collect();
+        let mut sorted = paths.clone();
+        sorted.sort();
+        assert_eq!(paths, sorted);
+        assert!(paths.iter().all(|p| !p.contains('\\')));
+    }
+}

@@ -1,0 +1,323 @@
+//! Minimal Rust token scanner for the invariant lints.
+//!
+//! The offline build has no `syn`/`proc-macro2`, so the lints work from a
+//! small hand-rolled state machine that splits each source line into a
+//! *code* channel and a *comment* channel:
+//!
+//! * `code` — source text with comments removed and the contents of
+//!   string/char literals blanked to spaces (the delimiting quotes are
+//!   kept, so a lint can still tell `.split(',')` from `.split(label)`).
+//! * `comment` — the text of `//`, `///`, `//!` and `/* ... */` comments
+//!   on that line (where `SAFETY:` / `// ORDER:` tags live).
+//! * `raw` — the untouched line, for lints that need literal contents
+//!   (e.g. config keys inside `gets("...")`).
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes (spanning lines), raw strings `r"…"`/`r#"…"#`/`br#"…"#`, byte
+//! strings, char literals, and the char-vs-lifetime ambiguity (`'a'` vs
+//! `'static`). That is enough to never mis-track the comment/string state
+//! across this crate; exotic token forms the crate does not use (e.g.
+//! `r###`-deep raw strings are supported, float suffix forms are
+//! irrelevant) keep the scanner small.
+
+/// One scanned source line.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// The original line, verbatim.
+    pub raw: String,
+    /// Code channel: comments stripped, literal contents blanked.
+    pub code: String,
+    /// Comment channel: comment text on this line (all comments joined).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block-comment depth.
+    Block(u32),
+    /// Inside a normal string literal.
+    Str,
+    /// Inside a raw string with this many `#`s.
+    RawStr(u32),
+}
+
+/// Does `chars[i..]` start a raw-string opener (`r"`, `r#"`, ...)?
+/// Returns the hash count. `i` points at the `r`.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan a whole source file into per-line channels.
+pub fn scan(source: &str) -> Vec<Line> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out: Vec<Line> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut raw = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    // The last code char emitted, to disambiguate `r"` (raw string) from
+    // an identifier ending in `r` followed by a string.
+    let mut prev_code: Option<char> = None;
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            out.push(Line {
+                raw: std::mem::take(&mut raw),
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        raw.push(c);
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    raw.push('/');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    raw.push('*');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    prev_code = Some('"');
+                    state = State::Str;
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' && !prev_code.map(is_ident_char).unwrap_or(false) {
+                    if let Some(h) = raw_str_hashes(&chars, i) {
+                        // Consume r##…#" into both channels.
+                        code.push('r');
+                        for _ in 0..h {
+                            code.push('#');
+                            raw.push('#');
+                        }
+                        code.push('"');
+                        raw.push('"');
+                        prev_code = Some('"');
+                        state = State::RawStr(h);
+                        i += 2 + h as usize;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // Char literal iff it closes within a couple of chars
+                    // or starts with an escape; otherwise it's a lifetime.
+                    let is_char = match chars.get(i + 1) {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    code.push('\'');
+                    prev_code = Some('\'');
+                    i += 1;
+                    if is_char {
+                        loop {
+                            match chars.get(i) {
+                                None => break,
+                                Some('\'') => {
+                                    raw.push('\'');
+                                    code.push('\'');
+                                    i += 1;
+                                    break;
+                                }
+                                Some('\\') => {
+                                    raw.push('\\');
+                                    if let Some(&e) = chars.get(i + 1) {
+                                        raw.push(e);
+                                    }
+                                    code.push(' ');
+                                    code.push(' ');
+                                    i += 2;
+                                }
+                                Some(&o) => {
+                                    raw.push(o);
+                                    code.push(' ');
+                                    i += 1;
+                                }
+                            }
+                        }
+                    }
+                    continue;
+                }
+                code.push(c);
+                prev_code = Some(c);
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    raw.push('/');
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    raw.push('*');
+                    i += 2;
+                    state = State::Block(depth + 1);
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    if let Some(&e) = chars.get(i + 1) {
+                        if e != '\n' {
+                            raw.push(e);
+                        } else {
+                            // Line-continuation escape: let the newline be
+                            // handled by the top of the loop.
+                        }
+                    }
+                    code.push(' ');
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut seen = 0u32;
+                    while seen < h && chars.get(j) == Some(&'#') {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == h {
+                        for _ in 0..h {
+                            raw.push('#');
+                        }
+                        code.push('"');
+                        state = State::Code;
+                        i = j;
+                        continue;
+                    }
+                }
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    if !raw.is_empty() || !code.is_empty() || !comment.is_empty() {
+        out.push(Line { raw, code, comment });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments() {
+        let l = scan("let x = 1; // trailing note\n");
+        assert_eq!(l[0].code.trim_end(), "let x = 1;");
+        assert!(l[0].comment.contains("trailing note"));
+        assert!(l[0].raw.contains("// trailing note"));
+    }
+
+    #[test]
+    fn doc_comments_go_to_comment_channel() {
+        let l = scan("//! module docs with unsafe in them\nfn f() {}\n");
+        assert!(l[0].code.trim().is_empty());
+        assert!(l[0].comment.contains("unsafe"));
+        assert!(l[1].code.contains("fn f()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* one /* two */ still comment */ b\n";
+        let l = scan(src);
+        assert!(l[0].code.contains('a') && l[0].code.contains('b'));
+        assert!(!l[0].code.contains("comment"));
+        assert!(l[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn blanks_string_contents_keeps_quotes() {
+        let l = scan("let s = \"split(99) unsafe\";\n");
+        assert!(l[0].code.contains('"'));
+        assert!(!l[0].code.contains("split(99)"));
+        assert!(!l[0].code.contains("unsafe"));
+        assert!(l[0].raw.contains("split(99)"));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let l = scan("let s = \"a\\\"b\"; let t = 1;\n");
+        assert!(l[0].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let l = scan("fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; }\n");
+        // Lifetimes survive in code; char contents are blanked.
+        assert!(l[0].code.contains("<'a>"));
+        assert!(!l[0].code.contains("'x'"));
+        // Scanner did not lose sync: the closing brace is code.
+        assert!(l[0].code.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn split_on_char_keeps_quote_marker() {
+        let l = scan("s.split(',').collect();\n");
+        assert!(l[0].code.contains(".split('"));
+        assert!(l[0].code.contains(".collect()"));
+    }
+
+    #[test]
+    fn raw_strings() {
+        let l = scan("let j = r#\"{\"k\": 1} unsafe\"#; let z = 2;\n");
+        assert!(!l[0].code.contains("unsafe"));
+        assert!(l[0].code.contains("let z = 2;"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_state() {
+        let l = scan("let s = \"first\nsecond unsafe\nthird\"; let w = 3;\n");
+        assert!(!l[1].code.contains("unsafe"));
+        assert!(l[2].code.contains("let w = 3;"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_raw_string() {
+        let l = scan("let var = 1; for x in y {}\n");
+        assert!(l[0].code.contains("for x in y"));
+    }
+}

@@ -1,0 +1,299 @@
+//! Schedule-exploring race checker for the threaded engine's
+//! leader-gather protocol (mini-loom, tentpole half 2).
+//!
+//! [`crate::coordinator::threaded::ThreadedCompute::grads_arena`] ships
+//! `(ptr, len)` row views over channels. DESIGN.md §7 argues this is
+//! sound because (1) the leader hands out at most one mutable view per
+//! arena row per dispatch, (2) it blocks until *every* dispatched task
+//! has answered before its borrows end, and (3) the channel round-trip
+//! orders each worker's writes before the leader's reads. This module
+//! turns that prose into an exhaustive check: a shadow model of the
+//! protocol — leader dispatch, per-worker FIFO queues, a completion
+//! interleaving — is run over **every** possible worker-completion
+//! schedule at small N, with an ownership tracker standing in for the
+//! `RawView`/`RawViewMut` hand-outs. For each schedule it asserts
+//!
+//! * (i) no two live mutable views alias a row,
+//! * (ii) the leader never observes a row whose writer has not completed,
+//! * (iii) the gathered arena/loss result is bitwise identical across all
+//!   schedules.
+//!
+//! The interleaving space for `n` tasks round-robined over `w` workers is
+//! the multinomial `n! / (q_1! ... q_w!)` (per-worker queues are FIFO, so
+//! only the merge order varies): at the acceptance bound of 5 workers x 6
+//! rows that is 360 schedules — small enough to enumerate, large enough
+//! to catch any order dependence.
+//!
+//! Seeded-bug protocol variants ([`Protocol`]) prove the checker's teeth:
+//! each intentionally breaks one invariant and must be caught.
+
+use std::collections::BTreeSet;
+
+/// Which protocol to model. `Correct` mirrors the real engine; the other
+/// variants seed one specific violation class each (negative fixtures).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Protocol {
+    /// The real leader-gather discipline.
+    Correct,
+    /// Bug: two tasks are given mutable views of the same row.
+    AliasRow,
+    /// Bug: the leader reads every row after the *first* completion
+    /// instead of after the gather barrier.
+    EarlyRead,
+    /// Bug: the leader stops gathering one result early, ending its
+    /// borrows while a worker still holds a live view.
+    ShortGather,
+    /// Bug: the leader folds losses in *arrival* order instead of by
+    /// slot, making the f32 sum schedule-dependent.
+    ArrivalOrderSum,
+}
+
+/// Result of exploring every schedule of one configuration.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Number of schedules explored (the full multinomial).
+    pub schedules: u64,
+    /// Invariant violations (empty for `Protocol::Correct`).
+    pub violations: Vec<String>,
+    /// Distinct bitwise outcomes across schedules (1 = deterministic).
+    pub distinct_outcomes: usize,
+}
+
+/// Number of merge interleavings of per-worker FIFO queues:
+/// `n! / (q_1! ... q_w!)` for the round-robin assignment of `n_rows`
+/// tasks to `n_workers` workers.
+pub fn interleaving_count(n_workers: usize, n_rows: usize) -> u64 {
+    let fact = |k: usize| -> u128 { (1..=k as u128).product::<u128>().max(1) };
+    let mut denom = 1u128;
+    for w in 0..n_workers {
+        let q = (n_rows + n_workers - 1 - w) / n_workers; // queue length
+        denom *= fact(q);
+    }
+    (fact(n_rows) / denom) as u64
+}
+
+fn enumerate_schedules(
+    counts: &mut [usize],
+    prefix: &mut Vec<usize>,
+    remaining: usize,
+    out: &mut Vec<Vec<usize>>,
+) {
+    if remaining == 0 {
+        out.push(prefix.clone());
+        return;
+    }
+    for w in 0..counts.len() {
+        if counts[w] > 0 {
+            counts[w] -= 1;
+            prefix.push(w);
+            enumerate_schedules(counts, prefix, remaining - 1, out);
+            prefix.pop();
+            counts[w] += 1;
+        }
+    }
+}
+
+/// Deterministic, "messy" pseudo-gradient so schedule-dependent float
+/// folds cannot cancel by accident: magnitudes span several orders.
+fn task_scale(t: usize) -> f32 {
+    match t % 5 {
+        0 => 1.0e-3,
+        1 => 3.0,
+        2 => 7.0e2,
+        3 => 0.125,
+        _ => 19.0,
+    }
+}
+
+/// Exhaustively explore all completion schedules of `n_rows` tasks
+/// round-robined over `n_workers` workers under `proto`.
+pub fn explore(n_workers: usize, n_rows: usize, proto: Protocol) -> Report {
+    assert!(n_workers >= 1 && n_rows >= 1);
+    let dim = 4usize;
+    let n_tasks = n_rows;
+
+    // Dispatch plan: task t writes row t (the engine's slot == row),
+    // except the seeded aliasing bug.
+    let mut task_row: Vec<usize> = (0..n_tasks).collect();
+    if proto == Protocol::AliasRow && n_rows >= 2 {
+        task_row[1] = 0;
+    }
+
+    // Per-worker FIFO queues, round-robin like the engine (i % n_workers).
+    let mut queues: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+    for (t, row) in task_row.iter().enumerate() {
+        let _ = row;
+        queues[t % n_workers].push(t);
+    }
+
+    let mut schedules: Vec<Vec<usize>> = Vec::new();
+    {
+        let mut counts: Vec<usize> = queues.iter().map(|q| q.len()).collect();
+        let mut prefix = Vec::with_capacity(n_tasks);
+        enumerate_schedules(&mut counts, &mut prefix, n_tasks, &mut schedules);
+    }
+
+    let mut violations: Vec<String> = Vec::new();
+    let mut outcomes: BTreeSet<Vec<u32>> = BTreeSet::new();
+
+    for sched in &schedules {
+        // Shadow arena state, fresh per schedule.
+        let theta: Vec<Vec<f32>> = (0..n_rows)
+            .map(|r| (0..dim).map(|j| 0.1 + (r * dim + j) as f32 * 0.3).collect())
+            .collect();
+        let mut grad: Vec<Vec<f32>> = vec![vec![0.0; dim]; n_rows];
+        let mut losses: Vec<f32> = vec![0.0; n_tasks];
+        // Ownership tracker: which task holds a live RawViewMut per row.
+        let mut live_mut: Vec<Option<usize>> = vec![None; n_rows];
+        let mut completed = vec![false; n_tasks];
+
+        // Leader dispatch, program order (before any worker runs).
+        for (t, &r) in task_row.iter().enumerate() {
+            if let Some(prev) = live_mut[r] {
+                violations.push(format!(
+                    "{proto:?} sched {sched:?}: mutable view of row {r} handed to task {t} \
+                     while task {prev}'s view is live (aliasing)"
+                ));
+            } else {
+                live_mut[r] = Some(t);
+            }
+        }
+
+        // Completion interleaving.
+        let gather_target = if proto == Protocol::ShortGather {
+            n_tasks.saturating_sub(1)
+        } else {
+            n_tasks
+        };
+        let mut next_in_queue = vec![0usize; n_workers];
+        let mut gathered = 0usize;
+        let mut early_read_done = false;
+        let mut arrival_sum = 0.0f32;
+        for &w in sched {
+            let t = queues[w][next_in_queue[w]];
+            next_in_queue[w] += 1;
+            let r = task_row[t];
+            // Worker t executes: write grad row r, compute its loss.
+            // Within-row order is fixed, so a correct protocol is
+            // schedule-independent by construction.
+            let mut l = 0.0f32;
+            for j in 0..dim {
+                let g = (theta[r][j] * 1.5 + 0.1 * j as f32) * task_scale(t);
+                grad[r][j] = g;
+                l += g * g;
+            }
+            completed[t] = true;
+            losses[t] = l;
+            gathered += 1;
+            if proto == Protocol::ArrivalOrderSum {
+                // Seeded bug: fold in arrival order (schedule-dependent
+                // f32 rounding) instead of by slot.
+                arrival_sum += l;
+            }
+            if proto == Protocol::EarlyRead && !early_read_done {
+                early_read_done = true;
+                // Seeded bug: leader peeks at every row now.
+                for (r2, owner) in live_mut.iter().enumerate() {
+                    if let Some(o) = owner {
+                        if !completed[*o] {
+                            violations.push(format!(
+                                "{proto:?} sched {sched:?}: leader observed row {r2} before \
+                                 its writer (task {o}) completed"
+                            ));
+                        }
+                    }
+                }
+            }
+            if gathered == gather_target {
+                break;
+            }
+        }
+
+        // Leader return point: its borrows end here, and it reads the
+        // arena. Every live view's writer must have completed.
+        for (r2, owner) in live_mut.iter().enumerate() {
+            if let Some(o) = owner {
+                if !completed[*o] {
+                    violations.push(format!(
+                        "{proto:?} sched {sched:?}: leader returned while task {o} still \
+                         holds a live view of row {r2} (use-after-free window)"
+                    ));
+                }
+            }
+        }
+
+        // Bitwise outcome: the gathered arena + losses.
+        let mut bytes: Vec<u32> = Vec::with_capacity(n_rows * dim + n_tasks + 1);
+        for row in &grad {
+            bytes.extend(row.iter().map(|v| v.to_bits()));
+        }
+        bytes.extend(losses.iter().map(|v| v.to_bits()));
+        if proto == Protocol::ArrivalOrderSum {
+            bytes.push(arrival_sum.to_bits());
+        }
+        outcomes.insert(bytes);
+    }
+
+    Report {
+        schedules: schedules.len() as u64,
+        violations,
+        distinct_outcomes: outcomes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correct_protocol_clean_at_small_sizes() {
+        for w in 1..=3 {
+            for r in 1..=4 {
+                let rep = explore(w, r, Protocol::Correct);
+                assert_eq!(rep.schedules, interleaving_count(w, r), "w={w} r={r}");
+                assert!(rep.violations.is_empty(), "w={w} r={r}: {:?}", rep.violations);
+                assert_eq!(rep.distinct_outcomes, 1, "w={w} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaving_count_matches_known_values() {
+        assert_eq!(interleaving_count(1, 6), 1); // single FIFO queue
+        assert_eq!(interleaving_count(6, 3), 6); // 3 singleton queues: 3!
+        assert_eq!(interleaving_count(2, 4), 6); // C(4,2)
+        assert_eq!(interleaving_count(5, 6), 360); // 6!/2! (one queue of 2)
+    }
+
+    #[test]
+    fn alias_bug_caught() {
+        let rep = explore(3, 4, Protocol::AliasRow);
+        assert!(rep.violations.iter().any(|v| v.contains("aliasing")));
+        // The aliased row's final value depends on completion order.
+        assert!(rep.distinct_outcomes > 1);
+    }
+
+    #[test]
+    fn early_read_bug_caught() {
+        let rep = explore(3, 4, Protocol::EarlyRead);
+        assert!(rep.violations.iter().any(|v| v.contains("before")), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn short_gather_bug_caught() {
+        let rep = explore(3, 4, Protocol::ShortGather);
+        assert!(rep
+            .violations
+            .iter()
+            .any(|v| v.contains("use-after-free")));
+    }
+
+    #[test]
+    fn arrival_order_sum_is_schedule_dependent() {
+        let rep = explore(3, 6, Protocol::ArrivalOrderSum);
+        assert!(
+            rep.distinct_outcomes > 1,
+            "arrival-order f32 fold should diverge across schedules"
+        );
+    }
+}

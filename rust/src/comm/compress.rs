@@ -562,7 +562,8 @@ impl EfState {
 /// in the parent, so the cohort store can materialize the identical stream
 /// lazily, on a client's first compressed round (DESIGN.md §9).
 pub fn ef_client_rng(seed: u64, client: usize) -> Rng {
-    Rng::new(seed ^ 0xC0_4B1D).split(client as u64 + 1)
+    use crate::rng::streams;
+    Rng::new(seed ^ streams::EF_ROOT_SALT).split(streams::EF_CLIENT.label(client as u64))
 }
 
 /// Reusable compression scratch shared by every participant of a round:

@@ -22,6 +22,13 @@
 //! taken from strictly outlive all worker access, and the channel
 //! round-trip provides the happens-before edge that makes the workers'
 //! writes visible to the leader.
+//!
+//! This is the only module allowed to use `unsafe` (the
+//! `tests/test_invariants.rs` allowlist); every unsafe site carries a
+//! `SAFETY:` comment, and the leader-gather protocol itself is checked
+//! exhaustively over worker interleavings by [`crate::analysis::schedules`].
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use super::compute::ClientCompute;
 use crate::grad::Oracle;
@@ -34,11 +41,19 @@ use std::thread::JoinHandle;
 /// constructed by the leader from borrows that it keeps alive until every
 /// dispatched task has been gathered (see the module docs).
 struct RawView<T>(*const T, usize);
+// SAFETY: a RawView is only constructed from a live `&[T]` that the
+// leader keeps borrowed until every dispatched task is gathered, so the
+// pointer stays valid for the receiving thread's whole read; `T: Sync`
+// makes the cross-thread shared reads themselves sound.
 unsafe impl<T: Sync> Send for RawView<T> {}
 
 /// A `&mut [T]` flattened to (ptr, len). The leader hands out at most one
 /// view per arena row per dispatch, so worker writes never alias.
 struct RawViewMut<T>(*mut T, usize);
+// SAFETY: a RawViewMut targets a distinct arena row per dispatched task
+// (debug-asserted at the construction site), so exactly one thread writes
+// through it while the leader's borrow keeps the allocation alive;
+// `T: Send` makes handing the exclusive writer role to a worker sound.
 unsafe impl<T: Send> Send for RawViewMut<T> {}
 
 /// One zero-copy gradient task: read `theta`/`batch` in place, write the
@@ -97,12 +112,12 @@ impl ThreadedCompute {
                             // gathered every dispatched result, and no two
                             // in-flight tasks share a grad row (module
                             // docs).
-                            let theta =
-                                unsafe { std::slice::from_raw_parts(task.theta.0, task.theta.1) };
-                            let batch =
-                                unsafe { std::slice::from_raw_parts(task.batch.0, task.batch.1) };
-                            let grad = unsafe {
-                                std::slice::from_raw_parts_mut(task.grad.0, task.grad.1)
+                            let (theta, batch, grad) = unsafe {
+                                (
+                                    std::slice::from_raw_parts(task.theta.0, task.theta.1),
+                                    std::slice::from_raw_parts(task.batch.0, task.batch.1),
+                                    std::slice::from_raw_parts_mut(task.grad.0, task.grad.1),
+                                )
                             };
                             let l = oracle.grad_minibatch_into(theta, batch, grad);
                             if res_tx.send((task.slot, Vec::new(), l)).is_err() {
@@ -245,6 +260,11 @@ impl ClientCompute for ThreadedCompute {
         let d = grads.dim();
         let grad_base = grads.data_mut().as_mut_ptr();
         let mut dispatched = 0usize;
+        // Row-disjointness guard for the RawViewMut hand-outs below: each
+        // grad row may be dispatched at most once per call, or two workers
+        // would hold aliasing mutable views.
+        #[cfg(debug_assertions)]
+        let mut handed_out = vec![false; n];
         for i in 0..n {
             if !active[i] {
                 losses[i] = 0.0;
@@ -255,6 +275,11 @@ impl ClientCompute for ThreadedCompute {
             // SAFETY: row i occupies [i * d, (i + 1) * d) of the block the
             // base pointer was derived from; rows are disjoint per slot.
             let grad_row = unsafe { grad_base.add(i * d) };
+            #[cfg(debug_assertions)]
+            debug_assert!(
+                !std::mem::replace(&mut handed_out[i], true),
+                "grad row {i} dispatched twice in one grads_arena call"
+            );
             self.cmd_tx[i % self.n_workers]
                 .send(Cmd::GradRow(RowTask {
                     slot: i,

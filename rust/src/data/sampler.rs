@@ -7,7 +7,7 @@
 //! exploit to assert trajectory equality.
 
 use super::Shard;
-use crate::rng::Rng;
+use crate::rng::{streams, Rng};
 
 /// Samples minibatches (with replacement, as in the paper's SGD analysis)
 /// from one client's shard.
@@ -21,7 +21,7 @@ impl MinibatchSampler {
     pub fn new(shard: Shard, root: &Rng, client_id: u64) -> Self {
         Self {
             shard,
-            rng: root.split(0x5A17 ^ client_id),
+            rng: root.split(streams::RUN_SAMPLER.label(client_id)),
         }
     }
 

@@ -26,6 +26,7 @@
 //! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod algo;
+pub mod analysis;
 pub mod bench_support;
 pub mod cohort;
 pub mod comm;

@@ -26,12 +26,19 @@ fn main() -> anyhow::Result<()> {
     )
     .opt("algorithm", "", "algorithm override (sync|lb|crpsgd|local|stl-sc|stl-nc1|stl-nc2)")
     .opt("engine", "", "engine override (native|threaded|xla)")
+    .opt("collective", "", "model-averaging collective override (naive|ring|tree)")
     .opt("steps", "", "total iteration budget override")
     .opt("clients", "", "number of clients override")
     .opt("eta1", "", "initial learning rate override")
+    .opt("alpha", "", "InvTime lr-schedule alpha override (baselines, convex track)")
     .opt("k1", "", "initial communication period override")
     .opt("t1", "", "first stage length override")
     .opt("batch", "", "per-client batch size override")
+    .opt("big-batch", "", "LB-SGD large-batch size override")
+    .opt("batch-growth", "", "CR-PSGD per-epoch batch growth factor override")
+    .opt("batch-cap", "", "CR-PSGD batch-size cap override")
+    .opt("inv-gamma", "", "STL-SGD^nc stage-objective 1/gamma override")
+    .opt("s-percent", "", "Non-IID skew s% override (with --noniid; paper: 50 convex, 0 non-convex)")
     .opt("seed", "", "rng seed override")
     .opt("eval-every", "", "evaluate every this many comm rounds")
     .opt(
@@ -115,12 +122,19 @@ fn main() -> anyhow::Result<()> {
         ("workload", "workload"),
         ("algorithm", "algorithm"),
         ("engine", "engine"),
+        ("collective", "collective"),
         ("steps", "total_steps"),
         ("clients", "n_clients"),
         ("eta1", "eta1"),
+        ("alpha", "alpha"),
         ("k1", "k1"),
         ("t1", "t1"),
         ("batch", "batch"),
+        ("big-batch", "big_batch"),
+        ("batch-growth", "batch_growth"),
+        ("batch-cap", "batch_cap"),
+        ("inv-gamma", "inv_gamma"),
+        ("s-percent", "s_percent"),
         ("seed", "seed"),
         ("eval-every", "eval_every_rounds"),
         ("cluster", "cluster"),

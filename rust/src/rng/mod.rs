@@ -7,6 +7,7 @@
 //! per-client streams from a root seed.
 
 pub mod golden;
+pub mod streams;
 
 /// SplitMix64: seeds xoshiro and derives child seeds.
 #[derive(Clone, Debug)]

@@ -1,0 +1,336 @@
+//! Named RNG stream registry: every `Rng::split` label in the run path
+//! comes from here.
+//!
+//! The determinism story (DESIGN.md §3, §9) leans on *stateless* splits:
+//! any component may re-derive any client's stream at any time, so the
+//! label space is a global contract, not an implementation detail. Before
+//! this registry the contract was implicit — `CHURN_STREAM_BASE + i` at
+//! `1 << 40` was an unbounded range sitting directly below
+//! `SAMPLING_STREAM` at `1 << 41`, so a 2^40-client fleet would have
+//! silently collided the churn and sampling streams. Each stream now
+//! declares its base *and* capacity, [`check_registry`] statically proves
+//! the ranges disjoint per namespace, and the accessors
+//! ([`StreamDecl::label`] / [`StreamDecl::solo_label`]) `debug_assert!`
+//! range membership at every split call site.
+//!
+//! Streams are grouped into *namespaces*, one per root generator — labels
+//! from different roots can never collide, so disjointness is only
+//! required within a namespace:
+//!
+//! * `simnet` — root `Rng::new(seed ^ SIMNET_ROOT_SALT)`, shared by the
+//!   dense and sparse engines (identical streams is what lets the sparse
+//!   engine materialize lazily).
+//! * `run` — root `Rng::new(cfg.seed)`, the coordinator's data path.
+//! * `ef` — root `Rng::new(seed ^ EF_ROOT_SALT)`, error-feedback
+//!   quantization streams.
+//!
+//! Adding a stream: declare a `StreamDecl` const, add it to [`REGISTRY`],
+//! and route the call site through `label()`/`solo_label()`. The
+//! `test_invariants` lint walks `rust/src/` and rejects any
+//! `.split(<raw literal>)` outside this module, and
+//! [`check_registry`] (run by the same suite) rejects overlapping
+//! declarations — so a colliding or unregistered stream fails CI, not a
+//! replay three PRs later.
+
+/// Salt folded into the run seed for the simnet root generator. The salt
+/// decorrelates the simnet namespace from the `run` namespace, which uses
+/// the unsalted seed.
+pub const SIMNET_ROOT_SALT: u64 = 0x51D_CAFE;
+
+/// Salt for the error-feedback root generator (`comm::compress`).
+pub const EF_ROOT_SALT: u64 = 0xC0_4B1D;
+
+/// How a stream maps an index to a split label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Labeling {
+    /// A single fixed label (`base`); capacity is exactly 1.
+    Solo,
+    /// `base + i` for `i` in `[0, capacity)`.
+    Offset,
+    /// `base ^ i` for `i` in `[0, capacity)`. Requires `capacity` to be a
+    /// power of two and `base < capacity`, so the image is exactly
+    /// `[0, capacity)` and the range arithmetic below stays exact.
+    Xor,
+}
+
+/// One named split-label range: the static declaration of a stream family.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamDecl {
+    /// Root-generator namespace ("simnet" | "run" | "ef").
+    pub namespace: &'static str,
+    pub name: &'static str,
+    pub base: u64,
+    /// Number of distinct labels the stream may use.
+    pub capacity: u64,
+    pub labeling: Labeling,
+}
+
+impl StreamDecl {
+    pub const fn solo(namespace: &'static str, name: &'static str, label: u64) -> Self {
+        Self {
+            namespace,
+            name,
+            base: label,
+            capacity: 1,
+            labeling: Labeling::Solo,
+        }
+    }
+
+    pub const fn offset(
+        namespace: &'static str,
+        name: &'static str,
+        base: u64,
+        capacity: u64,
+    ) -> Self {
+        Self {
+            namespace,
+            name,
+            base,
+            capacity,
+            labeling: Labeling::Offset,
+        }
+    }
+
+    pub const fn xor(
+        namespace: &'static str,
+        name: &'static str,
+        base: u64,
+        capacity: u64,
+    ) -> Self {
+        Self {
+            namespace,
+            name,
+            base,
+            capacity,
+            labeling: Labeling::Xor,
+        }
+    }
+
+    /// The split label for index `i`, asserting (in debug builds) that `i`
+    /// stays inside the declared capacity. Bitwise identical to the
+    /// literals the call sites used before the registry existed.
+    #[inline]
+    pub fn label(&self, i: u64) -> u64 {
+        debug_assert!(
+            i < self.capacity,
+            "stream {}::{}: index {} outside declared capacity {}",
+            self.namespace,
+            self.name,
+            i,
+            self.capacity
+        );
+        match self.labeling {
+            Labeling::Solo => self.base,
+            Labeling::Offset => self.base + i,
+            Labeling::Xor => self.base ^ i,
+        }
+    }
+
+    /// The label of a single-label stream.
+    #[inline]
+    pub fn solo_label(&self) -> u64 {
+        debug_assert!(
+            self.labeling == Labeling::Solo,
+            "stream {}::{} is not a solo stream",
+            self.namespace,
+            self.name
+        );
+        self.base
+    }
+
+    /// The half-open label range `[lo, hi)` this declaration may emit.
+    pub fn range(&self) -> (u64, u64) {
+        match self.labeling {
+            Labeling::Solo => (self.base, self.base + 1),
+            Labeling::Offset => (self.base, self.base + self.capacity),
+            // With the power-of-two + base < capacity requirement the
+            // image of `base ^ i` over `i < capacity` is exactly
+            // `[0, capacity)`.
+            Labeling::Xor => (0, self.capacity),
+        }
+    }
+}
+
+// ---- simnet namespace (root = Rng::new(seed ^ SIMNET_ROOT_SALT)) -------
+
+/// Per-round link-jitter stream (`simnet/engine.rs`, `simnet/sparse.rs`).
+pub const SIMNET_LINK: StreamDecl = StreamDecl::solo("simnet", "SIMNET_LINK", 0);
+
+/// Per-client compute-timing streams, labels `1..=n` — label 0 is the
+/// link stream, so client 0 maps to 1.
+pub const SIMNET_CLIENT_TIMING: StreamDecl =
+    StreamDecl::offset("simnet", "SIMNET_CLIENT_TIMING", 1, (1 << 40) - 1);
+
+/// Per-client churn streams (join/leave draws), labels
+/// `1<<40 .. 1<<41`.
+pub const SIMNET_CHURN: StreamDecl =
+    StreamDecl::offset("simnet", "SIMNET_CHURN", 1 << 40, 1 << 40);
+
+/// `ParticipationPolicy::Fraction` client-sampling stream.
+pub const SIMNET_SAMPLING: StreamDecl = StreamDecl::solo("simnet", "SIMNET_SAMPLING", 1 << 41);
+
+/// Gossip-mode edge-draw stream (random-regular wiring, per-edge faults).
+pub const SIMNET_GOSSIP: StreamDecl = StreamDecl::solo("simnet", "SIMNET_GOSSIP", 1 << 42);
+
+// ---- run namespace (root = Rng::new(cfg.seed)) -------------------------
+
+/// Per-client minibatch-sampler streams (`data/sampler.rs`); the XOR
+/// labeling is the historical `0x5A17 ^ client_id` scheme, kept bitwise.
+pub const RUN_SAMPLER: StreamDecl = StreamDecl::xor("run", "RUN_SAMPLER", 0x5A17, 1 << 40);
+
+// ---- ef namespace (root = Rng::new(seed ^ EF_ROOT_SALT)) ---------------
+
+/// Per-client error-feedback quantization streams, labels `1..=n`
+/// (`comm::compress::ef_client_rng`).
+pub const EF_CLIENT: StreamDecl = StreamDecl::offset("ef", "EF_CLIENT", 1, (1 << 40) - 1);
+
+/// Every declared stream. The invariant suite derives its "registered
+/// accessor" allowlist and the non-overlap proof from this slice.
+pub const REGISTRY: &[&StreamDecl] = &[
+    &SIMNET_LINK,
+    &SIMNET_CLIENT_TIMING,
+    &SIMNET_CHURN,
+    &SIMNET_SAMPLING,
+    &SIMNET_GOSSIP,
+    &RUN_SAMPLER,
+    &EF_CLIENT,
+];
+
+/// Look a declaration up by name.
+pub fn find(name: &str) -> Option<&'static StreamDecl> {
+    REGISTRY.iter().copied().find(|d| d.name == name)
+}
+
+/// Validate an arbitrary declaration set: well-formed ranges and pairwise
+/// disjointness within each namespace. Returns human-readable problems
+/// (empty = valid).
+pub fn check_decls(decls: &[&StreamDecl]) -> Vec<String> {
+    let mut problems = Vec::new();
+    for d in decls {
+        if d.capacity == 0 {
+            problems.push(format!("{}::{}: zero capacity", d.namespace, d.name));
+        }
+        if d.labeling == Labeling::Solo && d.capacity != 1 {
+            problems.push(format!(
+                "{}::{}: solo stream must have capacity 1, has {}",
+                d.namespace, d.name, d.capacity
+            ));
+        }
+        if d.labeling == Labeling::Xor
+            && (!d.capacity.is_power_of_two() || d.base >= d.capacity)
+        {
+            problems.push(format!(
+                "{}::{}: xor stream needs power-of-two capacity and base < capacity \
+                 (base={}, capacity={})",
+                d.namespace, d.name, d.base, d.capacity
+            ));
+        }
+        if d.labeling == Labeling::Offset && d.base.checked_add(d.capacity).is_none() {
+            problems.push(format!(
+                "{}::{}: range overflows u64 (base={}, capacity={})",
+                d.namespace, d.name, d.base, d.capacity
+            ));
+        }
+    }
+    for (i, a) in decls.iter().enumerate() {
+        for b in decls.iter().skip(i + 1) {
+            if a.namespace != b.namespace {
+                continue;
+            }
+            let (alo, ahi) = a.range();
+            let (blo, bhi) = b.range();
+            if alo < bhi && blo < ahi {
+                problems.push(format!(
+                    "{}: streams {} [{alo}, {ahi}) and {} [{blo}, {bhi}) overlap",
+                    a.namespace, a.name, b.name
+                ));
+            }
+        }
+    }
+    problems
+}
+
+/// Validate [`REGISTRY`]. The invariant suite asserts this is empty.
+pub fn check_registry() -> Vec<String> {
+    check_decls(REGISTRY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_disjoint_and_well_formed() {
+        let problems = check_registry();
+        assert!(problems.is_empty(), "{problems:?}");
+    }
+
+    #[test]
+    fn labels_are_bitwise_the_historical_literals() {
+        // Satellite pin: moving the constants into the registry must be a
+        // bitwise no-op. These are the exact literal expressions the call
+        // sites used before the registry existed.
+        for i in 0..200u64 {
+            assert_eq!(SIMNET_CLIENT_TIMING.label(i), i + 1);
+            assert_eq!(SIMNET_CHURN.label(i), (1u64 << 40) + i);
+            assert_eq!(RUN_SAMPLER.label(i), 0x5A17 ^ i);
+            assert_eq!(EF_CLIENT.label(i), i + 1);
+        }
+        assert_eq!(SIMNET_LINK.solo_label(), 0);
+        assert_eq!(SIMNET_SAMPLING.solo_label(), 1 << 41);
+        assert_eq!(SIMNET_GOSSIP.solo_label(), 1 << 42);
+        assert_eq!(SIMNET_ROOT_SALT, 0x51D_CAFE);
+        assert_eq!(EF_ROOT_SALT, 0xC0_4B1D);
+    }
+
+    #[test]
+    fn ranges_make_the_budget_explicit() {
+        // The hazard the registry exists to close: client-indexed streams
+        // stop strictly below the next base instead of running unbounded.
+        let (_, timing_hi) = SIMNET_CLIENT_TIMING.range();
+        let (churn_lo, churn_hi) = SIMNET_CHURN.range();
+        assert_eq!(timing_hi, churn_lo);
+        assert_eq!(churn_hi, SIMNET_SAMPLING.solo_label());
+    }
+
+    #[test]
+    fn xor_range_covers_exactly_capacity() {
+        let d = StreamDecl::xor("t", "T", 0b1010, 16);
+        let (lo, hi) = d.range();
+        let mut seen: Vec<u64> = (0..16).map(|i| d.label(i)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (lo..hi).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn find_resolves_registered_names() {
+        assert!(find("SIMNET_CHURN").is_some());
+        assert!(find("NOT_A_STREAM").is_none());
+    }
+
+    #[test]
+    fn check_decls_rejects_overlap() {
+        const A: StreamDecl = StreamDecl::offset("ns", "A", 0, 100);
+        const B: StreamDecl = StreamDecl::offset("ns", "B", 99, 10);
+        assert!(!check_decls(&[&A, &B]).is_empty());
+        // Different namespaces never collide: separate roots.
+        const C: StreamDecl = StreamDecl::offset("other", "C", 0, 100);
+        assert!(check_decls(&[&A, &C]).is_empty());
+    }
+
+    #[test]
+    fn check_decls_rejects_malformed() {
+        const ZERO: StreamDecl = StreamDecl::offset("ns", "Z", 0, 0);
+        const BAD_XOR: StreamDecl = StreamDecl::xor("ns", "X", 1 << 20, 16);
+        assert!(!check_decls(&[&ZERO]).is_empty());
+        assert!(!check_decls(&[&BAD_XOR]).is_empty());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "outside declared capacity")]
+    fn label_outside_capacity_asserts() {
+        let d = StreamDecl::offset("ns", "D", 0, 4);
+        let _ = d.label(4);
+    }
+}

@@ -29,17 +29,8 @@ use super::participation::{Participation, ParticipationPolicy};
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline, TimelineEvent};
 use crate::comm::{compress::CompressorSpec, Algorithm};
-use crate::rng::Rng;
+use crate::rng::{streams, Rng};
 use crate::sim::{ComputeModel, NetworkModel};
-
-/// Split labels for the non-client streams. Client timing streams use
-/// labels 1..=n, so the auxiliary streams sit far above any realistic
-/// fleet size. `pub(crate)` so the sparse engine
-/// ([`crate::simnet::sparse`]) materializes the *identical* streams
-/// lazily (split is stateless in the parent — DESIGN.md §9).
-pub(crate) const CHURN_STREAM_BASE: u64 = 1 << 40;
-pub(crate) const SAMPLING_STREAM: u64 = 1 << 41;
-const GOSSIP_STREAM: u64 = 1 << 42;
 
 struct Client {
     rng: Rng,
@@ -118,14 +109,20 @@ impl SimNet {
         detail: Detail,
     ) -> Self {
         assert!(n_clients >= 1, "simnet needs at least one client");
-        let root = Rng::new(seed ^ 0x51D_CAFE);
+        // Stream labels come from the `rng::streams` registry: per-client
+        // ranges carry declared capacities and the auxiliary solo streams
+        // sit in statically disjoint slots (the registry's non-overlap
+        // check is part of tests/test_invariants.rs). `split` is stateless
+        // in the parent, so the sparse engine ([`crate::simnet::sparse`])
+        // materializes the *identical* streams lazily (DESIGN.md §9).
+        let root = Rng::new(seed ^ streams::SIMNET_ROOT_SALT);
         let clients = (0..n_clients)
             .map(|i| {
-                let mut rng = root.split(i as u64 + 1);
+                let mut rng = root.split(streams::SIMNET_CLIENT_TIMING.label(i as u64));
                 let speed = profile.draw_client_speed(&mut rng);
                 Client {
                     rng,
-                    churn_rng: root.split(CHURN_STREAM_BASE + i as u64),
+                    churn_rng: root.split(streams::SIMNET_CHURN.label(i as u64)),
                     speed,
                     present: true,
                 }
@@ -139,9 +136,9 @@ impl SimNet {
             dim,
             detail,
             clients,
-            link_rng: root.split(0),
-            part_rng: root.split(SAMPLING_STREAM),
-            gossip_rng: root.split(GOSSIP_STREAM),
+            link_rng: root.split(streams::SIMNET_LINK.solo_label()),
+            part_rng: root.split(streams::SIMNET_SAMPLING.solo_label()),
+            gossip_rng: root.split(streams::SIMNET_GOSSIP.solo_label()),
             down: None,
             policy: ParticipationPolicy::All,
             pending: None,
@@ -1303,21 +1300,23 @@ mod tests {
 
     #[test]
     fn churn_streams_replay_lazily_per_client() {
-        // The per-client churn stream is `root.split(CHURN_STREAM_BASE + i)`
-        // and `split` is stateless in the parent, so the stream a lazily
-        // materialized client would draw — split off at any later point, in
-        // any order — is bit-identical to the one the dense engine built
-        // eagerly at construction. This is the mechanism that lets the
-        // cohort store sparsify the fleet without perturbing a single
+        // The per-client churn stream is
+        // `root.split(SIMNET_CHURN.label(i))` and `split` is stateless in
+        // the parent, so the stream a lazily materialized client would
+        // draw — split off at any later point, in any order — is
+        // bit-identical to the one the dense engine built eagerly at
+        // construction. This is the mechanism that lets the cohort store
+        // sparsify the fleet without perturbing a single
         // `ClientJoined`/`ClientLeft` decision.
         let profile = ClusterProfile::elastic_federated();
         let n = 64usize;
-        let root = Rng::new(33 ^ 0x51D_CAFE);
+        let root = Rng::new(33 ^ streams::SIMNET_ROOT_SALT);
 
         // Dense: all clients' churn decisions, drawn round-robin the way
         // `draw_membership` interleaves them (client-ascending per round).
-        let mut dense: Vec<Rng> =
-            (0..n).map(|i| root.split(CHURN_STREAM_BASE + i as u64)).collect();
+        let mut dense: Vec<Rng> = (0..n)
+            .map(|i| root.split(streams::SIMNET_CHURN.label(i as u64)))
+            .collect();
         let mut dense_present = vec![true; n];
         let mut dense_events: Vec<Vec<bool>> = vec![Vec::new(); n];
         for _ in 0..50 {
@@ -1337,7 +1336,7 @@ mod tests {
         // Lazy: materialize each client's stream on its own, in reverse
         // order, and replay its 50 rounds in isolation.
         for i in (0..n).rev() {
-            let mut rng = root.split(CHURN_STREAM_BASE + i as u64);
+            let mut rng = root.split(streams::SIMNET_CHURN.label(i as u64));
             let mut present = true;
             for (r, &expect) in dense_events[i].iter().enumerate() {
                 let flip = if present {

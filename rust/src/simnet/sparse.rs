@@ -33,7 +33,7 @@ use super::participation::ParticipationPolicy;
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline};
 use crate::comm::{compress::CompressorSpec, Algorithm};
-use crate::rng::Rng;
+use crate::rng::{streams, Rng};
 use crate::sim::{ComputeModel, NetworkModel};
 use std::collections::HashMap;
 
@@ -111,11 +111,11 @@ impl SparseSimNet {
             "the sparse engine has no step-event sink (a step timeline is O(N x k)); \
              use SimNet for Detail::Steps"
         );
-        let root = Rng::new(seed ^ 0x51D_CAFE);
+        let root = Rng::new(seed ^ streams::SIMNET_ROOT_SALT);
         let churn = if profile.leave_prob > 0.0 || profile.join_prob > 0.0 {
             Some(ChurnState {
                 rngs: (0..n_clients)
-                    .map(|i| root.split(super::engine::CHURN_STREAM_BASE + i as u64))
+                    .map(|i| root.split(streams::SIMNET_CHURN.label(i as u64)))
                     .collect(),
                 present: vec![true; n_clients],
             })
@@ -130,8 +130,8 @@ impl SparseSimNet {
             n: n_clients,
             dim,
             detail,
-            link_rng: root.split(0),
-            part_rng: root.split(super::engine::SAMPLING_STREAM),
+            link_rng: root.split(streams::SIMNET_LINK.solo_label()),
+            part_rng: root.split(streams::SIMNET_SAMPLING.solo_label()),
             root,
             timing: HashMap::new(),
             churn,
@@ -287,7 +287,7 @@ impl SparseSimNet {
         if !self.timing.contains_key(&i) {
             // Identical to the dense constructor's eager per-client setup:
             // split the timing stream, draw the permanent speed.
-            let mut rng = self.root.split(i as u64 + 1);
+            let mut rng = self.root.split(streams::SIMNET_CLIENT_TIMING.label(i as u64));
             let speed = self.profile.draw_client_speed(&mut rng);
             self.timing.insert(i, ClientTiming { rng, speed });
         }

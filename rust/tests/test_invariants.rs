@@ -1,0 +1,420 @@
+//! Invariant-analyzer acceptance suite (DESIGN.md §10).
+//!
+//! Three layers:
+//!
+//! 1. **Real tree green** — the lint pass over the live `rust/src/` must
+//!    report zero violations. This is the CI `lint` stage's teeth: any
+//!    new raw RNG label, allowlist-escaping `unsafe`, untagged HashMap
+//!    iteration in an order-critical module, or undocumented config key
+//!    fails the build.
+//! 2. **Fixture negatives** — every lint must *fire* on a seeded
+//!    violation string, so a silently-rotted lint cannot pass as green.
+//! 3. **Dynamic contracts** — the stream-registry refactor is a bitwise
+//!    no-op against the historical raw labels; the schedule explorer
+//!    exhaustively covers the leader-gather protocol at N ≤ 5 workers ×
+//!    6 rows with zero violations and one bitwise outcome; and
+//!    `coordinator::run` is double-run deterministic (byte-identical
+//!    trace/timeline JSON) across presets × modes × cohort.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::analysis::{lints, locate_src_root, schedules, walk_sources, SourceFile};
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig, Trace};
+use stl_sgd::data::{partition, synth};
+use stl_sgd::decentral::ExecMode;
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::{streams, Rng};
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+
+// ---------------------------------------------------------------------
+// Layer 1: the analyzer is green on the real tree.
+// ---------------------------------------------------------------------
+
+fn load_tree() -> (Vec<SourceFile>, String) {
+    let root = locate_src_root().expect("rust/src not found from test cwd");
+    let files = walk_sources(&root).expect("walk rust/src");
+    let design = root
+        .parent()
+        .and_then(|p| p.parent())
+        .map(|repo| repo.join("DESIGN.md"))
+        .filter(|p| p.is_file())
+        .map(|p| std::fs::read_to_string(p).expect("read DESIGN.md"))
+        .expect("DESIGN.md at the repo root");
+    (files, design)
+}
+
+#[test]
+fn analyzer_is_green_on_the_real_tree() {
+    let (files, design) = load_tree();
+    assert!(
+        files.len() > 40,
+        "walk found only {} files — wrong root?",
+        files.len()
+    );
+    let violations = lints::run_all(&files, &design);
+    assert!(
+        violations.is_empty(),
+        "invariant lints fired on the live tree:\n{}",
+        violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn stream_registry_is_well_formed() {
+    let problems = streams::check_registry();
+    assert!(problems.is_empty(), "{problems:?}");
+}
+
+// ---------------------------------------------------------------------
+// Layer 2: fixture negatives — every lint fires on a seeded violation.
+// ---------------------------------------------------------------------
+
+#[test]
+fn rng_stream_lint_fires_on_raw_label() {
+    let f = SourceFile::from_source(
+        "simnet/fake.rs",
+        "fn f(root: &Rng) -> Rng {\n    root.split(7)\n}\n",
+    );
+    let v = lints::lint_rng_streams(&[f]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].lint, "rng-streams");
+    assert_eq!(v[0].line, 2);
+}
+
+#[test]
+fn rng_stream_lint_fires_on_unregistered_accessor() {
+    let f = SourceFile::from_source(
+        "simnet/fake.rs",
+        "fn f(root: &Rng) -> Rng {\n    root.split(streams::BOGUS_STREAM.label(3))\n}\n",
+    );
+    let v = lints::lint_rng_streams(&[f]);
+    assert_eq!(v.len(), 1, "unregistered stream name must not pass: {v:?}");
+}
+
+#[test]
+fn rng_stream_lint_accepts_registry_accessors_and_str_split() {
+    let f = SourceFile::from_source(
+        "simnet/fake.rs",
+        concat!(
+            "fn f(root: &Rng, i: u64, s: &str) {\n",
+            "    let _a = root.split(streams::SIMNET_CHURN.label(i));\n",
+            "    let _b = root.split(streams::SIMNET_LINK.solo_label());\n",
+            "    let _c: Vec<&str> = s.split(',').collect();\n",
+            "    let _d: Vec<&str> = s.split(\"::\").collect();\n",
+            "}\n",
+        ),
+    );
+    let v = lints::lint_rng_streams(&[f]);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn rng_stream_lint_skips_trailing_test_module() {
+    let f = SourceFile::from_source(
+        "simnet/fake.rs",
+        "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g(root: &Rng) { root.split(9); }\n}\n",
+    );
+    assert!(lints::lint_rng_streams(&[f]).is_empty());
+}
+
+#[test]
+fn time_source_lint_fires_on_entropy_and_wall_clock() {
+    let f = SourceFile::from_source(
+        "simnet/fake.rs",
+        "fn f() {\n    let r = thread_rng();\n    let t = std::time::Instant::now();\n}\n",
+    );
+    let v = lints::lint_time_sources(&[f]);
+    assert_eq!(v.len(), 2, "{v:?}");
+    // bench_support is exempt (it measures real wall time by design).
+    let g = SourceFile::from_source(
+        "bench_support/fake.rs",
+        "fn f() { let t = std::time::Instant::now(); }\n",
+    );
+    assert!(lints::lint_time_sources(&[g]).is_empty());
+}
+
+#[test]
+fn unsafe_lint_fires_outside_allowlist() {
+    let f = SourceFile::from_source(
+        "cohort/fake.rs",
+        "fn f(p: *const f32) -> f32 {\n    // SAFETY: does not matter, wrong module.\n    unsafe { *p }\n}\n",
+    );
+    let v = lints::lint_unsafe(&[f]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert!(v[0].msg.contains("allowlist"));
+}
+
+#[test]
+fn unsafe_lint_fires_without_safety_comment() {
+    let f = SourceFile::from_source(
+        "coordinator/threaded.rs",
+        "fn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n",
+    );
+    let v = lints::lint_unsafe(&[f]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert!(v[0].msg.contains("SAFETY"));
+    // With the tag within 5 lines it passes.
+    let g = SourceFile::from_source(
+        "coordinator/threaded.rs",
+        "fn f(p: *const f32) -> f32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n",
+    );
+    assert!(lints::lint_unsafe(&[g]).is_empty());
+}
+
+#[test]
+fn unsafe_lint_ignores_the_word_in_comments_and_strings() {
+    let f = SourceFile::from_source(
+        "cohort/fake.rs",
+        "//! Module docs mentioning unsafe code.\nfn f() { let s = \"unsafe\"; }\n",
+    );
+    assert!(lints::lint_unsafe(&[f]).is_empty());
+}
+
+#[test]
+fn hashmap_order_lint_fires_on_untagged_iteration() {
+    let src = concat!(
+        "use std::collections::HashMap;\n",
+        "struct S { entries: HashMap<u64, u64> }\n",
+        "fn f(s: &S) -> u64 {\n",
+        "    let mut acc = 0;\n",
+        "    for (k, v) in s.entries.iter() {\n",
+        "        acc += k + v;\n",
+        "    }\n",
+        "    acc\n",
+        "}\n",
+    );
+    let v = lints::lint_hashmap_order(&[SourceFile::from_source("cohort/fake.rs", src)]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert!(v[0].msg.contains("entries"));
+    // Outside the order-critical modules the same code is fine.
+    let w = lints::lint_hashmap_order(&[SourceFile::from_source("bench_support/fake.rs", src)]);
+    assert!(w.is_empty());
+}
+
+#[test]
+fn hashmap_order_lint_accepts_tag_and_order_free_sinks() {
+    let src = concat!(
+        "use std::collections::HashMap;\n",
+        "struct S { entries: HashMap<u64, u64> }\n",
+        "fn f(s: &S) -> u64 {\n",
+        "    // ORDER: commutative integer sum — iteration order cannot leak.\n",
+        "    let mut acc = 0;\n",
+        "    for (k, v) in s.entries.iter() {\n",
+        "        acc += k + v;\n",
+        "    }\n",
+        "    let lo = s.entries.keys().min().copied().unwrap_or(0);\n",
+        "    acc + lo\n",
+        "}\n",
+    );
+    let v = lints::lint_hashmap_order(&[SourceFile::from_source("cohort/fake.rs", src)]);
+    // The tag covers the `for` (within 3 lines above? it is 2 above) and
+    // `.keys().min()` is an order-insensitive sink.
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn config_parity_lint_fires_on_phantom_key() {
+    let cfg = SourceFile::from_source(
+        "config/mod.rs",
+        "fn parse(o: &Json) {\n    let a = gets(\"alpha\");\n    let p = gets(\"phantom_key\");\n}\n",
+    );
+    let main = SourceFile::from_source("main.rs", "fn main() { table(\"alpha\", \"alpha\"); }\n");
+    let design = "The `alpha` schedule knob.";
+    let v = lints::lint_config_parity(&[cfg, main], design);
+    // `phantom_key` is missing from BOTH main.rs and DESIGN.md.
+    assert_eq!(v.len(), 2, "{v:?}");
+    assert!(v.iter().all(|x| x.msg.contains("phantom_key")));
+}
+
+// ---------------------------------------------------------------------
+// Layer 3a: the stream-registry refactor is a bitwise no-op.
+// ---------------------------------------------------------------------
+
+fn draws(mut r: Rng) -> [u64; 4] {
+    [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()]
+}
+
+#[test]
+fn registry_labels_reproduce_the_historical_raw_literals() {
+    // Pre-registry code used these exact literals (simnet/engine.rs,
+    // simnet/sparse.rs, data/sampler.rs, comm/compress.rs before PR 8).
+    // The registry must hand back bit-identical streams forever.
+    let seed = 33u64;
+    let sim_root = Rng::new(seed ^ 0x51D_CAFE);
+    let reg_root = Rng::new(seed ^ streams::SIMNET_ROOT_SALT);
+    for i in [0u64, 1, 7, 1023] {
+        assert_eq!(
+            draws(sim_root.split(i + 1)),
+            draws(reg_root.split(streams::SIMNET_CLIENT_TIMING.label(i))),
+            "timing stream, client {i}"
+        );
+        assert_eq!(
+            draws(sim_root.split((1 << 40) + i)),
+            draws(reg_root.split(streams::SIMNET_CHURN.label(i))),
+            "churn stream, client {i}"
+        );
+    }
+    assert_eq!(draws(sim_root.split(0)), draws(reg_root.split(streams::SIMNET_LINK.solo_label())));
+    assert_eq!(
+        draws(sim_root.split(1 << 41)),
+        draws(reg_root.split(streams::SIMNET_SAMPLING.solo_label()))
+    );
+    assert_eq!(
+        draws(sim_root.split(1 << 42)),
+        draws(reg_root.split(streams::SIMNET_GOSSIP.solo_label()))
+    );
+
+    let run_root = Rng::new(seed);
+    for c in [0u64, 3, 511] {
+        assert_eq!(
+            draws(run_root.split(0x5A17 ^ c)),
+            draws(run_root.split(streams::RUN_SAMPLER.label(c))),
+            "sampler stream, client {c}"
+        );
+    }
+    let ef_root = Rng::new(seed ^ 0xC0_4B1D);
+    let ef_reg = Rng::new(seed ^ streams::EF_ROOT_SALT);
+    for c in [0u64, 2, 63] {
+        assert_eq!(
+            draws(ef_root.split(c + 1)),
+            draws(ef_reg.split(streams::EF_CLIENT.label(c))),
+            "error-feedback stream, client {c}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 3b: schedule explorer covers the acceptance grid.
+// ---------------------------------------------------------------------
+
+#[test]
+fn leader_gather_protocol_clean_over_full_acceptance_grid() {
+    // Exhaustive: every worker count ≤ 5, every row count ≤ 6, every
+    // completion interleaving. Zero violations, one bitwise outcome.
+    let fact = |k: usize| -> u64 { (1..=k as u64).product::<u64>().max(1) };
+    for w in 1..=5usize {
+        for r in 1..=6usize {
+            let rep = schedules::explore(w, r, schedules::Protocol::Correct);
+            // Independent multinomial recomputation: n! / prod(queue_len!).
+            let mut expect = fact(r);
+            for q in 0..w {
+                expect /= fact((r + w - 1 - q) / w);
+            }
+            assert_eq!(rep.schedules, expect, "schedule count at w={w} r={r}");
+            assert!(
+                rep.violations.is_empty(),
+                "w={w} r={r}: {:?}",
+                rep.violations
+            );
+            assert_eq!(rep.distinct_outcomes, 1, "w={w} r={r}: outcome drift");
+        }
+    }
+    // The densest corner really is 360 interleavings (6! / 2!).
+    assert_eq!(schedules::interleaving_count(5, 6), 360);
+}
+
+#[test]
+fn schedule_explorer_catches_seeded_protocol_bugs() {
+    use schedules::Protocol::*;
+    let alias = schedules::explore(3, 5, AliasRow);
+    assert!(alias.violations.iter().any(|v| v.contains("aliasing")), "{:?}", alias.violations);
+    let early = schedules::explore(3, 5, EarlyRead);
+    assert!(!early.violations.is_empty(), "early read must be caught");
+    let short = schedules::explore(3, 5, ShortGather);
+    assert!(
+        short.violations.iter().any(|v| v.contains("use-after-free")),
+        "{:?}",
+        short.violations
+    );
+    let arrival = schedules::explore(3, 6, ArrivalOrderSum);
+    assert!(
+        arrival.distinct_outcomes > 1,
+        "arrival-order f32 folding must be schedule-visible"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Layer 3c: double-run bitwise determinism of the coordinator.
+// ---------------------------------------------------------------------
+
+fn assert_double_run_bitwise(cfg: &RunConfig, tag: &str) {
+    let ds = Arc::new(synth::a9a_like(2, 256, 12));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, cfg.n_clients, &mut Rng::new(0));
+    let theta0 = vec![0.0f32; 12];
+    let spec = AlgoSpec {
+        variant: Variant::StlSc,
+        eta1: 0.3,
+        k1: 5.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    };
+    let phases = spec.phases(150);
+    let once = || -> Trace {
+        let mut engine = NativeCompute::new(oracle.clone());
+        run(&mut engine, &shards, &phases, cfg, &theta0, "stl-sc")
+    };
+    let a = once();
+    let b = once();
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{tag}: loss @ iter {}", pa.iter);
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{tag}: sim clock @ iter {}",
+            pa.iter
+        );
+    }
+    assert_eq!(a.comm, b.comm, "{tag}: comm accounting");
+    assert_eq!(a.timeline, b.timeline, "{tag}: timeline");
+    // The strongest practical claim: the serialized artifacts a user
+    // would diff are byte-identical.
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "{tag}: trace JSON"
+    );
+}
+
+#[test]
+fn double_run_is_bitwise_identical_across_presets_and_modes() {
+    for profile in [
+        ClusterProfile::homogeneous(),
+        ClusterProfile::heavy_tail_stragglers(),
+        ClusterProfile::elastic_federated(),
+    ] {
+        for mode in [ExecMode::Bsp, ExecMode::Gossip, ExecMode::BoundedStaleness] {
+            let cfg = RunConfig {
+                n_clients: 4,
+                profile,
+                mode,
+                participation: match mode {
+                    ExecMode::Bsp => ParticipationPolicy::Fraction(0.5),
+                    _ => ParticipationPolicy::Arrived,
+                },
+                staleness_bound: 2,
+                ..Default::default()
+            };
+            assert_double_run_bitwise(&cfg, &format!("{mode:?}/{}", profile.name));
+        }
+    }
+}
+
+#[test]
+fn double_run_is_bitwise_identical_on_the_cohort_path() {
+    let cfg = RunConfig {
+        n_clients: 4,
+        profile: ClusterProfile::elastic_federated(),
+        participation: ParticipationPolicy::Fraction(0.5),
+        cohort: true,
+        ..Default::default()
+    };
+    assert_double_run_bitwise(&cfg, "cohort/elastic");
+}

@@ -10,16 +10,21 @@
 #                                      # bench_round --ci vs the committed floors)
 #   scripts/check.sh --no-build        # skip build+test (CI pipelines that already
 #                                      # ran them as their own stages, scripts/ci.sh)
+#   scripts/check.sh --lint            # additionally run the invariant analyzer
+#                                      # on its own (tests/test_invariants.rs:
+#                                      # stream registry, unsafe hygiene, order
+#                                      # lints, config parity, schedule explorer)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-no_fmt=0 smoke=0 quick=0 no_build=0
+no_fmt=0 smoke=0 quick=0 no_build=0 lint=0
 for arg in "$@"; do
     case "$arg" in
         --no-fmt) no_fmt=1 ;;
         --smoke) smoke=1 ;;
         --quick) quick=1 ;;
         --no-build) no_build=1 ;;
+        --lint) lint=1 ;;
         *) echo "check.sh: unknown flag $arg" >&2; exit 2 ;;
     esac
 done
@@ -34,6 +39,12 @@ release_flags="${RUSTFLAGS:-} -D warnings"
 if [[ $no_build -eq 0 ]]; then
     RUSTFLAGS="$release_flags" cargo build --release
     cargo test -q
+fi
+
+if [[ $lint -eq 1 ]]; then
+    # The invariant analyzer as a standalone gate (already part of the
+    # full `cargo test` above; this path serves --no-build pipelines).
+    cargo test -q --test test_invariants
 fi
 
 if [[ $smoke -eq 1 ]]; then
