@@ -1,0 +1,230 @@
+//! Placement study: per-link fabric x compute/comm overlap (DESIGN.md §11).
+//!
+//!     cargo run --release --example placement_study -- \
+//!         [--fabrics uniform,rack-wan:4,hier:4] \
+//!         [--overlaps off,chunked] \
+//!         [--steps 3000] [--clients 8] [--k1 16] [--t1 500] \
+//!         [--collective ring] [--cluster mild-hetero] \
+//!         [--out-dir results/placement]
+//!
+//! The scalar `NetworkModel` prices every pairwise link identically, so
+//! it cannot distinguish a rack-local fleet from one scattered across a
+//! WAN — and a serialized barrier cannot credit transfers that ride
+//! behind the next round's local steps. This sweep runs one config per
+//! fabric x overlap cell and reports, per cell: total simulated seconds,
+//! run-total `overlap_seconds` (collective time hidden behind compute),
+//! and the dominant `critical_path_tier` across rounds (0 = uniform,
+//! 1 = rack, 2 = WAN). Trajectories are identical in every cell — the
+//! fabric is a pricing layer — so the delta is pure wall-clock placement
+//! and pipelining effect.
+//!
+//! Headline (asserted, and pinned by tests/test_fabric.rs): on the
+//! rack/WAN matrix the hierarchical schedule beats the flat ring, and
+//! chunked overlap never prices a run longer than its serialized twin.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::comm::Algorithm;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::simnet::{ClusterProfile, LinkFabric, Overlap};
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "placement_study",
+        "STL-SGD placement study: per-link fabrics and compute/comm overlap",
+    )
+    .opt(
+        "fabrics",
+        "uniform,rack-wan:4,hier:4",
+        "comma-separated fabrics (uniform|rack-wan[:SIZE]|hier[:SIZE])",
+    )
+    .opt("overlaps", "off,chunked", "comma-separated overlap modes (off|chunked)")
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("algorithm", "stl-sc", "algorithm (sync|local|stl-sc|...)")
+    .opt("collective", "ring", "model-averaging collective (naive|ring|tree)")
+    .opt("cluster", "mild-hetero", "cluster profile")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "16", "initial communication period")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt("chunk-rows", "0", "overlap chunk size in rows (0 = auto quarter-row)")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/placement", "output directory")
+    .parse();
+
+    let fabrics: Vec<LinkFabric> = args
+        .get_list("fabrics")
+        .iter()
+        .map(|s| LinkFabric::parse(s).unwrap_or_else(|| panic!("unknown fabric {s:?}")))
+        .collect();
+    let overlaps: Vec<Overlap> = args
+        .get_list("overlaps")
+        .iter()
+        .map(|s| Overlap::parse(s).unwrap_or_else(|| panic!("unknown overlap mode {s:?}")))
+        .collect();
+    let workload = Workload::parse(args.get("workload")).expect("known workload");
+    let variant = Variant::parse(args.get("algorithm"))
+        .unwrap_or_else(|| panic!("unknown algorithm {:?}", args.get("algorithm")));
+    let collective = Algorithm::parse(args.get("collective")).expect("known collective");
+    let cluster = ClusterProfile::parse(args.get("cluster")).expect("known cluster profile");
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let chunk_rows = args.get_usize("chunk-rows");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    println!(
+        "workload={} algorithm={} collective={collective:?} cluster={} N={n} steps={steps}",
+        workload.name(),
+        variant.name(),
+        cluster.name,
+    );
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join("summary.csv"),
+        &[
+            "fabric",
+            "overlap",
+            "rounds",
+            "sim_total_seconds",
+            "comm_seconds",
+            "overlap_seconds_total",
+            "dominant_tier",
+            "wan_tier_rounds",
+            "final_loss",
+            "speedup_vs_uniform_off",
+        ],
+    )?;
+
+    // Cross-cell checks: trajectories must agree bit-for-bit, chunked
+    // must never be slower than off on the same fabric, and hier must
+    // beat the flat rack-wan placement.
+    let mut baseline: Option<f64> = None;
+    let mut first_loss: Option<f64> = None;
+    let mut per_fabric_off: Vec<(String, f64)> = Vec::new();
+    for &fabric in &fabrics {
+        let mut off_total: Option<f64> = None;
+        for &overlap in &overlaps {
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = workload;
+            cfg.n_clients = n;
+            cfg.total_steps = steps;
+            cfg.seed = seed;
+            cfg.cluster = cluster;
+            cfg.collective = collective;
+            cfg.fabric = fabric;
+            cfg.overlap = overlap;
+            cfg.chunk_rows = chunk_rows;
+            cfg.algo = AlgoSpec {
+                variant,
+                eta1: 3.2,
+                alpha: 1e-3,
+                k1,
+                t1,
+                batch: 32,
+                iid: true,
+                ..Default::default()
+            };
+            let trace = workloads::run_experiment(&cfg)?;
+            let total = trace.clock.total();
+            let hidden = trace.timeline.total_overlap_seconds();
+            let wan_rounds = trace
+                .timeline
+                .rounds
+                .iter()
+                .filter(|r| r.critical_path_tier == 2)
+                .count();
+            let rack_rounds = trace
+                .timeline
+                .rounds
+                .iter()
+                .filter(|r| r.critical_path_tier == 1)
+                .count();
+            let dominant = if wan_rounds >= rack_rounds && wan_rounds > 0 {
+                "wan"
+            } else if rack_rounds > 0 {
+                "rack"
+            } else {
+                "uniform"
+            };
+            match first_loss {
+                None => first_loss = Some(trace.final_loss()),
+                Some(l) => assert_eq!(
+                    l.to_bits(),
+                    trace.final_loss().to_bits(),
+                    "fabric/overlap moved the trajectory — pricing leaked into compute"
+                ),
+            }
+            if baseline.is_none() {
+                baseline = Some(total);
+            }
+            match (overlap, off_total) {
+                (Overlap::Off, _) => off_total = Some(total),
+                (Overlap::Chunked, Some(off)) => assert!(
+                    total <= off + 1e-9,
+                    "chunked overlap priced {} slower than serialized on {}",
+                    total - off,
+                    fabric.label()
+                ),
+                _ => {}
+            }
+            let speedup = baseline.map(|b| b / total).unwrap_or(1.0);
+            println!(
+                "  fabric={:<11} overlap={:<7} rounds={:<5} total={:>9.3}s hidden={:>8.3}s \
+                 tier={:<7} wan_rounds={:<4} speedup={:.2}x",
+                fabric.label(),
+                overlap.label(),
+                trace.comm.rounds,
+                total,
+                hidden,
+                dominant,
+                wan_rounds,
+                speedup,
+            );
+            let tag = format!("{}_{}", fabric.label().replace(':', ""), overlap.label());
+            trace.write_timeline_csv(&out_dir.join(format!("timeline_{tag}.csv")))?;
+            summary.row(&[
+                fabric.label(),
+                overlap.label().to_string(),
+                trace.comm.rounds.to_string(),
+                format!("{total:.6e}"),
+                format!("{:.6e}", trace.clock.comm_seconds),
+                format!("{hidden:.6e}"),
+                dominant.to_string(),
+                wan_rounds.to_string(),
+                format!("{:.6e}", trace.final_loss()),
+                format!("{speedup:.4}"),
+            ])?;
+        }
+        if let Some(off) = off_total {
+            per_fabric_off.push((fabric.label(), off));
+        }
+    }
+    summary.flush()?;
+
+    // Headline assertion: hierarchical beats the flat placement on the
+    // same rack/WAN matrix (skipped if the sweep omits either fabric).
+    let find = |head: &str| {
+        per_fabric_off
+            .iter()
+            .find(|(l, _)| l.starts_with(head))
+            .map(|&(_, t)| t)
+    };
+    if let (Some(flat), Some(hier)) = (find("rack-wan"), find("hier")) {
+        assert!(
+            hier < flat,
+            "hierarchical placement ({hier:.3}s) did not beat the flat ring ({flat:.3}s)"
+        );
+        println!(
+            "\nhierarchical placement beats the flat ring: {hier:.3}s vs {flat:.3}s \
+             ({:.2}x)",
+            flat / hier
+        );
+    }
+    println!("CSVs written under {}", out_dir.display());
+    Ok(())
+}

@@ -82,6 +82,14 @@ pub struct RoundFeedback {
     /// (DESIGN.md §8), where a controller can trade staleness against
     /// barrier waits. Always 0.0 under `bsp` and `gossip`.
     pub staleness: f64,
+    /// Collective seconds this round hid behind local compute under the
+    /// chunked overlap model (DESIGN.md §11). `comm_seconds` is the
+    /// *charged* span, so a controller reading `comm_ratio()` already sees
+    /// overlap-credited rounds; this field lets it distinguish "comm is
+    /// cheap" from "comm is hidden" (hidden comm reappears as excess if
+    /// the period — and with it the compute window — shrinks). Always 0.0
+    /// on the default serialized path.
+    pub overlap_seconds: f64,
 }
 
 impl RoundFeedback {
@@ -99,6 +107,7 @@ impl RoundFeedback {
             fleet,
             compression_ratio: rt.compression_ratio,
             staleness: 0.0,
+            overlap_seconds: rt.overlap_seconds,
         }
     }
 
@@ -411,6 +420,7 @@ mod tests {
             fleet: 4,
             compression_ratio: 1.0,
             staleness: 0.0,
+            overlap_seconds: 0.0,
         }
     }
 

@@ -22,7 +22,9 @@
 //!   or carry an explicit `// ORDER:` justification within 3 lines above.
 //! * **config-parity** — every `ExperimentConfig` JSON key is reachable
 //!   from the CLI (quoted in `main.rs`) and documented (backticked in
-//!   DESIGN.md).
+//!   DESIGN.md and in the root README's config-key matrix).
+//! * **module-docs** — every module root (`lib.rs`, `main.rs`, `*/mod.rs`)
+//!   opens with a non-empty `//!` header (ISSUE 9, docs layer).
 
 use super::SourceFile;
 use std::collections::BTreeSet;
@@ -397,9 +399,47 @@ pub fn config_keys(files: &[SourceFile]) -> BTreeSet<String> {
     keys
 }
 
+/// Lint (e): every module root (`lib.rs`, `main.rs`, any `*/mod.rs`)
+/// opens with a non-empty `//!` header. Module docs are the map a new
+/// reader navigates by; an undocumented subsystem root is a docs
+/// regression the same way a dropped CSV column is a schema regression.
+pub fn lint_module_docs(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        let is_root =
+            f.path == "lib.rs" || f.path == "main.rs" || f.path.ends_with("/mod.rs");
+        if !is_root {
+            continue;
+        }
+        let first = f.lines.iter().map(|l| l.raw.trim()).find(|l| !l.is_empty());
+        let opens_with_doc = first.is_some_and(|l| l.starts_with("//!"));
+        // The leading `//!` block must say something, not just exist.
+        let has_content = f
+            .lines
+            .iter()
+            .map(|l| l.raw.trim())
+            .take_while(|l| l.starts_with("//!") || l.is_empty())
+            .any(|l| !l.trim_start_matches("//!").trim().is_empty());
+        if !opens_with_doc || !has_content {
+            out.push(Violation {
+                lint: "module-docs",
+                path: f.path.clone(),
+                line: 1,
+                msg: "module root lacks a non-empty `//!` doc header".to_string(),
+            });
+        }
+    }
+    out
+}
+
 /// Lint (d): every config key is quoted in `main.rs` (a CLI override
-/// route exists) and backticked in DESIGN.md.
-pub fn lint_config_parity(files: &[SourceFile], design_md: &str) -> Vec<Violation> {
+/// route exists) and documented — backticked in DESIGN.md *and* in the
+/// root README's config-key matrix.
+pub fn lint_config_parity(
+    files: &[SourceFile],
+    design_md: &str,
+    readme_md: &str,
+) -> Vec<Violation> {
     let keys = config_keys(files);
     let mut out = Vec::new();
     if keys.is_empty() {
@@ -433,12 +473,22 @@ pub fn lint_config_parity(files: &[SourceFile], design_md: &str) -> Vec<Violatio
                 msg: format!("config key `{key}` is not documented (backticked) in DESIGN.md"),
             });
         }
+        if !readme_md.contains(&format!("`{key}`")) {
+            out.push(Violation {
+                lint: "config-parity",
+                path: "README.md".into(),
+                line: 1,
+                msg: format!(
+                    "config key `{key}` is missing from the README.md config-key matrix"
+                ),
+            });
+        }
     }
     out
 }
 
 /// Run every lint, plus the stream-registry validity check.
-pub fn run_all(files: &[SourceFile], design_md: &str) -> Vec<Violation> {
+pub fn run_all(files: &[SourceFile], design_md: &str, readme_md: &str) -> Vec<Violation> {
     let mut out = Vec::new();
     for problem in crate::rng::streams::check_registry() {
         out.push(Violation {
@@ -452,6 +502,7 @@ pub fn run_all(files: &[SourceFile], design_md: &str) -> Vec<Violation> {
     out.extend(lint_time_sources(files));
     out.extend(lint_unsafe(files));
     out.extend(lint_hashmap_order(files));
-    out.extend(lint_config_parity(files, design_md));
+    out.extend(lint_module_docs(files));
+    out.extend(lint_config_parity(files, design_md, readme_md));
     out
 }

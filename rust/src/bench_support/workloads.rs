@@ -214,6 +214,9 @@ pub fn run_experiment_with_stop(
         gossip_degree: cfg.gossip_degree,
         staleness_bound: cfg.staleness_bound,
         down_compression: cfg.down_compressor,
+        fabric: cfg.fabric,
+        overlap: cfg.overlap,
+        chunk_rows: cfg.chunk_rows,
         cohort: cfg.cohort,
         cohort_budget: cfg.cohort_budget,
         timeline_detail: cfg.timeline_detail,

@@ -409,6 +409,30 @@ pub fn bytes_per_client_downlink(alg: Algorithm, n: usize, payload: u64) -> u64 
     }
 }
 
+/// Disjoint row-slice chunking of a d-dim model row: `[lo, hi)` element
+/// ranges of width `chunk` (the last chunk takes the remainder), covering
+/// `[0, d)` exactly. This is the slice partition the pipelined fabric
+/// pricer ([`crate::simnet::fabric`]) prices chunked transfers over —
+/// the same disjointness the in-place collectives above already rely on,
+/// so a pipelined schedule needs no extra copies. `chunk == 0` or
+/// `chunk >= d` degenerates to one whole-row chunk.
+pub fn chunk_ranges(d: usize, chunk: usize) -> Vec<(usize, usize)> {
+    if d == 0 {
+        return Vec::new();
+    }
+    if chunk == 0 || chunk >= d {
+        return vec![(0, d)];
+    }
+    let mut out = Vec::with_capacity(d.div_ceil(chunk));
+    let mut lo = 0;
+    while lo < d {
+        let hi = (lo + chunk).min(d);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -673,6 +697,25 @@ mod tests {
     fn arena_masked_rejects_wrong_mask_len() {
         let mut a = arena_from(&random_models(3, 4, 1));
         average_arena_masked(&mut a, Algorithm::Naive, &[true, false]);
+    }
+
+    #[test]
+    fn chunk_ranges_partition_the_row_exactly() {
+        for (d, c) in [(16usize, 4usize), (17, 4), (5, 2), (5, 5), (5, 9), (7, 0), (1, 1)] {
+            let ranges = chunk_ranges(d, c);
+            assert!(!ranges.is_empty(), "d={d} c={c}");
+            assert_eq!(ranges[0].0, 0, "d={d} c={c}");
+            assert_eq!(ranges.last().unwrap().1, d, "d={d} c={c}");
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "d={d} c={c}: gap or overlap");
+            }
+            for &(lo, hi) in &ranges {
+                assert!(lo < hi, "d={d} c={c}: empty chunk");
+            }
+        }
+        assert_eq!(chunk_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(chunk_ranges(9, 0), vec![(0, 9)]);
+        assert_eq!(chunk_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use crate::algo::{AlgoSpec, ControllerSpec, Variant};
 use crate::comm::{Algorithm, CompressionSchedule};
 use crate::decentral::{ExecMode, PeerTopology};
-use crate::simnet::{ClusterProfile, Detail, ParticipationPolicy};
+use crate::simnet::{ClusterProfile, Detail, LinkFabric, Overlap, ParticipationPolicy};
 use crate::util::json::Json;
 
 /// Which dataset/model workload to run.
@@ -125,6 +125,19 @@ pub struct ExperimentConfig {
     /// Optional downlink compressor schedule (key `down_compressor`, same
     /// names as `compressor`); absent keeps symmetric pricing.
     pub down_compressor: Option<CompressionSchedule>,
+    /// Per-link network fabric (key `fabric`: "uniform" | "rack-wan[:SIZE]"
+    /// | "hier[:SIZE]"): prices collectives and gossip edges over rack/WAN
+    /// link tiers. Pricing-only — trajectories are fabric-invariant
+    /// (DESIGN.md §11).
+    pub fabric: LinkFabric,
+    /// Compute/communication overlap model (key `overlap`: "off" |
+    /// "chunked"): `chunked` pipelines chunked collective transfers behind
+    /// the next round's local steps, reported in the timeline's
+    /// `overlap_seconds` column.
+    pub overlap: Overlap,
+    /// Collective chunk size in rows for the overlap model (key
+    /// `chunk_rows`); 0 picks quarter-dimension chunks automatically.
+    pub chunk_rows: usize,
     /// Cohort-sparse execution (key `cohort`, BSP only): route the run
     /// through the sparse client store + cohort-sized arenas, bit-for-bit
     /// identical to the dense path (DESIGN.md §9).
@@ -163,6 +176,9 @@ impl Default for ExperimentConfig {
             gossip_degree: 2,
             staleness_bound: 0,
             down_compressor: None,
+            fabric: LinkFabric::default(),
+            overlap: Overlap::default(),
+            chunk_rows: 0,
             cohort: false,
             cohort_budget: 0,
             eval_every_rounds: 1,
@@ -300,6 +316,21 @@ impl ExperimentConfig {
             );
             cfg.cohort_budget = v as usize;
         }
+        if let Some(f) = gets("fabric") {
+            cfg.fabric =
+                LinkFabric::parse(&f).ok_or_else(|| anyhow::anyhow!("unknown fabric {f}"))?;
+        }
+        if let Some(o) = gets("overlap") {
+            cfg.overlap =
+                Overlap::parse(&o).ok_or_else(|| anyhow::anyhow!("unknown overlap mode {o}"))?;
+        }
+        if let Some(v) = getf("chunk_rows") {
+            anyhow::ensure!(
+                v.fract() == 0.0 && v >= 0.0,
+                "chunk_rows must be a non-negative integer, got {v}"
+            );
+            cfg.chunk_rows = v as usize;
+        }
         if let Some(c) = gets("down_compressor") {
             cfg.down_compressor = Some(
                 CompressionSchedule::parse(&c)
@@ -428,6 +459,9 @@ impl ExperimentConfig {
         take!(gossip_degree);
         take!(staleness_bound);
         take!(down_compressor);
+        take!(fabric);
+        take!(overlap);
+        take!(chunk_rows);
         take!(cohort);
         take!(cohort_budget);
         if j.get("algorithm").is_some() {
@@ -710,6 +744,45 @@ mod tests {
         assert!(cfg.down_compressor.is_some());
         cfg.apply_override("seed", "11").unwrap();
         assert!(cfg.down_compressor.is_some(), "unrelated override keeps it");
+    }
+
+    #[test]
+    fn parses_fabric_keys() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.fabric, LinkFabric::Uniform);
+        assert_eq!(cfg.overlap, Overlap::Off);
+        assert_eq!(cfg.chunk_rows, 0);
+        let j = Json::parse(
+            r#"{"fabric": "rack-wan:4", "overlap": "chunked", "chunk_rows": 256}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(!cfg.fabric.is_uniform());
+        assert_eq!(cfg.fabric.matrix().unwrap().rack_size, 4);
+        assert_eq!(cfg.overlap, Overlap::Chunked);
+        assert_eq!(cfg.chunk_rows, 256);
+        let j = Json::parse(r#"{"fabric": "hier"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.fabric.label(), "hier:8");
+        // Overrides round-trip (the CLI path) and compose with others.
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("fabric", "hier:4").unwrap();
+        cfg.apply_override("overlap", "chunked").unwrap();
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(cfg.fabric.label(), "hier:4", "unrelated override keeps it");
+        assert_eq!(cfg.overlap, Overlap::Chunked);
+        for bad in [
+            r#"{"fabric": "mesh"}"#,
+            r#"{"fabric": "rack-wan:0"}"#,
+            r#"{"overlap": "eager"}"#,
+            r#"{"chunk_rows": -1}"#,
+            r#"{"chunk_rows": 1.5}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
     }
 
     #[test]

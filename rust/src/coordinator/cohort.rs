@@ -187,7 +187,8 @@ pub fn run_cohort_detailed(
         cfg.seed,
         cfg.timeline_detail,
     )
-    .with_policy(cfg.participation);
+    .with_policy(cfg.participation)
+    .with_fabric(cfg.fabric, cfg.overlap, cfg.chunk_rows);
 
     let mut trace = Trace {
         algorithm: algorithm_name.to_string(),

@@ -23,7 +23,7 @@ use crate::decentral::{ExecMode, GossipEngine, PeerTopology, StalenessFold};
 use crate::linalg::ModelArena;
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel, SimClock};
-use crate::simnet::{ClusterProfile, Detail, ParticipationPolicy, SimNet};
+use crate::simnet::{ClusterProfile, Detail, LinkFabric, Overlap, ParticipationPolicy, SimNet};
 
 /// Metric a stop rule watches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,6 +121,20 @@ pub struct RunConfig {
     /// first after each round; evicting a never-committed entry is exact,
     /// evicting one with real state resets it to theta0 (lossy, counted).
     pub cohort_budget: usize,
+    /// Per-link network fabric (DESIGN.md §11). `Uniform` (the default)
+    /// prices every transfer with the scalar [`NetworkModel`] —
+    /// bit-for-bit the pre-fabric path; `rack-wan`/`hier` switch
+    /// collectives and gossip edges to two-tier rack/WAN pricing.
+    /// Pricing-only: trajectories are fabric-invariant.
+    pub fabric: LinkFabric,
+    /// Compute/comm overlap model. `Off` (the default) serializes the
+    /// collective after the barrier; `Chunked` pipelines it over row
+    /// slices so the tail hides behind the next round's local steps
+    /// (`overlap_seconds` timeline column).
+    pub overlap: Overlap,
+    /// Pipeline chunk width in row elements for `overlap = chunked`
+    /// (0 = auto quarter-row chunks).
+    pub chunk_rows: usize,
 }
 
 impl Default for RunConfig {
@@ -148,6 +162,9 @@ impl Default for RunConfig {
             down_compression: None,
             cohort: false,
             cohort_budget: 0,
+            fabric: LinkFabric::default(),
+            overlap: Overlap::default(),
+            chunk_rows: 0,
         }
     }
 }
@@ -218,7 +235,8 @@ pub fn run(
         cfg.seed,
         cfg.timeline_detail,
     )
-    .with_policy(cfg.participation);
+    .with_policy(cfg.participation)
+    .with_fabric(cfg.fabric, cfg.overlap, cfg.chunk_rows);
 
     // Execution mode (DESIGN.md §8): `Bsp` keeps every branch below
     // exactly as it was; `Gossip` swaps the comm point for push-sum

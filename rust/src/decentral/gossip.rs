@@ -19,6 +19,17 @@
 //! consistently so de-biasing stays unbiased. On symmetric constant-degree
 //! graphs every weight stays exactly 1; faults skew individual weights
 //! while the total remains N.
+//!
+//! ## Pricing vs arithmetic
+//!
+//! This module is arithmetic only. *Pricing* a gossip round — who waits
+//! on whom, what each activated edge costs — lives in
+//! [`crate::simnet`]: under the uniform fabric a round is one jittered
+//! exchange span with a round-level overlap credit, while a tiered
+//! [`crate::simnet::LinkFabric`] (or chunked overlap) switches the
+//! engine to an event-level model that prices each edge at its own
+//! rack/WAN tier (DESIGN.md §11). Neither affects the mixing
+//! coefficients here: trajectories are fabric-invariant.
 
 use crate::linalg::ModelArena;
 

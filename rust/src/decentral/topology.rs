@@ -13,6 +13,15 @@
 //! column-stochastic by construction (mass is conserved); symmetric
 //! constant-degree graphs (ring, torus, full, and the exponential graph's
 //! per-round permutation offset) are additionally doubly stochastic.
+//!
+//! Edges are *logical*: the same edge set costs differently depending on
+//! where its endpoints sit on the physical fabric. Under a tiered
+//! [`crate::simnet::LinkFabric`] the simnet engine prices each activated
+//! edge `i -> j` at its rack or WAN tier (`edge_seconds`/`edge_tier`,
+//! DESIGN.md §11), which is how a ring laid across racks ends up
+//! WAN-dominated while the same ring inside one rack prices at rack
+//! latency. Topology selection stays placement-oblivious on purpose —
+//! the placement_study example measures the gap.
 
 use crate::rng::Rng;
 

@@ -91,6 +91,21 @@ fn main() -> anyhow::Result<()> {
         "downlink (broadcast-leg) compression schedule, same names as --compressor; absent keeps symmetric pricing",
     )
     .opt(
+        "fabric",
+        "",
+        "per-link network fabric: uniform (scalar pricing, the default), rack-wan[:SIZE] (two-tier rack/WAN matrix, flat collectives), hier[:SIZE] (same matrix, rack-leader hierarchical collectives); SIZE = clients per rack, default 8",
+    )
+    .opt(
+        "overlap",
+        "",
+        "compute/comm overlap model: off (serialized rounds, the default) or chunked (pipeline chunked transfers behind the next round's local steps; see the timeline's overlap_seconds column)",
+    )
+    .opt(
+        "chunk-rows",
+        "",
+        "overlap model: collective chunk size in rows (0 = auto quarter-dimension chunks)",
+    )
+    .opt(
         "timeline",
         "",
         "timeline sink granularity: off (bounded memory on long sweeps; no per-round stats), rounds (default; feeds --out-timeline and the summary lines), steps (per-step event sink; disables the simnet coalesced fast path)",
@@ -150,6 +165,9 @@ fn main() -> anyhow::Result<()> {
         ("gossip-degree", "gossip_degree"),
         ("staleness-bound", "staleness_bound"),
         ("down-compressor", "down_compressor"),
+        ("fabric", "fabric"),
+        ("overlap", "overlap"),
+        ("chunk-rows", "chunk_rows"),
         ("timeline", "timeline"),
         ("cohort-budget", "cohort_budget"),
     ] {

@@ -17,6 +17,22 @@
 
 use crate::comm::Algorithm;
 
+/// Dependency-chain hop count of the recursive-doubling collective over
+/// `n` clients: `log2(n)` exchange steps at a power of two; otherwise the
+/// tail fold + doubling over the pow2 core + broadcast back adds 2 hops
+/// (matching the schedule `comm::allreduce::tree` actually executes).
+/// Shared by the scalar model below and the per-link fabric pricer
+/// ([`crate::simnet::fabric`]), so the two can never disagree on the
+/// schedule shape.
+pub fn tree_hops(n: usize) -> f64 {
+    if n.is_power_of_two() {
+        (n as u64).trailing_zeros() as f64
+    } else {
+        let core = ((n as u64).next_power_of_two() >> 1).trailing_zeros() as f64;
+        core + 2.0
+    }
+}
+
 /// Alpha-beta network cost model.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkModel {
@@ -69,15 +85,7 @@ impl NetworkModel {
             // broadcasts the result back out at the end (one more), so the
             // dependency chain is floor(log2 N) + 2 hops — matching the
             // schedule comm::allreduce::tree actually executes.
-            Algorithm::Tree => {
-                let hops = if n.is_power_of_two() {
-                    (n as u64).trailing_zeros() as f64
-                } else {
-                    let core = ((n as u64).next_power_of_two() >> 1).trailing_zeros() as f64;
-                    core + 2.0
-                };
-                hops * (self.alpha + bytes * self.beta)
-            }
+            Algorithm::Tree => tree_hops(n) * (self.alpha + bytes * self.beta),
         }
     }
 
@@ -111,15 +119,7 @@ impl NetworkModel {
                 (nf - 1.0) * (self.alpha + (up / nf) * self.beta)
                     + (nf - 1.0) * (self.alpha + (down / nf) * self.beta)
             }
-            Algorithm::Tree => {
-                let hops = if n.is_power_of_two() {
-                    (n as u64).trailing_zeros() as f64
-                } else {
-                    let core = ((n as u64).next_power_of_two() >> 1).trailing_zeros() as f64;
-                    core + 2.0
-                };
-                hops * (self.alpha + 0.5 * (up + down) * self.beta)
-            }
+            Algorithm::Tree => tree_hops(n) * (self.alpha + 0.5 * (up + down) * self.beta),
         }
     }
 }

@@ -25,6 +25,7 @@
 //! (see `ComputeModel::round_compute_seconds` and tests/test_simnet.rs).
 
 use super::event::{EventHeap, EventKind};
+use super::fabric::{self, LinkFabric, Overlap};
 use super::participation::{Participation, ParticipationPolicy};
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline, TimelineEvent};
@@ -84,6 +85,17 @@ pub struct SimNet {
     /// Downlink (broadcast-leg) compressor. `None` prices the downlink at
     /// the uplink payload — bit-for-bit the symmetric legacy path.
     down: Option<CompressorSpec>,
+    /// Per-link pricing fabric. `Uniform` (the default) delegates every
+    /// pricing call verbatim to the scalar [`NetworkModel`].
+    fabric: LinkFabric,
+    /// Compute/comm overlap policy. `Off` (the default) serializes the
+    /// collective after the barrier — the legacy critical path.
+    overlap: Overlap,
+    /// Pipeline chunk width in row elements for [`Overlap::Chunked`]
+    /// (0 = auto, see [`fabric::effective_chunk`]).
+    chunk_rows: usize,
+    /// Cross-round pipeline tail for [`Overlap::Chunked`].
+    ov_state: fabric::OverlapState,
     /// How the per-round participation mask is derived.
     policy: ParticipationPolicy,
     /// Round-start membership draw waiting to be consumed by the next
@@ -140,6 +152,10 @@ impl SimNet {
             part_rng: root.split(streams::SIMNET_SAMPLING.solo_label()),
             gossip_rng: root.split(streams::SIMNET_GOSSIP.solo_label()),
             down: None,
+            fabric: LinkFabric::default(),
+            overlap: Overlap::default(),
+            chunk_rows: 0,
+            ov_state: fabric::OverlapState::default(),
             policy: ParticipationPolicy::All,
             pending: None,
             now: 0.0,
@@ -154,6 +170,22 @@ impl SimNet {
     pub fn with_policy(mut self, policy: ParticipationPolicy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Select the per-link fabric, overlap policy, and pipeline chunk
+    /// width. The defaults (`Uniform`, `Off`, auto chunks) are bit-for-bit
+    /// the scalar pricing path; no combination consumes RNG, so the
+    /// trajectory is pricing-invariant across fabrics (tests/
+    /// test_fabric.rs).
+    pub fn with_fabric(mut self, fabric: LinkFabric, overlap: Overlap, chunk_rows: usize) -> Self {
+        self.fabric = fabric;
+        self.overlap = overlap;
+        self.chunk_rows = chunk_rows;
+        self
+    }
+
+    pub fn fabric(&self) -> LinkFabric {
+        self.fabric
     }
 
     pub fn policy(&self) -> ParticipationPolicy {
@@ -530,14 +562,28 @@ impl SimNet {
         // the two payloads agree, so `down: None` cannot drift).
         let payload_wire = comp.payload_bytes(self.dim);
         let payload_down = self.down.unwrap_or(comp).payload_bytes(self.dim);
-        let base_comm = self.net.updown_seconds(
+        let (base_comm, tier) = self.fabric.updown_seconds(
+            &self.net,
             self.alg,
             n_part,
             payload_wire as f64,
             payload_down as f64,
         );
         let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
-        let comm = if n_part <= 1 { 0.0 } else { drawn };
+        let serialized = if n_part <= 1 { 0.0 } else { drawn };
+        // Chunked overlap: only the pipeline-fill share of this round's
+        // collective (plus whatever deferred tail the compute window could
+        // not absorb) stays on the critical path; the rest carries into
+        // the next round (see `fabric::OverlapState`). `Off` charges the
+        // serialized span unchanged.
+        let (comm, hidden) = match self.overlap {
+            Overlap::Off => (serialized, 0.0),
+            Overlap::Chunked => self.ov_state.apply(
+                serialized,
+                exit,
+                fabric::eager_fraction(self.dim, self.chunk_rows),
+            ),
+        };
         if self.detail == Detail::Steps {
             self.timeline.events.push(TimelineEvent {
                 t: start + exit + comm,
@@ -571,6 +617,8 @@ impl SimNet {
                 payload_down,
             ),
             compression_ratio: comp.payload_ratio(self.dim),
+            overlap_seconds: hidden,
+            critical_path_tier: tier,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -595,14 +643,21 @@ impl SimNet {
     ///   with the profile's `drop_prob` (drawn from the dedicated gossip
     ///   stream, so BSP timing replays are unaffected).
     /// * **Per-edge alpha-beta costs.** Every node's transfers serialize
-    ///   on its own link: a node touching `deg` edges (out + in) pays
-    ///   `deg * (alpha + 4d * beta)`, and the round's exchange span is the
-    ///   busiest node's. There is no compression on the peer path, so the
-    ///   payload is always the exact 4d.
+    ///   on its own link: a node touching `deg` edges (out + in) pays one
+    ///   full alpha-beta transfer per edge — the scalar `alpha + 4d * beta`
+    ///   under the uniform fabric, or the activated edge's own rack/WAN
+    ///   tier under a [`LinkFabric::Tiered`] matrix — and the round's
+    ///   exchange span is the busiest node's. There is no compression on
+    ///   the peer path, so the payload is always the exact 4d.
     /// * **Non-blocking overlap.** Early finishers start exchanging while
-    ///   stragglers still compute, so only the portion of the exchange
-    ///   span extending past the last arrival is charged to the round
-    ///   (an optimistic overlap credit of the round's `max_barrier_wait`).
+    ///   stragglers still compute. On the default path only the portion of
+    ///   the exchange span extending past the last arrival is charged (a
+    ///   round-level credit of the round's `max_barrier_wait`); with a
+    ///   tiered fabric or [`Overlap::Chunked`] the engine switches to the
+    ///   event-level model — each node's serialized schedule starts at its
+    ///   *own* step completion, the round is charged the busiest node's
+    ///   finish past the barrier, and the absorbed span lands in the
+    ///   `overlap_seconds` column.
     ///
     /// Compute timing draws are identical to the coalesced BSP path
     /// (same per-client streams, same order). The returned participation
@@ -743,10 +798,61 @@ impl SimNet {
         let payload = 4 * self.dim as u64;
         let base_comm = max_deg as f64 * (self.net.alpha + payload as f64 * self.net.beta);
         let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
-        let comm = if max_deg == 0 {
-            0.0
+        let event_level = !self.fabric.is_uniform() || self.overlap == Overlap::Chunked;
+        let (comm, hidden, tier) = if max_deg == 0 {
+            (0.0, 0.0, fabric::TIER_UNIFORM)
+        } else if !event_level {
+            // Legacy round-level credit (the bitwise-pinned default):
+            // the busiest node's serialized schedule minus the whole
+            // straggler tail at once.
+            ((drawn - max_wait).max(0.0), 0.0, fabric::TIER_UNIFORM)
         } else {
-            (drawn - max_wait).max(0.0)
+            // Event-level overlap: each node starts its transfers at its
+            // own step completion, so only the portion of the busiest
+            // node's schedule extending past the barrier is charged, and
+            // each activated edge prices at its own fabric tier. The one
+            // jitter draw scales every edge cost by the same ratio, so
+            // RNG consumption stays fabric-invariant.
+            let ratio = if base_comm > 0.0 { drawn / base_comm } else { 1.0 };
+            let mut serial = vec![0.0f64; n];
+            let mut wan = vec![0.0f64; n];
+            for i in 0..n {
+                for &t in &neighbors[i] {
+                    let c = self.fabric.edge_seconds(&self.net, i, t, payload as f64);
+                    serial[i] += c;
+                    serial[t] += c;
+                    if self.fabric.edge_tier(i, t) == fabric::TIER_WAN {
+                        wan[i] += c;
+                        wan[t] += c;
+                    }
+                }
+            }
+            let mut finish = 0.0f64;
+            let mut comm_serial = 0.0f64;
+            let mut crit = 0usize;
+            for i in 0..n {
+                if serial[i] == 0.0 {
+                    continue;
+                }
+                // Edge endpoints are exchange-capable, so completion is
+                // finite and at most `exit`.
+                let busy = completion[i] + ratio * serial[i];
+                if busy > finish {
+                    finish = busy;
+                    crit = i;
+                }
+                comm_serial = comm_serial.max(ratio * serial[i]);
+            }
+            let charged = (finish - exit).max(0.0);
+            let tier = if self.fabric.is_uniform() {
+                fabric::TIER_UNIFORM
+            } else if wan[crit] >= serial[crit] - wan[crit] {
+                fabric::TIER_WAN
+            } else {
+                fabric::TIER_RACK
+            };
+            // Clamp: `(exit + s) - exit` can round a hair past `s`.
+            (charged, (comm_serial - charged).max(0.0), tier)
         };
         if self.detail == Detail::Steps {
             self.timeline.events.push(TimelineEvent {
@@ -782,6 +888,8 @@ impl SimNet {
             bytes_wire: max_deg * payload,
             bytes_wire_down: 0,
             compression_ratio: 1.0,
+            overlap_seconds: hidden,
+            critical_path_tier: tier,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -1351,6 +1459,125 @@ mod tests {
             }
             assert_eq!(present, dense_present[i], "client {i}");
         }
+    }
+
+    #[test]
+    fn fabric_changes_pricing_but_never_compute_or_masks() {
+        // Switching fabrics re-prices the collective only: compute spans,
+        // participation, and every RNG draw stay bit-identical (the
+        // trajectory is pricing-invariant).
+        let mk = |fab: &str| {
+            engine(ClusterProfile::heavy_tail_stragglers(), 8, 7, Detail::Rounds)
+                .with_fabric(LinkFabric::parse(fab).unwrap(), Overlap::Off, 0)
+        };
+        let (mut uni, mut flat, mut hier) = (mk("uniform"), mk("rack-wan:4"), mk("hier:4"));
+        for r in 0..40 {
+            let (a, pa) = uni.price_round_masked(6, 16);
+            let (b, pb) = flat.price_round_masked(6, 16);
+            let (c, pc) = hier.price_round_masked(6, 16);
+            assert_eq!(a.compute_span.to_bits(), b.compute_span.to_bits(), "round {r}");
+            assert_eq!(a.compute_span.to_bits(), c.compute_span.to_bits(), "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+            assert_eq!(pa, pc, "round {r}");
+            assert_eq!(a.critical_path_tier, fabric::TIER_UNIFORM, "round {r}");
+            assert_eq!(b.critical_path_tier, fabric::TIER_WAN, "flat ring is WAN-bound");
+            assert!(c.comm_seconds < b.comm_seconds, "round {r}: hier !< flat");
+            assert_eq!(a.overlap_seconds, 0.0, "no overlap requested");
+            assert_eq!(b.overlap_seconds, 0.0, "no overlap requested");
+        }
+    }
+
+    #[test]
+    fn default_fabric_builder_is_bit_identical_to_legacy() {
+        let mk = || engine(ClusterProfile::flaky_federated(), 6, 3, Detail::Rounds)
+            .with_policy(ParticipationPolicy::Arrived);
+        let (mut legacy, mut built) = (mk(), mk().with_fabric(LinkFabric::Uniform, Overlap::Off, 0));
+        let (mut el, mut eb) = (Vec::new(), Vec::new());
+        for r in 0..40 {
+            let (sa, pa) = legacy.price_round_masked(5, 16);
+            let (sb, pb) = built.price_round_masked(5, 16);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+            let (ga, qa) = legacy.price_gossip_round(
+                5, 16, 5, crate::decentral::PeerTopology::Ring, 2, &mut el,
+            );
+            let (gb, qb) = built.price_gossip_round(
+                5, 16, 5, crate::decentral::PeerTopology::Ring, 2, &mut eb,
+            );
+            assert_eq!(ga, gb, "round {r}");
+            assert_eq!(qa, qb, "round {r}");
+            assert_eq!(el, eb, "round {r}");
+        }
+        assert_eq!(legacy.now().to_bits(), built.now().to_bits());
+        assert_eq!(legacy.timeline, built.timeline);
+    }
+
+    #[test]
+    fn chunked_overlap_never_prices_a_run_longer_than_serialized() {
+        let mk = |ov| {
+            engine(ClusterProfile::mild_hetero(), 6, 9, Detail::Rounds)
+                .with_fabric(LinkFabric::parse("rack-wan:2").unwrap(), ov, 0)
+        };
+        let (mut ser, mut ovl) = (mk(Overlap::Off), mk(Overlap::Chunked));
+        for r in 0..60 {
+            let a = ser.price_round(6, 16);
+            let b = ovl.price_round(6, 16);
+            assert_eq!(a.compute_span.to_bits(), b.compute_span.to_bits(), "round {r}");
+            assert!(b.overlap_seconds >= 0.0, "round {r}");
+            // Prefix invariant: the pipelined clock never runs ahead of
+            // the serialized one (the carry telescopes).
+            assert!(ovl.now() <= ser.now() + 1e-12, "round {r}: overlap priced longer");
+        }
+        assert!(ovl.now() < ser.now(), "overlap never hid anything");
+        assert!(ovl.timeline.total_overlap_seconds() > 0.0);
+    }
+
+    #[test]
+    fn tiered_gossip_event_model_prices_the_busiest_node() {
+        // Homogeneous fleet on a ring over rack-wan:4 racks: every node
+        // arrives together, so the charged span is exactly the busiest
+        // (WAN-touching) node's serialized schedule and nothing hides.
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 1, Detail::Rounds)
+            .with_fabric(LinkFabric::parse("rack-wan:4").unwrap(), Overlap::Off, 0);
+        let m = *sim.fabric().matrix().unwrap();
+        let mut edges = Vec::new();
+        let (rt, part) = sim.price_gossip_round(
+            5, 16, 5, crate::decentral::PeerTopology::Ring, 2, &mut edges,
+        );
+        assert!(part.is_full());
+        let payload = 4000.0;
+        let rack_edge = m.rack.alpha + payload * m.rack.beta;
+        let wan_edge = m.wan.alpha + payload * m.wan.beta * m.oversub;
+        // Boundary nodes touch 2 cross-rack + 2 intra-rack links.
+        let expect = 2.0 * wan_edge + 2.0 * rack_edge;
+        assert!((rt.comm_seconds - expect).abs() < 1e-12, "{} vs {expect}", rt.comm_seconds);
+        assert_eq!(rt.critical_path_tier, fabric::TIER_WAN);
+        assert!(rt.overlap_seconds < 1e-12, "no straggler window to hide in");
+    }
+
+    #[test]
+    fn tiered_gossip_keeps_trajectory_and_credits_overlap() {
+        let mk = |fab: &str| {
+            engine(ClusterProfile::heavy_tail_stragglers(), 8, 13, Detail::Rounds)
+                .with_fabric(LinkFabric::parse(fab).unwrap(), Overlap::Off, 0)
+        };
+        let (mut uni, mut tiered) = (mk("uniform"), mk("rack-wan:4"));
+        let (mut eu, mut et) = (Vec::new(), Vec::new());
+        let mut some_overlap = false;
+        for r in 0..60 {
+            let (a, pa) = uni.price_gossip_round(
+                6, 16, 6, crate::decentral::PeerTopology::Ring, 2, &mut eu,
+            );
+            let (b, pb) = tiered.price_gossip_round(
+                6, 16, 6, crate::decentral::PeerTopology::Ring, 2, &mut et,
+            );
+            assert_eq!(pa, pb, "round {r}: fabric perturbed the edge draws");
+            assert_eq!(eu, et, "round {r}");
+            assert_eq!(a.compute_span.to_bits(), b.compute_span.to_bits(), "round {r}");
+            assert!(b.overlap_seconds >= 0.0, "round {r}");
+            some_overlap |= b.overlap_seconds > 0.0;
+        }
+        assert!(some_overlap, "event model never hid a transfer behind a straggler");
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Per-link network fabric: rack/WAN tier pricing and compute/comm
+//! overlap (config keys `fabric`, `overlap`, `chunk_rows`).
+//!
+//! The scalar [`crate::sim::NetworkModel`] prices every transfer with one
+//! fleet-wide `(alpha, beta)` pair, which makes ring vs tree vs
+//! hierarchical *placement* invisible — exactly the axis STL-SGD's
+//! communication-complexity argument lives on. [`LinkMatrix`] adds the
+//! missing structure: clients are placed linearly into racks of
+//! `rack_size`, intra-rack links get one `(alpha, beta)` tier and
+//! cross-rack (WAN) links another, with an oversubscription factor on the
+//! shared WAN core. [`LinkFabric`] selects between:
+//!
+//! * `uniform` (default) — every pricing call delegates **verbatim** to
+//!   the scalar model, so the default config is bit-for-bit the pre-fabric
+//!   engine (tests/test_fabric.rs pins this across preset × mode ×
+//!   collective).
+//! * `rack-wan[:SIZE]` — two tiers, *flat* placement: the collective runs
+//!   over the fleet as laid out, so a flat ring crosses a rack boundary on
+//!   (almost) every step and pays the oversubscribed WAN tier.
+//! * `hier[:SIZE]` — the same two tiers, *hierarchical* placement: the
+//!   collective runs within each rack first (rack tier), then among the
+//!   rack leaders (one dedicated WAN flow per rack uplink, so no
+//!   oversubscription penalty) — the textbook two-level schedule.
+//!
+//! [`Overlap::Chunked`] adds the event-level compute/comm overlap model:
+//! the collective is priced as chunked transfers over the disjoint row
+//! slices of [`crate::comm::allreduce::chunk_ranges`] (the PR-5 in-place
+//! collectives already make chunks disjoint, so a pipelined schedule
+//! needs no extra copies). Only the pipeline-fill chunk stays on the
+//! round's critical path; the tail rides behind the *next* round's local
+//! steps ([`OverlapState`]), surfacing as the `overlap_seconds` timeline
+//! column. Cumulative charged comm never exceeds the serialized path
+//! (prefix-wise — the carry telescopes), which tests/test_fabric.rs
+//! asserts per round on the `end` timestamps.
+//!
+//! Determinism: the fabric consumes **no RNG**. Tier assignment is a pure
+//! function of the client index (`rack = i / rack_size`), pricing is
+//! closed-form, and the engines keep their single per-round link-jitter
+//! draw regardless of fabric, so switching fabrics never shifts any
+//! stream (the trajectory is pricing-invariant, like downlink
+//! compression — DESIGN.md §8).
+
+use crate::comm::Algorithm;
+use crate::sim::{tree_hops, NetworkModel};
+
+/// `critical_path_tier` code: scalar (uniform) pricing — no tier applies.
+pub const TIER_UNIFORM: u32 = 0;
+/// `critical_path_tier` code: intra-rack links dominated the round.
+pub const TIER_RACK: u32 = 1;
+/// `critical_path_tier` code: cross-rack (WAN) links dominated the round.
+pub const TIER_WAN: u32 = 2;
+
+/// One link tier's alpha-beta pair (same units as
+/// [`crate::sim::NetworkModel`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkTier {
+    /// Per-hop latency (seconds).
+    pub alpha: f64,
+    /// Per-byte transfer time (seconds/byte).
+    pub beta: f64,
+}
+
+/// Two-tier per-link cost matrix under linear placement: client `i` sits
+/// in rack `i / rack_size`; same-rack pairs price at `rack`, cross-rack
+/// pairs at `wan`, with `oversub` multiplying the WAN beta whenever
+/// concurrent cross-rack flows share the core (flat collectives, gossip
+/// edges) — a hierarchical schedule's one-flow-per-uplink inter-rack leg
+/// is exempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkMatrix {
+    pub rack: LinkTier,
+    pub wan: LinkTier,
+    pub rack_size: usize,
+    pub oversub: f64,
+}
+
+impl LinkMatrix {
+    /// Default tier constants: intra-rack links ~5x better than the
+    /// scalar default on both axes, WAN links ~10x/4x worse, shared core
+    /// oversubscribed 4:1.
+    pub fn rack_wan(rack_size: usize) -> Self {
+        Self {
+            rack: LinkTier { alpha: 10e-6, beta: 2e-9 },
+            wan: LinkTier { alpha: 500e-6, beta: 40e-9 },
+            rack_size: rack_size.max(1),
+            oversub: 4.0,
+        }
+    }
+
+    /// Rack index of client `i`.
+    pub fn rack_of(&self, i: usize) -> usize {
+        i / self.rack_size
+    }
+
+    /// Number of racks an `n`-client fleet spans.
+    pub fn racks(&self, n: usize) -> usize {
+        n.div_ceil(self.rack_size).max(1)
+    }
+
+    /// Effective WAN beta for a flow sharing the oversubscribed core.
+    fn wan_beta_shared(&self) -> f64 {
+        self.wan.beta * self.oversub
+    }
+
+    /// One point-to-point transfer of `bytes` from client `i` to `j`.
+    /// Cross-rack flows share the core (oversubscribed beta).
+    pub fn edge_seconds(&self, i: usize, j: usize, bytes: f64) -> f64 {
+        if self.rack_of(i) == self.rack_of(j) {
+            self.rack.alpha + bytes * self.rack.beta
+        } else {
+            self.wan.alpha + bytes * self.wan_beta_shared()
+        }
+    }
+
+    /// Tier code of the `i -> j` link.
+    pub fn edge_tier(&self, i: usize, j: usize) -> u32 {
+        if self.rack_of(i) == self.rack_of(j) {
+            TIER_RACK
+        } else {
+            TIER_WAN
+        }
+    }
+
+    /// One directional leg (reduce *or* broadcast) of a collective over a
+    /// single-tier group of `n` clients carrying `bytes` per model, with
+    /// the given tier parameters. Two legs sum to the scalar model's
+    /// symmetric totals (same schedule shapes: Naive serializes `n-1`
+    /// payloads at the leader per leg, Ring runs `n-1` chunk steps per
+    /// leg, Tree splits its `tree_hops` duplex exchanges evenly).
+    fn one_way(alg: Algorithm, n: usize, bytes: f64, alpha: f64, beta: f64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        match alg {
+            Algorithm::Naive => alpha + (nf - 1.0) * bytes * beta,
+            Algorithm::Ring => (nf - 1.0) * (alpha + (bytes / nf) * beta),
+            Algorithm::Tree => 0.5 * tree_hops(n) * (alpha + bytes * beta),
+        }
+    }
+
+    /// One directional leg of the collective under *flat* (as-laid-out)
+    /// placement, returned as `(rack_seconds, wan_seconds)` contributions.
+    fn flat_leg(&self, alg: Algorithm, n: usize, bytes: f64) -> (f64, f64) {
+        if n <= 1 {
+            return (0.0, 0.0);
+        }
+        if self.racks(n) <= 1 {
+            return (Self::one_way(alg, n, bytes, self.rack.alpha, self.rack.beta), 0.0);
+        }
+        let nf = n as f64;
+        match alg {
+            // Leader (client 0) serializes n-1 incoming payloads on its
+            // link: rack peers at rack beta, remote clients at the shared
+            // WAN beta, one WAN latency for the longest dependency chain.
+            Algorithm::Naive => {
+                let local = (self.rack_size.min(n) - 1) as f64;
+                let remote = nf - 1.0 - local;
+                (
+                    local * bytes * self.rack.beta,
+                    self.wan.alpha + remote * bytes * self.wan_beta_shared(),
+                )
+            }
+            // Every ring step moves n concurrent chunk transfers and at
+            // least one crosses a rack boundary; the step span is the max
+            // over its links, so every step prices at the shared WAN tier.
+            Algorithm::Ring => (
+                0.0,
+                (nf - 1.0) * (self.wan.alpha + (bytes / nf) * self.wan_beta_shared()),
+            ),
+            // Doubling stride 2^s stays intra-rack while 2^s < rack_size;
+            // wider strides (and the non-pow2 fold/broadcast tail, which
+            // spans the pow2 core) cross racks.
+            Algorithm::Tree => {
+                let total = tree_hops(n);
+                let core_hops = if n.is_power_of_two() {
+                    total as usize
+                } else {
+                    (total as usize).saturating_sub(2)
+                };
+                let mut rack_hops = 0usize;
+                let mut stride = 1usize;
+                for _ in 0..core_hops {
+                    if stride < self.rack_size {
+                        rack_hops += 1;
+                    }
+                    stride <<= 1;
+                }
+                let wan_hops = total - rack_hops as f64;
+                (
+                    0.5 * rack_hops as f64 * (self.rack.alpha + bytes * self.rack.beta),
+                    0.5 * wan_hops * (self.wan.alpha + bytes * self.wan_beta_shared()),
+                )
+            }
+        }
+    }
+
+    /// One directional leg under *hierarchical* placement: the collective
+    /// runs within each rack (rack tier, width = one full rack), then
+    /// among the rack leaders over dedicated uplinks (WAN tier, no
+    /// oversubscription). Returned as `(rack_seconds, wan_seconds)`.
+    fn hier_leg(&self, alg: Algorithm, n: usize, bytes: f64) -> (f64, f64) {
+        if n <= 1 {
+            return (0.0, 0.0);
+        }
+        let m = self.rack_size.min(n);
+        let racks = self.racks(n);
+        let intra = Self::one_way(alg, m, bytes, self.rack.alpha, self.rack.beta);
+        let inter = Self::one_way(alg, racks, bytes, self.wan.alpha, self.wan.beta);
+        (intra, inter)
+    }
+}
+
+/// Pipeline chunk width in row elements: `chunk_rows == 0` means auto
+/// (quarter-row chunks — 4-deep pipeline).
+pub fn effective_chunk(dim: usize, chunk_rows: usize) -> usize {
+    if chunk_rows == 0 {
+        dim.div_ceil(4).max(1)
+    } else {
+        chunk_rows
+    }
+}
+
+/// Share of the collective that stays on the critical path when pipelined
+/// over `chunk_rows`-element row slices: the pipeline-fill (first) chunk's
+/// fraction of the row, per [`crate::comm::allreduce::chunk_ranges`].
+pub fn eager_fraction(dim: usize, chunk_rows: usize) -> f64 {
+    if dim == 0 {
+        return 1.0;
+    }
+    let ranges = crate::comm::allreduce::chunk_ranges(dim, effective_chunk(dim, chunk_rows));
+    (ranges[0].1 - ranges[0].0) as f64 / dim as f64
+}
+
+/// Fabric selector (config key `fabric`, CLI `--fabric`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkFabric {
+    /// Scalar pricing — every call delegates verbatim to
+    /// [`crate::sim::NetworkModel`] (the bitwise-pinned default).
+    Uniform,
+    /// Two-tier rack/WAN matrix; `hierarchical` selects the two-level
+    /// schedule, otherwise the collective runs flat over the placement.
+    Tiered {
+        matrix: LinkMatrix,
+        hierarchical: bool,
+    },
+}
+
+impl Default for LinkFabric {
+    fn default() -> Self {
+        LinkFabric::Uniform
+    }
+}
+
+impl LinkFabric {
+    /// Parse `uniform`, `rack-wan[:SIZE]`, or `hier[:SIZE]` /
+    /// `hierarchical[:SIZE]` (SIZE = clients per rack, default 8).
+    pub fn parse(s: &str) -> Option<LinkFabric> {
+        let (head, size) = match s.split_once(':') {
+            Some((h, tail)) => (h, tail.parse::<usize>().ok().filter(|&v| v >= 1)?),
+            None => (s, 8),
+        };
+        match head {
+            "uniform" => {
+                if s.contains(':') {
+                    None
+                } else {
+                    Some(LinkFabric::Uniform)
+                }
+            }
+            "rack-wan" => Some(LinkFabric::Tiered {
+                matrix: LinkMatrix::rack_wan(size),
+                hierarchical: false,
+            }),
+            "hier" | "hierarchical" => Some(LinkFabric::Tiered {
+                matrix: LinkMatrix::rack_wan(size),
+                hierarchical: true,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (parse round-trips it).
+    pub fn label(&self) -> String {
+        match self {
+            LinkFabric::Uniform => "uniform".to_string(),
+            LinkFabric::Tiered {
+                matrix,
+                hierarchical,
+            } => {
+                let head = if *hierarchical { "hier" } else { "rack-wan" };
+                format!("{head}:{}", matrix.rack_size)
+            }
+        }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, LinkFabric::Uniform)
+    }
+
+    /// The tiered matrix, when one is configured.
+    pub fn matrix(&self) -> Option<&LinkMatrix> {
+        match self {
+            LinkFabric::Uniform => None,
+            LinkFabric::Tiered { matrix, .. } => Some(matrix),
+        }
+    }
+
+    /// Fabric-aware counterpart of
+    /// [`crate::sim::NetworkModel::updown_seconds`]: seconds for one
+    /// collective over `n` participants with `up`/`down` bytes per model,
+    /// plus the tier code that dominated the span. `Uniform` returns the
+    /// scalar model's result **verbatim** (bitwise) with
+    /// [`TIER_UNIFORM`].
+    pub fn updown_seconds(
+        &self,
+        net: &NetworkModel,
+        alg: Algorithm,
+        n: usize,
+        up: f64,
+        down: f64,
+    ) -> (f64, u32) {
+        match self {
+            LinkFabric::Uniform => (net.updown_seconds(alg, n, up, down), TIER_UNIFORM),
+            LinkFabric::Tiered {
+                matrix,
+                hierarchical,
+            } => {
+                let leg = |bytes: f64| -> (f64, f64) {
+                    if *hierarchical {
+                        matrix.hier_leg(alg, n, bytes)
+                    } else {
+                        matrix.flat_leg(alg, n, bytes)
+                    }
+                };
+                let (up_rack, up_wan) = leg(up);
+                let (down_rack, down_wan) = leg(down);
+                let rack = up_rack + down_rack;
+                let wan = up_wan + down_wan;
+                let tier = if rack + wan == 0.0 {
+                    TIER_UNIFORM
+                } else if wan >= rack {
+                    TIER_WAN
+                } else {
+                    TIER_RACK
+                };
+                (rack + wan, tier)
+            }
+        }
+    }
+
+    /// Per-edge gossip transfer cost (`i -> j`, `bytes` on the wire).
+    /// `Uniform` prices one scalar hop — the legacy per-edge unit.
+    pub fn edge_seconds(&self, net: &NetworkModel, i: usize, j: usize, bytes: f64) -> f64 {
+        match self {
+            LinkFabric::Uniform => net.alpha + bytes * net.beta,
+            LinkFabric::Tiered { matrix, .. } => matrix.edge_seconds(i, j, bytes),
+        }
+    }
+
+    /// Tier code of the `i -> j` link ([`TIER_UNIFORM`] under `Uniform`).
+    pub fn edge_tier(&self, i: usize, j: usize) -> u32 {
+        match self {
+            LinkFabric::Uniform => TIER_UNIFORM,
+            LinkFabric::Tiered { matrix, .. } => matrix.edge_tier(i, j),
+        }
+    }
+}
+
+/// Overlap policy (config key `overlap`, CLI `--overlap`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overlap {
+    /// Serialized barrier -> collective (the bitwise-pinned default).
+    Off,
+    /// Pipeline the collective over disjoint row-slice chunks; the tail
+    /// rides behind the next round's local compute.
+    Chunked,
+}
+
+impl Default for Overlap {
+    fn default() -> Self {
+        Overlap::Off
+    }
+}
+
+impl Overlap {
+    pub fn parse(s: &str) -> Option<Overlap> {
+        match s {
+            "off" => Some(Overlap::Off),
+            "chunked" | "on" => Some(Overlap::Chunked),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Overlap::Off => "off",
+            Overlap::Chunked => "chunked",
+        }
+    }
+}
+
+/// Cross-round pipeline accumulator for [`Overlap::Chunked`], shared by
+/// the dense and sparse engines so they stay bit-identical.
+///
+/// Round r's collective splits into a pipeline-fill (eager) portion that
+/// stays on r's critical path and a deferred tail (`carry`) that rides
+/// behind round r+1's local compute; whatever the next round's compute
+/// window cannot absorb is charged there as excess. The carry telescopes,
+/// so cumulative charged comm never exceeds the serialized path at any
+/// round boundary (the test suite's `end`-timestamp invariant), and the
+/// absorbed portion surfaces as that round's `overlap_seconds`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlapState {
+    carry: f64,
+}
+
+impl OverlapState {
+    /// Fold one round through the pipeline model. `serialized` is the
+    /// full fabric-priced collective span (post link jitter),
+    /// `compute_span` this round's local compute window, `eager_frac` the
+    /// pipeline-fill share ([`eager_fraction`]). Returns
+    /// `(charged_comm_seconds, overlap_seconds)`.
+    pub fn apply(&mut self, serialized: f64, compute_span: f64, eager_frac: f64) -> (f64, f64) {
+        let hidden = self.carry.min(compute_span);
+        let excess = self.carry - hidden;
+        let eager = serialized * eager_frac;
+        self.carry = serialized - eager;
+        (excess + eager, hidden)
+    }
+
+    /// Collective seconds still in flight (the tail deferred to the next
+    /// round).
+    pub fn in_flight(&self) -> f64 {
+        self.carry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for s in ["uniform", "rack-wan:8", "hier:4", "rack-wan:2", "hier:16"] {
+            let f = LinkFabric::parse(s).unwrap();
+            assert_eq!(f.label(), s, "round trip");
+            assert_eq!(LinkFabric::parse(&f.label()), Some(f));
+        }
+        assert_eq!(LinkFabric::parse("rack-wan"), LinkFabric::parse("rack-wan:8"));
+        assert_eq!(LinkFabric::parse("hierarchical:4"), LinkFabric::parse("hier:4"));
+        for s in ["", "mesh", "rack-wan:0", "rack-wan:x", "uniform:4", "hier:"] {
+            assert_eq!(LinkFabric::parse(s), None, "{s:?}");
+        }
+        assert_eq!(Overlap::parse("off"), Some(Overlap::Off));
+        assert_eq!(Overlap::parse("chunked"), Some(Overlap::Chunked));
+        assert_eq!(Overlap::parse("on"), Some(Overlap::Chunked));
+        assert_eq!(Overlap::parse("half"), None);
+        assert!(LinkFabric::default().is_uniform());
+        assert_eq!(Overlap::default(), Overlap::Off);
+    }
+
+    #[test]
+    fn uniform_updown_is_bitwise_the_scalar_model() {
+        let net = NetworkModel::default();
+        let fabric = LinkFabric::Uniform;
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for n in [1usize, 2, 5, 8, 33] {
+                for (up, down) in [(4000.0, 4000.0), (4000.0, 1000.0), (800.0, 800.0)] {
+                    let (got, tier) = fabric.updown_seconds(&net, alg, n, up, down);
+                    let want = net.updown_seconds(alg, n, up, down);
+                    assert_eq!(got.to_bits(), want.to_bits(), "{alg:?} n={n}");
+                    assert_eq!(tier, TIER_UNIFORM);
+                }
+            }
+        }
+        assert_eq!(
+            fabric.edge_seconds(&net, 0, 9, 4000.0).to_bits(),
+            (net.alpha + 4000.0 * net.beta).to_bits()
+        );
+        assert_eq!(fabric.edge_tier(0, 9), TIER_UNIFORM);
+    }
+
+    #[test]
+    fn tiered_edges_split_by_rack_boundary() {
+        let net = NetworkModel::default();
+        let fabric = LinkFabric::parse("rack-wan:4").unwrap();
+        let m = fabric.matrix().unwrap();
+        assert_eq!(m.rack_of(3), 0);
+        assert_eq!(m.rack_of(4), 1);
+        assert_eq!(fabric.edge_tier(0, 3), TIER_RACK);
+        assert_eq!(fabric.edge_tier(3, 4), TIER_WAN);
+        let intra = fabric.edge_seconds(&net, 0, 3, 4000.0);
+        let cross = fabric.edge_seconds(&net, 3, 4, 4000.0);
+        assert!(cross > intra, "WAN edge must dominate: {cross} vs {intra}");
+        assert_eq!(
+            intra.to_bits(),
+            (m.rack.alpha + 4000.0 * m.rack.beta).to_bits()
+        );
+        assert_eq!(
+            cross.to_bits(),
+            (m.wan.alpha + 4000.0 * m.wan.beta * m.oversub).to_bits()
+        );
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_across_racks() {
+        let net = NetworkModel::default();
+        let flat = LinkFabric::parse("rack-wan:8").unwrap();
+        let hier = LinkFabric::parse("hier:8").unwrap();
+        for n in [16usize, 32, 64] {
+            let bytes = 4.0 * 100_000.0;
+            let (tf, tier_f) = flat.updown_seconds(&net, Algorithm::Ring, n, bytes, bytes);
+            let (th, tier_h) = hier.updown_seconds(&net, Algorithm::Ring, n, bytes, bytes);
+            assert!(th < tf, "n={n}: hier {th} !< flat {tf}");
+            assert_eq!(tier_f, TIER_WAN, "flat multi-rack ring is WAN-bound");
+            assert_eq!(tier_h, TIER_WAN, "inter-rack leg still dominates");
+        }
+    }
+
+    #[test]
+    fn single_rack_prices_at_the_rack_tier_only() {
+        let net = NetworkModel::default();
+        let fabric = LinkFabric::parse("rack-wan:16").unwrap();
+        let m = *fabric.matrix().unwrap();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let (t, tier) = fabric.updown_seconds(&net, alg, 8, 4000.0, 4000.0);
+            assert!(t > 0.0);
+            assert_eq!(tier, TIER_RACK, "{alg:?}");
+            // Exactly two one-way legs at the rack tier.
+            let leg = LinkMatrix::one_way(alg, 8, 4000.0, m.rack.alpha, m.rack.beta);
+            assert_eq!(t.to_bits(), (2.0 * leg).to_bits(), "{alg:?}");
+        }
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let (t, tier) = fabric.updown_seconds(&net, alg, 1, 4000.0, 4000.0);
+            assert_eq!(t, 0.0, "{alg:?}: lone client is free");
+            assert_eq!(tier, TIER_UNIFORM);
+        }
+    }
+
+    #[test]
+    fn two_uniform_tier_legs_reproduce_the_scalar_totals() {
+        // The one-way decomposition halves exactly: two legs at the
+        // scalar (alpha, beta) equal NetworkModel's symmetric totals.
+        let net = NetworkModel::default();
+        for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            for n in [2usize, 5, 8, 33] {
+                let legs = 2.0 * LinkMatrix::one_way(alg, n, 4000.0, net.alpha, net.beta);
+                let scalar = net.allreduce_seconds_payload(alg, n, 4000.0);
+                assert!(
+                    (legs - scalar).abs() < 1e-15,
+                    "{alg:?} n={n}: {legs} vs {scalar}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_state_telescopes_and_never_overcharges() {
+        let mut st = OverlapState::default();
+        let rounds = [
+            (1.0f64, 0.5f64),
+            (2.0, 3.0),
+            (0.5, 0.1),
+            (4.0, 0.0),
+            (1.5, 10.0),
+        ];
+        let eager = eager_fraction(1000, 250); // 4 chunks -> 0.25
+        assert!((eager - 0.25).abs() < 1e-12);
+        let mut charged_cum = 0.0;
+        let mut serial_cum = 0.0;
+        for (serialized, compute) in rounds {
+            let (charged, hidden) = st.apply(serialized, compute, eager);
+            assert!(charged >= 0.0 && hidden >= 0.0);
+            charged_cum += charged;
+            serial_cum += serialized;
+            assert!(
+                charged_cum <= serial_cum + 1e-12,
+                "cumulative charge exceeded the serialized path"
+            );
+        }
+        assert!(st.in_flight() >= 0.0);
+        // Zero-compute rounds absorb nothing: the carry is charged whole.
+        let mut st2 = OverlapState::default();
+        let (c1, h1) = st2.apply(2.0, 0.0, 0.25);
+        assert_eq!(h1, 0.0);
+        assert!((c1 - 0.5).abs() < 1e-12);
+        let (c2, h2) = st2.apply(0.0, 0.0, 0.25);
+        assert_eq!(h2, 0.0);
+        assert!((c2 - 1.5).abs() < 1e-12, "deferred tail charged next round");
+    }
+
+    #[test]
+    fn eager_fraction_covers_the_edge_cases() {
+        assert_eq!(eager_fraction(0, 4), 1.0);
+        assert_eq!(eager_fraction(10, 10), 1.0);
+        assert_eq!(eager_fraction(10, 100), 1.0);
+        assert!((eager_fraction(10, 3) - 0.3).abs() < 1e-12);
+        // Auto chunking quarters the row.
+        assert!((eager_fraction(1000, 0) - 0.25).abs() < 1e-12);
+        assert_eq!(effective_chunk(0, 0), 1);
+    }
+}

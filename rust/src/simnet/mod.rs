@@ -27,6 +27,13 @@
 //!   clients that made the barrier; a fraction in (0, 1] adds FedAvg-style
 //!   client sampling), and cluster profiles can add cross-round
 //!   join/leave churn (`elastic-federated`).
+//! * [`LinkFabric`] / [`LinkMatrix`] (fabric.rs) — per-link network
+//!   fabric: rack/WAN tiers with per-tier `(alpha, beta)` and an
+//!   oversubscription factor, consulted for collective pricing and
+//!   per-activated-edge gossip pricing, plus the chunked compute/comm
+//!   overlap model ([`Overlap`], [`fabric::OverlapState`]). `uniform` +
+//!   `overlap = off` (the defaults) are bit-for-bit the scalar
+//!   [`crate::sim::NetworkModel`] path (tests/test_fabric.rs).
 //! * [`SparseSimNet`] (sparse.rs) — bit-identical round pricing with
 //!   cohort-proportional memory: per-client streams materialized lazily on
 //!   first participation, `Fraction` sampling run as a virtual partial
@@ -45,12 +52,14 @@
 
 pub mod engine;
 pub mod event;
+pub mod fabric;
 pub mod participation;
 pub mod profile;
 pub mod sparse;
 pub mod timeline;
 
 pub use engine::SimNet;
+pub use fabric::{LinkFabric, LinkMatrix, Overlap};
 pub use sparse::SparseSimNet;
 pub use event::EventKind;
 pub use participation::{Participation, ParticipationPolicy};

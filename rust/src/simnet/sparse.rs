@@ -29,6 +29,7 @@
 //! at construction): a step timeline is `O(N x k)` by definition, which is
 //! exactly what this engine exists to avoid.
 
+use super::fabric::{self, LinkFabric, Overlap};
 use super::participation::ParticipationPolicy;
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline};
@@ -80,6 +81,14 @@ pub struct SparseSimNet {
     link_rng: Rng,
     part_rng: Rng,
     down: Option<CompressorSpec>,
+    /// Per-link pricing fabric (see [`super::SimNet`]'s field).
+    fabric: LinkFabric,
+    /// Compute/comm overlap policy.
+    overlap: Overlap,
+    /// Pipeline chunk width for [`Overlap::Chunked`] (0 = auto).
+    chunk_rows: usize,
+    /// Cross-round pipeline tail for [`Overlap::Chunked`].
+    ov_state: fabric::OverlapState,
     policy: ParticipationPolicy,
     pending: Option<PendingSparse>,
     now: f64,
@@ -136,6 +145,10 @@ impl SparseSimNet {
             timing: HashMap::new(),
             churn,
             down: None,
+            fabric: LinkFabric::default(),
+            overlap: Overlap::default(),
+            chunk_rows: 0,
+            ov_state: fabric::OverlapState::default(),
             policy: ParticipationPolicy::All,
             pending: None,
             now: 0.0,
@@ -149,6 +162,16 @@ impl SparseSimNet {
 
     pub fn with_policy(mut self, policy: ParticipationPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// See [`super::SimNet::with_fabric`]; the sparse engine applies the
+    /// identical pricing (same [`fabric::OverlapState`] folds), so
+    /// dense/sparse parity holds fabric-for-fabric.
+    pub fn with_fabric(mut self, fabric: LinkFabric, overlap: Overlap, chunk_rows: usize) -> Self {
+        self.fabric = fabric;
+        self.overlap = overlap;
+        self.chunk_rows = chunk_rows;
         self
     }
 
@@ -400,14 +423,25 @@ impl SparseSimNet {
 
         let payload_wire = comp.payload_bytes(self.dim);
         let payload_down = self.down.unwrap_or(comp).payload_bytes(self.dim);
-        let base_comm = self.net.updown_seconds(
+        let (base_comm, tier) = self.fabric.updown_seconds(
+            &self.net,
             self.alg,
             n_part,
             payload_wire as f64,
             payload_down as f64,
         );
         let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
-        let comm = if n_part <= 1 { 0.0 } else { drawn };
+        let serialized = if n_part <= 1 { 0.0 } else { drawn };
+        // Same chunked-pipeline fold as the dense engine (see its pricing
+        // site); `Off` charges the serialized span unchanged.
+        let (comm, hidden) = match self.overlap {
+            Overlap::Off => (serialized, 0.0),
+            Overlap::Chunked => self.ov_state.apply(
+                serialized,
+                exit,
+                fabric::eager_fraction(self.dim, self.chunk_rows),
+            ),
+        };
 
         let stat = RoundStat {
             round: self.round,
@@ -434,6 +468,8 @@ impl SparseSimNet {
                 payload_down,
             ),
             compression_ratio: comp.payload_ratio(self.dim),
+            overlap_seconds: hidden,
+            critical_path_tier: tier,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -543,6 +579,39 @@ mod tests {
                 assert_eq!(sa, sb, "round {r}");
                 assert_eq!(pa.indices(), pb, "round {r}");
             }
+        }
+    }
+
+    #[test]
+    fn fabric_and_overlap_match_dense_bitwise() {
+        for (fab, ov) in [
+            ("uniform", Overlap::Chunked),
+            ("rack-wan:4", Overlap::Off),
+            ("hier:4", Overlap::Chunked),
+        ] {
+            let fabric = LinkFabric::parse(fab).unwrap();
+            let mut d = dense(
+                ClusterProfile::heavy_tail_stragglers(),
+                8,
+                21,
+                ParticipationPolicy::Arrived,
+            )
+            .with_fabric(fabric, ov, 0);
+            let mut s = sparse(
+                ClusterProfile::heavy_tail_stragglers(),
+                8,
+                21,
+                ParticipationPolicy::Arrived,
+            )
+            .with_fabric(fabric, ov, 0);
+            for r in 0..80 {
+                let (sa, pa) = d.price_round_compressed(6, 16, 6, CompressorSpec::Identity);
+                let (sb, pb) = s.price_round_compressed(6, 16, 6, CompressorSpec::Identity);
+                assert_eq!(sa, sb, "{fab} {ov:?} round {r}");
+                assert_eq!(pa.indices(), pb, "{fab} {ov:?} round {r}");
+            }
+            assert_eq!(d.now().to_bits(), s.now().to_bits(), "{fab} {ov:?}");
+            assert_eq!(d.timeline.rounds, s.timeline.rounds, "{fab} {ov:?}");
         }
     }
 

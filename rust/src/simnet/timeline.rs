@@ -107,6 +107,15 @@ pub struct RoundStat {
     /// `identity`; data-independent, so it reflects the schedule, not the
     /// values).
     pub compression_ratio: f64,
+    /// Collective seconds hidden behind local compute by the chunked
+    /// overlap model ([`super::fabric::Overlap::Chunked`]): serialized
+    /// span minus what this round was actually charged. Always 0.0 with
+    /// `overlap = off` (the default).
+    pub overlap_seconds: f64,
+    /// Which fabric tier dominated the round's charged collective span:
+    /// 0 = scalar/uniform pricing, 1 = intra-rack links, 2 = cross-rack
+    /// (WAN) links ([`super::fabric`] tier codes).
+    pub critical_path_tier: u32,
 }
 
 impl RoundStat {
@@ -183,6 +192,12 @@ impl Timeline {
         self.rounds.iter().map(|r| r.left as u64).sum()
     }
 
+    /// Run-total collective seconds hidden behind compute by the overlap
+    /// model (0.0 for every serialized run).
+    pub fn total_overlap_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.overlap_seconds).sum()
+    }
+
     /// Write the per-round breakdown as CSV.
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         let mut w = crate::util::csv::CsvWriter::to_file(
@@ -205,6 +220,8 @@ impl Timeline {
                 "bytes_wire_down",
                 "compression_ratio",
                 "end",
+                "overlap_seconds",
+                "critical_path_tier",
             ],
         )?;
         for r in &self.rounds {
@@ -226,6 +243,8 @@ impl Timeline {
                 r.bytes_wire_down.to_string(),
                 format!("{:.4}", r.compression_ratio),
                 format!("{:.6e}", r.end()),
+                format!("{:.6e}", r.overlap_seconds),
+                r.critical_path_tier.to_string(),
             ])?;
         }
         w.flush()
@@ -262,6 +281,8 @@ mod tests {
             bytes_wire: 1000,
             bytes_wire_down: 500,
             compression_ratio: 0.25,
+            overlap_seconds: 0.0,
+            critical_path_tier: 0,
         }
     }
 
@@ -282,6 +303,7 @@ mod tests {
         assert_eq!(t.total_bytes_exact(), 8000);
         assert_eq!(t.total_bytes_wire(), 2000);
         assert_eq!(t.total_bytes_wire_down(), 1000);
+        assert_eq!(t.total_overlap_seconds(), 0.0);
     }
 
     #[test]

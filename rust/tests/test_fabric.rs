@@ -1,0 +1,233 @@
+//! Fabric degeneracy + overlap acceptance suite (DESIGN.md §11).
+//!
+//! The per-link fabric is a *pricing* layer: it must never move a
+//! trajectory, and its "off" spelling (`uniform` fabric, `off` overlap)
+//! must be bit-for-bit the scalar `NetworkModel` path that every golden
+//! and every earlier PR pinned. Four contracts:
+//!
+//! 1. **Bitwise degeneracy** — a default engine and an engine explicitly
+//!    configured `(Uniform, Off, 0)` produce identical timelines and
+//!    clocks across preset × mode × collective, and the homogeneous BSP
+//!    rounds match the closed-form scalar `allreduce_seconds` exactly.
+//! 2. **Pricing invariance** — switching fabrics or enabling overlap
+//!    changes *when* rounds finish, never *what* they compute: losses are
+//!    bit-identical across every fabric × overlap combination.
+//! 3. **Overlap never overcharges** — the chunked pipeline prices every
+//!    run prefix no later than the serialized run, and strictly earlier
+//!    once any compute is available to hide behind.
+//! 4. **Placement matters** — on the rack/WAN matrix the hierarchical
+//!    schedule beats the flat ring end to end (the placement_study
+//!    example's headline, asserted here so it cannot rot).
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::comm::Algorithm;
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig, Trace};
+use stl_sgd::data::{partition, synth};
+use stl_sgd::decentral::ExecMode;
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::Rng;
+use stl_sgd::sim::{ComputeModel, NetworkModel};
+use stl_sgd::simnet::{
+    ClusterProfile, Detail, LinkFabric, Overlap, ParticipationPolicy, SimNet,
+};
+
+fn run_once(cfg: &RunConfig) -> Trace {
+    let ds = Arc::new(synth::a9a_like(2, 256, 12));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, cfg.n_clients, &mut Rng::new(0));
+    let theta0 = vec![0.0f32; 12];
+    let spec = AlgoSpec {
+        variant: Variant::StlSc,
+        eta1: 0.3,
+        k1: 5.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    };
+    let phases = spec.phases(150);
+    let mut engine = NativeCompute::new(oracle);
+    run(&mut engine, &shards, &phases, cfg, &theta0, "stl-sc")
+}
+
+fn base_cfg(mode: ExecMode, profile: ClusterProfile, collective: Algorithm) -> RunConfig {
+    RunConfig {
+        n_clients: 8,
+        collective,
+        profile,
+        mode,
+        participation: match mode {
+            ExecMode::Bsp => ParticipationPolicy::All,
+            _ => ParticipationPolicy::Arrived,
+        },
+        staleness_bound: 2,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. Bitwise degeneracy of the uniform/off spelling.
+// ---------------------------------------------------------------------
+
+#[test]
+fn uniform_off_is_bitwise_the_scalar_path_across_the_grid() {
+    for profile in [ClusterProfile::homogeneous(), ClusterProfile::heavy_tail_stragglers()] {
+        for mode in [ExecMode::Bsp, ExecMode::Gossip, ExecMode::BoundedStaleness] {
+            for collective in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+                let legacy = base_cfg(mode, profile, collective);
+                let mut explicit = legacy.clone();
+                explicit.fabric = LinkFabric::Uniform;
+                explicit.overlap = Overlap::Off;
+                explicit.chunk_rows = 0;
+                let a = run_once(&legacy);
+                let b = run_once(&explicit);
+                let tag = format!("{mode:?}/{}/{collective:?}", profile.name);
+                assert_eq!(a.timeline, b.timeline, "{tag}: timeline");
+                assert_eq!(
+                    a.to_json().to_string(),
+                    b.to_json().to_string(),
+                    "{tag}: trace JSON"
+                );
+                // The degenerate spelling reports dead-flat new columns.
+                for rt in &a.timeline.rounds {
+                    assert_eq!(rt.overlap_seconds.to_bits(), 0f64.to_bits(), "{tag}");
+                    assert_eq!(rt.critical_path_tier, 0, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn homogeneous_bsp_rounds_match_the_closed_form_scalar_collective() {
+    // Zero-variance profile: every drawn comm span is the base, so each
+    // round's comm must be the scalar closed form to the bit.
+    let net = NetworkModel::default();
+    for alg in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+        let mut sim = SimNet::new(
+            ClusterProfile::homogeneous(),
+            net,
+            ComputeModel::default(),
+            alg,
+            8,
+            1000,
+            7,
+            Detail::Rounds,
+        )
+        .with_fabric(LinkFabric::Uniform, Overlap::Off, 0);
+        let rt = sim.price_round(5, 16);
+        assert_eq!(
+            rt.comm_seconds.to_bits(),
+            net.allreduce_seconds(alg, 8, 1000).to_bits(),
+            "{alg:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Fabrics and overlap reprice rounds; they never move the trajectory.
+// ---------------------------------------------------------------------
+
+#[test]
+fn trajectories_are_pricing_invariant_across_fabrics_and_overlap() {
+    for mode in [ExecMode::Bsp, ExecMode::Gossip] {
+        let mut traces = Vec::new();
+        for fabric in ["uniform", "rack-wan:4", "hier:4"] {
+            for overlap in [Overlap::Off, Overlap::Chunked] {
+                let mut cfg =
+                    base_cfg(mode, ClusterProfile::heavy_tail_stragglers(), Algorithm::Ring);
+                cfg.fabric = LinkFabric::parse(fabric).unwrap();
+                cfg.overlap = overlap;
+                traces.push((format!("{fabric}/{}", overlap.label()), run_once(&cfg)));
+            }
+        }
+        let (ref tag0, ref first) = traces[0];
+        for (tag, t) in &traces[1..] {
+            assert_eq!(
+                first.points.len(),
+                t.points.len(),
+                "{mode:?}: {tag0} vs {tag}"
+            );
+            for (pa, pb) in first.points.iter().zip(&t.points) {
+                assert_eq!(
+                    pa.loss.to_bits(),
+                    pb.loss.to_bits(),
+                    "{mode:?}: loss drift {tag0} vs {tag} @ iter {}",
+                    pa.iter
+                );
+            }
+        }
+        // ...and the tiered fabric really does reprice the run.
+        let uniform_end = first.clock.total();
+        let tiered_end = traces[2].1.clock.total();
+        assert!(
+            (uniform_end - tiered_end).abs() > 1e-9,
+            "{mode:?}: rack-wan pricing indistinguishable from uniform"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. The overlap model never prices a run *longer* than serialized.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_overlap_never_exceeds_the_serialized_run() {
+    for mode in [ExecMode::Bsp, ExecMode::Gossip] {
+        for profile in [ClusterProfile::mild_hetero(), ClusterProfile::heavy_tail_stragglers()] {
+            let mut off = base_cfg(mode, profile, Algorithm::Ring);
+            off.fabric = LinkFabric::parse("rack-wan:4").unwrap();
+            let mut on = off.clone();
+            on.overlap = Overlap::Chunked;
+            let a = run_once(&off);
+            let b = run_once(&on);
+            let tag = format!("{mode:?}/{}", profile.name);
+            // Same rounds, and every prefix of the pipelined run ends no
+            // later than the serialized one.
+            assert_eq!(a.timeline.rounds.len(), b.timeline.rounds.len(), "{tag}");
+            for (ra, rb) in a.timeline.rounds.iter().zip(&b.timeline.rounds) {
+                assert!(
+                    rb.end() <= ra.end() + 1e-9,
+                    "{tag}: round {} pipelined end {} > serialized {}",
+                    ra.round,
+                    rb.end(),
+                    ra.end()
+                );
+            }
+            assert!(b.clock.total() <= a.clock.total() + 1e-9, "{tag}: run total");
+            assert!(
+                b.timeline.total_overlap_seconds() > 0.0,
+                "{tag}: overlap accounting never credited anything"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Placement: hierarchical beats the flat ring on the tiered fabric.
+// ---------------------------------------------------------------------
+
+#[test]
+fn hierarchical_placement_beats_flat_ring_end_to_end() {
+    let mut flat = base_cfg(ExecMode::Bsp, ClusterProfile::mild_hetero(), Algorithm::Ring);
+    flat.fabric = LinkFabric::parse("rack-wan:4").unwrap();
+    let mut hier = flat.clone();
+    hier.fabric = LinkFabric::parse("hier:4").unwrap();
+    let a = run_once(&flat);
+    let b = run_once(&hier);
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "placement moved the trajectory");
+    }
+    assert!(
+        b.clock.total() < a.clock.total(),
+        "hierarchical ({:.4}s) should beat the flat ring ({:.4}s) across racks",
+        b.clock.total(),
+        a.clock.total()
+    );
+    // The flat run's critical path sits on the WAN tier somewhere.
+    assert!(
+        a.timeline.rounds.iter().any(|r| r.critical_path_tier == 2),
+        "flat placement never reported a WAN-tier critical path"
+    );
+}

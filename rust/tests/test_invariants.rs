@@ -30,28 +30,30 @@ use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
 // Layer 1: the analyzer is green on the real tree.
 // ---------------------------------------------------------------------
 
-fn load_tree() -> (Vec<SourceFile>, String) {
+fn load_tree() -> (Vec<SourceFile>, String, String) {
     let root = locate_src_root().expect("rust/src not found from test cwd");
     let files = walk_sources(&root).expect("walk rust/src");
-    let design = root
+    let repo = root
         .parent()
         .and_then(|p| p.parent())
-        .map(|repo| repo.join("DESIGN.md"))
-        .filter(|p| p.is_file())
-        .map(|p| std::fs::read_to_string(p).expect("read DESIGN.md"))
-        .expect("DESIGN.md at the repo root");
-    (files, design)
+        .expect("repo root above rust/src");
+    let read = |name: &str| {
+        let p = repo.join(name);
+        assert!(p.is_file(), "{name} missing at the repo root");
+        std::fs::read_to_string(p).unwrap_or_else(|e| panic!("read {name}: {e}"))
+    };
+    (files, read("DESIGN.md"), read("README.md"))
 }
 
 #[test]
 fn analyzer_is_green_on_the_real_tree() {
-    let (files, design) = load_tree();
+    let (files, design, readme) = load_tree();
     assert!(
         files.len() > 40,
         "walk found only {} files — wrong root?",
         files.len()
     );
-    let violations = lints::run_all(&files, &design);
+    let violations = lints::run_all(&files, &design, &readme);
     assert!(
         violations.is_empty(),
         "invariant lints fired on the live tree:\n{}",
@@ -224,10 +226,31 @@ fn config_parity_lint_fires_on_phantom_key() {
     );
     let main = SourceFile::from_source("main.rs", "fn main() { table(\"alpha\", \"alpha\"); }\n");
     let design = "The `alpha` schedule knob.";
-    let v = lints::lint_config_parity(&[cfg, main], design);
-    // `phantom_key` is missing from BOTH main.rs and DESIGN.md.
-    assert_eq!(v.len(), 2, "{v:?}");
+    let readme = "| `alpha` | InvTime lr knob |";
+    let v = lints::lint_config_parity(&[cfg, main], design, readme);
+    // `phantom_key` is missing from main.rs, DESIGN.md, AND README.md.
+    assert_eq!(v.len(), 3, "{v:?}");
     assert!(v.iter().all(|x| x.msg.contains("phantom_key")));
+    assert!(
+        v.iter().any(|x| x.path == "README.md"),
+        "the README leg of the parity lint must fire: {v:?}"
+    );
+}
+
+#[test]
+fn module_doc_lint_fires_on_missing_or_empty_header() {
+    // Missing entirely.
+    let bare = SourceFile::from_source("widget/mod.rs", "pub struct W;\n");
+    let v = lints::lint_module_docs(&[bare]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].lint, "module-docs");
+    // Present but content-free.
+    let empty = SourceFile::from_source("widget/mod.rs", "//!\n//!\npub struct W;\n");
+    assert_eq!(lints::lint_module_docs(&[empty]).len(), 1);
+    // A real header passes; non-root files are exempt.
+    let good = SourceFile::from_source("widget/mod.rs", "//! Widget registry.\npub struct W;\n");
+    let leaf = SourceFile::from_source("widget/inner.rs", "pub struct X;\n");
+    assert!(lints::lint_module_docs(&[good, leaf]).is_empty());
 }
 
 // ---------------------------------------------------------------------

@@ -38,6 +38,8 @@ fn timeline_csv_header_matches_checked_in_golden() {
             bytes_wire: 32,
             bytes_wire_down: 16,
             compression_ratio: 0.5,
+            overlap_seconds: 0.0,
+            critical_path_tier: 0,
         }],
         events: Vec::new(),
     };
@@ -83,9 +85,17 @@ fn trace_csv_header_matches_checked_in_golden() {
 
 #[test]
 fn goldens_include_the_compression_columns() {
-    // The bytes axis is load-bearing for the compression sweeps: a golden
-    // "update" that drops these columns must fail loudly here.
-    for col in ["bytes_exact", "bytes_wire", "bytes_wire_down", "compression_ratio"] {
+    // The bytes axis is load-bearing for the compression sweeps, and the
+    // overlap columns for the placement study: a golden "update" that
+    // drops these columns must fail loudly here.
+    for col in [
+        "bytes_exact",
+        "bytes_wire",
+        "bytes_wire_down",
+        "compression_ratio",
+        "overlap_seconds",
+        "critical_path_tier",
+    ] {
         assert!(
             TIMELINE_GOLDEN.split(',').any(|c| c.trim() == col),
             "timeline golden lost column {col}"

@@ -13,11 +13,15 @@
 #   scripts/check.sh --lint            # additionally run the invariant analyzer
 #                                      # on its own (tests/test_invariants.rs:
 #                                      # stream registry, unsafe hygiene, order
-#                                      # lints, config parity, schedule explorer)
+#                                      # lints, config parity, module docs,
+#                                      # schedule explorer)
+#   scripts/check.sh --doc-lint        # additionally build the rustdoc with
+#                                      # warnings-as-errors (scripts/ci.sh doc
+#                                      # stage; skips loudly without a manifest)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-no_fmt=0 smoke=0 quick=0 no_build=0 lint=0
+no_fmt=0 smoke=0 quick=0 no_build=0 lint=0 doc_lint=0
 for arg in "$@"; do
     case "$arg" in
         --no-fmt) no_fmt=1 ;;
@@ -25,6 +29,7 @@ for arg in "$@"; do
         --quick) quick=1 ;;
         --no-build) no_build=1 ;;
         --lint) lint=1 ;;
+        --doc-lint) doc_lint=1 ;;
         *) echo "check.sh: unknown flag $arg" >&2; exit 2 ;;
     esac
 done
@@ -45,6 +50,16 @@ if [[ $lint -eq 1 ]]; then
     # The invariant analyzer as a standalone gate (already part of the
     # full `cargo test` above; this path serves --no-build pipelines).
     cargo test -q --test test_invariants
+fi
+
+if [[ $doc_lint -eq 1 ]]; then
+    # Rustdoc gate, shared with `scripts/ci.sh doc` (manifest-gated there
+    # too): broken intra-doc links and malformed headers are errors.
+    if [[ -f Cargo.toml ]]; then
+        RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+    else
+        echo "check.sh: no Cargo.toml manifest -- skipping rustdoc gate"
+    fi
 fi
 
 if [[ $smoke -eq 1 ]]; then
@@ -87,6 +102,12 @@ if [[ $smoke -eq 1 ]]; then
             --clusters homogeneous,heavy-tail-stragglers \
             --out-dir "$smoke_out/gossip"
         test -s "$smoke_out/gossip/summary.csv"
+        RUSTFLAGS="$release_flags" cargo run --release --example placement_study -- \
+            --workload logreg_test --steps 240 --clients 8 --k1 4 --t1 40 \
+            --fabrics uniform,rack-wan:4,hier:4 \
+            --overlaps off,chunked \
+            --out-dir "$smoke_out/placement"
+        test -s "$smoke_out/placement/summary.csv"
         # Cohort-sparse scale smoke at a reduced fleet (the full 1M run is
         # the dedicated `scripts/ci.sh scale` stage); still asserts the
         # flat-memory RSS bound.

@@ -30,6 +30,11 @@
 #           1M clients at 0.1% participation must finish and stay under
 #           the peak-RSS bound -- the DESIGN.md §9 flat-memory gate
 #   fmt     cargo fmt --check
+#   doc     rustdoc gate: `cargo doc --no-deps` with -D warnings, so a
+#           broken intra-doc link or malformed module header fails CI the
+#           way a broken build does -- skipped loudly when no Cargo.toml
+#           manifest is present (same discipline as miri/tsan; the
+#           module-docs lint in the lint stage is the always-on stand-in)
 #   miri    tests/test_invariants.rs + the threaded engine suite under
 #           `cargo +nightly miri test` -- skipped (with a notice) unless
 #           the nightly miri component is installed; the offline toolchain
@@ -76,6 +81,20 @@ stage_scale() {
         --clients 1000000 --participation 0.001 --assert-rss-mb 400
 }
 stage_fmt() { cargo fmt --check; }
+stage_doc() {
+    # Manifest-gated rustdoc build: docs are part of the build contract
+    # (every module root carries a //! header, enforced by the lint
+    # stage's module-docs lint), and rustdoc warnings -- broken intra-doc
+    # links above all -- are errors. Offline images that drive cargo
+    # through an external harness may lack a manifest here; skip loudly
+    # rather than pass silently, exactly like miri/tsan.
+    if [[ -f Cargo.toml ]]; then
+        RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+    else
+        echo "ci.sh: no Cargo.toml manifest at the repo root -- skipping rustdoc gate" \
+             "(the lint stage's module-docs lint still enforces //! headers)"
+    fi
+}
 stage_miri() {
     # Manifest-gated sanitizer stub: real miri needs a nightly toolchain
     # with the miri component, which the offline image does not ship.
@@ -101,7 +120,7 @@ stage_tsan() {
     fi
 }
 
-all_stages=(build lint test schema decentral bench smoke scale fmt)
+all_stages=(build lint test schema decentral bench smoke scale fmt doc)
 stages=("$@")
 if [[ ${#stages[@]} -eq 0 ]]; then
     stages=("${all_stages[@]}")
@@ -109,7 +128,7 @@ fi
 
 for stage in "${stages[@]}"; do
     case "$stage" in
-        build | lint | test | schema | decentral | bench | smoke | scale | fmt | miri | tsan)
+        build | lint | test | schema | decentral | bench | smoke | scale | fmt | doc | miri | tsan)
             banner "$stage"
             "stage_$stage"
             ;;
