@@ -1,0 +1,296 @@
+//! Chaos study: fault-rate x retry-policy sweep plus a kill-and-resume
+//! demonstration (DESIGN.md §12).
+//!
+//!     cargo run --release --example chaos_study -- \
+//!         [--crash-rates 0.0,0.15,0.3] [--partition 0.05x2] \
+//!         [--retries none,retry:3] [--quorum 0.5] \
+//!         [--workload logreg_a9a] [--steps 3000] [--clients 8] \
+//!         [--gap 1e-3] [--kill-round 5] [--out-dir results/chaos]
+//!
+//! Every cell runs the same seeded trajectory machinery under a
+//! different deterministic fault plan, so the sweep isolates the cost of
+//! failures and the value of recovery: an abandoned round spends its
+//! compute and wire time and then rolls everything back, while a retry
+//! pays backoff and a second collective but commits. The study reports,
+//! per cell: abandoned rounds, retry attempts, committed client-rounds,
+//! final loss, simulated seconds, and simulated time-to-gap against the
+//! workload's f*.
+//!
+//! Headline (asserted at the heaviest crash rate, when the budget
+//! reaches the gap at all): `retry:3` reaches the target gap in no more
+//! simulated time than the abandon-only policy — failed rounds are pure
+//! waste, retried rounds aren't.
+//!
+//! The second act kills a faulty run right after its round-`r`
+//! checkpoint, resumes from the file, and asserts the continuation is
+//! bit-identical to the uninterrupted run (same final loss bits, same
+//! round count) — the crash-recovery contract tests/test_faults.rs pins
+//! across the full preset matrix.
+
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::bench_support::workloads;
+use stl_sgd::config::{ExperimentConfig, Workload};
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig};
+use stl_sgd::faults::{FaultPlan, RetryPolicy};
+use stl_sgd::simnet::ClusterProfile;
+use stl_sgd::util::cli::Cli;
+use stl_sgd::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "chaos_study",
+        "STL-SGD chaos study: deterministic fault injection, retry policies, crash-and-resume",
+    )
+    .opt("crash-rates", "0.0,0.15,0.3", "comma-separated per-client crash probabilities")
+    .opt("partition", "0.05x2", "rack-partition spec PxK, or none")
+    .opt("retries", "none,retry:3", "comma-separated retry policies (none|retry|retry:N)")
+    .opt("quorum", "0.5", "commit quorum as a fleet fraction in [0, 1]")
+    .opt("workload", "logreg_a9a", "convex workload (logreg_a9a|logreg_mnist|logreg_test)")
+    .opt("algorithm", "stl-sc", "algorithm (sync|local|stl-sc|...)")
+    .opt("cluster", "flaky-federated", "cluster profile")
+    .opt("steps", "3000", "total iteration budget")
+    .opt("clients", "8", "number of clients")
+    .opt("k1", "8", "initial communication period")
+    .opt("t1", "500", "STL-SGD first stage length")
+    .opt("gap", "1e-3", "objective gap target for the time-to-gap metric")
+    .opt("kill-round", "5", "round the resume demonstration dies after")
+    .opt("seed", "7", "rng seed")
+    .opt("out-dir", "results/chaos", "output directory")
+    .parse();
+
+    let crash_rates: Vec<f64> = args
+        .get_list("crash-rates")
+        .iter()
+        .map(|s| s.parse().unwrap_or_else(|_| panic!("bad crash rate {s:?}")))
+        .collect();
+    let retries: Vec<RetryPolicy> = args
+        .get_list("retries")
+        .iter()
+        .map(|s| RetryPolicy::parse(s).unwrap_or_else(|e| panic!("bad retry policy {s:?}: {e}")))
+        .collect();
+    let partition = args.get("partition").to_string();
+    let quorum = args.get_f64("quorum");
+    let workload = Workload::parse(args.get("workload")).expect("known workload");
+    let variant = Variant::parse(args.get("algorithm"))
+        .unwrap_or_else(|| panic!("unknown algorithm {:?}", args.get("algorithm")));
+    let cluster = ClusterProfile::parse(args.get("cluster")).expect("known cluster profile");
+    let steps = args.get_u64("steps");
+    let n = args.get_usize("clients");
+    let k1 = args.get_f64("k1");
+    let t1 = args.get_u64("t1");
+    let gap = args.get_f64("gap");
+    let kill_round = args.get_u64("kill-round");
+    let seed = args.get_u64("seed");
+    let out_dir = std::path::PathBuf::from(args.get("out-dir"));
+
+    let f_star = workloads::compute_f_star(workload, seed, 2000);
+    println!(
+        "workload={} algorithm={} cluster={} N={n} steps={steps} quorum={quorum} \
+         partition={partition} f*={f_star:.6e}",
+        workload.name(),
+        variant.name(),
+        cluster.name,
+    );
+
+    let mut summary = CsvWriter::to_file(
+        &out_dir.join("summary.csv"),
+        &[
+            "crash",
+            "partition",
+            "retry",
+            "rounds",
+            "abandoned_rounds",
+            "retry_attempts",
+            "corrupt_dropped",
+            "committed_client_rounds",
+            "final_loss",
+            "sim_total_seconds",
+            "seconds_to_gap",
+        ],
+    )?;
+
+    let base_algo = AlgoSpec {
+        variant,
+        eta1: 3.2,
+        alpha: 1e-3,
+        k1,
+        t1,
+        batch: 32,
+        iid: true,
+        ..Default::default()
+    };
+
+    // `partition = none` drops the item entirely — FaultPlan::parse
+    // wants a probability, and an all-zero plan normalizes to None.
+    let plan_spec_for = |crash: f64| {
+        if partition == "none" || partition.is_empty() {
+            format!("crash={crash}")
+        } else {
+            format!("crash={crash},partition={partition}")
+        }
+    };
+
+    // (seconds_to_gap, abandoned) for the heaviest crash rate, per policy.
+    let heaviest = crash_rates.iter().cloned().fold(0.0f64, f64::max);
+    let mut headline: Vec<(String, Option<f64>, u64)> = Vec::new();
+    for &crash in &crash_rates {
+        for &retry in &retries {
+            let plan_spec = plan_spec_for(crash);
+            let mut cfg = ExperimentConfig::default();
+            cfg.workload = workload;
+            cfg.n_clients = n;
+            cfg.total_steps = steps;
+            cfg.seed = seed;
+            cfg.cluster = cluster;
+            cfg.faults = FaultPlan::parse(&plan_spec)?;
+            cfg.retry = retry;
+            cfg.quorum = quorum;
+            cfg.algo = base_algo.clone();
+            let trace = workloads::run_experiment(&cfg)?;
+            let abandoned = trace.timeline.total_abandoned();
+            let attempts = trace.timeline.total_retries();
+            let ttg = trace.seconds_to_gap(f_star, gap);
+            println!(
+                "  crash={crash:<5} retry={:<8} rounds={:<5} abandoned={:<4} retries={:<4} \
+                 committed={:<6} final_loss={:>10.4e} total={:>9.3}s gap@{gap:.0e}={}",
+                retry.label(),
+                trace.comm.rounds,
+                abandoned,
+                attempts,
+                trace.comm.participant_client_rounds,
+                trace.final_loss(),
+                trace.clock.total(),
+                ttg.map_or("never".to_string(), |s| format!("{s:.3}s")),
+            );
+            summary.row(&[
+                format!("{crash}"),
+                partition.clone(),
+                retry.label(),
+                trace.comm.rounds.to_string(),
+                abandoned.to_string(),
+                attempts.to_string(),
+                trace.timeline.total_corrupt_dropped().to_string(),
+                trace.comm.participant_client_rounds.to_string(),
+                format!("{:.6e}", trace.final_loss()),
+                format!("{:.6e}", trace.clock.total()),
+                ttg.map_or("inf".to_string(), |s| format!("{s:.6e}")),
+            ])?;
+            if crash == heaviest {
+                headline.push((retry.label(), ttg, abandoned));
+            }
+        }
+    }
+    summary.flush()?;
+
+    // Headline: at the heaviest crash rate, retrying beats abandoning on
+    // simulated time-to-gap (asserted only when the budget is large
+    // enough for at least the retry policy to reach the gap — a smoke
+    // run with a tiny --steps skips the comparison, not the sweep).
+    let pick = |head: &str| {
+        headline
+            .iter()
+            .find(|(l, _, _)| l.starts_with(head))
+            .map(|(_, t, a)| (*t, *a))
+    };
+    if let (Some((t_none, ab_none)), Some((t_retry, ab_retry))) = (pick("none"), pick("retry")) {
+        // `<=`, not `<`: whole-fleet partitions (one rack under the
+        // uniform fabric) are drawn once per round, before the attempt
+        // loop, so no amount of retrying commits those rounds — retry
+        // only wins back the crash-quorum failures.
+        if ab_none > 0 {
+            assert!(
+                ab_retry <= ab_none,
+                "retry abandoned more rounds than the abandon-only policy \
+                 ({ab_retry} vs {ab_none})"
+            );
+        }
+        match (t_none, t_retry) {
+            (Some(a), Some(b)) if ab_none > ab_retry => {
+                assert!(
+                    b <= a,
+                    "retry reached the {gap:.0e} gap slower than abandoning ({b:.3}s vs {a:.3}s)"
+                );
+                println!(
+                    "\nretry beats abandon on time-to-gap at crash={heaviest}: \
+                     {b:.3}s vs {a:.3}s"
+                );
+            }
+            (Some(a), Some(b)) => println!(
+                "\nno crash-quorum abandons to win back at crash={heaviest}; \
+                 time-to-gap {b:.3}s (retry) vs {a:.3}s (abandon)"
+            ),
+            (None, Some(b)) => println!(
+                "\nonly retry reached the {gap:.0e} gap at crash={heaviest} ({b:.3}s)"
+            ),
+            _ => println!(
+                "\nbudget too small to reach the {gap:.0e} gap — time-to-gap comparison skipped"
+            ),
+        }
+    }
+
+    // Act two: crash-and-resume. Kill a faulty run right after its
+    // round-`kill_round` checkpoint, resume from the file, and require
+    // the continuation to match the uninterrupted run bit for bit.
+    let setup = workloads::build(workload, seed);
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = workload;
+    cfg.n_clients = n;
+    cfg.seed = seed;
+    let shards = workloads::make_shards(&cfg, &setup.dataset);
+    let oracle = setup.oracle.expect("convex workload has a native oracle");
+    let theta0 = setup.theta0;
+    let demo_steps = steps.min(800);
+    let phases = {
+        let mut s = base_algo.clone();
+        s.shard_size = shards[0].len();
+        s.phases(demo_steps)
+    };
+    let run_cfg = RunConfig {
+        n_clients: n,
+        profile: cluster,
+        faults: FaultPlan::parse(&plan_spec_for(heaviest.max(0.1)))?,
+        retry: *retries.last().expect("at least one retry policy"),
+        quorum,
+        seed,
+        ..Default::default()
+    };
+    let mut engine = NativeCompute::new(oracle.clone());
+    let full = run(&mut engine, &shards, &phases, &run_cfg, &theta0, "chaos");
+    assert!(
+        full.comm.rounds > kill_round,
+        "--kill-round {kill_round} is outside the {}-round demo run",
+        full.comm.rounds
+    );
+
+    let ckpt = out_dir.join("chaos_demo.ckpt");
+    let mut killed_cfg = run_cfg.clone();
+    killed_cfg.checkpoint_path = Some(ckpt.clone());
+    killed_cfg.kill_at_round = Some(kill_round);
+    let mut engine = NativeCompute::new(oracle.clone());
+    let killed = run(&mut engine, &shards, &phases, &killed_cfg, &theta0, "chaos");
+    assert_eq!(killed.comm.rounds, kill_round, "the kill switch missed its round");
+
+    let mut resumed_cfg = run_cfg.clone();
+    resumed_cfg.resume_from = Some(ckpt.clone());
+    let mut engine = NativeCompute::new(oracle);
+    let resumed = run(&mut engine, &shards, &phases, &resumed_cfg, &theta0, "chaos");
+    assert_eq!(resumed.comm.rounds, full.comm.rounds, "resume lost or invented rounds");
+    assert_eq!(
+        resumed.final_loss().to_bits(),
+        full.final_loss().to_bits(),
+        "resumed run diverged from the uninterrupted one"
+    );
+    assert_eq!(
+        resumed.clock.total().to_bits(),
+        full.clock.total().to_bits(),
+        "resumed run re-priced time differently"
+    );
+    println!(
+        "crash-and-resume: killed after round {kill_round}, resumed to round {} — \
+         final loss {:.6e}, bit-identical to the uninterrupted run",
+        resumed.comm.rounds,
+        resumed.final_loss(),
+    );
+    println!("CSVs written under {}", out_dir.display());
+    Ok(())
+}

@@ -155,6 +155,18 @@ pub trait PeriodController {
 
     /// Fold one completed round's telemetry into the controller state.
     fn observe(&mut self, fb: &RoundFeedback);
+
+    /// The controller's cross-round state for a checkpoint (DESIGN.md
+    /// §12). Every controller here is a pure state machine whose only
+    /// mutable state is the multiplier on the scheduled period, so one
+    /// f64 covers them all; the stateless [`Stagewise`] default (1.0)
+    /// makes the pair a no-op for it.
+    fn mult_state(&self) -> f64 {
+        1.0
+    }
+
+    /// Restore the state saved by [`Self::mult_state`].
+    fn set_mult_state(&mut self, _m: f64) {}
 }
 
 /// The paper's fixed stagewise rule: the phase schedule *is* the period.
@@ -265,6 +277,14 @@ impl PeriodController for CommRatio {
             self.m.shrink(self.gain);
         }
     }
+
+    fn mult_state(&self) -> f64 {
+        self.m.mult
+    }
+
+    fn set_mult_state(&mut self, m: f64) {
+        self.m.mult = m;
+    }
 }
 
 /// Stretch the period while rounds are straggler-bound: grow the
@@ -329,6 +349,14 @@ impl PeriodController for BarrierAware {
         } else {
             self.m.shrink(self.decay_gain);
         }
+    }
+
+    fn mult_state(&self) -> f64 {
+        self.m.mult
+    }
+
+    fn set_mult_state(&mut self, m: f64) {
+        self.m.mult = m;
     }
 }
 
@@ -544,6 +572,35 @@ mod tests {
             ControllerSpec::CommRatio { target: 0.5 }.describe(),
             "comm-ratio(target=0.5)"
         );
+    }
+
+    #[test]
+    fn mult_state_roundtrips_every_controller() {
+        // Stagewise: stateless, always 1.0, restore is a no-op.
+        let mut s = Stagewise;
+        assert_eq!(s.mult_state(), 1.0);
+        s.set_mult_state(7.0);
+        assert_eq!(s.period(&phase(10)), 10);
+
+        // Adaptive controllers: a restored twin continues bit-identically.
+        let mut c = CommRatio::new(1.0);
+        for _ in 0..5 {
+            c.observe(&fb(10, 1e-4, 1e-2, 0.0));
+        }
+        let mut c2 = CommRatio::new(1.0);
+        c2.set_mult_state(c.mult_state());
+        assert_eq!(c2.period(&phase(10)), c.period(&phase(10)));
+        c.observe(&fb(10, 1e-4, 1e-2, 0.0));
+        c2.observe(&fb(10, 1e-4, 1e-2, 0.0));
+        assert_eq!(c2.mult_state().to_bits(), c.mult_state().to_bits());
+
+        let mut b = BarrierAware::new(0.05);
+        for _ in 0..3 {
+            b.observe(&fb(16, 0.7, 0.3, 0.3));
+        }
+        let mut b2 = BarrierAware::new(0.05);
+        b2.set_mult_state(b.mult_state());
+        assert_eq!(b2.period(&phase(16)), b.period(&phase(16)));
     }
 
     #[test]

@@ -219,6 +219,12 @@ pub fn run_experiment_with_stop(
         chunk_rows: cfg.chunk_rows,
         cohort: cfg.cohort,
         cohort_budget: cfg.cohort_budget,
+        faults: cfg.faults,
+        retry: cfg.retry,
+        quorum: cfg.quorum,
+        clip_norm: cfg.clip_norm,
+        checkpoint_path: cfg.checkpoint.as_ref().map(std::path::PathBuf::from),
+        resume_from: cfg.resume.as_ref().map(std::path::PathBuf::from),
         timeline_detail: cfg.timeline_detail,
         eval_every_rounds: cfg.eval_every_rounds,
         stop,

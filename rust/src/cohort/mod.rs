@@ -37,6 +37,7 @@
 use crate::comm::compress::ef_client_rng;
 use crate::data::sampler::MinibatchSampler;
 use crate::rng::Rng;
+use crate::util::ckpt::{CkptReader, CkptWriter};
 use std::collections::HashMap;
 
 /// One client's error-feedback state, materialized lazily at the client's
@@ -278,6 +279,125 @@ impl ClientStore {
             self.release(e.snapshot);
         }
     }
+
+    /// Serialize the whole store for a checkpoint (DESIGN.md §12): every
+    /// entry (snapshot pointer, sampler stream position, step counter, EF
+    /// slot, recency) plus the refcounted snapshot table and the store
+    /// stats. Entries and generations are written key-sorted so the byte
+    /// stream is independent of hash order.
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.tag("client_store");
+        // ORDER: checkpoint bytes are key-sorted, hash-order-free.
+        let mut ids: Vec<usize> = self.entries.keys().copied().collect();
+        ids.sort_unstable();
+        w.usize(ids.len());
+        for c in ids {
+            let e = &self.entries[&c];
+            w.usize(c);
+            w.u64(e.snapshot);
+            w.rng(e.sampler.rng_state());
+            w.u64(e.steps_done);
+            w.bool(e.ef.is_some());
+            if let Some(ef) = &e.ef {
+                w.f32_slice(&ef.residual);
+                w.rng(ef.rng.state());
+            }
+            w.u64(e.last_active_round);
+        }
+        // ORDER: checkpoint bytes are key-sorted, hash-order-free.
+        let mut gens: Vec<u64> = self.snapshots.keys().copied().collect();
+        gens.sort_unstable();
+        w.usize(gens.len());
+        for g in gens {
+            let s = &self.snapshots[&g];
+            w.u64(g);
+            w.f32_slice(&s.theta);
+            w.usize(s.refs);
+        }
+        w.u64(self.next_snapshot);
+        w.u64(self.stats.materialized);
+        w.u64(self.stats.evicted_clean);
+        w.u64(self.stats.evicted_lossy);
+        w.usize(self.stats.peak_entries);
+    }
+
+    /// Rebuild a store from [`Self::save_state`] bytes. `theta0` and
+    /// `budget` come from the run config (the checkpoint's pinned
+    /// snapshot 0 must match `theta0` bitwise — a resume under a
+    /// different initial model is refused, not silently wrong).
+    /// `mk_sampler` rebuilds each entry's sampler over its shard; the
+    /// saved stream position is then restored on top.
+    pub fn restore_state(
+        r: &mut CkptReader,
+        theta0: &[f32],
+        budget: usize,
+        mk_sampler: impl Fn(usize) -> MinibatchSampler,
+    ) -> anyhow::Result<Self> {
+        r.expect_tag("client_store")?;
+        let n_entries = r.usize()?;
+        let mut entries = HashMap::new();
+        for _ in 0..n_entries {
+            let c = r.usize()?;
+            let snapshot = r.u64()?;
+            let (s, spare) = r.rng()?;
+            let mut sampler = mk_sampler(c);
+            sampler.set_rng_state(s, spare);
+            let steps_done = r.u64()?;
+            let ef = if r.bool()? {
+                let residual = r.f32_vec()?;
+                let (es, espare) = r.rng()?;
+                Some(EfSlot {
+                    residual,
+                    rng: Rng::from_state(es, espare),
+                })
+            } else {
+                None
+            };
+            let last_active_round = r.u64()?;
+            entries.insert(
+                c,
+                ClientEntry {
+                    snapshot,
+                    sampler,
+                    steps_done,
+                    ef,
+                    last_active_round,
+                },
+            );
+        }
+        let n_snaps = r.usize()?;
+        let mut snapshots = HashMap::new();
+        for _ in 0..n_snaps {
+            let g = r.u64()?;
+            let theta = r.f32_vec()?;
+            let refs = r.usize()?;
+            snapshots.insert(g, Snapshot { theta, refs });
+        }
+        anyhow::ensure!(
+            snapshots.get(&0).map_or(false, |s| {
+                s.theta.len() == theta0.len()
+                    && s.theta
+                        .iter()
+                        .zip(theta0)
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            }),
+            "checkpoint theta0 differs bitwise from the configured initial model"
+        );
+        let next_snapshot = r.u64()?;
+        let stats = StoreStats {
+            materialized: r.u64()?,
+            evicted_clean: r.u64()?,
+            evicted_lossy: r.u64()?,
+            peak_entries: r.usize()?,
+        };
+        Ok(Self {
+            entries,
+            snapshots,
+            next_snapshot,
+            budget,
+            stats,
+        })
+    }
 }
 
 /// Sparse staleness ages: the map-backed replacement for
@@ -316,6 +436,32 @@ impl SparseAges {
     /// Number of clients currently carrying a nonzero age.
     pub fn nonzero(&self) -> usize {
         self.ages.len()
+    }
+
+    /// Serialize the nonzero ages for a checkpoint (DESIGN.md §12),
+    /// written id-sorted so the byte stream is independent of hash order.
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.tag("ages");
+        // ORDER: checkpoint bytes are id-sorted, hash-order-free.
+        let mut pairs: Vec<(usize, u64)> = self.ages.iter().map(|(&i, &a)| (i, a)).collect();
+        pairs.sort_unstable();
+        w.usize(pairs.len());
+        for (i, a) in pairs {
+            w.usize(i);
+            w.u64(a);
+        }
+    }
+
+    /// Inverse of [`Self::save_state`], replacing the current contents.
+    pub fn restore_state(&mut self, r: &mut CkptReader) -> anyhow::Result<()> {
+        r.expect_tag("ages")?;
+        self.ages.clear();
+        for _ in 0..r.usize()? {
+            let i = r.usize()?;
+            let a = r.u64()?;
+            self.ages.insert(i, a);
+        }
+        Ok(())
     }
 }
 
@@ -438,6 +584,82 @@ mod tests {
         assert_eq!(a.nonzero(), 0);
         a.reset(12); // resetting an untracked client is a no-op
         assert_eq!(a.get(12), 0);
+    }
+
+    #[test]
+    fn store_checkpoint_roundtrip_is_bitwise() {
+        let mut s = ClientStore::new(vec![1.0f32, 2.0], 0);
+        for c in [2usize, 5, 9] {
+            s.materialize(c, sampler(c as u64), 0);
+        }
+        // Give client 5 real state: stream progress, EF slot, a commit.
+        s.get_mut(5).unwrap().sampler.skip(16);
+        s.get_mut(5).unwrap().steps_done = 16;
+        s.get_mut(5).unwrap().ef = Some(EfSlot::new(2, 42, 5));
+        let _ = s.get_mut(5).unwrap().ef.as_mut().unwrap().rng.next_u64();
+        s.commit_round(&[2, 5], &[3.0, 4.0]);
+
+        let mut w = crate::util::ckpt::CkptWriter::new();
+        s.save_state(&mut w);
+        let text = w.into_string();
+        let mut r = crate::util::ckpt::CkptReader::new(&text);
+        let mut back =
+            ClientStore::restore_state(&mut r, &[1.0, 2.0], 0, |c| sampler(c as u64)).unwrap();
+        r.finish().unwrap();
+
+        // Re-serializing the restored store is byte-identical (the sorted
+        // layout is hash-order-free), before any stream is consumed.
+        let mut w2 = crate::util::ckpt::CkptWriter::new();
+        back.save_state(&mut w2);
+        assert_eq!(w2.into_string(), text);
+
+        assert_eq!(back.len(), s.len());
+        assert_eq!(back.live_snapshots(), s.live_snapshots());
+        assert_eq!(back.stats(), s.stats());
+        assert_eq!(back.row(5), s.row(5));
+        assert_eq!(back.row(9), s.row(9));
+        // Sampler and EF streams continue exactly where they stopped.
+        assert_eq!(
+            back.get_mut(5).unwrap().sampler.sample(8),
+            s.get_mut(5).unwrap().sampler.sample(8)
+        );
+        assert_eq!(
+            back.get_mut(5).unwrap().ef.as_mut().unwrap().rng.next_u64(),
+            s.get_mut(5).unwrap().ef.as_mut().unwrap().rng.next_u64()
+        );
+    }
+
+    #[test]
+    fn restore_refuses_a_different_theta0() {
+        let s = ClientStore::new(vec![1.0f32, 2.0], 0);
+        let mut w = crate::util::ckpt::CkptWriter::new();
+        s.save_state(&mut w);
+        let text = w.into_string();
+        let mut r = crate::util::ckpt::CkptReader::new(&text);
+        let err = ClientStore::restore_state(&mut r, &[9.0, 9.0], 0, |c| sampler(c as u64))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("theta0"), "{err}");
+    }
+
+    #[test]
+    fn sparse_ages_checkpoint_roundtrip() {
+        let mut a = SparseAges::new();
+        a.increment(7);
+        a.increment(7);
+        a.increment(3);
+        let mut w = crate::util::ckpt::CkptWriter::new();
+        a.save_state(&mut w);
+        let text = w.into_string();
+        let mut back = SparseAges::new();
+        back.increment(99); // stale contents must be replaced
+        let mut r = crate::util::ckpt::CkptReader::new(&text);
+        back.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.get(7), 2);
+        assert_eq!(back.get(3), 1);
+        assert_eq!(back.get(99), 0);
+        assert_eq!(back.nonzero(), 2);
     }
 
     #[test]

@@ -555,6 +555,40 @@ impl EfState {
     pub fn residual(&self, i: usize) -> &[f32] {
         &self.residuals[i]
     }
+
+    /// Serialize residuals + quantization-stream positions for a
+    /// checkpoint (DESIGN.md §12). The scratch is call-private, not
+    /// state.
+    pub fn save_state(&self, w: &mut crate::util::ckpt::CkptWriter) {
+        w.tag("ef");
+        w.usize(self.residuals.len());
+        for res in &self.residuals {
+            w.f32_slice(res);
+        }
+        for rng in &self.rngs {
+            w.rng(rng.state());
+        }
+    }
+
+    /// Inverse of [`Self::save_state`]; the state must have been built
+    /// for the same fleet size.
+    pub fn restore_state(&mut self, r: &mut crate::util::ckpt::CkptReader) -> anyhow::Result<()> {
+        r.expect_tag("ef")?;
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.residuals.len(),
+            "checkpoint EF state covers {n} clients != configured {}",
+            self.residuals.len()
+        );
+        for res in self.residuals.iter_mut() {
+            *res = r.f32_vec()?;
+        }
+        for rng in self.rngs.iter_mut() {
+            let (s, spare) = r.rng()?;
+            *rng = Rng::from_state(s, spare);
+        }
+        Ok(())
+    }
 }
 
 /// Client `i`'s error-feedback quantization stream — the exact stream

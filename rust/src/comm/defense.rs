@@ -1,0 +1,178 @@
+//! Defensive aggregation: reject and bound poisoned updates before the
+//! collective averages them into every replica.
+//!
+//! The fault model ([`crate::faults`]) can corrupt a committed update —
+//! NaN/Inf coordinates, bit flips, norm blowups — and a plain arithmetic
+//! mean propagates any of them to the whole fleet in one round (one NaN
+//! poisons every parameter it touches, permanently). This layer runs
+//! between local compute and the masked collective:
+//!
+//! * **Non-finite rejection** — any update containing a NaN/Inf
+//!   coordinate is dropped from the round's participation mask (its row
+//!   is left untouched; the client re-syncs from the next round's
+//!   broadcast like any other absentee).
+//! * **Norm clipping** — a finite update whose displacement from the
+//!   round's reference point exceeds `clip_norm` is scaled back onto the
+//!   clipping sphere, bounding what one corrupted (or merely divergent)
+//!   client can move the mean.
+//!
+//! Both defenses are data-dependent, so the layer is *off* unless
+//! `clip_norm > 0` — the neutral spelling never inspects a row, keeping
+//! legacy runs bit-for-bit (the all-finite, small-norm path multiplies
+//! nothing and rejects nobody even when armed, so an armed-but-clean run
+//! only differs by the mask bookkeeping).
+//!
+//! Arithmetic is deterministic: norms accumulate in f64 left-to-right
+//! (the repo-wide reduction idiom), and rows are visited in ascending
+//! index order.
+
+use crate::linalg::ModelArena;
+
+/// What the defense pass did to one round's committed updates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DefenseReport {
+    /// Updates dropped from the mask for non-finite coordinates.
+    pub rejected: u32,
+    /// Updates scaled back onto the `clip_norm` sphere.
+    pub clipped: u32,
+}
+
+impl DefenseReport {
+    /// True when the pass changed nothing (clean round).
+    pub fn is_clean(&self) -> bool {
+        self.rejected == 0 && self.clipped == 0
+    }
+}
+
+/// Screen the masked rows of `thetas` against `reference` (the model the
+/// round's updates displaced from — the last synchronized state): reject
+/// non-finite rows out of `mask` in place, clip finite rows whose
+/// displacement norm exceeds `clip_norm`. Rows already outside the mask
+/// are never inspected. `clip_norm` must be positive — callers gate on
+/// the neutral spelling themselves.
+pub fn defend_arena(
+    thetas: &mut ModelArena,
+    reference: &[f32],
+    mask: &mut [bool],
+    clip_norm: f64,
+) -> DefenseReport {
+    assert!(clip_norm > 0.0, "defense layer invoked with a neutral clip_norm");
+    assert_eq!(thetas.n_rows(), mask.len(), "one mask bit per replica");
+    assert_eq!(thetas.dim(), reference.len(), "reference/arena dimension mismatch");
+    let mut report = DefenseReport::default();
+    for i in 0..thetas.n_rows() {
+        if !mask[i] {
+            continue;
+        }
+        let row = thetas.row(i);
+        if row.iter().any(|v| !v.is_finite()) {
+            mask[i] = false;
+            report.rejected += 1;
+            continue;
+        }
+        let mut sq = 0.0f64;
+        for (v, r) in row.iter().zip(reference) {
+            let d = (*v - *r) as f64;
+            sq += d * d;
+        }
+        let norm = sq.sqrt();
+        if norm > clip_norm {
+            let scale = (clip_norm / norm) as f32;
+            let row = thetas.row_mut(i);
+            for (v, r) in row.iter_mut().zip(reference) {
+                *v = *r + (*v - *r) * scale;
+            }
+            report.clipped += 1;
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena_from(rows: &[Vec<f32>]) -> ModelArena {
+        let mut a = ModelArena::zeros(rows.len(), rows[0].len());
+        for (i, r) in rows.iter().enumerate() {
+            a.row_mut(i).copy_from_slice(r);
+        }
+        a
+    }
+
+    #[test]
+    fn clean_rows_pass_untouched() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, -1.0]];
+        let mut a = arena_from(&rows);
+        let mut mask = vec![true, true];
+        let rep = defend_arena(&mut a, &[0.0, 0.0], &mut mask, 100.0);
+        assert!(rep.is_clean());
+        assert_eq!(mask, vec![true, true]);
+        assert_eq!(a.row(0), &rows[0][..]);
+        assert_eq!(a.row(1), &rows[1][..]);
+    }
+
+    #[test]
+    fn non_finite_rows_are_rejected_from_the_mask() {
+        let mut a = arena_from(&[
+            vec![1.0f32, 2.0],
+            vec![f32::NAN, 0.0],
+            vec![0.0, f32::INFINITY],
+            vec![3.0, 4.0],
+        ]);
+        let mut mask = vec![true, true, true, true];
+        let rep = defend_arena(&mut a, &[0.0, 0.0], &mut mask, 100.0);
+        assert_eq!(rep.rejected, 2);
+        assert_eq!(rep.clipped, 0);
+        assert_eq!(mask, vec![true, false, false, true]);
+        // Rejected rows are left as-is (the mask, not the data, excludes
+        // them from the collective).
+        assert!(a.row(1)[0].is_nan());
+    }
+
+    #[test]
+    fn oversized_updates_clip_onto_the_sphere() {
+        // Reference (1, 1); update displaced by (3, 4): norm 5, clip 2.5
+        // halves the delta.
+        let mut a = arena_from(&[vec![4.0f32, 5.0]]);
+        let mut mask = vec![true];
+        let rep = defend_arena(&mut a, &[1.0, 1.0], &mut mask, 2.5);
+        assert_eq!(rep.clipped, 1);
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(mask, vec![true]);
+        assert!((a.row(0)[0] - 2.5).abs() < 1e-6);
+        assert!((a.row(0)[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clipping_bounds_the_norm_blowup_kind() {
+        let mut row = vec![0.1f32; 8];
+        crate::faults::apply_corruption(
+            &mut row,
+            &crate::faults::Corruption {
+                client: 0,
+                kind: crate::faults::CorruptKind::NormBlowup,
+                coord: 3,
+            },
+        );
+        let mut a = arena_from(&[row]);
+        let mut mask = vec![true];
+        let reference = vec![0.0f32; 8];
+        defend_arena(&mut a, &reference, &mut mask, 1.0);
+        let mut sq = 0.0f64;
+        for v in a.row(0) {
+            sq += (*v as f64) * (*v as f64);
+        }
+        assert!(sq.sqrt() <= 1.0 + 1e-6, "norm {} not clipped", sq.sqrt());
+        assert_eq!(mask, vec![true]);
+    }
+
+    #[test]
+    fn masked_out_rows_are_never_inspected() {
+        let mut a = arena_from(&[vec![f32::NAN, 0.0], vec![1.0, 1.0]]);
+        let mut mask = vec![false, true];
+        let rep = defend_arena(&mut a, &[0.0, 0.0], &mut mask, 10.0);
+        assert!(rep.is_clean(), "absent NaN row must not count as rejected");
+        assert_eq!(mask, vec![false, true]);
+    }
+}

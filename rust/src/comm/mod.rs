@@ -24,6 +24,7 @@
 
 pub mod allreduce;
 pub mod compress;
+pub mod defense;
 
 pub use allreduce::{
     average, average_arena, average_arena_masked, average_masked, bytes_per_client_downlink,
@@ -32,6 +33,7 @@ pub use allreduce::{
 pub use compress::{
     average_compressed, average_compressed_arena, CompressionSchedule, CompressorSpec, EfState,
 };
+pub use defense::{defend_arena, DefenseReport};
 
 /// Communication accounting for one experiment run.
 #[derive(Clone, Debug, Default, PartialEq)]

@@ -8,6 +8,7 @@
 use crate::algo::{AlgoSpec, ControllerSpec, Variant};
 use crate::comm::{Algorithm, CompressionSchedule};
 use crate::decentral::{ExecMode, PeerTopology};
+use crate::faults::{FaultPlan, RetryPolicy};
 use crate::simnet::{ClusterProfile, Detail, LinkFabric, Overlap, ParticipationPolicy};
 use crate::util::json::Json;
 
@@ -145,6 +146,28 @@ pub struct ExperimentConfig {
     /// Client-store memory budget in live entries (key `cohort_budget`);
     /// 0 = unbounded, which is the lossless default.
     pub cohort_budget: usize,
+    /// Deterministic fault-injection plan (key `faults`: `none` or a
+    /// comma-separated `crash=P,corrupt=P,partition=PxK,leader=P` list);
+    /// `None` keeps every fault stream untouched (DESIGN.md §12).
+    pub faults: Option<FaultPlan>,
+    /// Failed-barrier handling (key `retry`: "none" | "retry" |
+    /// "retry:N"): re-run the collective up to N times with exponential
+    /// backoff before abandoning the round.
+    pub retry: RetryPolicy,
+    /// Minimum fraction of the fleet a round must commit with (key
+    /// `quorum`, in [0, 1]); rounds below quorum are abandoned and rolled
+    /// back. 0 disables the check.
+    pub quorum: f64,
+    /// Defensive update-norm clip (key `clip_norm`, BSP + identity
+    /// compression only): participant deltas above this L2 norm are
+    /// scaled down, non-finite rows rejected. 0 disables the defense.
+    pub clip_norm: f64,
+    /// Round-boundary checkpoint file (key `checkpoint`); every round
+    /// atomically rewrites it with the complete resumable run state.
+    pub checkpoint: Option<String>,
+    /// Resume file (CLI `--resume` only, never a preset key: a one-shot
+    /// invocation knob, not part of a reproducible experiment spec).
+    pub resume: Option<String>,
     pub eval_every_rounds: u64,
     /// "native" | "threaded" | "xla"
     pub engine: String,
@@ -181,6 +204,12 @@ impl Default for ExperimentConfig {
             chunk_rows: 0,
             cohort: false,
             cohort_budget: 0,
+            faults: None,
+            retry: RetryPolicy::None,
+            quorum: 0.0,
+            clip_norm: 0.0,
+            checkpoint: None,
+            resume: None,
             eval_every_rounds: 1,
             engine: "threaded".into(),
             timeline_detail: Detail::Rounds,
@@ -189,47 +218,83 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
-    /// Parse from a JSON object; missing keys keep defaults.
+    /// Parse from a JSON object; missing keys keep defaults. A key that
+    /// is *present* with the wrong JSON type is a named error, never a
+    /// silent fall-back to the default (a misquoted `"seed": "7"` used to
+    /// vanish without a trace).
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let mut cfg = ExperimentConfig::default();
-        let gets = |k: &str| j.get(k).and_then(|v| v.as_str().map(str::to_string));
-        let getf = |k: &str| j.get(k).and_then(|v| v.as_f64());
-        let getb = |k: &str| j.get(k).and_then(|v| v.as_bool());
+        let gets = |k: &str| -> anyhow::Result<Option<String>> {
+            match j.get(k) {
+                None => Ok(None),
+                Some(v) => match v.as_str() {
+                    Some(s) => Ok(Some(s.to_string())),
+                    None => anyhow::bail!(
+                        "config key \"{k}\": expected a string, got {}",
+                        v.to_string()
+                    ),
+                },
+            }
+        };
+        let getf = |k: &str| -> anyhow::Result<Option<f64>> {
+            match j.get(k) {
+                None => Ok(None),
+                Some(v) => match v.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => anyhow::bail!(
+                        "config key \"{k}\": expected a number, got {}",
+                        v.to_string()
+                    ),
+                },
+            }
+        };
+        let getb = |k: &str| -> anyhow::Result<Option<bool>> {
+            match j.get(k) {
+                None => Ok(None),
+                Some(v) => match v.as_bool() {
+                    Some(b) => Ok(Some(b)),
+                    None => anyhow::bail!(
+                        "config key \"{k}\": expected true or false, got {}",
+                        v.to_string()
+                    ),
+                },
+            }
+        };
 
-        if let Some(w) = gets("workload") {
+        if let Some(w) = gets("workload")? {
             cfg.workload =
                 Workload::parse(&w).ok_or_else(|| anyhow::anyhow!("unknown workload {w}"))?;
         }
-        if let Some(v) = getb("iid") {
+        if let Some(v) = getb("iid")? {
             cfg.iid = v;
         }
-        if let Some(v) = getf("s_percent") {
+        if let Some(v) = getf("s_percent")? {
             cfg.s_percent = v;
         }
-        if let Some(v) = getf("n_clients") {
+        if let Some(v) = getf("n_clients")? {
             cfg.n_clients = v as usize;
         }
-        if let Some(v) = getf("total_steps") {
+        if let Some(v) = getf("total_steps")? {
             cfg.total_steps = v as u64;
         }
-        if let Some(v) = getf("seed") {
+        if let Some(v) = getf("seed")? {
             cfg.seed = v as u64;
         }
-        if let Some(v) = getf("eval_every_rounds") {
+        if let Some(v) = getf("eval_every_rounds")? {
             cfg.eval_every_rounds = v as u64;
         }
-        if let Some(e) = gets("engine") {
+        if let Some(e) = gets("engine")? {
             anyhow::ensure!(
                 ["native", "threaded", "xla"].contains(&e.as_str()),
                 "unknown engine {e}"
             );
             cfg.engine = e;
         }
-        if let Some(c) = gets("collective") {
+        if let Some(c) = gets("collective")? {
             cfg.collective =
                 Algorithm::parse(&c).ok_or_else(|| anyhow::anyhow!("unknown collective {c}"))?;
         }
-        if let Some(p) = gets("cluster") {
+        if let Some(p) = gets("cluster")? {
             cfg.cluster = ClusterProfile::parse(&p)
                 .ok_or_else(|| anyhow::anyhow!("unknown cluster profile {p}"))?;
         }
@@ -243,11 +308,11 @@ impl ExperimentConfig {
             cfg.participation = ParticipationPolicy::parse(&s)
                 .ok_or_else(|| anyhow::anyhow!("unknown participation policy {s}"))?;
         }
-        if let Some(c) = gets("controller") {
+        if let Some(c) = gets("controller")? {
             cfg.controller = ControllerSpec::parse(&c)
                 .ok_or_else(|| anyhow::anyhow!("unknown controller {c}"))?;
         }
-        if let Some(v) = getf("target_ratio") {
+        if let Some(v) = getf("target_ratio")? {
             anyhow::ensure!(
                 v.is_finite() && v > 0.0,
                 "target_ratio must be a positive finite ratio, got {v}"
@@ -256,117 +321,141 @@ impl ExperimentConfig {
                 *target = v;
             }
         }
-        if let Some(v) = getf("barrier_frac") {
+        if let Some(v) = getf("barrier_frac")? {
             anyhow::ensure!(v > 0.0 && v < 1.0, "barrier_frac must be in (0, 1), got {v}");
             if let ControllerSpec::BarrierAware { frac } = &mut cfg.controller {
                 *frac = v;
             }
         }
-        if let Some(tl) = gets("timeline") {
+        if let Some(tl) = gets("timeline")? {
             cfg.timeline_detail = Detail::parse(&tl)
                 .ok_or_else(|| anyhow::anyhow!("unknown timeline detail {tl}"))?;
         }
-        if let Some(c) = gets("compressor") {
+        if let Some(c) = gets("compressor")? {
             cfg.compression = CompressionSchedule::parse(&c)
                 .ok_or_else(|| anyhow::anyhow!("unknown compressor {c}"))?;
         }
-        if let Some(v) = getf("topk_frac") {
+        if let Some(v) = getf("topk_frac")? {
             anyhow::ensure!(
                 v > 0.0 && v <= 1.0,
                 "topk_frac must be in (0, 1], got {v}"
             );
             cfg.compression.set_topk_frac(v);
         }
-        if let Some(v) = getf("compress_bits") {
+        if let Some(v) = getf("compress_bits")? {
             anyhow::ensure!(
                 v.fract() == 0.0 && (2.0..=16.0).contains(&v),
                 "compress_bits must be an integer in [2, 16], got {v}"
             );
             cfg.compression.set_bits(v as u32);
         }
-        if let Some(m) = gets("mode") {
+        if let Some(m) = gets("mode")? {
             cfg.mode =
                 ExecMode::parse(&m).ok_or_else(|| anyhow::anyhow!("unknown execution mode {m}"))?;
         }
-        if let Some(t) = gets("topology") {
+        if let Some(t) = gets("topology")? {
             cfg.topology =
                 PeerTopology::parse(&t).ok_or_else(|| anyhow::anyhow!("unknown topology {t}"))?;
         }
-        if let Some(v) = getf("gossip_degree") {
+        if let Some(v) = getf("gossip_degree")? {
             anyhow::ensure!(
                 v.fract() == 0.0 && v >= 1.0,
                 "gossip_degree must be a positive integer, got {v}"
             );
             cfg.gossip_degree = v as usize;
         }
-        if let Some(v) = getf("staleness_bound") {
+        if let Some(v) = getf("staleness_bound")? {
             anyhow::ensure!(
                 v.fract() == 0.0 && v >= 0.0,
                 "staleness_bound must be a non-negative integer, got {v}"
             );
             cfg.staleness_bound = v as u64;
         }
-        if let Some(v) = getb("cohort") {
+        if let Some(v) = getb("cohort")? {
             cfg.cohort = v;
         }
-        if let Some(v) = getf("cohort_budget") {
+        if let Some(v) = getf("cohort_budget")? {
             anyhow::ensure!(
                 v.fract() == 0.0 && v >= 0.0,
                 "cohort_budget must be a non-negative integer, got {v}"
             );
             cfg.cohort_budget = v as usize;
         }
-        if let Some(f) = gets("fabric") {
+        if let Some(s) = gets("faults")? {
+            cfg.faults = FaultPlan::parse(&s)?;
+        }
+        if let Some(s) = gets("retry")? {
+            cfg.retry = RetryPolicy::parse(&s)?;
+        }
+        if let Some(v) = getf("quorum")? {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "quorum must be a fraction in [0, 1], got {v}"
+            );
+            cfg.quorum = v;
+        }
+        if let Some(v) = getf("clip_norm")? {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "clip_norm must be a non-negative finite norm, got {v}"
+            );
+            cfg.clip_norm = v;
+        }
+        if let Some(p) = gets("checkpoint")? {
+            anyhow::ensure!(!p.is_empty(), "checkpoint must name a file path");
+            cfg.checkpoint = Some(p);
+        }
+        if let Some(f) = gets("fabric")? {
             cfg.fabric =
                 LinkFabric::parse(&f).ok_or_else(|| anyhow::anyhow!("unknown fabric {f}"))?;
         }
-        if let Some(o) = gets("overlap") {
+        if let Some(o) = gets("overlap")? {
             cfg.overlap =
                 Overlap::parse(&o).ok_or_else(|| anyhow::anyhow!("unknown overlap mode {o}"))?;
         }
-        if let Some(v) = getf("chunk_rows") {
+        if let Some(v) = getf("chunk_rows")? {
             anyhow::ensure!(
                 v.fract() == 0.0 && v >= 0.0,
                 "chunk_rows must be a non-negative integer, got {v}"
             );
             cfg.chunk_rows = v as usize;
         }
-        if let Some(c) = gets("down_compressor") {
+        if let Some(c) = gets("down_compressor")? {
             cfg.down_compressor = Some(
                 CompressionSchedule::parse(&c)
                     .ok_or_else(|| anyhow::anyhow!("unknown downlink compressor {c}"))?,
             );
         }
-        if let Some(a) = gets("algorithm") {
+        if let Some(a) = gets("algorithm")? {
             cfg.algo.variant =
                 Variant::parse(&a).ok_or_else(|| anyhow::anyhow!("unknown algorithm {a}"))?;
         }
         // AlgoSpec scalar fields.
-        if let Some(v) = getf("eta1") {
+        if let Some(v) = getf("eta1")? {
             cfg.algo.eta1 = v;
         }
-        if let Some(v) = getf("alpha") {
+        if let Some(v) = getf("alpha")? {
             cfg.algo.alpha = v;
         }
-        if let Some(v) = getf("k1") {
+        if let Some(v) = getf("k1")? {
             cfg.algo.k1 = v;
         }
-        if let Some(v) = getf("t1") {
+        if let Some(v) = getf("t1")? {
             cfg.algo.t1 = v as u64;
         }
-        if let Some(v) = getf("batch") {
+        if let Some(v) = getf("batch")? {
             cfg.algo.batch = v as usize;
         }
-        if let Some(v) = getf("big_batch") {
+        if let Some(v) = getf("big_batch")? {
             cfg.algo.big_batch = v as usize;
         }
-        if let Some(v) = getf("batch_growth") {
+        if let Some(v) = getf("batch_growth")? {
             cfg.algo.batch_growth = v;
         }
-        if let Some(v) = getf("batch_cap") {
+        if let Some(v) = getf("batch_cap")? {
             cfg.algo.batch_cap = v as usize;
         }
-        if let Some(v) = getf("inv_gamma") {
+        if let Some(v) = getf("inv_gamma")? {
             cfg.algo.inv_gamma = v as f32;
         }
         cfg.algo.iid = cfg.iid;
@@ -464,6 +553,11 @@ impl ExperimentConfig {
         take!(chunk_rows);
         take!(cohort);
         take!(cohort_budget);
+        take!(faults);
+        take!(retry);
+        take!(quorum);
+        take!(clip_norm);
+        take!(checkpoint);
         if j.get("algorithm").is_some() {
             cfg.algo.variant = tmp.algo.variant;
         }
@@ -799,6 +893,84 @@ mod tests {
         assert_eq!(cfg.timeline_detail, Detail::Steps, "unrelated override keeps it");
         assert!(ExperimentConfig::from_json(&Json::parse(r#"{"timeline": "verbose"}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn parses_fault_keys() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.faults.is_none());
+        assert_eq!(cfg.retry, RetryPolicy::None);
+        assert_eq!(cfg.quorum, 0.0);
+        assert_eq!(cfg.clip_norm, 0.0);
+        assert!(cfg.checkpoint.is_none());
+        assert!(cfg.resume.is_none());
+        let j = Json::parse(
+            r#"{"faults": "crash=0.05,partition=0.02x3", "retry": "retry:2",
+                "quorum": 0.5, "clip_norm": 10.0, "checkpoint": "out/run.ckpt"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        let plan = cfg.faults.unwrap();
+        assert_eq!(plan.crash, 0.05);
+        assert_eq!(plan.partition, 0.02);
+        assert_eq!(plan.partition_rounds, 3);
+        assert_eq!(cfg.retry, RetryPolicy::Retry { max: 2 });
+        assert_eq!(cfg.quorum, 0.5);
+        assert_eq!(cfg.clip_norm, 10.0);
+        assert_eq!(cfg.checkpoint.as_deref(), Some("out/run.ckpt"));
+        // The explicit neutral spellings parse back to the disabled state.
+        let j = Json::parse(r#"{"faults": "none", "retry": "none", "quorum": 0.0}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(cfg.faults.is_none());
+        assert_eq!(cfg.retry, RetryPolicy::None);
+        // Overrides round-trip (the CLI path) and survive unrelated ones.
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("faults", "crash=0.1").unwrap();
+        cfg.apply_override("retry", "retry").unwrap();
+        cfg.apply_override("quorum", "0.25").unwrap();
+        cfg.apply_override("eta1", "0.4").unwrap();
+        assert_eq!(cfg.faults.unwrap().crash, 0.1);
+        assert_eq!(cfg.retry, RetryPolicy::Retry { max: 3 });
+        assert_eq!(cfg.quorum, 0.25);
+        for bad in [
+            r#"{"faults": "crash=2.0"}"#,
+            r#"{"faults": "meteor=0.1"}"#,
+            r#"{"faults": "crash"}"#,
+            r#"{"retry": "sometimes"}"#,
+            r#"{"quorum": 1.5}"#,
+            r#"{"quorum": -0.1}"#,
+            r#"{"clip_norm": -1.0}"#,
+            r#"{"checkpoint": ""}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_typed_keys_are_named_errors_not_silent_defaults() {
+        // Every (key, wrong-typed value) pair must error and the message
+        // must name the offending key — the old accessors fell back to
+        // the default without a word.
+        for (key, frag) in [
+            (r#"{"seed": "seven"}"#, "seed"),
+            (r#"{"n_clients": true}"#, "n_clients"),
+            (r#"{"workload": 3}"#, "workload"),
+            (r#"{"iid": "yes"}"#, "iid"),
+            (r#"{"cohort": 1}"#, "cohort"),
+            (r#"{"faults": 0.05}"#, "faults"),
+            (r#"{"retry": 3}"#, "retry"),
+            (r#"{"quorum": "half"}"#, "quorum"),
+            (r#"{"clip_norm": "big"}"#, "clip_norm"),
+            (r#"{"checkpoint": 7}"#, "checkpoint"),
+        ] {
+            let err = ExperimentConfig::from_json(&Json::parse(key).unwrap())
+                .expect_err(key)
+                .to_string();
+            assert!(err.contains(frag), "error for {key} must name the key: {err}");
+        }
     }
 
     #[test]

@@ -50,6 +50,15 @@
 //! eval target in every BSP configuration, since under `All` every row
 //! equals the server after the round's full average). BSP only: gossip
 //! and bounded staleness keep the dense loop.
+//!
+//! Fault tolerance (DESIGN.md §12): crash / partition / quorum / retry
+//! plans are priced through the same [`SparseSimNet`] recovery path the
+//! dense engine pins bit-identical, and the runner writes the same
+//! bit-exact round-boundary checkpoints as the dense loop (tag
+//! `cohort_run` — the client store serializes snapshot pointers and lazy
+//! sampler/EF state in place of the dense arenas). Update corruption and
+//! `clip_norm` defense stay dense-only: the defense screens rows against
+//! the dense synced arena, which the store never materializes.
 
 use super::compute::ClientCompute;
 use super::metrics::{Trace, TracePoint};
@@ -64,6 +73,7 @@ use crate::linalg::ModelArena;
 use crate::rng::Rng;
 use crate::sim::SimClock;
 use crate::simnet::SparseSimNet;
+use crate::util::ckpt::{CkptReader, CkptWriter};
 
 /// Scale accounting the million-client example (and the CI `scale` stage)
 /// reads alongside the trace.
@@ -140,6 +150,11 @@ pub fn run_cohort_detailed(
         shards.len()
     );
     assert!(!phases.is_empty());
+    assert!(
+        cfg.clip_norm == 0.0 && !cfg.corrupting(),
+        "update corruption / clip_norm are unsupported on the cohort path (DESIGN.md §12): \
+         the defense screens rows against the dense synced arena"
+    );
     let n = cfg.n_clients;
     let dim = engine.dim();
     assert_eq!(theta0.len(), dim);
@@ -188,7 +203,8 @@ pub fn run_cohort_detailed(
         cfg.timeline_detail,
     )
     .with_policy(cfg.participation)
-    .with_fabric(cfg.fabric, cfg.overlap, cfg.chunk_rows);
+    .with_fabric(cfg.fabric, cfg.overlap, cfg.chunk_rows)
+    .with_faults(cfg.faults, cfg.retry, cfg.quorum);
 
     let mut trace = Trace {
         algorithm: algorithm_name.to_string(),
@@ -202,32 +218,102 @@ pub fn run_cohort_detailed(
     let mut examples_per_client: u64 = 0;
     let shard_size = shards[0].len().max(1) as f64;
 
-    let loss0 = engine.full_loss(&anchor);
-    let acc0 = if cfg.eval_accuracy {
-        engine.full_accuracy(&anchor)
+    // Resume (DESIGN.md §12): the cohort twin of the dense restore —
+    // the client store replaces the model/synced arenas and the sampler
+    // bank (entries rebuilt through the same seed-derived constructor the
+    // lazy materialization uses), and the sparse engine restores its
+    // timing map in place of the dense per-client vectors.
+    let (pi0, step0) = if let Some(path) = &cfg.resume_from {
+        let mut restore = |path: &std::path::Path| -> anyhow::Result<(usize, u64)> {
+            let mut r = CkptReader::from_file(path)?;
+            r.expect_tag("cohort_run")?;
+            let pi = r.usize()?;
+            let step = r.u64()?;
+            anyhow::ensure!(
+                pi <= phases.len(),
+                "checkpoint resumes at phase {pi} but the schedule has {}",
+                phases.len()
+            );
+            t = r.u64()?;
+            rounds = r.u64()?;
+            examples_per_client = r.u64()?;
+            let sv = r.f32_vec()?;
+            anyhow::ensure!(sv.len() == dim, "checkpoint server dimension mismatch");
+            server.copy_from_slice(&sv);
+            let a = r.f32_vec()?;
+            anyhow::ensure!(a.len() == dim, "checkpoint anchor dimension mismatch");
+            anchor.copy_from_slice(&a);
+            peak_cohort = r.u64()? as usize;
+            store = ClientStore::restore_state(&mut r, theta0, cfg.cohort_budget, |c| {
+                MinibatchSampler::new(shards[c % shards.len()].clone(), &root, c as u64)
+            })?;
+            controller.set_mult_state(r.f64()?);
+            net.restore_state(&mut r)?;
+            trace.poisoned_evals = r.u64()?;
+            let n_points = r.usize()?;
+            trace.points.clear();
+            for _ in 0..n_points {
+                trace.points.push(TracePoint {
+                    iter: r.u64()?,
+                    rounds: r.u64()?,
+                    epoch: r.f64()?,
+                    loss: r.f64()?,
+                    accuracy: r.f64()?,
+                    sim_seconds: r.f64()?,
+                    stage: r.usize()?,
+                    eta: r.f64()?,
+                    k: r.u64()?,
+                    realized_k: r.u64()?,
+                });
+            }
+            comm_stats.rounds = r.u64()?;
+            comm_stats.bytes_per_client = r.u64()?;
+            comm_stats.wire_bytes_per_client = r.u64()?;
+            comm_stats.sim_comm_seconds = r.f64()?;
+            comm_stats.partial_rounds = r.u64()?;
+            comm_stats.empty_rounds = r.u64()?;
+            comm_stats.participant_client_rounds = r.u64()?;
+            comm_stats.local_steps = r.u64()?;
+            clock.compute_seconds = r.f64()?;
+            clock.comm_seconds = r.f64()?;
+            r.finish()?;
+            Ok((pi, step))
+        };
+        restore(path).unwrap_or_else(|e| panic!("resume from {}: {e:#}", path.display()))
     } else {
-        f64::NAN
+        let loss0 = engine.full_loss(&anchor);
+        let acc0 = if cfg.eval_accuracy {
+            engine.full_accuracy(&anchor)
+        } else {
+            f64::NAN
+        };
+        trace.points.push(TracePoint {
+            iter: 0,
+            rounds: 0,
+            epoch: 0.0,
+            loss: loss0,
+            accuracy: acc0,
+            sim_seconds: 0.0,
+            stage: phases[0].stage,
+            eta: phases[0].lr.at(0),
+            k: phases[0].comm_period,
+            realized_k: 0,
+        });
+        (0usize, 0u64)
     };
-    trace.points.push(TracePoint {
-        iter: 0,
-        rounds: 0,
-        epoch: 0.0,
-        loss: loss0,
-        accuracy: acc0,
-        sim_seconds: 0.0,
-        stage: phases[0].stage,
-        eta: phases[0].lr.at(0),
-        k: phases[0].comm_period,
-        realized_k: 0,
-    });
 
-    'outer: for phase in phases {
-        if phase.reset_anchor {
+    'outer: for pi in pi0..phases.len() {
+        let phase = &phases[pi];
+        // A mid-phase resume must not re-run the phase-start anchor reset
+        // the uninterrupted run already performed.
+        let resuming_mid_phase = pi == pi0 && step0 > 0;
+        if phase.reset_anchor && !resuming_mid_phase {
             anchor.copy_from_slice(&server);
         }
         let mut k = controller.period(phase).max(1);
         let mut steps_in_round: u64 = 0;
-        for step in 0..phase.steps {
+        let start_step = if pi == pi0 { step0 } else { 0 };
+        for step in start_step..phase.steps {
             if steps_in_round == 0 {
                 // Round start: draw the cohort and materialize its state.
                 // Under `All` every client computes and averages (the
@@ -378,6 +464,13 @@ pub fn run_cohort_detailed(
 
                 if rounds % cfg.eval_every_rounds == 0 {
                     let loss = engine.full_loss(&server);
+                    if !loss.is_finite() {
+                        trace.poisoned_evals += 1;
+                        eprintln!(
+                            "WARNING: non-finite loss ({loss}) at iter {t}, round {rounds} — \
+                             model poisoned; see the trace's poisoned_evals counter"
+                        );
+                    }
                     let acc = if cfg.eval_accuracy {
                         engine.full_accuracy(&server)
                     } else {
@@ -405,6 +498,61 @@ pub fn run_cohort_detailed(
                             break 'outer;
                         }
                     }
+                }
+
+                // Bit-exact checkpoint at the round boundary (DESIGN.md
+                // §12), the cohort twin of the dense writer: the client
+                // store serializes snapshot pointers + lazy state instead
+                // of the dense arenas and sampler bank.
+                if let Some(path) = &cfg.checkpoint_path {
+                    let mut w = CkptWriter::new();
+                    w.tag("cohort_run");
+                    if step + 1 == phase.steps {
+                        w.usize(pi + 1);
+                        w.u64(0);
+                    } else {
+                        w.usize(pi);
+                        w.u64(step + 1);
+                    }
+                    w.u64(t);
+                    w.u64(rounds);
+                    w.u64(examples_per_client);
+                    w.f32_slice(&server);
+                    w.f32_slice(&anchor);
+                    w.u64(peak_cohort as u64);
+                    store.save_state(&mut w);
+                    w.f64(controller.mult_state());
+                    net.save_state(&mut w);
+                    w.u64(trace.poisoned_evals);
+                    w.usize(trace.points.len());
+                    for p in &trace.points {
+                        w.u64(p.iter);
+                        w.u64(p.rounds);
+                        w.f64(p.epoch);
+                        w.f64(p.loss);
+                        w.f64(p.accuracy);
+                        w.f64(p.sim_seconds);
+                        w.usize(p.stage);
+                        w.f64(p.eta);
+                        w.u64(p.k);
+                        w.u64(p.realized_k);
+                    }
+                    w.u64(comm_stats.rounds);
+                    w.u64(comm_stats.bytes_per_client);
+                    w.u64(comm_stats.wire_bytes_per_client);
+                    w.f64(comm_stats.sim_comm_seconds);
+                    w.u64(comm_stats.partial_rounds);
+                    w.u64(comm_stats.empty_rounds);
+                    w.u64(comm_stats.participant_client_rounds);
+                    w.u64(comm_stats.local_steps);
+                    w.f64(clock.compute_seconds);
+                    w.f64(clock.comm_seconds);
+                    w.to_file(path).unwrap_or_else(|e| {
+                        panic!("checkpoint write {}: {e:#}", path.display())
+                    });
+                }
+                if cfg.kill_at_round == Some(rounds) {
+                    break 'outer;
                 }
             }
         }

@@ -48,6 +48,11 @@ pub struct Trace {
     pub total_iters: u64,
     /// Whether a stop rule fired before the budget was exhausted.
     pub stopped_early: bool,
+    /// Evaluation points whose loss came back non-finite — a poisoned
+    /// model (NaN/Inf corruption that survived every defense). Zero on
+    /// every healthy run; the coordinator reports each occurrence loudly
+    /// at eval time and this counter makes the damage machine-readable.
+    pub poisoned_evals: u64,
 }
 
 impl Trace {
@@ -135,6 +140,7 @@ impl Trace {
             ),
             ("mean_realized_k", Json::num(self.comm.mean_realized_k())),
             ("stopped_early", Json::Bool(self.stopped_early)),
+            ("poisoned_evals", Json::num(self.poisoned_evals as f64)),
             (
                 "points",
                 Json::Arr(
@@ -246,10 +252,12 @@ mod tests {
             algorithm: "Local-SGD".into(),
             points: vec![pt(1, 0.5, 0.6)],
             total_iters: 10,
+            poisoned_evals: 2,
             ..Default::default()
         };
         let j = Json::parse(&t.to_json().to_string()).unwrap();
         assert_eq!(j.get("algorithm").unwrap().as_str(), Some("Local-SGD"));
+        assert_eq!(j.get("poisoned_evals").unwrap().as_f64(), Some(2.0));
         assert_eq!(
             j.get("points").unwrap().idx(0).unwrap().get("rounds").unwrap().as_f64(),
             Some(1.0)

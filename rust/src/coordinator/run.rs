@@ -20,10 +20,13 @@ use crate::algo::{ControllerSpec, Phase, RoundFeedback};
 use crate::comm;
 use crate::data::{sampler::MinibatchSampler, Shard};
 use crate::decentral::{ExecMode, GossipEngine, PeerTopology, StalenessFold};
+use crate::faults::{apply_corruption, FaultPlan, RetryPolicy};
 use crate::linalg::ModelArena;
 use crate::rng::Rng;
 use crate::sim::{ComputeModel, NetworkModel, SimClock};
 use crate::simnet::{ClusterProfile, Detail, LinkFabric, Overlap, ParticipationPolicy, SimNet};
+use crate::util::ckpt::{CkptReader, CkptWriter};
+use std::path::PathBuf;
 
 /// Metric a stop rule watches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -135,6 +138,35 @@ pub struct RunConfig {
     /// Pipeline chunk width in row elements for `overlap = chunked`
     /// (0 = auto quarter-row chunks).
     pub chunk_rows: usize,
+    /// Seeded fault-injection plan (DESIGN.md §12): client crashes,
+    /// update corruption, rack partitions, leader failures. `None` (the
+    /// default) keeps the single-shot legacy pricing path bit-for-bit.
+    pub faults: Option<FaultPlan>,
+    /// Recovery policy for a failed collective attempt: `None` abandons
+    /// immediately (legacy), `Retry` re-prices up to `max` extra
+    /// attempts with exponential backoff through the fabric.
+    pub retry: RetryPolicy,
+    /// Minimum participant fraction for a round to commit (0.0 = any
+    /// arrival commits, the legacy spelling). A round below quorum after
+    /// all attempts is abandoned: its local work rolls back and the
+    /// timeline accounts it in the `abandoned` column.
+    pub quorum: f64,
+    /// Defensive-aggregation clip norm (DESIGN.md §12): positive values
+    /// arm the `comm::defense` layer — non-finite updates are rejected
+    /// from the round's mask and finite updates are clipped onto the
+    /// sphere of this radius around the server model. 0.0 (the default)
+    /// never inspects a row. Dense uncompressed BSP only.
+    pub clip_norm: f64,
+    /// When set, write a bit-exact checkpoint of the full run state here
+    /// at every round boundary (atomic overwrite). A run resumed from it
+    /// reproduces the uninterrupted trace and timeline byte-for-byte.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from a checkpoint previously written via `checkpoint_path`
+    /// (the config must otherwise match the run that wrote it).
+    pub resume_from: Option<PathBuf>,
+    /// Test/chaos hook: stop the run right after the checkpoint written
+    /// at the end of round `r` (simulating a crash at that boundary).
+    pub kill_at_round: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -165,7 +197,32 @@ impl Default for RunConfig {
             fabric: LinkFabric::default(),
             overlap: Overlap::default(),
             chunk_rows: 0,
+            faults: None,
+            retry: RetryPolicy::None,
+            quorum: 0.0,
+            clip_norm: 0.0,
+            checkpoint_path: None,
+            resume_from: None,
+            kill_at_round: None,
         }
+    }
+}
+
+impl RunConfig {
+    /// True when any fault/recovery knob left its neutral spelling — the
+    /// coordinator then routes rounds through the engine's attempt loop
+    /// and keeps masked server-side bookkeeping even under policy `all`
+    /// (an abandoned round must be able to roll everyone back).
+    pub fn recovery_active(&self) -> bool {
+        self.faults.is_some()
+            || self.quorum > 0.0
+            || self.retry != RetryPolicy::None
+            || self.clip_norm > 0.0
+    }
+
+    /// True when the plan can poison committed updates.
+    pub fn corrupting(&self) -> bool {
+        self.faults.as_ref().map_or(false, |f| f.corrupt > 0.0)
     }
 }
 
@@ -188,6 +245,16 @@ pub fn run(
     theta0: &[f32],
     algorithm_name: &str,
 ) -> Trace {
+    // Support matrix for the data-dependent fault knobs (DESIGN.md §12):
+    // corruption and norm clipping touch arena rows between compute and
+    // collective, which only the dense uncompressed BSP path exposes.
+    // Crash/partition/quorum/retry are pricing-level and work everywhere
+    // but gossip (peer rounds have no collective to retry).
+    assert!(
+        !((cfg.corrupting() || cfg.clip_norm > 0.0) && cfg.cohort),
+        "update corruption / clip_norm are unsupported on the cohort path \
+         (corrupted rows would alias the shared snapshot table)"
+    );
     if cfg.cohort {
         // Cohort-sparse path (DESIGN.md §9): same trajectory, memory
         // proportional to the sampled cohort instead of the fleet.
@@ -236,7 +303,8 @@ pub fn run(
         cfg.timeline_detail,
     )
     .with_policy(cfg.participation)
-    .with_fabric(cfg.fabric, cfg.overlap, cfg.chunk_rows);
+    .with_fabric(cfg.fabric, cfg.overlap, cfg.chunk_rows)
+    .with_faults(cfg.faults, cfg.retry, cfg.quorum);
 
     // Execution mode (DESIGN.md §8): `Bsp` keeps every branch below
     // exactly as it was; `Gossip` swaps the comm point for push-sum
@@ -259,14 +327,29 @@ pub fn run(
         !(staleness_mode && !cfg.compression.is_always_identity()),
         "bounded-staleness folds raw models; combine it with the `identity` schedule"
     );
+    let recovery = cfg.recovery_active();
+    assert!(
+        !(gossip_mode && recovery),
+        "fault/recovery knobs are unsupported under gossip \
+         (peer rounds have no collective to retry or quorum-gate)"
+    );
+    assert!(
+        !((cfg.corrupting() || cfg.clip_norm > 0.0)
+            && (!cfg.compression.is_always_identity() || cfg.mode != ExecMode::Bsp)),
+        "update corruption / clip_norm support the dense BSP path with the \
+         identity compressor only (the defense screens raw rows against the \
+         server model)"
+    );
 
     // Partial participation bookkeeping (policies other than `All`): the
     // per-client last-synced snapshots a non-participant is rolled back
     // to, and the server-side model the trace evaluates. Under `All`
     // neither is touched and the loop below is the PR-1 code path.
     // Bounded staleness always keeps the synced/server state — its commit
-    // path is the generalized rollback.
-    let masked = staleness_mode || (!cfg.participation.is_all() && !gossip_mode);
+    // path is the generalized rollback. Active recovery knobs force the
+    // masked bookkeeping too: an abandoned or quorum-failed round rolls
+    // every replica back, which requires the synced snapshots.
+    let masked = staleness_mode || ((!cfg.participation.is_all() || recovery) && !gossip_mode);
     // Gradient compression (DESIGN.md §6): when any stage compresses, the
     // server model doubles as the shared reference each participant's
     // delta is taken against, and per-client error-feedback residuals
@@ -324,32 +407,161 @@ pub fn run(
     let keep_local_work = staleness_mode && cfg.staleness_bound > 0;
     let skip_inactive = masked && cfg.skip_inactive_compute && !keep_local_work;
     let mut active = vec![true; n];
+    // Defense-layer scratch: a copy of the round's participation mask the
+    // non-finite rejections strike clients out of (the engine's pricing
+    // record stays untouched — the collective already happened on the
+    // wire; the data-level mask is what the average and rollback consume).
+    let mut defense_mask = vec![false; n];
 
-    // Initial evaluation (iteration 0, before any work).
-    let loss0 = engine.full_loss(&anchor);
-    let acc0 = if cfg.eval_accuracy {
-        engine.full_accuracy(&anchor)
+    // Resume (DESIGN.md §12): restore the complete run state saved at a
+    // round boundary — model rows, RNG stream positions, controller
+    // state, EF residuals, engine clocks, the recorded trace so far —
+    // then continue from the saved (phase, step) position. A fresh run
+    // records the iteration-0 evaluation instead (a resumed one already
+    // holds it in its restored points).
+    let (pi0, step0) = if let Some(path) = &cfg.resume_from {
+        let mut restore = |path: &std::path::Path| -> anyhow::Result<(usize, u64)> {
+            let mut r = CkptReader::from_file(path)?;
+            r.expect_tag("run")?;
+            let pi = r.usize()?;
+            let step = r.u64()?;
+            anyhow::ensure!(
+                pi <= phases.len(),
+                "checkpoint resumes at phase {pi} but the schedule has {}",
+                phases.len()
+            );
+            t = r.u64()?;
+            rounds = r.u64()?;
+            examples_per_client = r.u64()?;
+            let flat = r.f32_vec()?;
+            anyhow::ensure!(
+                flat.len() == n * dim,
+                "checkpoint model block holds {} floats, expected {}",
+                flat.len(),
+                n * dim
+            );
+            for i in 0..n {
+                thetas.row_mut(i).copy_from_slice(&flat[i * dim..(i + 1) * dim]);
+            }
+            let a = r.f32_vec()?;
+            anyhow::ensure!(a.len() == dim, "checkpoint anchor dimension mismatch");
+            anchor.copy_from_slice(&a);
+            anyhow::ensure!(
+                r.bool()? == masked,
+                "checkpoint masked-bookkeeping flag differs — the resuming \
+                 config changed participation/mode/fault knobs"
+            );
+            if masked {
+                let sflat = r.f32_vec()?;
+                anyhow::ensure!(
+                    sflat.len() == n * dim,
+                    "checkpoint synced block size mismatch"
+                );
+                for i in 0..n {
+                    synced.row_mut(i).copy_from_slice(&sflat[i * dim..(i + 1) * dim]);
+                }
+            }
+            anyhow::ensure!(
+                r.bool()? == (masked || compressing),
+                "checkpoint server-model flag differs from the resuming config"
+            );
+            if masked || compressing {
+                let sv = r.f32_vec()?;
+                anyhow::ensure!(sv.len() == dim, "checkpoint server dimension mismatch");
+                server.copy_from_slice(&sv);
+            }
+            for s in samplers.iter_mut() {
+                let (st, spare) = r.rng()?;
+                s.set_rng_state(st, spare);
+            }
+            anyhow::ensure!(
+                r.bool()? == ef.is_some(),
+                "checkpoint compression state differs from the resuming config"
+            );
+            if let Some(ef) = ef.as_mut() {
+                ef.restore_state(&mut r)?;
+            }
+            anyhow::ensure!(
+                r.bool()? == gossip.is_some(),
+                "checkpoint gossip state differs from the resuming config"
+            );
+            if let Some(g) = gossip.as_mut() {
+                g.restore_state(&mut r)?;
+            }
+            anyhow::ensure!(
+                r.bool()? == stale.is_some(),
+                "checkpoint staleness state differs from the resuming config"
+            );
+            if let Some(s) = stale.as_mut() {
+                s.restore_state(&mut r)?;
+            }
+            controller.set_mult_state(r.f64()?);
+            simnet.restore_state(&mut r)?;
+            trace.poisoned_evals = r.u64()?;
+            let n_points = r.usize()?;
+            trace.points.clear();
+            for _ in 0..n_points {
+                trace.points.push(TracePoint {
+                    iter: r.u64()?,
+                    rounds: r.u64()?,
+                    epoch: r.f64()?,
+                    loss: r.f64()?,
+                    accuracy: r.f64()?,
+                    sim_seconds: r.f64()?,
+                    stage: r.usize()?,
+                    eta: r.f64()?,
+                    k: r.u64()?,
+                    realized_k: r.u64()?,
+                });
+            }
+            comm_stats.rounds = r.u64()?;
+            comm_stats.bytes_per_client = r.u64()?;
+            comm_stats.wire_bytes_per_client = r.u64()?;
+            comm_stats.sim_comm_seconds = r.f64()?;
+            comm_stats.partial_rounds = r.u64()?;
+            comm_stats.empty_rounds = r.u64()?;
+            comm_stats.participant_client_rounds = r.u64()?;
+            comm_stats.local_steps = r.u64()?;
+            clock.compute_seconds = r.f64()?;
+            clock.comm_seconds = r.f64()?;
+            r.finish()?;
+            Ok((pi, step))
+        };
+        restore(path).unwrap_or_else(|e| panic!("resume from {}: {e:#}", path.display()))
     } else {
-        f64::NAN
+        // Initial evaluation (iteration 0, before any work).
+        let loss0 = engine.full_loss(&anchor);
+        let acc0 = if cfg.eval_accuracy {
+            engine.full_accuracy(&anchor)
+        } else {
+            f64::NAN
+        };
+        trace.points.push(TracePoint {
+            iter: 0,
+            rounds: 0,
+            epoch: 0.0,
+            loss: loss0,
+            accuracy: acc0,
+            sim_seconds: 0.0,
+            stage: phases[0].stage,
+            eta: phases[0].lr.at(0),
+            k: phases[0].comm_period,
+            realized_k: 0,
+        });
+        (0usize, 0u64)
     };
-    trace.points.push(TracePoint {
-        iter: 0,
-        rounds: 0,
-        epoch: 0.0,
-        loss: loss0,
-        accuracy: acc0,
-        sim_seconds: 0.0,
-        stage: phases[0].stage,
-        eta: phases[0].lr.at(0),
-        k: phases[0].comm_period,
-        realized_k: 0,
-    });
 
     // Per-client minibatch index buffers, reused across every step.
     let mut batches: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
 
-    'outer: for phase in phases {
-        if phase.reset_anchor {
+    'outer: for pi in pi0..phases.len() {
+        let phase = &phases[pi];
+        // Resuming mid-phase: the anchor was restored from the checkpoint,
+        // so the phase-entry reset must not re-run. At a genuine phase
+        // start (step 0) it recomputes the identical anchor from the
+        // restored state and runs as usual.
+        let resuming_mid_phase = pi == pi0 && step0 > 0;
+        if phase.reset_anchor && !resuming_mid_phase {
             // Models are synced at phase boundaries; the stage anchor x_s is
             // the shared iterate (the server model when a participation
             // policy leaves some replicas unsynced). Gossip has no global
@@ -366,7 +578,8 @@ pub fn run(
         }
         let mut k = controller.period(phase).max(1);
         let mut steps_in_round: u64 = 0;
-        for step in 0..phase.steps {
+        let start_step = if pi == pi0 { step0 } else { 0 };
+        for step in start_step..phase.steps {
             if steps_in_round == 0 && skip_inactive {
                 // Round start: learn who sits this round out. The draw is
                 // cached inside the engine and consumed by the pricing
@@ -423,6 +636,23 @@ pub fn run(
                 } else {
                     let (rt, part) =
                         simnet.price_round_compressed(steps_in_round, phase.batch, k, comp);
+                    // Fault model (DESIGN.md §12): poison the committed
+                    // updates the engine drew corruption events for (the
+                    // drain is empty without a fault plan), then let the
+                    // defense layer screen the rows before any averaging.
+                    // Rejections strike clients out of the data-level
+                    // mask only — the wire-level pricing already charged
+                    // their (poisoned) transmission honestly.
+                    for c in simnet.take_corruptions() {
+                        apply_corruption(thetas.row_mut(c.client), &c);
+                    }
+                    let mask: &[bool] = if cfg.clip_norm > 0.0 {
+                        defense_mask.copy_from_slice(part.as_slice());
+                        comm::defend_arena(&mut thetas, &server, &mut defense_mask, cfg.clip_norm);
+                        &defense_mask
+                    } else {
+                        part.as_slice()
+                    };
                     if let Some(ef) = ef.as_mut() {
                         // Compressed collective: participants transmit their
                         // error-corrected delta against the server model and
@@ -438,16 +668,13 @@ pub fn run(
                             part.as_slice(),
                         );
                     } else if masked {
-                        if stale.as_ref().map_or(false, |s| s.any_stale(part.as_slice())) {
+                        if stale.as_ref().map_or(false, |s| s.any_stale(mask)) {
                             // A rearriving participant carries un-synced
                             // local work: fold it in with weight
                             // 1/(1+age)^p instead of the exact mean.
-                            stale
-                                .as_mut()
-                                .unwrap()
-                                .weighted_average(&mut thetas, part.as_slice());
+                            stale.as_mut().unwrap().weighted_average(&mut thetas, mask);
                         } else {
-                            comm::average_arena_masked(&mut thetas, cfg.collective, part.as_slice());
+                            comm::average_arena_masked(&mut thetas, cfg.collective, mask);
                         }
                     } else {
                         comm::average_arena(&mut thetas, cfg.collective);
@@ -457,28 +684,26 @@ pub fn run(
                             // Bounded staleness: absentees keep their local
                             // work while within the bound; only clients
                             // older than the bound are rolled back.
-                            mean_staleness = s.commit(
-                                &mut thetas,
-                                &mut synced,
-                                part.as_slice(),
-                                cfg.staleness_bound,
-                            );
+                            mean_staleness =
+                                s.commit(&mut thetas, &mut synced, mask, cfg.staleness_bound);
                         } else {
                             for i in 0..n {
-                                if part.participates(i) {
+                                if mask[i] {
                                     synced.row_mut(i).copy_from_slice(thetas.row(i));
                                 } else {
                                     // Algorithm-visible dropout: the round's local
                                     // work is lost; the client resumes from its
                                     // last-synced model (and, under compression,
-                                    // its frozen residual) when it rejoins.
+                                    // its frozen residual) when it rejoins. A
+                                    // defense-rejected client takes the same exit:
+                                    // its poisoned row is discarded here.
                                     thetas.row_mut(i).copy_from_slice(synced.row(i));
                                 }
                             }
                         }
                     }
                     if masked || compressing {
-                        if let Some(lead) = part.first() {
+                        if let Some(lead) = mask.iter().position(|&b| b) {
                             server.copy_from_slice(thetas.row(lead));
                         }
                     }
@@ -512,6 +737,18 @@ pub fn run(
                         thetas.row(0)
                     };
                     let loss = engine.full_loss(eval_model);
+                    if !loss.is_finite() {
+                        // NaN-safety (DESIGN.md §12): a non-finite loss
+                        // means a poisoned model reached evaluation —
+                        // corruption survived every defense. Report it
+                        // loudly and count it; silence here would let a
+                        // poisoned sweep read as a converged one.
+                        trace.poisoned_evals += 1;
+                        eprintln!(
+                            "WARNING: non-finite loss ({loss}) at iter {t}, round {rounds} — \
+                             model poisoned; see the trace's poisoned_evals counter"
+                        );
+                    }
                     let acc = if cfg.eval_accuracy {
                         engine.full_accuracy(eval_model)
                     } else {
@@ -539,6 +776,86 @@ pub fn run(
                             break 'outer;
                         }
                     }
+                }
+
+                // Bit-exact checkpoint at the round boundary (DESIGN.md
+                // §12): the complete cross-round state, written atomically
+                // so a kill mid-write leaves the previous one intact. The
+                // resume position is the next (phase, step) to execute,
+                // normalized to the next phase's start at a boundary.
+                if let Some(path) = &cfg.checkpoint_path {
+                    let mut w = CkptWriter::new();
+                    w.tag("run");
+                    if step + 1 == phase.steps {
+                        w.usize(pi + 1);
+                        w.u64(0);
+                    } else {
+                        w.usize(pi);
+                        w.u64(step + 1);
+                    }
+                    w.u64(t);
+                    w.u64(rounds);
+                    w.u64(examples_per_client);
+                    w.f32_slice(thetas.data());
+                    w.f32_slice(&anchor);
+                    w.bool(masked);
+                    if masked {
+                        w.f32_slice(synced.data());
+                    }
+                    w.bool(masked || compressing);
+                    if masked || compressing {
+                        w.f32_slice(&server);
+                    }
+                    for s in &samplers {
+                        w.rng(s.rng_state());
+                    }
+                    w.bool(ef.is_some());
+                    if let Some(ef) = ef.as_ref() {
+                        ef.save_state(&mut w);
+                    }
+                    w.bool(gossip.is_some());
+                    if let Some(g) = gossip.as_ref() {
+                        g.save_state(&mut w);
+                    }
+                    w.bool(stale.is_some());
+                    if let Some(s) = stale.as_ref() {
+                        s.save_state(&mut w);
+                    }
+                    w.f64(controller.mult_state());
+                    simnet.save_state(&mut w);
+                    w.u64(trace.poisoned_evals);
+                    w.usize(trace.points.len());
+                    for p in &trace.points {
+                        w.u64(p.iter);
+                        w.u64(p.rounds);
+                        w.f64(p.epoch);
+                        w.f64(p.loss);
+                        w.f64(p.accuracy);
+                        w.f64(p.sim_seconds);
+                        w.usize(p.stage);
+                        w.f64(p.eta);
+                        w.u64(p.k);
+                        w.u64(p.realized_k);
+                    }
+                    w.u64(comm_stats.rounds);
+                    w.u64(comm_stats.bytes_per_client);
+                    w.u64(comm_stats.wire_bytes_per_client);
+                    w.f64(comm_stats.sim_comm_seconds);
+                    w.u64(comm_stats.partial_rounds);
+                    w.u64(comm_stats.empty_rounds);
+                    w.u64(comm_stats.participant_client_rounds);
+                    w.u64(comm_stats.local_steps);
+                    w.f64(clock.compute_seconds);
+                    w.f64(clock.comm_seconds);
+                    w.to_file(path).unwrap_or_else(|e| {
+                        panic!("checkpoint write {}: {e:#}", path.display())
+                    });
+                }
+                if cfg.kill_at_round == Some(rounds) {
+                    // Chaos hook: die right after this round's checkpoint,
+                    // returning the truncated trace (the resume test
+                    // restarts from the file just written).
+                    break 'outer;
                 }
             }
         }

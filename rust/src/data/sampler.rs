@@ -63,6 +63,18 @@ impl MinibatchSampler {
     pub fn shard_len(&self) -> usize {
         self.shard.len()
     }
+
+    /// The stream position for a checkpoint (DESIGN.md §12) — resuming
+    /// from it continues the draw sequence exactly where it stopped,
+    /// which is cheaper than replaying `skip` over the whole prefix.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore the position saved by [`Self::rng_state`].
+    pub fn set_rng_state(&mut self, s: [u64; 4], gauss_spare: Option<f64>) {
+        self.rng = Rng::from_state(s, gauss_spare);
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +141,18 @@ mod tests {
             lazy.skip(16);
         }
         assert_eq!(lazy.sample(16), expected);
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_the_stream() {
+        let root = Rng::new(6);
+        let mut a = MinibatchSampler::new(shard(50), &root, 2);
+        let _ = a.sample(16);
+        let (s, spare) = a.rng_state();
+        let expected = a.sample(16);
+        let mut b = MinibatchSampler::new(shard(50), &root, 2);
+        b.set_rng_state(s, spare);
+        assert_eq!(b.sample(16), expected);
     }
 
     #[test]

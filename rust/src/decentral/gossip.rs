@@ -60,6 +60,29 @@ impl GossipEngine {
         }
     }
 
+    /// Serialize the push-sum weights for a checkpoint (DESIGN.md §12):
+    /// `ps` is the engine's only cross-round state — `acc` and `ps_next`
+    /// are zeroed at every [`Self::mix`] entry and swapped out at exit.
+    pub fn save_state(&self, w: &mut crate::util::ckpt::CkptWriter) {
+        w.tag("gossip");
+        w.u64_slice(&self.ps);
+    }
+
+    /// Inverse of [`Self::save_state`]; the engine must have been built
+    /// for the same fleet size.
+    pub fn restore_state(&mut self, r: &mut crate::util::ckpt::CkptReader) -> anyhow::Result<()> {
+        r.expect_tag("gossip")?;
+        let ps = r.u64_vec()?;
+        anyhow::ensure!(
+            ps.len() == self.n,
+            "checkpoint gossip weights cover {} clients != configured {}",
+            ps.len(),
+            self.n
+        );
+        self.ps = ps;
+        Ok(())
+    }
+
     /// One push-sum exchange: every client pushes `1/(m+1)` of its
     /// (numerator, weight) pair to each of its `outs[i]` out-neighbors
     /// and keeps the remainder. Rows are updated in place; clients with

@@ -120,6 +120,20 @@ impl StalenessFold {
             tau_sum / participants as f64
         }
     }
+
+    /// Serialize the fold's only cross-round state — the age map — for a
+    /// checkpoint (DESIGN.md §12). `acc`/`mean` are per-call scratch,
+    /// fully rewritten before each read, so they carry nothing.
+    pub fn save_state(&self, w: &mut crate::util::ckpt::CkptWriter) {
+        w.tag("stale");
+        self.age.save_state(w);
+    }
+
+    /// Inverse of [`Self::save_state`].
+    pub fn restore_state(&mut self, r: &mut crate::util::ckpt::CkptReader) -> anyhow::Result<()> {
+        r.expect_tag("stale")?;
+        self.age.restore_state(r)
+    }
 }
 
 #[cfg(test)]

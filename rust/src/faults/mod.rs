@@ -1,0 +1,358 @@
+//! Deterministic fault injection: what can go wrong, how often, and how
+//! the round loop recovers.
+//!
+//! The simnet already models *timing* faults — stragglers time out,
+//! absentees roll back or fold in stale — but until this module nothing
+//! in the stack modeled *recovery*: a failed collective was never
+//! retried, a corrupted update was averaged straight into the server
+//! model, and a killed run restarted from scratch. STL-SGD's growing
+//! communication periods raise the stakes: each sync round carries more
+//! local work, so a lost or poisoned round is increasingly expensive.
+//!
+//! This module is the declarative half of the story (DESIGN.md §12):
+//!
+//! * [`FaultPlan`] — the seeded injection schedule: client crash after
+//!   compute but before comm, update corruption ([`CorruptKind`]),
+//!   rack-level network partitions lasting K rounds, and leader failure
+//!   under the `hier` fabric. All probabilities are drawn from dedicated
+//!   registered streams (`rng::streams::SIMNET_FAULT_*`), so injection
+//!   is bit-reproducible and never perturbs timing/sampling draws.
+//! * [`RetryPolicy`] + a quorum fraction — the recovery side: a failed
+//!   attempt is re-priced through the `LinkFabric` with exponential
+//!   backoff, and a round commits only when enough participants arrive,
+//!   else it is abandoned and honestly accounted (`retries`,
+//!   `abandoned`, `corrupt_dropped` timeline columns).
+//! * [`Corruption`] / [`apply_corruption`] — the arithmetic side: which
+//!   client's update is poisoned, how, and at which coordinate. The
+//!   pricing engines *draw* corruptions; the coordinator *applies* them
+//!   to arena rows ahead of the defensive-aggregation layer in
+//!   `comm::defense`.
+//!
+//! The neutral spelling (`faults = none`, `retry = none`, `quorum = 0`)
+//! keeps the legacy single-shot pricing path verbatim — pinned bitwise
+//! by tests/test_faults.rs.
+
+use anyhow::{bail, ensure, Result};
+
+/// Seeded fault-injection schedule: per-round probabilities for each
+/// fault class. The all-zero plan is the neutral spelling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Per-client probability of crashing after compute, before comm —
+    /// drawn per barrier survivor per attempt.
+    pub crash: f64,
+    /// Per-participant probability its committed update is corrupted
+    /// (kind drawn uniformly from [`CorruptKind`]).
+    pub corrupt: f64,
+    /// Per-rack per-round probability a healthy rack partitions away.
+    pub partition: f64,
+    /// How many rounds a partition holds once it fires (≥ 1 when
+    /// `partition > 0`).
+    pub partition_rounds: u64,
+    /// Per-attempt probability the rack-leader tier fails (only
+    /// meaningful under the `hier` fabric; inert elsewhere).
+    pub leader: f64,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec: `none` (or empty) means no plan; otherwise a
+    /// comma-separated list of `crash=P`, `corrupt=P`, `partition=PxK`,
+    /// `leader=P` items. Example: `crash=0.05,partition=0.02x3`.
+    pub fn parse(s: &str) -> Result<Option<FaultPlan>> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(None);
+        }
+        let mut plan = FaultPlan {
+            crash: 0.0,
+            corrupt: 0.0,
+            partition: 0.0,
+            partition_rounds: 1,
+            leader: 0.0,
+        };
+        let prob = |name: &str, v: &str| -> Result<f64> {
+            let p: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("faults item '{name}': expected a probability, got \"{v}\"")
+            })?;
+            ensure!(
+                (0.0..=1.0).contains(&p),
+                "faults item '{name}': probability {p} outside [0, 1]"
+            );
+            Ok(p)
+        };
+        for item in s.split(',') {
+            let item = item.trim();
+            let Some((key, val)) = item.split_once('=') else {
+                bail!("faults item '{item}': expected key=value");
+            };
+            match key {
+                "crash" => plan.crash = prob("crash", val)?,
+                "corrupt" => plan.corrupt = prob("corrupt", val)?,
+                "leader" => plan.leader = prob("leader", val)?,
+                "partition" => {
+                    // `P` alone (1-round partitions) or `PxK`.
+                    let (p, k) = match val.split_once('x') {
+                        Some((p, k)) => {
+                            let rounds: u64 = k.parse().map_err(|_| {
+                                anyhow::anyhow!(
+                                    "faults item 'partition': expected PxK with integer K, \
+                                     got \"{val}\""
+                                )
+                            })?;
+                            (prob("partition", p)?, rounds)
+                        }
+                        None => (prob("partition", val)?, 1),
+                    };
+                    ensure!(
+                        k >= 1 || p == 0.0,
+                        "faults item 'partition': duration must be >= 1 round, got {k}"
+                    );
+                    plan.partition = p;
+                    plan.partition_rounds = k.max(1);
+                }
+                _ => bail!(
+                    "faults item '{key}': unknown fault class \
+                     (expected crash | corrupt | partition | leader)"
+                ),
+            }
+        }
+        if plan.is_neutral() {
+            return Ok(None);
+        }
+        Ok(Some(plan))
+    }
+
+    /// Stable textual form (run headers, sweep logs).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.crash > 0.0 {
+            parts.push(format!("crash={}", self.crash));
+        }
+        if self.corrupt > 0.0 {
+            parts.push(format!("corrupt={}", self.corrupt));
+        }
+        if self.partition > 0.0 {
+            parts.push(format!("partition={}x{}", self.partition, self.partition_rounds));
+        }
+        if self.leader > 0.0 {
+            parts.push(format!("leader={}", self.leader));
+        }
+        if parts.is_empty() {
+            "none".into()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// True when every probability is zero — the plan injects nothing.
+    pub fn is_neutral(&self) -> bool {
+        self.crash == 0.0 && self.corrupt == 0.0 && self.partition == 0.0 && self.leader == 0.0
+    }
+}
+
+/// How a failed collective attempt is handled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RetryPolicy {
+    /// Single-shot: a failed round is abandoned immediately (the legacy
+    /// behavior, and the neutral spelling).
+    #[default]
+    None,
+    /// Re-run the collective up to `max` extra attempts, each priced
+    /// through the fabric with exponential backoff.
+    Retry { max: u32 },
+}
+
+impl RetryPolicy {
+    /// Parse `none` | `retry` (3 attempts) | `retry:MAX`.
+    pub fn parse(s: &str) -> Result<RetryPolicy> {
+        let s = s.trim();
+        match s {
+            "none" | "" => Ok(RetryPolicy::None),
+            "retry" => Ok(RetryPolicy::Retry { max: 3 }),
+            _ => {
+                let Some(rest) = s.strip_prefix("retry:") else {
+                    bail!("key 'retry': expected none | retry | retry:MAX, got \"{s}\"");
+                };
+                let max: u32 = rest.parse().map_err(|_| {
+                    anyhow::anyhow!("key 'retry': expected an integer MAX, got \"{rest}\"")
+                })?;
+                ensure!(max >= 1, "key 'retry': MAX must be >= 1, got {max}");
+                Ok(RetryPolicy::Retry { max })
+            }
+        }
+    }
+
+    /// Stable textual form; [`Self::parse`] round-trips it.
+    pub fn label(&self) -> String {
+        match self {
+            RetryPolicy::None => "none".into(),
+            RetryPolicy::Retry { max } => format!("retry:{max}"),
+        }
+    }
+
+    /// Extra attempts allowed beyond the first.
+    pub fn max_retries(&self) -> u32 {
+        match *self {
+            RetryPolicy::None => 0,
+            RetryPolicy::Retry { max } => max,
+        }
+    }
+}
+
+/// The ways an update can be poisoned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorruptKind {
+    /// One coordinate becomes NaN (rejected by the defense layer).
+    Nan,
+    /// One coordinate becomes +Inf (rejected by the defense layer).
+    Inf,
+    /// One mantissa bit flips — stays finite, so only norm clipping can
+    /// bound its damage.
+    BitFlip,
+    /// One coordinate is scaled by 1e8 — the norm-clipping target.
+    NormBlowup,
+}
+
+impl CorruptKind {
+    /// Uniform-draw decoding: the pricing engines draw `below(4)` and map
+    /// it through this, so the kind distribution is part of the stream
+    /// contract.
+    pub fn from_index(i: usize) -> CorruptKind {
+        match i {
+            0 => CorruptKind::Nan,
+            1 => CorruptKind::Inf,
+            2 => CorruptKind::BitFlip,
+            _ => CorruptKind::NormBlowup,
+        }
+    }
+
+    /// True for the kinds the defense layer detects by non-finiteness.
+    pub fn is_non_finite(&self) -> bool {
+        matches!(self, CorruptKind::Nan | CorruptKind::Inf)
+    }
+}
+
+/// One drawn corruption event: which client, what kind, which coordinate.
+/// Drawn by the pricing engines, applied by the coordinator via
+/// [`apply_corruption`] after local steps and before aggregation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Corruption {
+    pub client: usize,
+    pub kind: CorruptKind,
+    pub coord: usize,
+}
+
+/// Poison one model row in place according to the drawn event.
+pub fn apply_corruption(row: &mut [f32], c: &Corruption) {
+    if row.is_empty() {
+        return;
+    }
+    let j = c.coord.min(row.len() - 1);
+    match c.kind {
+        CorruptKind::Nan => row[j] = f32::NAN,
+        CorruptKind::Inf => row[j] = f32::INFINITY,
+        CorruptKind::BitFlip => row[j] = f32::from_bits(row[j].to_bits() ^ (1 << 22)),
+        CorruptKind::NormBlowup => row[j] *= 1e8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_neutral_spellings() {
+        assert_eq!(FaultPlan::parse("none").unwrap(), None);
+        assert_eq!(FaultPlan::parse("").unwrap(), None);
+        assert_eq!(FaultPlan::parse("crash=0").unwrap(), None, "all-zero plan is neutral");
+    }
+
+    #[test]
+    fn parse_full_plan_roundtrips() {
+        let p = FaultPlan::parse("crash=0.05,corrupt=0.1,partition=0.02x3,leader=0.01")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.crash, 0.05);
+        assert_eq!(p.corrupt, 0.1);
+        assert_eq!(p.partition, 0.02);
+        assert_eq!(p.partition_rounds, 3);
+        assert_eq!(p.leader, 0.01);
+        assert_eq!(FaultPlan::parse(&p.label()).unwrap().unwrap(), p);
+    }
+
+    #[test]
+    fn parse_partition_without_duration_defaults_to_one_round() {
+        let p = FaultPlan::parse("partition=0.5").unwrap().unwrap();
+        assert_eq!(p.partition, 0.5);
+        assert_eq!(p.partition_rounds, 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_with_named_errors() {
+        let e = FaultPlan::parse("crash=x").unwrap_err().to_string();
+        assert!(e.contains("crash"), "{e}");
+        let e = FaultPlan::parse("crash=1.5").unwrap_err().to_string();
+        assert!(e.contains("outside [0, 1]"), "{e}");
+        let e = FaultPlan::parse("crash").unwrap_err().to_string();
+        assert!(e.contains("key=value"), "{e}");
+        let e = FaultPlan::parse("meteor=0.1").unwrap_err().to_string();
+        assert!(e.contains("unknown fault class"), "{e}");
+        let e = FaultPlan::parse("partition=0.1xzz").unwrap_err().to_string();
+        assert!(e.contains("PxK"), "{e}");
+    }
+
+    #[test]
+    fn retry_policy_parse_and_label() {
+        assert_eq!(RetryPolicy::parse("none").unwrap(), RetryPolicy::None);
+        assert_eq!(RetryPolicy::parse("retry").unwrap(), RetryPolicy::Retry { max: 3 });
+        assert_eq!(RetryPolicy::parse("retry:7").unwrap(), RetryPolicy::Retry { max: 7 });
+        assert_eq!(RetryPolicy::Retry { max: 7 }.label(), "retry:7");
+        assert_eq!(RetryPolicy::parse("retry:7").unwrap().max_retries(), 7);
+        assert_eq!(RetryPolicy::None.max_retries(), 0);
+        assert!(RetryPolicy::parse("retry:0").is_err());
+        let e = RetryPolicy::parse("sometimes").unwrap_err().to_string();
+        assert!(e.contains("'retry'"), "{e}");
+    }
+
+    #[test]
+    fn corrupt_kinds_cover_the_draw_range() {
+        assert_eq!(CorruptKind::from_index(0), CorruptKind::Nan);
+        assert_eq!(CorruptKind::from_index(1), CorruptKind::Inf);
+        assert_eq!(CorruptKind::from_index(2), CorruptKind::BitFlip);
+        assert_eq!(CorruptKind::from_index(3), CorruptKind::NormBlowup);
+        assert!(CorruptKind::Nan.is_non_finite());
+        assert!(CorruptKind::Inf.is_non_finite());
+        assert!(!CorruptKind::BitFlip.is_non_finite());
+        assert!(!CorruptKind::NormBlowup.is_non_finite());
+    }
+
+    #[test]
+    fn apply_corruption_each_kind() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        apply_corruption(&mut row, &Corruption { client: 0, kind: CorruptKind::Nan, coord: 1 });
+        assert!(row[1].is_nan());
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        apply_corruption(&mut row, &Corruption { client: 0, kind: CorruptKind::Inf, coord: 0 });
+        assert!(row[0].is_infinite());
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        apply_corruption(
+            &mut row,
+            &Corruption { client: 0, kind: CorruptKind::BitFlip, coord: 2 },
+        );
+        assert!(row[2].is_finite());
+        assert_ne!(row[2], 3.0);
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        apply_corruption(
+            &mut row,
+            &Corruption { client: 0, kind: CorruptKind::NormBlowup, coord: 1 },
+        );
+        assert_eq!(row[1], 2.0e8);
+        // Out-of-range coordinate clamps instead of panicking.
+        let mut row = vec![1.0f32];
+        apply_corruption(
+            &mut row,
+            &Corruption { client: 0, kind: CorruptKind::Nan, coord: 99 },
+        );
+        assert!(row[0].is_nan());
+    }
+}

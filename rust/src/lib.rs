@@ -34,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod decentral;
+pub mod faults;
 pub mod grad;
 pub mod linalg;
 pub mod rng;

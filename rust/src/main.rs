@@ -115,6 +115,36 @@ fn main() -> anyhow::Result<()> {
         "",
         "cohort mode: client-store budget in live entries (0 = unbounded, lossless)",
     )
+    .opt(
+        "faults",
+        "",
+        "deterministic fault-injection plan: none, or comma-separated crash=P (per-client per-attempt crash probability), corrupt=P (per-participant update corruption; BSP dense identity only), partition=PxK (per-rack partition for K rounds), leader=P (rack-leader failure, hier fabric only)",
+    )
+    .opt(
+        "retry",
+        "",
+        "failed-barrier handling: none (abandon the round) | retry (up to 3 attempts) | retry:N (exponential backoff between attempts)",
+    )
+    .opt(
+        "quorum",
+        "",
+        "minimum fraction of the fleet a round must commit with, in [0, 1]; below-quorum rounds are abandoned and rolled back (0 disables)",
+    )
+    .opt(
+        "clip-norm",
+        "",
+        "defensive update clipping: reject non-finite participant deltas and scale those above this L2 norm (0 disables; BSP + identity compression only)",
+    )
+    .opt(
+        "checkpoint",
+        "",
+        "write a bit-exact resumable checkpoint to this file at every round boundary (atomic rewrite)",
+    )
+    .opt(
+        "resume",
+        "",
+        "resume a run from a checkpoint file written by --checkpoint (the continuation is bit-identical to the uninterrupted run)",
+    )
     .opt("out", "", "write trace CSV to this path")
     .opt("out-json", "", "write trace JSON to this path")
     .opt("out-timeline", "", "write per-round timing breakdown CSV to this path")
@@ -170,11 +200,22 @@ fn main() -> anyhow::Result<()> {
         ("chunk-rows", "chunk_rows"),
         ("timeline", "timeline"),
         ("cohort-budget", "cohort_budget"),
+        ("faults", "faults"),
+        ("retry", "retry"),
+        ("quorum", "quorum"),
+        ("clip-norm", "clip_norm"),
+        ("checkpoint", "checkpoint"),
     ] {
         let v = args.get(flag);
         if !v.is_empty() {
             cfg.apply_override(key, v)?;
         }
+    }
+    if !args.get("resume").is_empty() {
+        // One-shot invocation knob, set directly rather than through the
+        // config-key machinery: a resume path in a preset would silently
+        // re-resume every run launched from it.
+        cfg.resume = Some(args.get("resume").to_string());
     }
     if args.get_flag("cohort") {
         cfg.apply_override("cohort", "true")?;
@@ -217,6 +258,21 @@ fn main() -> anyhow::Result<()> {
         },
         cfg.seed,
     );
+    if cfg.faults.is_some() || cfg.quorum > 0.0 || cfg.retry != stl_sgd::faults::RetryPolicy::None {
+        eprintln!(
+            "faults={} retry={} quorum={} clip_norm={}",
+            cfg.faults.as_ref().map_or("none".into(), |f| f.label()),
+            cfg.retry.label(),
+            cfg.quorum,
+            cfg.clip_norm,
+        );
+    }
+    if let Some(ckpt) = &cfg.checkpoint {
+        eprintln!("checkpoint={ckpt}");
+    }
+    if let Some(res) = &cfg.resume {
+        eprintln!("resume={res}");
+    }
 
     if !args.get("out-timeline").is_empty() && cfg.timeline_detail == stl_sgd::simnet::Detail::Off {
         eprintln!("warning: --out-timeline requested with --timeline off; the CSV will be empty");
@@ -263,6 +319,15 @@ fn main() -> anyhow::Result<()> {
         trace.timeline.total_joined(),
         trace.timeline.total_left(),
     );
+    if cfg.faults.is_some() || cfg.quorum > 0.0 || cfg.retry != stl_sgd::faults::RetryPolicy::None {
+        println!(
+            "recovery: retries={} abandoned_rounds={} corrupt_dropped={} poisoned_evals={}",
+            trace.timeline.total_retries(),
+            trace.timeline.total_abandoned(),
+            trace.timeline.total_corrupt_dropped(),
+            trace.poisoned_evals,
+        );
+    }
     if cfg.workload.is_convex() {
         let f_star = workloads::compute_f_star(cfg.workload, cfg.seed, 2000);
         println!(

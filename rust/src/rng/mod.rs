@@ -47,6 +47,18 @@ impl Rng {
         }
     }
 
+    /// Snapshot the full generator state — the xoshiro words plus the
+    /// cached Box-Muller spare — for checkpointing. `from_state` restores
+    /// a generator that continues the stream bitwise from this point.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from a [`Self::state`] snapshot.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Self { s, gauss_spare }
+    }
+
     /// Derive an independent stream for `label` (e.g. a client id).
     ///
     /// Uses a fresh SplitMix chain keyed by (state, label) so streams for
@@ -241,6 +253,22 @@ mod tests {
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream_bitwise() {
+        let mut r = Rng::new(99);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        r.normal(); // leaves a gauss_spare cached
+        let (s, spare) = r.state();
+        assert!(spare.is_some(), "Box-Muller must have parked its pair");
+        let mut restored = Rng::from_state(s, spare);
+        for _ in 0..64 {
+            assert_eq!(restored.next_u64(), r.next_u64());
+        }
+        assert_eq!(restored.normal().to_bits(), r.normal().to_bits());
     }
 
     #[test]

@@ -172,6 +172,25 @@ pub const SIMNET_SAMPLING: StreamDecl = StreamDecl::solo("simnet", "SIMNET_SAMPL
 /// Gossip-mode edge-draw stream (random-regular wiring, per-edge faults).
 pub const SIMNET_GOSSIP: StreamDecl = StreamDecl::solo("simnet", "SIMNET_GOSSIP", 1 << 42);
 
+/// Fault-plan crash draws: one uniform per barrier survivor per attempt
+/// (`simnet` recovery loop, DESIGN.md §12).
+pub const SIMNET_FAULT_CRASH: StreamDecl =
+    StreamDecl::solo("simnet", "SIMNET_FAULT_CRASH", 1 << 43);
+
+/// Fault-plan corruption draws: one uniform per committed participant,
+/// plus kind/coordinate draws when it fires.
+pub const SIMNET_FAULT_CORRUPT: StreamDecl =
+    StreamDecl::solo("simnet", "SIMNET_FAULT_CORRUPT", (1 << 43) + 1);
+
+/// Fault-plan rack-partition draws: one uniform per healthy rack per round.
+pub const SIMNET_FAULT_PARTITION: StreamDecl =
+    StreamDecl::solo("simnet", "SIMNET_FAULT_PARTITION", (1 << 43) + 2);
+
+/// Fault-plan leader-failure draws: one uniform per attempt under the
+/// hierarchical fabric.
+pub const SIMNET_FAULT_LEADER: StreamDecl =
+    StreamDecl::solo("simnet", "SIMNET_FAULT_LEADER", (1 << 43) + 3);
+
 // ---- run namespace (root = Rng::new(cfg.seed)) -------------------------
 
 /// Per-client minibatch-sampler streams (`data/sampler.rs`); the XOR
@@ -192,6 +211,10 @@ pub const REGISTRY: &[&StreamDecl] = &[
     &SIMNET_CHURN,
     &SIMNET_SAMPLING,
     &SIMNET_GOSSIP,
+    &SIMNET_FAULT_CRASH,
+    &SIMNET_FAULT_CORRUPT,
+    &SIMNET_FAULT_PARTITION,
+    &SIMNET_FAULT_LEADER,
     &RUN_SAMPLER,
     &EF_CLIENT,
 ];
@@ -279,6 +302,10 @@ mod tests {
         assert_eq!(SIMNET_LINK.solo_label(), 0);
         assert_eq!(SIMNET_SAMPLING.solo_label(), 1 << 41);
         assert_eq!(SIMNET_GOSSIP.solo_label(), 1 << 42);
+        assert_eq!(SIMNET_FAULT_CRASH.solo_label(), 1 << 43);
+        assert_eq!(SIMNET_FAULT_CORRUPT.solo_label(), (1 << 43) + 1);
+        assert_eq!(SIMNET_FAULT_PARTITION.solo_label(), (1 << 43) + 2);
+        assert_eq!(SIMNET_FAULT_LEADER.solo_label(), (1 << 43) + 3);
         assert_eq!(SIMNET_ROOT_SALT, 0x51D_CAFE);
         assert_eq!(EF_ROOT_SALT, 0xC0_4B1D);
     }

@@ -30,8 +30,10 @@ use super::participation::{Participation, ParticipationPolicy};
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline, TimelineEvent};
 use crate::comm::{compress::CompressorSpec, Algorithm};
+use crate::faults::{Corruption, CorruptKind, FaultPlan, RetryPolicy};
 use crate::rng::{streams, Rng};
 use crate::sim::{ComputeModel, NetworkModel};
+use crate::util::ckpt::{CkptReader, CkptWriter};
 
 struct Client {
     rng: Rng,
@@ -98,6 +100,28 @@ pub struct SimNet {
     ov_state: fabric::OverlapState,
     /// How the per-round participation mask is derived.
     policy: ParticipationPolicy,
+    /// Fault-injection schedule (`None` = the legacy single-shot path,
+    /// bit-for-bit).
+    faults: Option<FaultPlan>,
+    /// How failed collective attempts are retried.
+    retry: RetryPolicy,
+    /// Fraction of the fleet that must commit for a round to succeed
+    /// (0.0 = any attempt commits, the legacy behavior).
+    quorum: f64,
+    /// Dedicated fault streams (DESIGN.md §12). Split unconditionally at
+    /// construction — `split` is stateless in the parent, so their
+    /// existence cannot perturb any legacy draw — and consumed only when
+    /// the recovery path is active.
+    fault_crash_rng: Rng,
+    fault_corrupt_rng: Rng,
+    fault_partition_rng: Rng,
+    fault_leader_rng: Rng,
+    /// Remaining partition rounds per rack (lazily sized; all-zero =
+    /// fully connected).
+    partition_left: Vec<u64>,
+    /// Corruption events drawn for the round just priced, consumed by the
+    /// coordinator via [`Self::take_corruptions`].
+    corruptions: Vec<Corruption>,
     /// Round-start membership draw waiting to be consumed by the next
     /// pricing call (see [`Self::begin_round`]).
     pending: Option<PendingRound>,
@@ -157,6 +181,15 @@ impl SimNet {
             chunk_rows: 0,
             ov_state: fabric::OverlapState::default(),
             policy: ParticipationPolicy::All,
+            faults: None,
+            retry: RetryPolicy::None,
+            quorum: 0.0,
+            fault_crash_rng: root.split(streams::SIMNET_FAULT_CRASH.solo_label()),
+            fault_corrupt_rng: root.split(streams::SIMNET_FAULT_CORRUPT.solo_label()),
+            fault_partition_rng: root.split(streams::SIMNET_FAULT_PARTITION.solo_label()),
+            fault_leader_rng: root.split(streams::SIMNET_FAULT_LEADER.solo_label()),
+            partition_left: Vec::new(),
+            corruptions: Vec::new(),
             pending: None,
             now: 0.0,
             round: 0,
@@ -182,6 +215,36 @@ impl SimNet {
         self.overlap = overlap;
         self.chunk_rows = chunk_rows;
         self
+    }
+
+    /// Arm the fault/recovery path: an injection plan, a retry policy,
+    /// and a commit quorum. The neutral arguments (`None`,
+    /// [`RetryPolicy::None`], `0.0`) keep the legacy single-shot pricing
+    /// path verbatim — the recovery loop is not even entered.
+    pub fn with_faults(
+        mut self,
+        faults: Option<FaultPlan>,
+        retry: RetryPolicy,
+        quorum: f64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&quorum), "quorum must be in [0, 1], got {quorum}");
+        self.faults = faults;
+        self.retry = retry;
+        self.quorum = quorum;
+        self
+    }
+
+    /// True when any recovery knob is armed — the engine then routes
+    /// every BSP round through the attempt loop and emits explicit
+    /// participation masks.
+    pub fn recovery_active(&self) -> bool {
+        self.faults.is_some() || self.quorum > 0.0 || self.retry != RetryPolicy::None
+    }
+
+    /// Drain the corruption events drawn by the last priced round (the
+    /// coordinator applies them to model rows before aggregation).
+    pub fn take_corruptions(&mut self) -> Vec<Corruption> {
+        std::mem::take(&mut self.corruptions)
     }
 
     pub fn fabric(&self) -> LinkFabric {
@@ -540,6 +603,17 @@ impl SimNet {
         }
         let mean_wait = wait_sum / n_active.max(1) as f64;
 
+        // Recovery path (faults / retry / quorum armed): the round's
+        // collective runs through the attempt loop instead of the
+        // single-shot pricing below. The neutral spelling never reaches
+        // this branch, keeping the legacy path verbatim.
+        if self.recovery_active() {
+            return self.price_recovery_attempts(
+                steps, period, start, exit, dropped, max_wait, mean_wait, joined, left, &active,
+                &completion, comp,
+            );
+        }
+
         // The algorithm-visible mask: under `All` the full fleet (the
         // legacy invariant — the average always covers every replica);
         // otherwise the active clients that made the barrier in time.
@@ -619,6 +693,212 @@ impl SimNet {
             compression_ratio: comp.payload_ratio(self.dim),
             overlap_seconds: hidden,
             critical_path_tier: tier,
+            retries: 0,
+            abandoned: 0,
+            corrupt_dropped: 0,
+        };
+        if self.detail != Detail::Off {
+            self.timeline.rounds.push(stat);
+        }
+        self.now = stat.end();
+        self.round += 1;
+        (stat, participation)
+    }
+
+    /// The attempt loop behind [`Self::price_round_compressed`] when any
+    /// recovery knob is armed (DESIGN.md §12). Per attempt: barrier
+    /// survivors draw crash faults, partitioned racks are cut, the
+    /// surviving set is priced through the fabric, and the attempt
+    /// succeeds when no leader fault fired and the quorum is met. Failed
+    /// attempts re-price with exponential backoff (the WAN alpha under a
+    /// tiered fabric); an exhausted round is abandoned — empty
+    /// participation, honestly accounted in the `retries` / `abandoned`
+    /// columns.
+    #[allow(clippy::too_many_arguments)]
+    fn price_recovery_attempts(
+        &mut self,
+        steps: u64,
+        period: u64,
+        start: f64,
+        exit: f64,
+        dropped: u32,
+        max_wait: f64,
+        mean_wait: f64,
+        joined: u32,
+        left: u32,
+        active: &[bool],
+        completion: &[f64],
+        comp: CompressorSpec,
+    ) -> (RoundStat, Participation) {
+        let n = self.clients.len();
+        let profile = self.profile;
+        let plan = self.faults.unwrap_or(FaultPlan {
+            crash: 0.0,
+            corrupt: 0.0,
+            partition: 0.0,
+            partition_rounds: 1,
+            leader: 0.0,
+        });
+        let quorum_need = (self.quorum * n as f64).ceil() as usize;
+        let max_attempts = 1 + self.retry.max_retries() as u64;
+        let rack_size = self.fabric.matrix().map_or(8, |m| m.rack_size);
+        let racks = n.div_ceil(rack_size).max(1);
+        if self.partition_left.len() < racks {
+            self.partition_left.resize(racks, 0);
+        }
+        // Partitions are drawn once per round (they model the network,
+        // not the collective), before the attempt loop: each healthy rack
+        // draws one uniform; a hit cuts the rack off for the plan's
+        // duration.
+        for r in 0..racks {
+            if self.partition_left[r] == 0
+                && plan.partition > 0.0
+                && self.fault_partition_rng.uniform() < plan.partition
+            {
+                self.partition_left[r] = plan.partition_rounds;
+            }
+        }
+        // A retry waits out at least one round-trip latency of the
+        // fabric's slowest tier, doubling per attempt.
+        let backoff_alpha = match self.fabric {
+            LinkFabric::Tiered { matrix, .. } => matrix.wan.alpha,
+            LinkFabric::Uniform => self.net.alpha,
+        };
+        let payload_wire = comp.payload_bytes(self.dim);
+        let payload_down = self.down.unwrap_or(comp).payload_bytes(self.dim);
+
+        let mut total_comm = 0.0f64;
+        let mut bytes_wire_total = 0u64;
+        let mut bytes_down_total = 0u64;
+        let mut tier_last = 0u32;
+        let mut committed: Vec<usize> = Vec::new();
+        let mut attempts = 0u64;
+        let mut success = false;
+        while attempts < max_attempts {
+            if attempts > 0 {
+                total_comm += backoff_alpha * (1u64 << (attempts - 1).min(62)) as f64;
+            }
+            attempts += 1;
+            committed.clear();
+            for i in 0..n {
+                // Barrier survivors: the same set the legacy mask covers
+                // (the full fleet under `All`). Crash draws run for every
+                // survivor in ascending order — partitioned or not — so
+                // the stream position is rack-layout-invariant and the
+                // sparse engine can replay it identically.
+                let barrier_ok = match self.policy {
+                    ParticipationPolicy::All => true,
+                    _ => active[i] && completion[i] <= exit,
+                };
+                if !barrier_ok {
+                    continue;
+                }
+                let crashed = plan.crash > 0.0 && self.fault_crash_rng.uniform() < plan.crash;
+                let cut = self.partition_left[i / rack_size] > 0;
+                if !crashed && !cut {
+                    committed.push(i);
+                }
+            }
+            let leader_down = plan.leader > 0.0
+                && matches!(self.fabric, LinkFabric::Tiered { hierarchical: true, .. })
+                && self.fault_leader_rng.uniform() < plan.leader;
+            let n_att = committed.len();
+            let (base_comm, tier) = self.fabric.updown_seconds(
+                &self.net,
+                self.alg,
+                n_att,
+                payload_wire as f64,
+                payload_down as f64,
+            );
+            let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+            total_comm += if n_att <= 1 { 0.0 } else { drawn };
+            bytes_wire_total +=
+                crate::comm::allreduce::bytes_per_client_payload(self.alg, n_att, payload_wire);
+            bytes_down_total +=
+                crate::comm::allreduce::bytes_per_client_downlink(self.alg, n_att, payload_down);
+            tier_last = tier;
+            if !leader_down && n_att >= quorum_need {
+                success = true;
+                break;
+            }
+        }
+        let retries = (attempts - 1) as u32;
+        let abandoned = if success {
+            0u32
+        } else {
+            // Every attempt failed: nothing commits — the coordinator's
+            // empty-participation machinery rolls the round back.
+            committed.clear();
+            1
+        };
+
+        // Corruption is drawn only for the updates that actually commit,
+        // in ascending client order: one gate uniform each, plus kind and
+        // coordinate draws when it fires.
+        let mut corrupt_dropped = 0u32;
+        for &i in &committed {
+            if plan.corrupt > 0.0 && self.fault_corrupt_rng.uniform() < plan.corrupt {
+                let kind = CorruptKind::from_index(self.fault_corrupt_rng.below(4));
+                let coord = self.fault_corrupt_rng.below(self.dim.max(1));
+                if kind.is_non_finite() {
+                    corrupt_dropped += 1;
+                }
+                self.corruptions.push(Corruption { client: i, kind, coord });
+            }
+        }
+
+        // Partitions age at round end, whatever the round's outcome.
+        for p in self.partition_left.iter_mut() {
+            if *p > 0 {
+                *p -= 1;
+            }
+        }
+
+        let mut mask = vec![false; n];
+        for &i in &committed {
+            mask[i] = true;
+        }
+        let participation = Participation::from_mask(mask);
+        let n_part = participation.count();
+
+        let (comm, hidden) = match self.overlap {
+            Overlap::Off => (total_comm, 0.0),
+            Overlap::Chunked => self.ov_state.apply(
+                total_comm,
+                exit,
+                fabric::eager_fraction(self.dim, self.chunk_rows),
+            ),
+        };
+        if self.detail == Detail::Steps {
+            self.timeline.events.push(TimelineEvent {
+                t: start + exit + comm,
+                round: self.round,
+                kind: EventKind::AllreduceDone,
+            });
+        }
+
+        let stat = RoundStat {
+            round: self.round,
+            steps,
+            k: period,
+            start,
+            compute_span: exit,
+            comm_seconds: comm,
+            max_barrier_wait: max_wait,
+            mean_barrier_wait: mean_wait,
+            dropped,
+            participants: n_part as u32,
+            joined,
+            left,
+            bytes_exact: crate::comm::allreduce::bytes_per_client(self.alg, n_part, self.dim),
+            bytes_wire: bytes_wire_total,
+            bytes_wire_down: bytes_down_total,
+            compression_ratio: comp.payload_ratio(self.dim),
+            overlap_seconds: hidden,
+            critical_path_tier: tier_last,
+            retries,
+            abandoned,
+            corrupt_dropped,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -675,6 +955,11 @@ impl SimNet {
         neighbors: &mut Vec<Vec<usize>>,
     ) -> (RoundStat, Participation) {
         assert!(steps > 0, "a round prices at least one local step");
+        assert!(
+            !self.recovery_active(),
+            "fault/recovery knobs are unsupported on the gossip path \
+             (peer rounds have no collective to retry or quorum-gate)"
+        );
         let n = self.clients.len();
         let profile = self.profile;
         let g = self.cm.grad_seconds(batch, self.dim);
@@ -890,6 +1175,9 @@ impl SimNet {
             compression_ratio: 1.0,
             overlap_seconds: hidden,
             critical_path_tier: tier,
+            retries: 0,
+            abandoned: 0,
+            corrupt_dropped: 0,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -897,6 +1185,87 @@ impl SimNet {
         self.now = stat.end();
         self.round += 1;
         (stat, participation)
+    }
+
+    /// Serialize the engine's full dynamic state at a round boundary
+    /// (DESIGN.md §12): every RNG stream position, membership, partition
+    /// counters, the overlap carry, the clock, and the recorded timeline.
+    /// Static pricing parameters (profile, network, fabric, policy...) are
+    /// *not* serialized — a resumed run reconstructs the engine from the
+    /// same config and overlays this snapshot.
+    ///
+    /// Must be called between rounds: an unconsumed [`Self::begin_round`]
+    /// draw or undrained [`Self::take_corruptions`] batch is a
+    /// coordinator bug, not checkpointable state.
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        assert!(self.pending.is_none(), "checkpoint with an unconsumed begin_round draw");
+        assert!(self.corruptions.is_empty(), "checkpoint with undrained corruption events");
+        w.tag("simnet");
+        w.usize(self.clients.len());
+        for c in &self.clients {
+            w.rng(c.rng.state());
+            w.rng(c.churn_rng.state());
+            w.f64(c.speed);
+            w.bool(c.present);
+        }
+        w.rng(self.link_rng.state());
+        w.rng(self.part_rng.state());
+        w.rng(self.gossip_rng.state());
+        w.rng(self.fault_crash_rng.state());
+        w.rng(self.fault_corrupt_rng.state());
+        w.rng(self.fault_partition_rng.state());
+        w.rng(self.fault_leader_rng.state());
+        w.u64_slice(&self.partition_left);
+        w.f64(self.ov_state.in_flight());
+        w.f64(self.now);
+        w.u64(self.round);
+        w.u64(self.events_processed);
+        self.timeline.save_state(w);
+    }
+
+    /// Inverse of [`Self::save_state`]: overwrite this engine's dynamic
+    /// state with a checkpointed snapshot. The engine must have been
+    /// constructed from the same configuration (seed, fleet size, knobs);
+    /// the fleet-size check is the one drift guard cheap enough to keep.
+    pub fn restore_state(&mut self, r: &mut CkptReader) -> anyhow::Result<()> {
+        r.expect_tag("simnet")?;
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.clients.len(),
+            "checkpoint fleet size {n} != configured {}",
+            self.clients.len()
+        );
+        for c in &mut self.clients {
+            let (s, spare) = r.rng()?;
+            c.rng = Rng::from_state(s, spare);
+            let (s, spare) = r.rng()?;
+            c.churn_rng = Rng::from_state(s, spare);
+            c.speed = r.f64()?;
+            c.present = r.bool()?;
+        }
+        let (s, spare) = r.rng()?;
+        self.link_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.part_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.gossip_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_crash_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_corrupt_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_partition_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_leader_rng = Rng::from_state(s, spare);
+        self.partition_left = r.u64_vec()?;
+        self.ov_state = fabric::OverlapState::restore(r.f64()?);
+        self.now = r.f64()?;
+        self.round = r.u64()?;
+        self.events_processed = r.u64()?;
+        self.timeline = Timeline::restore_state(r)?;
+        self.pending = None;
+        self.corruptions.clear();
+        Ok(())
     }
 }
 
@@ -1592,5 +1961,173 @@ mod tests {
         }
         assert_eq!(sim.rounds_priced(), 10);
         assert_eq!(sim.now(), prev_end);
+    }
+
+    fn plan(crash: f64, corrupt: f64, partition: f64, k: u64, leader: f64) -> FaultPlan {
+        FaultPlan {
+            crash,
+            corrupt,
+            partition,
+            partition_rounds: k,
+            leader,
+        }
+    }
+
+    #[test]
+    fn quorum_only_round_prices_like_legacy_with_explicit_mask() {
+        // Arming quorum alone (no faults, homogeneous fleet) routes
+        // through the attempt loop but the first attempt commits the full
+        // fleet: same comm pricing, full participation, zero fault
+        // columns.
+        let net = NetworkModel::default();
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 7, Detail::Rounds)
+            .with_faults(None, RetryPolicy::None, 1.0);
+        let (rt, part) = sim.price_round_masked(10, 32);
+        assert_eq!(part.count(), 8);
+        assert_eq!(rt.participants, 8);
+        assert_eq!(rt.comm_seconds, net.allreduce_seconds(Algorithm::Ring, 8, 1_000));
+        assert_eq!((rt.retries, rt.abandoned, rt.corrupt_dropped), (0, 0, 0));
+    }
+
+    #[test]
+    fn certain_crash_abandons_the_round_honestly() {
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 7, Detail::Rounds)
+            .with_faults(Some(plan(1.0, 0.0, 0.0, 1, 0.0)), RetryPolicy::None, 0.5);
+        let (rt, part) = sim.price_round_masked(10, 32);
+        assert_eq!(part.count(), 0, "every client crashed");
+        assert_eq!(rt.abandoned, 1);
+        assert_eq!(rt.retries, 0);
+        assert!(sim.take_corruptions().is_empty(), "nothing committed, nothing to corrupt");
+    }
+
+    #[test]
+    fn retry_commits_more_rounds_than_single_shot_under_crashes() {
+        let mk = |retry| {
+            engine(ClusterProfile::homogeneous(), 8, 19, Detail::Rounds)
+                .with_faults(Some(plan(0.4, 0.0, 0.0, 1, 0.0)), retry, 0.75)
+        };
+        let (mut none, mut retry) = (mk(RetryPolicy::None), mk(RetryPolicy::Retry { max: 5 }));
+        for _ in 0..200 {
+            none.price_round_masked(4, 16);
+            retry.price_round_masked(4, 16);
+        }
+        let (a0, a1) = (none.timeline.total_abandoned(), retry.timeline.total_abandoned());
+        assert!(a0 > 0, "p=0.4 crashes never missed a 75% quorum in 200 rounds");
+        assert!(a1 < a0, "retries ({a1} abandoned) did not beat single-shot ({a0})");
+        assert!(retry.timeline.total_retries() > 0);
+        // Retries are priced, not free: the retrying engine's clock ran
+        // longer than the abandon-happy one per committed round.
+        assert!(retry.now() > none.now());
+    }
+
+    #[test]
+    fn partition_cuts_whole_racks_for_k_rounds() {
+        let mut sim = engine(ClusterProfile::homogeneous(), 8, 3, Detail::Rounds)
+            .with_fabric(LinkFabric::parse("rack-wan:4").unwrap(), Overlap::Off, 0)
+            .with_faults(Some(plan(0.0, 0.0, 0.25, 3, 0.0)), RetryPolicy::None, 0.0);
+        let mut partial = 0u32;
+        for _ in 0..100 {
+            let (rt, part) = sim.price_round_masked(4, 16);
+            // Partitions remove clients rack-at-a-time: the committed
+            // count is always a multiple of the rack size.
+            assert_eq!(part.count() % 4, 0, "partial rack committed");
+            partial += (rt.participants < 8) as u32;
+        }
+        assert!(partial >= 3, "p=0.25, K=3 partitions barely ever cut a rack");
+    }
+
+    #[test]
+    fn leader_faults_only_fire_under_hierarchical_fabric() {
+        let mk = |fab: &str| {
+            engine(ClusterProfile::homogeneous(), 8, 11, Detail::Rounds)
+                .with_fabric(LinkFabric::parse(fab).unwrap(), Overlap::Off, 0)
+                .with_faults(Some(plan(0.0, 0.0, 0.0, 1, 0.5)), RetryPolicy::None, 0.0)
+        };
+        let (mut flat, mut hier) = (mk("rack-wan:4"), mk("hier:4"));
+        for _ in 0..100 {
+            flat.price_round_masked(4, 16);
+            hier.price_round_masked(4, 16);
+        }
+        assert_eq!(flat.timeline.total_abandoned(), 0, "no leader to lose on a flat fabric");
+        assert!(hier.timeline.total_abandoned() > 0, "p=0.5 leader faults never fired");
+    }
+
+    #[test]
+    fn corruption_draws_are_deterministic_and_drained() {
+        let mk = || {
+            engine(ClusterProfile::homogeneous(), 8, 23, Detail::Rounds)
+                .with_faults(Some(plan(0.0, 1.0, 0.0, 1, 0.0)), RetryPolicy::None, 0.0)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for r in 0..20 {
+            let (sa, _) = a.price_round_masked(4, 16);
+            let (sb, _) = b.price_round_masked(4, 16);
+            assert_eq!(sa, sb, "round {r}");
+            let (ca, cb) = (a.take_corruptions(), b.take_corruptions());
+            assert_eq!(ca, cb, "round {r}");
+            assert_eq!(ca.len(), 8, "corrupt = 1.0 hits every committed update");
+            let non_finite = ca.iter().filter(|c| c.kind.is_non_finite()).count();
+            assert_eq!(sa.corrupt_dropped as usize, non_finite, "round {r}");
+            assert!(a.take_corruptions().is_empty(), "drain is destructive");
+        }
+        assert!(a.timeline.total_corrupt_dropped() > 0, "Nan/Inf kinds never drawn");
+    }
+
+    #[test]
+    fn neutral_fault_builder_is_bit_identical_to_legacy() {
+        let mk = || {
+            engine(ClusterProfile::flaky_federated(), 6, 3, Detail::Rounds)
+                .with_policy(ParticipationPolicy::Arrived)
+        };
+        let (mut legacy, mut armed) =
+            (mk(), mk().with_faults(None, RetryPolicy::None, 0.0));
+        for r in 0..60 {
+            let (sa, pa) = legacy.price_round_masked(5, 16);
+            let (sb, pb) = armed.price_round_masked(5, 16);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+        }
+        assert_eq!(legacy.now().to_bits(), armed.now().to_bits());
+        assert_eq!(legacy.timeline, armed.timeline);
+    }
+
+    #[test]
+    fn checkpoint_resumes_the_engine_bitwise() {
+        let mk = || {
+            engine(ClusterProfile::elastic_federated(), 8, 29, Detail::Rounds)
+                .with_policy(ParticipationPolicy::Arrived)
+                .with_faults(Some(plan(0.2, 0.5, 0.1, 2, 0.0)), RetryPolicy::Retry { max: 2 }, 0.5)
+        };
+        let mut full = mk();
+        let mut resumed = mk();
+        for _ in 0..25 {
+            full.price_round_masked(5, 16);
+            full.take_corruptions();
+            resumed.price_round_masked(5, 16);
+            resumed.take_corruptions();
+        }
+        let mut w = CkptWriter::new();
+        full.save_state(&mut w);
+        let text = w.into_string();
+
+        // Restore into a *fresh* engine (round 0) and replay the back
+        // half against the uninterrupted run: stats, corruption batches,
+        // clock, and timeline must match bit for bit.
+        let mut back = mk();
+        let mut r = CkptReader::new(&text);
+        back.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.rounds_priced(), 25);
+        assert_eq!(back.now().to_bits(), resumed.now().to_bits());
+        for r in 0..25 {
+            let (sa, pa) = full.price_round_masked(5, 16);
+            let (sb, pb) = back.price_round_masked(5, 16);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+            assert_eq!(full.take_corruptions(), back.take_corruptions(), "round {r}");
+        }
+        assert_eq!(full.now().to_bits(), back.now().to_bits());
+        assert_eq!(full.timeline, back.timeline);
+        assert_eq!(full.events_processed, back.events_processed);
     }
 }

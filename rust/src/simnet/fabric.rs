@@ -434,6 +434,12 @@ impl OverlapState {
     pub fn in_flight(&self) -> f64 {
         self.carry
     }
+
+    /// Rebuild the accumulator from a checkpointed [`Self::in_flight`]
+    /// value (bit-exact resume, DESIGN.md §12).
+    pub fn restore(carry: f64) -> Self {
+        Self { carry }
+    }
 }
 
 #[cfg(test)]

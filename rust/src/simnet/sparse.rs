@@ -34,8 +34,10 @@ use super::participation::ParticipationPolicy;
 use super::profile::ClusterProfile;
 use super::timeline::{Detail, RoundStat, Timeline};
 use crate::comm::{compress::CompressorSpec, Algorithm};
+use crate::faults::{Corruption, CorruptKind, FaultPlan, RetryPolicy};
 use crate::rng::{streams, Rng};
 use crate::sim::{ComputeModel, NetworkModel};
+use crate::util::ckpt::{CkptReader, CkptWriter};
 use std::collections::HashMap;
 
 /// Lazily materialized per-client timing state: the same `(rng, speed)`
@@ -90,6 +92,18 @@ pub struct SparseSimNet {
     /// Cross-round pipeline tail for [`Overlap::Chunked`].
     ov_state: fabric::OverlapState,
     policy: ParticipationPolicy,
+    /// Fault/recovery knobs — the sparse twins of [`super::SimNet`]'s
+    /// fields, consuming the identical registered streams so the two
+    /// engines replay the same injections bit for bit.
+    faults: Option<FaultPlan>,
+    retry: RetryPolicy,
+    quorum: f64,
+    fault_crash_rng: Rng,
+    fault_corrupt_rng: Rng,
+    fault_partition_rng: Rng,
+    fault_leader_rng: Rng,
+    partition_left: Vec<u64>,
+    corruptions: Vec<Corruption>,
     pending: Option<PendingSparse>,
     now: f64,
     round: u64,
@@ -141,6 +155,10 @@ impl SparseSimNet {
             detail,
             link_rng: root.split(streams::SIMNET_LINK.solo_label()),
             part_rng: root.split(streams::SIMNET_SAMPLING.solo_label()),
+            fault_crash_rng: root.split(streams::SIMNET_FAULT_CRASH.solo_label()),
+            fault_corrupt_rng: root.split(streams::SIMNET_FAULT_CORRUPT.solo_label()),
+            fault_partition_rng: root.split(streams::SIMNET_FAULT_PARTITION.solo_label()),
+            fault_leader_rng: root.split(streams::SIMNET_FAULT_LEADER.solo_label()),
             root,
             timing: HashMap::new(),
             churn,
@@ -150,6 +168,11 @@ impl SparseSimNet {
             chunk_rows: 0,
             ov_state: fabric::OverlapState::default(),
             policy: ParticipationPolicy::All,
+            faults: None,
+            retry: RetryPolicy::None,
+            quorum: 0.0,
+            partition_left: Vec::new(),
+            corruptions: Vec::new(),
             pending: None,
             now: 0.0,
             round: 0,
@@ -177,6 +200,32 @@ impl SparseSimNet {
 
     pub fn policy(&self) -> ParticipationPolicy {
         self.policy
+    }
+
+    /// See [`super::SimNet::with_faults`]: same knobs, same neutral
+    /// spelling, same streams — the sparse attempt loop replays the dense
+    /// engine's injection draws bit for bit.
+    pub fn with_faults(
+        mut self,
+        faults: Option<FaultPlan>,
+        retry: RetryPolicy,
+        quorum: f64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&quorum), "quorum must be in [0, 1], got {quorum}");
+        self.faults = faults;
+        self.retry = retry;
+        self.quorum = quorum;
+        self
+    }
+
+    /// See [`super::SimNet::recovery_active`].
+    pub fn recovery_active(&self) -> bool {
+        self.faults.is_some() || self.quorum > 0.0 || self.retry != RetryPolicy::None
+    }
+
+    /// See [`super::SimNet::take_corruptions`].
+    pub fn take_corruptions(&mut self) -> Vec<Corruption> {
+        std::mem::take(&mut self.corruptions)
     }
 
     /// See [`super::SimNet::set_downlink`].
@@ -408,6 +457,18 @@ impl SparseSimNet {
         }
         let mean_wait = wait_sum / n_active.max(1) as f64;
 
+        // Recovery path: the sparse twin of the dense engine's attempt
+        // loop (`SimNet::price_recovery_attempts`) — identical stream
+        // draws, identical pricing, sorted participant ids out.
+        if self.recovery_active() {
+            let out = self.price_recovery_attempts(
+                steps, period, start, exit, dropped, max_wait, mean_wait, joined, left, &active,
+                &completion, comp,
+            );
+            self.completion = completion;
+            return out;
+        }
+
         // Participant ids: the full fleet under `All` (the legacy
         // invariant), else the active clients that made the barrier.
         let participants: Vec<usize> = match self.policy {
@@ -470,6 +531,9 @@ impl SparseSimNet {
             compression_ratio: comp.payload_ratio(self.dim),
             overlap_seconds: hidden,
             critical_path_tier: tier,
+            retries: 0,
+            abandoned: 0,
+            corrupt_dropped: 0,
         };
         if self.detail != Detail::Off {
             self.timeline.rounds.push(stat);
@@ -478,6 +542,280 @@ impl SparseSimNet {
         self.round += 1;
         self.completion = completion;
         (stat, participants)
+    }
+
+    /// Mirror of [`super::SimNet::price_recovery_attempts`]: the same
+    /// attempt loop over the same `SIMNET_FAULT_*` streams in the same
+    /// draw order (barrier survivors ascending), so the dense/sparse
+    /// bit-parity contract extends to every fault spelling.
+    #[allow(clippy::too_many_arguments)]
+    fn price_recovery_attempts(
+        &mut self,
+        steps: u64,
+        period: u64,
+        start: f64,
+        exit: f64,
+        dropped: u32,
+        max_wait: f64,
+        mean_wait: f64,
+        joined: u32,
+        left: u32,
+        active: &[usize],
+        completion: &[f64],
+        comp: CompressorSpec,
+    ) -> (RoundStat, Vec<usize>) {
+        let n = self.n;
+        let profile = self.profile;
+        let plan = self.faults.unwrap_or(FaultPlan {
+            crash: 0.0,
+            corrupt: 0.0,
+            partition: 0.0,
+            partition_rounds: 1,
+            leader: 0.0,
+        });
+        let quorum_need = (self.quorum * n as f64).ceil() as usize;
+        let max_attempts = 1 + self.retry.max_retries() as u64;
+        let rack_size = self.fabric.matrix().map_or(8, |m| m.rack_size);
+        let racks = n.div_ceil(rack_size).max(1);
+        if self.partition_left.len() < racks {
+            self.partition_left.resize(racks, 0);
+        }
+        for r in 0..racks {
+            if self.partition_left[r] == 0
+                && plan.partition > 0.0
+                && self.fault_partition_rng.uniform() < plan.partition
+            {
+                self.partition_left[r] = plan.partition_rounds;
+            }
+        }
+        let backoff_alpha = match self.fabric {
+            LinkFabric::Tiered { matrix, .. } => matrix.wan.alpha,
+            LinkFabric::Uniform => self.net.alpha,
+        };
+        let payload_wire = comp.payload_bytes(self.dim);
+        let payload_down = self.down.unwrap_or(comp).payload_bytes(self.dim);
+
+        let mut total_comm = 0.0f64;
+        let mut bytes_wire_total = 0u64;
+        let mut bytes_down_total = 0u64;
+        let mut tier_last = 0u32;
+        let mut committed: Vec<usize> = Vec::new();
+        let mut attempts = 0u64;
+        let mut success = false;
+        while attempts < max_attempts {
+            if attempts > 0 {
+                total_comm += backoff_alpha * (1u64 << (attempts - 1).min(62)) as f64;
+            }
+            attempts += 1;
+            committed.clear();
+            // Barrier survivors in ascending id order — the dense loop's
+            // exact visit order, so the crash-stream position matches:
+            // the full fleet under `All`, else the active arrivals.
+            match self.policy {
+                ParticipationPolicy::All => {
+                    for i in 0..n {
+                        let crashed =
+                            plan.crash > 0.0 && self.fault_crash_rng.uniform() < plan.crash;
+                        let cut = self.partition_left[i / rack_size] > 0;
+                        if !crashed && !cut {
+                            committed.push(i);
+                        }
+                    }
+                }
+                _ => {
+                    for (j, &i) in active.iter().enumerate() {
+                        if completion[j] > exit {
+                            continue;
+                        }
+                        let crashed =
+                            plan.crash > 0.0 && self.fault_crash_rng.uniform() < plan.crash;
+                        let cut = self.partition_left[i / rack_size] > 0;
+                        if !crashed && !cut {
+                            committed.push(i);
+                        }
+                    }
+                }
+            }
+            let leader_down = plan.leader > 0.0
+                && matches!(self.fabric, LinkFabric::Tiered { hierarchical: true, .. })
+                && self.fault_leader_rng.uniform() < plan.leader;
+            let n_att = committed.len();
+            let (base_comm, tier) = self.fabric.updown_seconds(
+                &self.net,
+                self.alg,
+                n_att,
+                payload_wire as f64,
+                payload_down as f64,
+            );
+            let drawn = profile.draw_comm_seconds(base_comm, &mut self.link_rng);
+            total_comm += if n_att <= 1 { 0.0 } else { drawn };
+            bytes_wire_total +=
+                crate::comm::allreduce::bytes_per_client_payload(self.alg, n_att, payload_wire);
+            bytes_down_total +=
+                crate::comm::allreduce::bytes_per_client_downlink(self.alg, n_att, payload_down);
+            tier_last = tier;
+            if !leader_down && n_att >= quorum_need {
+                success = true;
+                break;
+            }
+        }
+        let retries = (attempts - 1) as u32;
+        let abandoned = if success {
+            0u32
+        } else {
+            committed.clear();
+            1
+        };
+
+        let mut corrupt_dropped = 0u32;
+        for &i in &committed {
+            if plan.corrupt > 0.0 && self.fault_corrupt_rng.uniform() < plan.corrupt {
+                let kind = CorruptKind::from_index(self.fault_corrupt_rng.below(4));
+                let coord = self.fault_corrupt_rng.below(self.dim.max(1));
+                if kind.is_non_finite() {
+                    corrupt_dropped += 1;
+                }
+                self.corruptions.push(Corruption { client: i, kind, coord });
+            }
+        }
+
+        for p in self.partition_left.iter_mut() {
+            if *p > 0 {
+                *p -= 1;
+            }
+        }
+
+        let n_part = committed.len();
+        let (comm, hidden) = match self.overlap {
+            Overlap::Off => (total_comm, 0.0),
+            Overlap::Chunked => self.ov_state.apply(
+                total_comm,
+                exit,
+                fabric::eager_fraction(self.dim, self.chunk_rows),
+            ),
+        };
+
+        let stat = RoundStat {
+            round: self.round,
+            steps,
+            k: period,
+            start,
+            compute_span: exit,
+            comm_seconds: comm,
+            max_barrier_wait: max_wait,
+            mean_barrier_wait: mean_wait,
+            dropped,
+            participants: n_part as u32,
+            joined,
+            left,
+            bytes_exact: crate::comm::allreduce::bytes_per_client(self.alg, n_part, self.dim),
+            bytes_wire: bytes_wire_total,
+            bytes_wire_down: bytes_down_total,
+            compression_ratio: comp.payload_ratio(self.dim),
+            overlap_seconds: hidden,
+            critical_path_tier: tier_last,
+            retries,
+            abandoned,
+            corrupt_dropped,
+        };
+        if self.detail != Detail::Off {
+            self.timeline.rounds.push(stat);
+        }
+        self.now = stat.end();
+        self.round += 1;
+        (stat, committed)
+    }
+
+    /// Serialize the engine's dynamic state at a round boundary — the
+    /// sparse twin of [`super::SimNet::save_state`]. The lazily
+    /// materialized timing map is written in ascending id order
+    /// (checkpoint bytes must not depend on hash iteration order).
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        assert!(self.pending.is_none(), "checkpoint with an unconsumed begin_round draw");
+        assert!(self.corruptions.is_empty(), "checkpoint with undrained corruption events");
+        w.tag("sparse_simnet");
+        let mut ids: Vec<usize> = self.timing.keys().copied().collect();
+        ids.sort_unstable(); // ORDER: checkpoint bytes are id-sorted, hash-order-free
+        w.usize(ids.len());
+        for id in ids {
+            let t = &self.timing[&id];
+            w.usize(id);
+            w.rng(t.rng.state());
+            w.f64(t.speed);
+        }
+        w.bool(self.churn.is_some());
+        if let Some(ch) = &self.churn {
+            for rng in &ch.rngs {
+                w.rng(rng.state());
+            }
+            for &p in &ch.present {
+                w.bool(p);
+            }
+        }
+        w.rng(self.link_rng.state());
+        w.rng(self.part_rng.state());
+        w.rng(self.fault_crash_rng.state());
+        w.rng(self.fault_corrupt_rng.state());
+        w.rng(self.fault_partition_rng.state());
+        w.rng(self.fault_leader_rng.state());
+        w.u64_slice(&self.partition_left);
+        w.f64(self.ov_state.in_flight());
+        w.f64(self.now);
+        w.u64(self.round);
+        w.u64(self.events_processed);
+        self.timeline.save_state(w);
+    }
+
+    /// Inverse of [`Self::save_state`]; the engine must have been
+    /// constructed from the same configuration.
+    pub fn restore_state(&mut self, r: &mut CkptReader) -> anyhow::Result<()> {
+        r.expect_tag("sparse_simnet")?;
+        let m = r.usize()?;
+        self.timing.clear();
+        for _ in 0..m {
+            let id = r.usize()?;
+            let (s, spare) = r.rng()?;
+            let speed = r.f64()?;
+            self.timing.insert(
+                id,
+                ClientTiming { rng: Rng::from_state(s, spare), speed },
+            );
+        }
+        let has_churn = r.bool()?;
+        anyhow::ensure!(
+            has_churn == self.churn.is_some(),
+            "checkpoint churn state does not match the configured profile"
+        );
+        if let Some(ch) = &mut self.churn {
+            for rng in ch.rngs.iter_mut() {
+                let (s, spare) = r.rng()?;
+                *rng = Rng::from_state(s, spare);
+            }
+            for p in ch.present.iter_mut() {
+                *p = r.bool()?;
+            }
+        }
+        let (s, spare) = r.rng()?;
+        self.link_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.part_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_crash_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_corrupt_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_partition_rng = Rng::from_state(s, spare);
+        let (s, spare) = r.rng()?;
+        self.fault_leader_rng = Rng::from_state(s, spare);
+        self.partition_left = r.u64_vec()?;
+        self.ov_state = fabric::OverlapState::restore(r.f64()?);
+        self.now = r.f64()?;
+        self.round = r.u64()?;
+        self.events_processed = r.u64()?;
+        self.timeline = Timeline::restore_state(r)?;
+        self.pending = None;
+        self.corruptions.clear();
+        Ok(())
     }
 }
 
@@ -696,5 +1034,94 @@ mod tests {
         assert_eq!(rt.participants, 0);
         assert_eq!(rt.comm_seconds, 0.0);
         assert_eq!(rt.compute_span, 0.0);
+    }
+
+    #[test]
+    fn fault_spellings_match_dense_engine_bitwise() {
+        let plan = FaultPlan {
+            crash: 0.2,
+            corrupt: 0.5,
+            partition: 0.1,
+            partition_rounds: 2,
+            leader: 0.0,
+        };
+        for policy in [
+            ParticipationPolicy::All,
+            ParticipationPolicy::Arrived,
+            ParticipationPolicy::Fraction(0.5),
+        ] {
+            for profile in [
+                ClusterProfile::homogeneous(),
+                ClusterProfile::flaky_federated(),
+                ClusterProfile::elastic_federated(),
+            ] {
+                let mut d = dense(profile, 8, 21, policy)
+                    .with_faults(Some(plan), RetryPolicy::Retry { max: 2 }, 0.5);
+                let mut s = sparse(profile, 8, 21, policy)
+                    .with_faults(Some(plan), RetryPolicy::Retry { max: 2 }, 0.5);
+                for r in 0..100 {
+                    let (sa, pa) = d.price_round_compressed(5, 16, 5, CompressorSpec::Identity);
+                    let (sb, pb) = s.price_round_compressed(5, 16, 5, CompressorSpec::Identity);
+                    assert_eq!(sa, sb, "{} {policy:?} round {r}", profile.name);
+                    assert_eq!(pa.indices(), pb, "{} {policy:?} round {r}", profile.name);
+                    assert_eq!(
+                        d.take_corruptions(),
+                        s.take_corruptions(),
+                        "{} {policy:?} round {r}",
+                        profile.name
+                    );
+                }
+                assert_eq!(d.now().to_bits(), s.now().to_bits(), "{}", profile.name);
+                assert_eq!(d.timeline.rounds, s.timeline.rounds, "{}", profile.name);
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_resumes_sparse_engine_bitwise() {
+        let plan = FaultPlan {
+            crash: 0.2,
+            corrupt: 0.5,
+            partition: 0.1,
+            partition_rounds: 2,
+            leader: 0.0,
+        };
+        let mk = || {
+            sparse(
+                ClusterProfile::elastic_federated(),
+                8,
+                29,
+                ParticipationPolicy::Fraction(0.5),
+            )
+            .with_faults(Some(plan), RetryPolicy::Retry { max: 2 }, 0.25)
+        };
+        let mut full = mk();
+        for _ in 0..20 {
+            full.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+            full.take_corruptions();
+        }
+        let mut w = CkptWriter::new();
+        full.save_state(&mut w);
+        let text = w.into_string();
+
+        let mut back = mk();
+        let mut r = CkptReader::new(&text);
+        back.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        for r in 0..20 {
+            let (sa, pa) = full.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+            let (sb, pb) = back.price_round_compressed(4, 16, 4, CompressorSpec::Identity);
+            assert_eq!(sa, sb, "round {r}");
+            assert_eq!(pa, pb, "round {r}");
+            assert_eq!(full.take_corruptions(), back.take_corruptions(), "round {r}");
+        }
+        assert_eq!(full.now().to_bits(), back.now().to_bits());
+        assert_eq!(full.timeline, back.timeline);
+        // Checkpoint bytes themselves are deterministic: re-saving both
+        // engines yields identical text (id-sorted, hash-order-free).
+        let (mut wa, mut wb) = (CkptWriter::new(), CkptWriter::new());
+        full.save_state(&mut wa);
+        back.save_state(&mut wb);
+        assert_eq!(wa.into_string(), wb.into_string());
     }
 }

@@ -116,12 +116,75 @@ pub struct RoundStat {
     /// 0 = scalar/uniform pricing, 1 = intra-rack links, 2 = cross-rack
     /// (WAN) links ([`super::fabric`] tier codes).
     pub critical_path_tier: u32,
+    /// Collective attempts re-run after a failure under a
+    /// [`crate::faults::RetryPolicy`] (0 on the single-shot legacy path).
+    pub retries: u32,
+    /// 1 when this round was abandoned — every attempt failed the quorum
+    /// or lost its leader — so nothing committed; 0 otherwise.
+    pub abandoned: u32,
+    /// Corrupted updates drawn non-finite (NaN/Inf) this round — the
+    /// events the defense layer will reject when clipping is on.
+    pub corrupt_dropped: u32,
 }
 
 impl RoundStat {
     /// Absolute simulated time when the round's collective finished.
     pub fn end(&self) -> f64 {
         self.start + self.compute_span + self.comm_seconds
+    }
+
+    /// Serialize every field bit-exactly (checkpoint/resume, DESIGN.md
+    /// §12): a resumed run's timeline CSV must be byte-identical to the
+    /// uninterrupted run's, so floats round-trip as bit patterns.
+    pub fn save_state(&self, w: &mut crate::util::ckpt::CkptWriter) {
+        w.u64(self.round);
+        w.u64(self.steps);
+        w.u64(self.k);
+        w.f64(self.start);
+        w.f64(self.compute_span);
+        w.f64(self.comm_seconds);
+        w.f64(self.max_barrier_wait);
+        w.f64(self.mean_barrier_wait);
+        w.u64(self.dropped as u64);
+        w.u64(self.participants as u64);
+        w.u64(self.joined as u64);
+        w.u64(self.left as u64);
+        w.u64(self.bytes_exact);
+        w.u64(self.bytes_wire);
+        w.u64(self.bytes_wire_down);
+        w.f64(self.compression_ratio);
+        w.f64(self.overlap_seconds);
+        w.u64(self.critical_path_tier as u64);
+        w.u64(self.retries as u64);
+        w.u64(self.abandoned as u64);
+        w.u64(self.corrupt_dropped as u64);
+    }
+
+    /// Inverse of [`Self::save_state`].
+    pub fn restore_state(r: &mut crate::util::ckpt::CkptReader) -> anyhow::Result<RoundStat> {
+        Ok(RoundStat {
+            round: r.u64()?,
+            steps: r.u64()?,
+            k: r.u64()?,
+            start: r.f64()?,
+            compute_span: r.f64()?,
+            comm_seconds: r.f64()?,
+            max_barrier_wait: r.f64()?,
+            mean_barrier_wait: r.f64()?,
+            dropped: r.u64()? as u32,
+            participants: r.u64()? as u32,
+            joined: r.u64()? as u32,
+            left: r.u64()? as u32,
+            bytes_exact: r.u64()?,
+            bytes_wire: r.u64()?,
+            bytes_wire_down: r.u64()?,
+            compression_ratio: r.f64()?,
+            overlap_seconds: r.f64()?,
+            critical_path_tier: r.u64()? as u32,
+            retries: r.u64()? as u32,
+            abandoned: r.u64()? as u32,
+            corrupt_dropped: r.u64()? as u32,
+        })
     }
 }
 
@@ -198,6 +261,47 @@ impl Timeline {
         self.rounds.iter().map(|r| r.overlap_seconds).sum()
     }
 
+    /// Total re-run collective attempts across the run.
+    pub fn total_retries(&self) -> u64 {
+        self.rounds.iter().map(|r| r.retries as u64).sum()
+    }
+
+    /// Rounds abandoned (no commit) after exhausting every attempt.
+    pub fn total_abandoned(&self) -> u64 {
+        self.rounds.iter().map(|r| r.abandoned as u64).sum()
+    }
+
+    /// Total non-finite corruption events drawn across the run.
+    pub fn total_corrupt_dropped(&self) -> u64 {
+        self.rounds.iter().map(|r| r.corrupt_dropped as u64).sum()
+    }
+
+    /// Serialize the recorded rounds for a checkpoint. Step-level event
+    /// streams are not checkpointable (they grow with N x steps and no
+    /// consumer resumes them), so this asserts the run is not under
+    /// `timeline = steps`.
+    pub fn save_state(&self, w: &mut crate::util::ckpt::CkptWriter) {
+        assert!(
+            self.events.is_empty(),
+            "checkpointing a step-level timeline is unsupported (timeline = steps)"
+        );
+        w.tag("timeline");
+        w.usize(self.rounds.len());
+        for stat in &self.rounds {
+            stat.save_state(w);
+        }
+    }
+
+    /// Inverse of [`Self::save_state`].
+    pub fn restore_state(r: &mut crate::util::ckpt::CkptReader) -> anyhow::Result<Timeline> {
+        r.expect_tag("timeline")?;
+        let n = r.usize()?;
+        let rounds = (0..n)
+            .map(|_| RoundStat::restore_state(r))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Timeline { rounds, events: Vec::new() })
+    }
+
     /// Write the per-round breakdown as CSV.
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         let mut w = crate::util::csv::CsvWriter::to_file(
@@ -222,6 +326,9 @@ impl Timeline {
                 "end",
                 "overlap_seconds",
                 "critical_path_tier",
+                "retries",
+                "abandoned",
+                "corrupt_dropped",
             ],
         )?;
         for r in &self.rounds {
@@ -245,6 +352,9 @@ impl Timeline {
                 format!("{:.6e}", r.end()),
                 format!("{:.6e}", r.overlap_seconds),
                 r.critical_path_tier.to_string(),
+                r.retries.to_string(),
+                r.abandoned.to_string(),
+                r.corrupt_dropped.to_string(),
             ])?;
         }
         w.flush()
@@ -283,6 +393,9 @@ mod tests {
             compression_ratio: 0.25,
             overlap_seconds: 0.0,
             critical_path_tier: 0,
+            retries: round as u32,
+            abandoned: 0,
+            corrupt_dropped: dropped,
         }
     }
 
@@ -304,6 +417,23 @@ mod tests {
         assert_eq!(t.total_bytes_wire(), 2000);
         assert_eq!(t.total_bytes_wire_down(), 1000);
         assert_eq!(t.total_overlap_seconds(), 0.0);
+        assert_eq!(t.total_retries(), 1);
+        assert_eq!(t.total_abandoned(), 0);
+        assert_eq!(t.total_corrupt_dropped(), 1);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let t = Timeline {
+            rounds: vec![stat(0, 0.2, 1), stat(1, 0.4, 0)],
+            events: Vec::new(),
+        };
+        let mut w = crate::util::ckpt::CkptWriter::new();
+        t.save_state(&mut w);
+        let mut r = crate::util::ckpt::CkptReader::new(&w.into_string());
+        let back = Timeline::restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, t);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Bit-exact checkpoint codec: a whitespace-separated token stream where
+//! every float is serialized as its IEEE-754 bit pattern in hex.
+//!
+//! The resume contract (DESIGN.md §12) is *bitwise* — a run restored from
+//! a checkpoint must produce byte-identical trace and timeline CSVs to
+//! the uninterrupted run — so the codec never round-trips floats through
+//! decimal. `f64` writes `{:016x}` of `to_bits()`, `f32` writes `{:08x}`,
+//! integers write plain decimal, and section names are literal tag tokens
+//! ([`CkptWriter::tag`] / [`CkptReader::expect_tag`]) so a reader that
+//! drifts from the writer fails loudly at the first mismatched section
+//! instead of silently shifting every later field.
+//!
+//! Files are written atomically: serialize to a sibling `.tmp` path, then
+//! `fs::rename` over the target — a run killed mid-write leaves the
+//! previous checkpoint intact, which is what makes `checkpoint` +
+//! kill-at-arbitrary-round recoverable by construction.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Append-only checkpoint serializer.
+#[derive(Default)]
+pub struct CkptWriter {
+    buf: String,
+}
+
+impl CkptWriter {
+    pub fn new() -> Self {
+        Self { buf: String::new() }
+    }
+
+    /// A literal section marker the reader must consume in order.
+    pub fn tag(&mut self, t: &str) {
+        debug_assert!(!t.contains(char::is_whitespace), "tag with whitespace: {t}");
+        self.buf.push_str(t);
+        self.buf.push('\n');
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.push_str(&v.to_string());
+        self.buf.push(' ');
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(if v { '1' } else { '0' });
+        self.buf.push(' ');
+    }
+
+    /// f64 as the hex of its bit pattern — exact round-trip.
+    pub fn f64(&mut self, v: f64) {
+        self.buf.push_str(&format!("{:016x}", v.to_bits()));
+        self.buf.push(' ');
+    }
+
+    /// f32 as the hex of its bit pattern — exact round-trip.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.push_str(&format!("{:08x}", v.to_bits()));
+        self.buf.push(' ');
+    }
+
+    pub fn f32_slice(&mut self, vs: &[f32]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    pub fn u64_slice(&mut self, vs: &[u64]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// `Option<f64>` (e.g. a cached Box-Muller spare): presence flag then
+    /// the bits.
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        self.bool(v.is_some());
+        if let Some(x) = v {
+            self.f64(x);
+        }
+    }
+
+    /// An [`crate::rng::Rng`] state snapshot.
+    pub fn rng(&mut self, state: ([u64; 4], Option<f64>)) {
+        for w in state.0 {
+            self.u64(w);
+        }
+        self.opt_f64(state.1);
+    }
+
+    /// The serialized text (tests; runs use [`Self::to_file`]).
+    pub fn into_string(self) -> String {
+        self.buf
+    }
+
+    /// Atomic write: serialize to `<path>.tmp`, then rename over `path`.
+    pub fn to_file(self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("checkpoint dir {}", parent.display()))?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.buf.as_bytes())
+            .with_context(|| format!("checkpoint write {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("checkpoint rename onto {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Token-stream checkpoint reader; every accessor fails with the position
+/// context instead of panicking.
+pub struct CkptReader {
+    tokens: Vec<String>,
+    pos: usize,
+}
+
+impl CkptReader {
+    pub fn new(text: &str) -> Self {
+        Self {
+            tokens: text.split_ascii_whitespace().map(|s| s.to_string()).collect(),
+            pos: 0,
+        }
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("checkpoint read {}", path.display()))?;
+        Ok(Self::new(&text))
+    }
+
+    fn next(&mut self) -> Result<&str> {
+        let Some(t) = self.tokens.get(self.pos) else {
+            bail!("checkpoint truncated at token {}", self.pos);
+        };
+        self.pos += 1;
+        Ok(t)
+    }
+
+    pub fn expect_tag(&mut self, t: &str) -> Result<()> {
+        let pos = self.pos;
+        let got = self.next()?;
+        if got != t {
+            bail!("checkpoint section mismatch at token {pos}: expected '{t}', got '{got}'");
+        }
+        Ok(())
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let pos = self.pos;
+        let t = self.next()?;
+        t.parse()
+            .with_context(|| format!("checkpoint token {pos}: expected u64, got '{t}'"))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        let pos = self.pos;
+        match self.next()? {
+            "1" => Ok(true),
+            "0" => Ok(false),
+            t => bail!("checkpoint token {pos}: expected bool 0/1, got '{t}'"),
+        }
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let pos = self.pos;
+        let t = self.next()?;
+        let bits = u64::from_str_radix(t, 16)
+            .with_context(|| format!("checkpoint token {pos}: expected f64 bits, got '{t}'"))?;
+        Ok(f64::from_bits(bits))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let pos = self.pos;
+        let t = self.next()?;
+        let bits = u32::from_str_radix(t, 16)
+            .with_context(|| format!("checkpoint token {pos}: expected f32 bits, got '{t}'"))?;
+        Ok(f32::from_bits(bits))
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        if self.bool()? {
+            Ok(Some(self.f64()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// An [`crate::rng::Rng`] state snapshot.
+    pub fn rng(&mut self) -> Result<([u64; 4], Option<f64>)> {
+        let s = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+        let spare = self.opt_f64()?;
+        Ok((s, spare))
+    }
+
+    /// Assert the stream is fully consumed (end-of-checkpoint integrity).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.tokens.len() {
+            bail!(
+                "checkpoint has {} trailing tokens after position {}",
+                self.tokens.len() - self.pos,
+                self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_every_type() {
+        let mut w = CkptWriter::new();
+        w.tag("head");
+        w.u64(u64::MAX);
+        w.usize(42);
+        w.bool(true);
+        w.bool(false);
+        // Bit-pattern hazards: negative zero, subnormals, NaN, infinities.
+        let f64s = [0.0, -0.0, 1.5e-310, f64::NAN, f64::INFINITY, -3.25, 1.0 / 3.0];
+        for v in f64s {
+            w.f64(v);
+        }
+        let f32s = [0.0f32, -0.0, 1.0e-40, f32::NAN, f32::NEG_INFINITY, 0.1];
+        w.f32_slice(&f32s);
+        w.u64_slice(&[0, 7, u64::MAX]);
+        w.opt_f64(None);
+        w.opt_f64(Some(-0.0));
+        w.rng(([1, 2, 3, u64::MAX], Some(0.75)));
+        w.tag("tail");
+        let text = w.into_string();
+
+        let mut r = CkptReader::new(&text);
+        r.expect_tag("head").unwrap();
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.usize().unwrap(), 42);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        for v in f64s {
+            assert_eq!(r.f64().unwrap().to_bits(), v.to_bits());
+        }
+        let back = r.f32_vec().unwrap();
+        assert_eq!(back.len(), f32s.len());
+        for (a, b) in back.iter().zip(&f32s) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r.u64_vec().unwrap(), vec![0, 7, u64::MAX]);
+        assert_eq!(r.opt_f64().unwrap(), None);
+        assert_eq!(r.opt_f64().unwrap().unwrap().to_bits(), (-0.0f64).to_bits());
+        let (s, spare) = r.rng().unwrap();
+        assert_eq!(s, [1, 2, 3, u64::MAX]);
+        assert_eq!(spare, Some(0.75));
+        r.expect_tag("tail").unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn reader_names_the_failure_position() {
+        let mut r = CkptReader::new("head zz");
+        r.expect_tag("head").unwrap();
+        let e = r.u64().unwrap_err().to_string();
+        assert!(e.contains("token 1"), "{e}");
+
+        let mut r = CkptReader::new("wrong");
+        let e = r.expect_tag("head").unwrap_err().to_string();
+        assert!(e.contains("expected 'head'"), "{e}");
+
+        let mut r = CkptReader::new("");
+        assert!(r.u64().unwrap_err().to_string().contains("truncated"));
+
+        let r2 = CkptReader::new("1 2");
+        assert!(r2.finish().unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn to_file_is_atomic_and_readable() {
+        let dir = std::env::temp_dir().join(format!("stl_sgd_ckpt_test_{}", std::process::id()));
+        let path = dir.join("state.ckpt");
+        let mut w = CkptWriter::new();
+        w.tag("v1");
+        w.f64(std::f64::consts::PI);
+        w.to_file(&path).unwrap();
+        // No .tmp residue, and a second write replaces atomically.
+        assert!(!dir.join("state.ckpt.tmp").exists());
+        let mut w = CkptWriter::new();
+        w.tag("v1");
+        w.f64(std::f64::consts::E);
+        w.to_file(&path).unwrap();
+        let mut r = CkptReader::from_file(&path).unwrap();
+        r.expect_tag("v1").unwrap();
+        assert_eq!(r.f64().unwrap().to_bits(), std::f64::consts::E.to_bits());
+        r.finish().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

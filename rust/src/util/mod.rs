@@ -1,6 +1,7 @@
 //! From-scratch utility substrates (the offline environment has no
 //! serde_json / clap / csv crates).
 
+pub mod ckpt;
 pub mod cli;
 pub mod csv;
 pub mod json;

@@ -1,0 +1,368 @@
+//! Fault-injection, defense, and checkpoint/resume suite (DESIGN.md §12).
+//!
+//! PR 10's contract has three legs, each pinned here end to end:
+//!
+//! * **Crash-and-resume bit-identity.** A run killed at round r (right
+//!   after its checkpoint) and resumed from the file must produce trace
+//!   and timeline CSVs that are *byte-identical* to the uninterrupted
+//!   run's — across cluster preset x execution mode x dense/cohort leg x
+//!   compressor, with and without active fault plans.
+//! * **Honest corruption accounting.** An unclipped run under update
+//!   corruption goes non-finite and says so (`poisoned_evals`), while
+//!   `clip_norm` keeps the model finite by rejecting/clipping poisoned
+//!   rows.
+//! * **Neutral knobs are invisible.** Every new knob at its neutral
+//!   spelling (faults "none", retry "none", quorum 0, clip_norm 0, plus
+//!   an *active* checkpoint writer) leaves the PR-9 trajectory untouched
+//!   bit for bit.
+
+use std::sync::Arc;
+use stl_sgd::algo::{AlgoSpec, Variant};
+use stl_sgd::comm::CompressionSchedule;
+use stl_sgd::coordinator::{run, NativeCompute, RunConfig, Trace};
+use stl_sgd::data::{partition, synth, Shard};
+use stl_sgd::decentral::ExecMode;
+use stl_sgd::faults::{FaultPlan, RetryPolicy};
+use stl_sgd::grad::logreg::NativeLogreg;
+use stl_sgd::rng::Rng;
+use stl_sgd::simnet::{ClusterProfile, ParticipationPolicy};
+
+fn setup(n: usize) -> (Arc<NativeLogreg>, Vec<Shard>) {
+    let ds = Arc::new(synth::a9a_like(2, 512, 16));
+    let oracle = Arc::new(NativeLogreg::new(ds.clone(), 1e-3));
+    let shards = partition::iid(&ds, n, &mut Rng::new(0));
+    (oracle, shards)
+}
+
+fn spec() -> AlgoSpec {
+    // Multi-stage STL-SC: anchor resets and phase-truncated rounds make
+    // the resume position land both mid-phase and on phase boundaries.
+    AlgoSpec {
+        variant: Variant::StlSc,
+        eta1: 0.3,
+        k1: 4.0,
+        t1: 40,
+        batch: 8,
+        iid: true,
+        ..Default::default()
+    }
+}
+
+fn run_one(cfg: &RunConfig) -> Trace {
+    let (oracle, shards) = setup(cfg.n_clients);
+    let theta0 = vec![0.0f32; 16];
+    let phases = spec().phases(240);
+    let mut engine = NativeCompute::new(oracle);
+    run(&mut engine, &shards, &phases, cfg, &theta0, "x")
+}
+
+fn assert_traces_bitwise(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.iter, pb.iter, "{tag}: iter");
+        assert_eq!(pa.rounds, pb.rounds, "{tag}: rounds @ iter {}", pa.iter);
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{tag}: loss @ iter {}", pa.iter);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{tag}: accuracy @ iter {}",
+            pa.iter
+        );
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{tag}: sim_seconds @ iter {}",
+            pa.iter
+        );
+        assert_eq!(pa.eta.to_bits(), pb.eta.to_bits(), "{tag}: eta @ iter {}", pa.iter);
+        assert_eq!(pa.k, pb.k, "{tag}: k @ iter {}", pa.iter);
+        assert_eq!(pa.realized_k, pb.realized_k, "{tag}: realized_k @ iter {}", pa.iter);
+    }
+    assert_eq!(a.comm, b.comm, "{tag}: comm stats");
+    assert_eq!(
+        a.clock.compute_seconds.to_bits(),
+        b.clock.compute_seconds.to_bits(),
+        "{tag}: compute clock"
+    );
+    assert_eq!(
+        a.clock.comm_seconds.to_bits(),
+        b.clock.comm_seconds.to_bits(),
+        "{tag}: comm clock"
+    );
+    assert_eq!(a.timeline, b.timeline, "{tag}: timeline");
+    assert_eq!(a.total_iters, b.total_iters, "{tag}: total iters");
+    assert_eq!(a.poisoned_evals, b.poisoned_evals, "{tag}: poisoned evals");
+}
+
+/// Run uninterrupted; run again checkpointing and dying at `kill_at`;
+/// resume from the file; require byte-identical trace + timeline CSVs.
+fn crash_resume_case(tag: &str, cfg: &RunConfig, kill_at: u64) {
+    let dir = std::env::temp_dir();
+    let stem = format!("stl_faults_{}_{}", std::process::id(), tag);
+    let ckpt = dir.join(format!("{stem}.ckpt"));
+
+    let full = run_one(cfg);
+    assert!(
+        full.comm.rounds > kill_at,
+        "{tag}: kill round {kill_at} not inside the {} -round run",
+        full.comm.rounds
+    );
+
+    let mut killed_cfg = cfg.clone();
+    killed_cfg.checkpoint_path = Some(ckpt.clone());
+    killed_cfg.kill_at_round = Some(kill_at);
+    let killed = run_one(&killed_cfg);
+    assert_eq!(killed.comm.rounds, kill_at, "{tag}: died at the wrong round");
+
+    let mut resumed_cfg = cfg.clone();
+    resumed_cfg.resume_from = Some(ckpt.clone());
+    let resumed = run_one(&resumed_cfg);
+
+    let paths = [
+        dir.join(format!("{stem}_full.csv")),
+        dir.join(format!("{stem}_resumed.csv")),
+        dir.join(format!("{stem}_full_tl.csv")),
+        dir.join(format!("{stem}_resumed_tl.csv")),
+    ];
+    full.write_csv(&paths[0]).unwrap();
+    resumed.write_csv(&paths[1]).unwrap();
+    full.write_timeline_csv(&paths[2]).unwrap();
+    resumed.write_timeline_csv(&paths[3]).unwrap();
+    let full_bytes = std::fs::read(&paths[0]).unwrap();
+    let resumed_bytes = std::fs::read(&paths[1]).unwrap();
+    assert!(full_bytes == resumed_bytes, "{tag}: trace CSVs differ after resume");
+    let full_tl = std::fs::read(&paths[2]).unwrap();
+    let resumed_tl = std::fs::read(&paths[3]).unwrap();
+    assert!(full_tl == resumed_tl, "{tag}: timeline CSVs differ after resume");
+
+    for p in paths.iter().chain(std::iter::once(&ckpt)) {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_identical_dense_bsp() {
+    crash_resume_case(
+        "homog-bsp-dense",
+        &RunConfig {
+            n_clients: 4,
+            ..Default::default()
+        },
+        5,
+    );
+    crash_resume_case(
+        "flaky-crash-dense",
+        &RunConfig {
+            n_clients: 4,
+            profile: ClusterProfile::flaky_federated(),
+            participation: ParticipationPolicy::Arrived,
+            faults: FaultPlan::parse("crash=0.15,partition=0.1x2").unwrap(),
+            retry: RetryPolicy::parse("retry:2").unwrap(),
+            quorum: 0.25,
+            ..Default::default()
+        },
+        7,
+    );
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_identical_compressed() {
+    crash_resume_case(
+        "topk-crash-dense",
+        &RunConfig {
+            n_clients: 4,
+            profile: ClusterProfile::flaky_federated(),
+            participation: ParticipationPolicy::Arrived,
+            compression: CompressionSchedule::parse("topk").unwrap(),
+            faults: FaultPlan::parse("crash=0.15").unwrap(),
+            ..Default::default()
+        },
+        6,
+    );
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_identical_gossip_and_staleness() {
+    crash_resume_case(
+        "gossip-ckpt-dense",
+        &RunConfig {
+            n_clients: 4,
+            mode: ExecMode::Gossip,
+            ..Default::default()
+        },
+        5,
+    );
+    crash_resume_case(
+        "stale-crash-dense",
+        &RunConfig {
+            n_clients: 4,
+            profile: ClusterProfile::flaky_federated(),
+            participation: ParticipationPolicy::Arrived,
+            mode: ExecMode::BoundedStaleness,
+            staleness_bound: 2,
+            faults: FaultPlan::parse("crash=0.1").unwrap(),
+            ..Default::default()
+        },
+        6,
+    );
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_identical_cohort() {
+    crash_resume_case(
+        "homog-bsp-cohort",
+        &RunConfig {
+            n_clients: 4,
+            cohort: true,
+            ..Default::default()
+        },
+        5,
+    );
+    crash_resume_case(
+        "flaky-crash-cohort",
+        &RunConfig {
+            n_clients: 4,
+            profile: ClusterProfile::flaky_federated(),
+            participation: ParticipationPolicy::Fraction(0.5),
+            cohort: true,
+            faults: FaultPlan::parse("crash=0.2").unwrap(),
+            retry: RetryPolicy::parse("retry").unwrap(),
+            quorum: 0.25,
+            ..Default::default()
+        },
+        7,
+    );
+}
+
+#[test]
+fn corruption_unclipped_poisons_clipped_stays_finite() {
+    let base = RunConfig {
+        n_clients: 4,
+        faults: FaultPlan::parse("corrupt=0.5").unwrap(),
+        ..Default::default()
+    };
+    let poisoned = run_one(&base);
+    assert!(
+        poisoned.poisoned_evals > 0,
+        "heavy NaN/Inf corruption never reached an eval"
+    );
+    assert!(
+        !poisoned.final_loss().is_finite(),
+        "undefended corruption should leave the model non-finite"
+    );
+
+    let mut defended = base.clone();
+    defended.clip_norm = 5.0;
+    let survived = run_one(&defended);
+    assert_eq!(
+        survived.poisoned_evals, 0,
+        "clip_norm let a poisoned row into the average"
+    );
+    assert!(survived.final_loss().is_finite());
+    assert!(
+        survived.timeline.total_corrupt_dropped() > 0,
+        "no non-finite corruption was even drawn — the scenario is vacuous"
+    );
+}
+
+#[test]
+fn retry_reduces_abandoned_rounds() {
+    let base = RunConfig {
+        n_clients: 4,
+        faults: FaultPlan::parse("crash=0.4").unwrap(),
+        quorum: 0.75,
+        ..Default::default()
+    };
+    let without = run_one(&base);
+    assert!(
+        without.timeline.total_abandoned() > 0,
+        "crash=0.4 under quorum 0.75 never abandoned a round"
+    );
+    let mut with_retry = base.clone();
+    with_retry.retry = RetryPolicy::parse("retry:3").unwrap();
+    let with = run_one(&with_retry);
+    assert!(with.timeline.total_retries() > 0, "the retry policy never fired");
+    assert!(
+        with.timeline.total_abandoned() < without.timeline.total_abandoned(),
+        "retries ({}) did not reduce abandoned rounds ({} vs {})",
+        with.timeline.total_retries(),
+        with.timeline.total_abandoned(),
+        without.timeline.total_abandoned()
+    );
+    // Both stay trainable: abandoned rounds roll back, they don't poison.
+    assert!(without.final_loss().is_finite());
+    assert!(with.final_loss().is_finite());
+}
+
+#[test]
+fn neutral_knobs_are_bitwise_invisible() {
+    // Matrix leg: (profile, mode, compressor, participation, cohort).
+    let cases: Vec<(&str, RunConfig)> = vec![
+        (
+            "bsp-identity-arrived",
+            RunConfig {
+                n_clients: 4,
+                participation: ParticipationPolicy::Arrived,
+                profile: ClusterProfile::flaky_federated(),
+                ..Default::default()
+            },
+        ),
+        (
+            "bsp-topk-frac",
+            RunConfig {
+                n_clients: 4,
+                participation: ParticipationPolicy::Fraction(0.5),
+                profile: ClusterProfile::heavy_tail_stragglers(),
+                compression: CompressionSchedule::parse("topk").unwrap(),
+                ..Default::default()
+            },
+        ),
+        (
+            "gossip-identity",
+            RunConfig {
+                n_clients: 4,
+                mode: ExecMode::Gossip,
+                ..Default::default()
+            },
+        ),
+        (
+            "stale-identity-arrived",
+            RunConfig {
+                n_clients: 4,
+                mode: ExecMode::BoundedStaleness,
+                staleness_bound: 2,
+                participation: ParticipationPolicy::Arrived,
+                profile: ClusterProfile::flaky_federated(),
+                ..Default::default()
+            },
+        ),
+        (
+            "cohort-topk-frac",
+            RunConfig {
+                n_clients: 4,
+                cohort: true,
+                participation: ParticipationPolicy::Fraction(0.5),
+                profile: ClusterProfile::flaky_federated(),
+                compression: CompressionSchedule::parse("topk").unwrap(),
+                ..Default::default()
+            },
+        ),
+    ];
+    for (tag, base) in cases {
+        let reference = run_one(&base);
+        let ckpt = std::env::temp_dir()
+            .join(format!("stl_neutral_{}_{}.ckpt", std::process::id(), tag));
+        let mut neutral = base.clone();
+        // The neutral spellings, routed through the same parsers the
+        // config layer uses — plus a live checkpoint writer, which must
+        // observe the run without perturbing it.
+        neutral.faults = FaultPlan::parse("none").unwrap();
+        neutral.retry = RetryPolicy::parse("none").unwrap();
+        neutral.quorum = 0.0;
+        neutral.clip_norm = 0.0;
+        neutral.checkpoint_path = Some(ckpt.clone());
+        let knobby = run_one(&neutral);
+        assert_traces_bitwise(&reference, &knobby, tag);
+        let _ = std::fs::remove_file(&ckpt);
+    }
+}

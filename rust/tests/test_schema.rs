@@ -40,6 +40,9 @@ fn timeline_csv_header_matches_checked_in_golden() {
             compression_ratio: 0.5,
             overlap_seconds: 0.0,
             critical_path_tier: 0,
+            retries: 0,
+            abandoned: 0,
+            corrupt_dropped: 0,
         }],
         events: Vec::new(),
     };
@@ -95,6 +98,9 @@ fn goldens_include_the_compression_columns() {
         "compression_ratio",
         "overlap_seconds",
         "critical_path_tier",
+        "retries",
+        "abandoned",
+        "corrupt_dropped",
     ] {
         assert!(
             TIMELINE_GOLDEN.split(',').any(|c| c.trim() == col),

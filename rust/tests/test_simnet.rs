@@ -454,6 +454,9 @@ fn timeline_csv_schema_golden() {
             compression_ratio: 0.25,
             overlap_seconds: 0.0,
             critical_path_tier: 0,
+            retries: 0,
+            abandoned: 0,
+            corrupt_dropped: 0,
         }],
         events: Vec::new(),
     };
@@ -464,9 +467,9 @@ fn timeline_csv_schema_golden() {
     let golden = "round,steps,k,start,compute_span,comm_seconds,barrier_wait_max,\
                   barrier_wait_mean,dropped,participants,joined,left,\
                   bytes_exact,bytes_wire,bytes_wire_down,compression_ratio,end,\
-                  overlap_seconds,critical_path_tier\n\
+                  overlap_seconds,critical_path_tier,retries,abandoned,corrupt_dropped\n\
                   0,10,12,0.000000e0,5.000000e-1,2.500000e-1,1.250000e-1,6.250000e-2,\
-                  1,3,1,2,4000,1000,500,0.2500,7.500000e-1,0.000000e0,0\n";
+                  1,3,1,2,4000,1000,500,0.2500,7.500000e-1,0.000000e0,0,0,0,0\n";
     assert_eq!(s, golden);
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -496,7 +499,7 @@ fn timeline_csv_fixed_seed_engine_row_matches_closed_form() {
     let compute = cm.round_compute_seconds(32, 1000, 5);
     let comm = net.allreduce_seconds(Algorithm::Ring, 4, 1000);
     let expect_row = format!(
-        "0,5,5,{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},0,4,0,0,6000,6000,3000,1.0000,{:.6e},0.000000e0,0",
+        "0,5,5,{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},0,4,0,0,6000,6000,3000,1.0000,{:.6e},0.000000e0,0,0,0,0",
         0.0,
         compute,
         comm,

@@ -108,6 +108,12 @@ if [[ $smoke -eq 1 ]]; then
             --overlaps off,chunked \
             --out-dir "$smoke_out/placement"
         test -s "$smoke_out/placement/summary.csv"
+        RUSTFLAGS="$release_flags" cargo run --release --example chaos_study -- \
+            --workload logreg_test --steps 240 --clients 4 --k1 4 --t1 40 \
+            --crash-rates 0.0,0.3 --retries none,retry:3 \
+            --partition 0.05x2 --quorum 0.5 --kill-round 3 --gap 1e-9 \
+            --out-dir "$smoke_out/chaos"
+        test -s "$smoke_out/chaos/summary.csv"
         # Cohort-sparse scale smoke at a reduced fleet (the full 1M run is
         # the dedicated `scripts/ci.sh scale` stage); still asserts the
         # flat-memory RSS bound.

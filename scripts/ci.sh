@@ -19,6 +19,10 @@
 #   decentral  decentralized-execution gate (tests/test_decentral.rs:
 #           push-sum conservation, staleness-bound-0 bitwise-BSP,
 #           gossip determinism, downlink repricing)
+#   faults  fault-injection + recovery gate (tests/test_faults.rs:
+#           crash-and-resume bit-identity across preset x mode x
+#           dense/cohort, corruption/clip accounting, neutral-knob
+#           bitwise invisibility) -- DESIGN.md §12
 #   bench   bench-regression smoke: bench_simnet --ci (round-pricing
 #           events/sec) then bench_round --ci (end-to-end coordinator
 #           iters/sec), both in short mode, merged into BENCH_ci.json;
@@ -56,6 +60,7 @@ stage_lint() { cargo test -q --test test_invariants; }
 stage_test() { cargo test -q; }
 stage_schema() { cargo test -q --test test_schema; }
 stage_decentral() { cargo test -q --test test_decentral; }
+stage_faults() { cargo test -q --test test_faults; }
 stage_bench() {
     # `cargo run` cannot select bench targets; `cargo bench -- <args>`
     # forwards to the binary (the benches use custom main()s, so the
@@ -120,7 +125,7 @@ stage_tsan() {
     fi
 }
 
-all_stages=(build lint test schema decentral bench smoke scale fmt doc)
+all_stages=(build lint test schema decentral faults bench smoke scale fmt doc)
 stages=("$@")
 if [[ ${#stages[@]} -eq 0 ]]; then
     stages=("${all_stages[@]}")
@@ -128,7 +133,7 @@ fi
 
 for stage in "${stages[@]}"; do
     case "$stage" in
-        build | lint | test | schema | decentral | bench | smoke | scale | fmt | doc | miri | tsan)
+        build | lint | test | schema | decentral | faults | bench | smoke | scale | fmt | doc | miri | tsan)
             banner "$stage"
             "stage_$stage"
             ;;
